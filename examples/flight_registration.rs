@@ -1,0 +1,279 @@
+//! END-TO-END DRIVER: the full 8-tier Flight Registration service
+//! (Fig. 13) running through every layer of the stack —
+//!
+//!   1. REAL THREADS: all 8 tiers as actual `RpcThreadedServer`s over the
+//!      loop-back fabric, with the NIC steering running on the
+//!      AOT-compiled XLA artifact (L1 Pallas -> L2 JAX -> HLO -> PJRT),
+//!      MICA-backed Airport/Citizens tiers with object-level steering,
+//!      and a passenger/staff workload. Reports wall-clock latency and
+//!      throughput, plus a request-trace bottleneck analysis.
+//!   2. CALIBRATED SIMULATION: the same topology through the DES that
+//!      regenerates Table 4 / Fig. 15, for both threading models.
+//!
+//! Run with:
+//!   cargo run --release --example flight_registration -- --duration-ms 3000
+
+use dagger::apps::flightreg::{self, ThreadingModel};
+use dagger::apps::mica::Mica;
+use dagger::cli::Args;
+use dagger::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
+use dagger::coordinator::fabric::Fabric;
+use dagger::exp::microsim;
+use dagger::nic::load_balancer::LbMode;
+use dagger::runtime::EngineSpec;
+use dagger::sim::{Histogram, Rng};
+use dagger::telemetry::{Phase, Trace};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// Method ids.
+const M_CHECKIN: u8 = 0;
+const M_FLIGHT: u8 = 1;
+const M_BAGGAGE: u8 = 2;
+const M_PASSPORT: u8 = 3;
+const M_DB_GET: u8 = 4;
+const M_DB_SET: u8 = 5;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let duration_ms = args.get_u64("duration-ms", 2_000);
+
+    real_threads_part(duration_ms);
+    simulation_part(args.get_flag("fast"));
+}
+
+/// Part 1 — all 8 tiers as real services over the fabric.
+fn real_threads_part(duration_ms: u64) {
+    println!("== Part 1: real-thread Flight Registration over the loop-back fabric\n");
+
+    let mut fabric = Fabric::new();
+    // Endpoint per tier + one for the workload driver. Flow layout per
+    // endpoint: server dispatch flows first, then dedicated client flows
+    // for outbound calls (steering only targets the active server
+    // flows — soft-config ActiveFlows).
+    let driver = fabric.add_endpoint(1, 256); //  0: client to checkin
+    let checkin = fabric.add_endpoint(5, 256); // 0: server; 1..=4: client flow per downstream tier
+    let flight = fabric.add_endpoint(2, 256); //  0,1: server
+    let baggage = fabric.add_endpoint(1, 256); // 0: server
+    let passport = fabric.add_endpoint(2, 256); // 0: server; 1: citizens client
+    let citizens = fabric.add_endpoint(2, 256); // 0,1: server
+    let airport = fabric.add_endpoint(2, 256); //  0,1: server
+
+    // Steering only targets the server flows; the client flows receive
+    // responses via connection src_flow routing.
+    fabric.set_active_flows(checkin, 1);
+    fabric.set_active_flows(passport, 1);
+
+    // Stateless tiers round-robin; MICA-backed tiers use object-level
+    // steering (their NICs hash the request key — §5.7).
+    for addr in [checkin, flight, baggage, passport] {
+        fabric.set_lb(addr, LbMode::RoundRobin);
+    }
+    for addr in [citizens, airport] {
+        fabric.set_lb(addr, LbMode::ObjectLevel);
+    }
+
+    // The Check-in tier fans out to downstream tiers via its own clients,
+    // each on a dedicated flow (1-to-1 flow <-> RpcClient, §4.2).
+    let c_flight = fabric.connect(checkin, 1, flight, LbMode::RoundRobin);
+    let c_baggage = fabric.connect(checkin, 2, baggage, LbMode::RoundRobin);
+    let c_passport = fabric.connect(checkin, 3, passport, LbMode::RoundRobin);
+    let c_airport = fabric.connect(checkin, 4, airport, LbMode::ObjectLevel);
+    let c_citizens = fabric.connect(passport, 1, citizens, LbMode::ObjectLevel);
+    let c_driver = fabric.connect(driver, 0, checkin, LbMode::RoundRobin);
+
+    let flight_client = RpcClient::new(c_flight, fabric.rings(checkin, 1));
+    let baggage_client = RpcClient::new(c_baggage, fabric.rings(checkin, 2));
+    let passport_client = RpcClient::new(c_passport, fabric.rings(checkin, 3));
+    let airport_client = RpcClient::new(c_airport, fabric.rings(checkin, 4));
+    let citizens_client = RpcClient::new(c_citizens, fabric.rings(passport, 1));
+    let driver_client = RpcClient::new(c_driver, fabric.rings(driver, 0));
+
+    // --- Tier servers ---------------------------------------------------
+    let mut joins = Vec::new();
+    let mut stop_flags = Vec::new();
+
+    // Flight / Baggage: leaf compute tiers.
+    let mut flight_srv = RpcThreadedServer::new(DispatchMode::Worker);
+    flight_srv.add_flow(0, fabric.rings(flight, 0));
+    flight_srv.add_flow(1, fabric.rings(flight, 1));
+    flight_srv.register(
+        M_FLIGHT,
+        Arc::new(|_, req| {
+            // "flight information data" lookup.
+            let mut v = req.to_vec();
+            v.extend_from_slice(b"|FL");
+            v.truncate(46);
+            v
+        }),
+    );
+    stop_flags.push(flight_srv.stop_flag());
+    joins.extend(flight_srv.start());
+
+    let mut baggage_srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+    baggage_srv.add_flow(0, fabric.rings(baggage, 0));
+    baggage_srv.register(M_BAGGAGE, Arc::new(|_, _req| b"bag-ok".to_vec()));
+    stop_flags.push(baggage_srv.stop_flag());
+    joins.extend(baggage_srv.start());
+
+    // Citizens + Airport: MICA stores.
+    for (addr, store_name) in [(citizens, "citizens"), (airport, "airport")] {
+        let store = Arc::new(Mutex::new(Mica::new(2, 1 << 14, false)));
+        let mut srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv.add_flow(0, fabric.rings(addr, 0));
+        srv.add_flow(1, fabric.rings(addr, 1));
+        let s1 = store.clone();
+        srv.register(
+            M_DB_GET,
+            Arc::new(move |_, req| {
+                s1.lock().unwrap().get_at(0, req).unwrap_or_else(|| b"absent".to_vec())
+            }),
+        );
+        let s2 = store;
+        srv.register(
+            M_DB_SET,
+            Arc::new(move |_, req| {
+                // key=value split at ':'.
+                let pos = req.iter().position(|&b| b == b':').unwrap_or(req.len());
+                let (k, v) = req.split_at(pos);
+                s2.lock().unwrap().set_at(0, k, v);
+                b"ok".to_vec()
+            }),
+        );
+        let _ = store_name;
+        stop_flags.push(srv.stop_flag());
+        joins.extend(srv.start());
+    }
+
+    // Passport: blocks on Citizens.
+    let mut passport_srv = RpcThreadedServer::new(DispatchMode::Worker);
+    passport_srv.add_flow(0, fabric.rings(passport, 0));
+    {
+        let citizens_client = citizens_client.clone();
+        passport_srv.register(
+            M_PASSPORT,
+            Arc::new(move |_, req| {
+                let check = citizens_client.call_blocking(M_DB_GET, &req[..req.len().min(16)]);
+                match check {
+                    Some(_) => b"passport-ok".to_vec(),
+                    None => b"passport-timeout".to_vec(),
+                }
+            }),
+        );
+    }
+    stop_flags.push(passport_srv.stop_flag());
+    joins.extend(passport_srv.start());
+
+    // Check-in: the orchestrator — async fan-out, then Airport.
+    let mut checkin_srv = RpcThreadedServer::new(DispatchMode::Worker);
+    checkin_srv.add_flow(0, fabric.rings(checkin, 0));
+    {
+        let fc = flight_client.clone();
+        let bc = baggage_client.clone();
+        let pc = passport_client.clone();
+        let ac = airport_client.clone();
+        checkin_srv.register(
+            M_CHECKIN,
+            Arc::new(move |_, req| {
+                // Non-blocking fan-out (the paper's Check-in pattern):
+                let k = &req[..req.len().min(24)];
+                let f0 = fc.cq.completed_count.load(Ordering::Relaxed);
+                let b0 = bc.cq.completed_count.load(Ordering::Relaxed);
+                let f = fc.call_async(M_FLIGHT, k);
+                let b = bc.call_async(M_BAGGAGE, k);
+                // Passport is a blocking nested chain.
+                let p = pc.call_blocking(M_PASSPORT, k);
+                // Block until both fan-out responses have returned.
+                let deadline = Instant::now() + std::time::Duration::from_secs(5);
+                while (fc.cq.completed_count.load(Ordering::Relaxed) < f0 + f.is_ok() as u64
+                    || bc.cq.completed_count.load(Ordering::Relaxed) < b0 + b.is_ok() as u64)
+                    && Instant::now() < deadline
+                {
+                    fc.poll_completions();
+                    bc.poll_completions();
+                    std::thread::yield_now();
+                }
+                fc.cq.drain();
+                bc.cq.drain();
+                // Register in the Airport DB (blocking).
+                let mut rec = k.to_vec();
+                rec.extend_from_slice(b":reg");
+                let _ = ac.call_blocking(M_DB_SET, &rec[..rec.len().min(40)]);
+                if p.is_some() {
+                    b"checked-in".to_vec()
+                } else {
+                    b"retry".to_vec()
+                }
+            }),
+        );
+    }
+    stop_flags.push(checkin_srv.stop_flag());
+    joins.extend(checkin_srv.start());
+
+    // FPGA thread with the XLA datapath.
+    let handle = fabric.start(EngineSpec::XlaAuto { batch: 4 });
+
+    // --- Workload: passenger registrations ------------------------------
+    let mut hist = Histogram::new();
+    let mut trace = Trace::default();
+    let mut rng = Rng::new(2026);
+    let t0 = Instant::now();
+    let mut completed = 0u64;
+    while t0.elapsed().as_millis() < duration_ms as u128 {
+        let pax = format!("PAX{:06}", rng.gen_range(1_000_000));
+        let q0 = Instant::now();
+        let resp = driver_client.call_blocking(M_CHECKIN, pax.as_bytes());
+        let dur = q0.elapsed().as_nanos() as u64;
+        hist.record(dur);
+        trace.record("checkin-path", Phase::AppLogic, 0, dur);
+        if resp.is_some() {
+            completed += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!("registrations     : {completed} in {elapsed:.2}s ({:.0} rps wall-clock, blocking driver)", completed as f64 / elapsed);
+    println!("latency p50       : {:.1} us", hist.p50_us());
+    println!("latency p99       : {:.1} us", hist.p99_us());
+    println!(
+        "fabric            : forwarded={} datapath-batches={} drops={}",
+        handle.stats.forwarded.load(Ordering::Relaxed),
+        handle.stats.datapath_batches.load(Ordering::Relaxed),
+        handle.stats.dropped_rx_full.load(Ordering::Relaxed)
+    );
+    if let Some((tier, ns)) = trace.bottleneck_tier() {
+        println!("trace bottleneck  : {tier} ({:.1} us total)", ns as f64 / 1000.0);
+    }
+
+    for f in &stop_flags {
+        f.store(true, Ordering::Relaxed);
+    }
+    handle.shutdown();
+    for j in joins {
+        let _ = j.join();
+    }
+    println!();
+}
+
+/// Part 2 — the calibrated DES for both threading models (Table 4).
+fn simulation_part(fast: bool) {
+    println!("== Part 2: calibrated simulation (Table 4 / Fig. 15 anchors)\n");
+    let d = if fast { 60_000 } else { 200_000 };
+    for (name, model, load) in [
+        ("Simple", ThreadingModel::Simple, 2.5),
+        ("Optimized", ThreadingModel::Optimized, 40.0),
+    ] {
+        let lo = microsim::run(flightreg::app(model, 1_000, 1), 0.5, d, d / 10);
+        let hi = microsim::run(flightreg::app(model, 1_000, 1), load, d, d / 10);
+        println!(
+            "{name:<10} low-load p50={:>6.1}us | at {load:>5.1} Krps: achieved={:>6.1} Krps p50={:>6.1}us drops={:.2}%",
+            lo.p50_us,
+            hi.achieved_krps,
+            hi.p50_us,
+            hi.dropped as f64 / hi.sent.max(1) as f64 * 100.0
+        );
+    }
+    println!("\n(full sweep: cargo bench --bench table4_fig15_flightreg)");
+}

@@ -1,0 +1,63 @@
+//! Interface sweep: explore the CPU-NIC interface design space beyond the
+//! paper's configurations — every interface × batch width, printing the
+//! throughput/latency frontier (the data behind Fig. 10, extended).
+//!
+//! Run with: `cargo run --release --example interface_sweep -- --fast`
+
+use dagger::cli::Args;
+use dagger::exp::rpc_sim::{self, SimConfig};
+use dagger::interconnect::Iface;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let fast = args.get_flag("fast");
+    let dur = if fast { 4_000 } else { 16_000 };
+
+    println!("== CPU-NIC interface design space (single core, 64B RPCs)");
+    println!(
+        "{:<26} {:>9} {:>10} {:>9} {:>9} {:>9}",
+        "interface", "model cap", "sat Mrps", "p50 us", "p99 us", "bus util"
+    );
+
+    let mut cases: Vec<Iface> = vec![Iface::WqeByMmio, Iface::Doorbell];
+    for b in [1u32, 2, 4, 8, 11, 14] {
+        cases.push(Iface::DoorbellBatch(b));
+    }
+    for b in [1u32, 2, 3, 4, 8] {
+        cases.push(Iface::Upi(b));
+    }
+
+    for iface in cases {
+        let cap = iface.single_core_mrps();
+        let sat = rpc_sim::run(SimConfig {
+            iface,
+            offered_mrps: cap * 1.15,
+            duration_us: dur,
+            warmup_us: dur / 8,
+            ..Default::default()
+        });
+        let lat = rpc_sim::run(SimConfig {
+            iface,
+            offered_mrps: cap * 0.5,
+            duration_us: dur,
+            warmup_us: dur / 8,
+            ..Default::default()
+        });
+        println!(
+            "{:<26} {:>9.2} {:>10.2} {:>9.2} {:>9.2} {:>8.1}%",
+            iface.name(),
+            cap,
+            sat.achieved_mrps,
+            lat.p50_us,
+            lat.p99_us,
+            sat.ccip_util * 100.0
+        );
+    }
+
+    println!("\ntakeaways (the paper's Fig. 10 story):");
+    println!("  * MMIO: lowest PCIe latency, throughput-capped by per-line CPU stores");
+    println!("  * doorbell: MMIO-rate limited (~4.3 Mrps)");
+    println!("  * doorbell batching: amortizes the MMIO, peaks ~10.8 Mrps @ B=11");
+    println!("  * UPI: no MMIO at all — 12.4 Mrps @ B=4 and the lowest latency");
+}

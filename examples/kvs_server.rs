@@ -1,0 +1,37 @@
+//! KVS over Dagger (the §5.6 scenario as real code): run a memcached- or
+//! MICA-style store behind the RPC fabric, drive it with a zipfian
+//! client, and report wall-clock latency/throughput.
+//!
+//! Run with:
+//!   cargo run --release --example kvs_server -- --store mica --requests 200000
+//!   cargo run --release --example kvs_server -- --store memcached --skew 0.9999
+
+use dagger::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let store = args.get("store").unwrap_or("mica").to_string();
+    let requests = args.get_u64("requests", 100_000);
+    let keys = args.get_u64("keys", 100_000);
+    let skew = args.get_f64("skew", 0.99);
+    let use_xla = !args.get_flag("no-xla");
+
+    println!("== kvs_server: {store} over the Dagger loop-back fabric");
+    println!(
+        "   requests={requests} keys={keys} zipf-skew={skew} datapath={}",
+        if use_xla { "xla-aot (if artifacts present)" } else { "native" }
+    );
+
+    let r = dagger::apps::serve::run_kvs(&store, requests, keys, skew, use_xla).expect("kvs run");
+
+    println!("\nstore            : {}", r.store);
+    println!("requests         : {}", r.requests);
+    println!("elapsed          : {:.2} s", r.elapsed_s);
+    println!("throughput       : {:.1} Krps (wall clock, blocking client)", r.krps);
+    println!("latency p50      : {:.1} us", r.p50_us);
+    println!("latency p99      : {:.1} us", r.p99_us);
+    println!("hit responses    : {}", r.hits);
+    println!("\n(paper context: Fig. 12 reports simulated single-core Dagger KVS latency of");
+    println!(" 2.8-3.5 us p50 — regenerate with `cargo bench --bench fig12_kvs`)");
+}

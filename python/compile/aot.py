@@ -1,0 +1,111 @@
+"""AOT lowering: JAX/Pallas NIC datapath -> HLO text artifacts.
+
+HLO *text* (NOT ``lowered.compile()`` / ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+``xla`` crate) rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts
+
+Artifacts produced (one compiled executable per model variant, loaded by
+rust/src/runtime/):
+    nic_datapath_b{B}.hlo.txt   fused steering+deserialize, batch B
+    nic_tx_b{B}.hlo.txt         serialize (TX direction), batch B
+    manifest.txt                artifact -> entry/shape index
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Batch sizes the Rust runtime may request. 4 covers the paper's CCI-P
+# sweet spot (B=4, Fig. 10/11); 16/64 cover doorbell batching sweeps;
+# 256/1024 cover the bulk-simulation fast path.
+BATCH_SIZES = (4, 16, 64, 256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_datapath(batch: int) -> str:
+    frames = jax.ShapeDtypeStruct((batch, ref.WORDS_PER_FRAME), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    def fn(frames, lb_mode, n_flows):
+        meta, lanes = model.nic_datapath(frames, lb_mode, n_flows)
+        return meta, lanes
+
+    lowered = jax.jit(fn).lower(frames, scalar, scalar)
+    return to_hlo_text(lowered)
+
+
+def lower_tx(batch: int) -> str:
+    lanes = jax.ShapeDtypeStruct((ref.WORDS_PER_FRAME, batch), jnp.uint32)
+
+    def fn(lanes):
+        return (model.nic_tx_path(lanes),)
+
+    lowered = jax.jit(fn).lower(lanes)
+    return to_hlo_text(lowered)
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    """Write only when content differs (keeps `make artifacts` a no-op)."""
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in BATCH_SIZES),
+        help="comma-separated batch sizes",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest = []
+    for b in batches:
+        for name, text in (
+            (f"nic_datapath_b{b}", lower_datapath(b)),
+            (f"nic_tx_b{b}", lower_tx(b)),
+        ):
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            changed = write_if_changed(path, text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest.append(f"{name}.hlo.txt\tbatch={b}\tsha256={digest}")
+            status = "wrote" if changed else "up-to-date"
+            print(f"{status} {path} ({len(text)} chars)")
+
+    write_if_changed(
+        os.path.join(args.out_dir, "manifest.txt"), "\n".join(manifest) + "\n"
+    )
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracle for the Dagger NIC datapath kernels.
+
+This module is the *specification*: the Pallas kernels in steering.py and
+serdes.py must match these functions bit-for-bit (all integer arithmetic,
+so comparisons are exact). The Rust model (rust/src/nic/rpc_unit.rs)
+implements the same datapath natively and is cross-checked against the AOT
+artifact produced from the kernels in rust/tests/runtime_artifacts.rs.
+
+Frame layout (one 64-byte CCI-P cache line = 16 little-endian u32 words):
+
+  word 0   : magic(16) | rpc_type(8) | flags(8)     -- header
+  word 1   : connection id (c_id)
+  word 2   : rpc id (monotonic per client)
+  word 3   : payload length in bytes (0..=48)
+  words 4..15 : payload (KVS: key words first)
+
+Datapath outputs, per frame:
+  flow     : steered NIC flow (load-balancer dependent)
+  hash     : FNV-1a over the 8 key words (words 4..11)
+  checksum : XOR fold of all 16 words (transport checksum)
+  valid    : 1 if magic matches and payload_len <= 48 else 0
+"""
+
+import jax.numpy as jnp
+
+MAGIC = 0xDA66  # "DAGG" truncated — magic tag in the top 16 bits of word 0
+FNV_OFFSET = 2166136261  # plain ints: jnp scalars would be captured as
+FNV_PRIME = 16777619     # pallas_call constants, which is rejected
+WORDS_PER_FRAME = 16
+KEY_WORDS = 8  # words 4..11 participate in the object-level hash
+MAX_PAYLOAD_BYTES = 48
+
+# Load-balancer modes (must match rust/src/nic/load_balancer.rs)
+LB_ROUND_ROBIN = 0  # dynamic uniform steering: rpc_id % n_flows
+LB_STATIC = 1       # static: connection id % n_flows
+LB_OBJECT_LEVEL = 2 # MICA-style object affinity: key hash % n_flows
+
+
+def fmix32(h):
+    """murmur3 avalanche finisher. Word-wise FNV-1a alone does not
+    avalanche into the low bits (a difference confined to byte k of a
+    word only reaches bits >= 8k), which breaks `hash % n_flows`
+    partitioning; the finisher restores full diffusion."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def fnv1a_words(words):
+    """FNV-1a over u32 words along the last axis + fmix32. words:
+    u32[..., K]."""
+    h = jnp.full(words.shape[:-1], FNV_OFFSET, dtype=jnp.uint32)
+    for i in range(words.shape[-1]):
+        h = (h ^ words[..., i]) * jnp.uint32(FNV_PRIME)
+    return fmix32(h)
+
+
+def datapath_ref(frames, lb_mode, n_flows):
+    """Reference NIC datapath.
+
+    frames : u32[B, 16]    batch of RPC frames
+    lb_mode: u32[]         one of LB_* above
+    n_flows: u32[]         number of active NIC flows (>= 1)
+
+    Returns u32[B, 4]: columns (flow, hash, checksum, valid).
+    """
+    frames = frames.astype(jnp.uint32)
+    word0 = frames[:, 0]
+    c_id = frames[:, 1]
+    rpc_id = frames[:, 2]
+    plen = frames[:, 3]
+
+    magic = word0 >> 16
+    valid = ((magic == MAGIC) & (plen <= MAX_PAYLOAD_BYTES)).astype(jnp.uint32)
+
+    key = frames[:, 4 : 4 + KEY_WORDS]
+    h = fnv1a_words(key)
+
+    checksum = frames[:, 0]
+    for i in range(1, WORDS_PER_FRAME):
+        checksum = checksum ^ frames[:, i]
+
+    n = jnp.maximum(n_flows.astype(jnp.uint32), jnp.uint32(1))
+    flow_rr = rpc_id % n
+    flow_static = c_id % n
+    flow_obj = h % n
+    lb = lb_mode.astype(jnp.uint32)
+    flow = jnp.where(
+        lb == LB_ROUND_ROBIN,
+        flow_rr,
+        jnp.where(lb == LB_STATIC, flow_static, flow_obj),
+    )
+    # Invalid frames are steered to flow 0 (the exception flow).
+    flow = jnp.where(valid == 1, flow, jnp.uint32(0))
+
+    return jnp.stack([flow, h, checksum, valid], axis=1)
+
+
+def deserialize_ref(frames):
+    """Reference deserialization transform (RPC unit, RX direction).
+
+    AoS->SoA: [B, 16] frames -> [16, B] word lanes with payload words
+    beyond payload_len zero-masked (so stale ring data never leaks into
+    argument buffers). Header words (0..3) pass through unmasked.
+    """
+    frames = frames.astype(jnp.uint32)
+    plen = frames[:, 3]  # bytes
+    lanes = frames.T  # [16, B]
+    word_idx = jnp.arange(WORDS_PER_FRAME, dtype=jnp.uint32)[:, None]  # [16,1]
+    payload_words = (plen[None, :] + jnp.uint32(3)) // jnp.uint32(4)  # ceil
+    is_header = word_idx < jnp.uint32(4)
+    in_payload = word_idx < (jnp.uint32(4) + payload_words)
+    keep = is_header | in_payload
+    return jnp.where(keep, lanes, jnp.uint32(0))
+
+
+def serialize_ref(lanes):
+    """Reference serialization (TX direction): SoA [16,B] -> AoS [B,16]."""
+    return lanes.astype(jnp.uint32).T

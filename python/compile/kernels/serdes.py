@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: RPC (de)serialization transform.
+
+The Dagger RPC unit converts between wire frames (AoS: one 64-byte cache
+line per RPC) and ready-to-use argument buffers (SoA word lanes). This is
+the Optimus-Prime-style data transformation the paper's RPC unit performs
+in hardware; payload words beyond `payload_len` are zero-masked so stale
+ring memory never leaks into application buffers.
+
+TPU adaptation: the transform is a tiled transpose + mask. Each grid step
+moves a (BLOCK_B, 16) tile through VMEM and writes the transposed
+(16, BLOCK_B) tile; masking is fused into the same pass so the data is
+touched exactly once (single HBM read + single HBM write).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_B = 256
+
+
+def _deserialize_kernel(frames_ref, out_ref):
+    frames = frames_ref[...]  # u32[block, 16]
+    plen = frames[:, 3]
+    lanes = frames.T  # [16, block]
+    word_idx = jax.lax.broadcasted_iota(jnp.uint32, lanes.shape, 0)
+    payload_words = (plen[None, :] + jnp.uint32(3)) // jnp.uint32(4)
+    keep = (word_idx < jnp.uint32(4)) | (
+        word_idx < (jnp.uint32(4) + payload_words)
+    )
+    out_ref[...] = jnp.where(keep, lanes, jnp.uint32(0))
+
+
+def _serialize_kernel(lanes_ref, out_ref):
+    out_ref[...] = lanes_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def deserialize(frames, interpret=True):
+    """AoS->SoA with payload masking. frames u32[B,16] -> u32[16,B]."""
+    frames = frames.astype(jnp.uint32)
+    b = frames.shape[0]
+    block = min(BLOCK_B, b) if b > 0 else 1
+    pad = (-b) % block
+    if pad:
+        frames = jnp.concatenate(
+            [frames, jnp.zeros((pad, ref.WORDS_PER_FRAME), jnp.uint32)], axis=0
+        )
+    padded_b = frames.shape[0]
+    out = pl.pallas_call(
+        _deserialize_kernel,
+        grid=(padded_b // block,),
+        in_specs=[
+            pl.BlockSpec((block, ref.WORDS_PER_FRAME), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ref.WORDS_PER_FRAME, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (ref.WORDS_PER_FRAME, padded_b), jnp.uint32
+        ),
+        interpret=interpret,
+    )(frames)
+    return out[:, :b]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def serialize(lanes, interpret=True):
+    """SoA->AoS. lanes u32[16,B] -> u32[B,16]."""
+    lanes = lanes.astype(jnp.uint32)
+    b = lanes.shape[1]
+    block = min(BLOCK_B, b) if b > 0 else 1
+    pad = (-b) % block
+    if pad:
+        lanes = jnp.concatenate(
+            [lanes, jnp.zeros((ref.WORDS_PER_FRAME, pad), jnp.uint32)], axis=1
+        )
+    padded_b = lanes.shape[1]
+    out = pl.pallas_call(
+        _serialize_kernel,
+        grid=(padded_b // block,),
+        in_specs=[
+            pl.BlockSpec((ref.WORDS_PER_FRAME, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block, ref.WORDS_PER_FRAME), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (padded_b, ref.WORDS_PER_FRAME), jnp.uint32
+        ),
+        interpret=interpret,
+    )(lanes)
+    return out[:b]

@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: batched RPC steering datapath.
+
+This is the arithmetic hot-spot of the Dagger NIC RPC unit: for a CCI-P
+batch of 64-byte RPC frames, compute per-frame
+
+    (flow, key-hash, checksum, valid)
+
+in a single fused pass. On the paper's Arria-10 this is a 200 MHz
+SystemVerilog pipeline; here it is re-thought for a TPU-style execution
+model (see DESIGN.md §Hardware-Adaptation):
+
+  * the FPGA's packet-pipelined parallelism becomes *batch* parallelism:
+    one grid step processes a (BLOCK_B, 16) tile of frames resident in
+    VMEM;
+  * BRAM tables stay on the Rust control plane — only the dense
+    arithmetic (FNV-1a hash, XOR checksum fold, modulo steering) lives in
+    the kernel;
+  * the kernel is VPU-shaped (element-wise + small reductions along the
+    16-word axis); there is deliberately no matmul, so MXU stays idle and
+    the roofline is VPU/VMEM-bound.
+
+interpret=True is mandatory on CPU: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile height over the batch dimension. 256 frames x 16 words x 4 B = 16 KiB
+# per input tile (plus a [BLOCK_B, 4] output tile) — far under VMEM even
+# with double buffering; chosen so a CCI-P max batch (128 outstanding
+# lines) fits in a single tile while keeping the grid non-trivial for
+# larger batches.
+BLOCK_B = 256
+
+
+def _steering_kernel(scalar_ref, frames_ref, out_ref):
+    """One grid step: frames_ref u32[BLOCK_B,16] -> out_ref u32[BLOCK_B,4].
+
+    scalar_ref: u32[2] = (lb_mode, n_flows), broadcast to every tile.
+    """
+    frames = frames_ref[...]
+    lb_mode = scalar_ref[0]
+    n_flows = jnp.maximum(scalar_ref[1], jnp.uint32(1))
+
+    word0 = frames[:, 0]
+    c_id = frames[:, 1]
+    rpc_id = frames[:, 2]
+    plen = frames[:, 3]
+
+    magic = word0 >> 16
+    valid = (
+        (magic == jnp.uint32(ref.MAGIC))
+        & (plen <= jnp.uint32(ref.MAX_PAYLOAD_BYTES))
+    ).astype(jnp.uint32)
+
+    # FNV-1a over the 8 key words + fmix32 finisher. Unrolled: the word
+    # axis is tiny and static, matching how the FPGA pipeline unrolls it
+    # spatially.
+    h = jnp.full((frames.shape[0],), ref.FNV_OFFSET, dtype=jnp.uint32)
+    for i in range(ref.KEY_WORDS):
+        h = (h ^ frames[:, 4 + i]) * jnp.uint32(ref.FNV_PRIME)
+    h = ref.fmix32(h)
+
+    # XOR checksum fold over all 16 words (log-depth tree like the RTL).
+    cs = frames[:, 0]
+    for i in range(1, ref.WORDS_PER_FRAME):
+        cs = cs ^ frames[:, i]
+
+    flow_rr = rpc_id % n_flows
+    flow_static = c_id % n_flows
+    flow_obj = h % n_flows
+    flow = jnp.where(
+        lb_mode == jnp.uint32(ref.LB_ROUND_ROBIN),
+        flow_rr,
+        jnp.where(lb_mode == jnp.uint32(ref.LB_STATIC), flow_static, flow_obj),
+    )
+    flow = jnp.where(valid == jnp.uint32(1), flow, jnp.uint32(0))
+
+    out_ref[...] = jnp.stack([flow, h, cs, valid], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def steering(frames, lb_mode, n_flows, interpret=True):
+    """Batched steering datapath.
+
+    frames : u32[B, 16] with B a multiple of BLOCK_B or B < BLOCK_B
+             (padded internally).
+    lb_mode: u32[] load-balancer mode (ref.LB_*)
+    n_flows: u32[] active flow count
+    returns: u32[B, 4] columns (flow, hash, checksum, valid)
+    """
+    frames = frames.astype(jnp.uint32)
+    b = frames.shape[0]
+    block = min(BLOCK_B, b) if b > 0 else 1
+    pad = (-b) % block
+    if pad:
+        frames = jnp.concatenate(
+            [frames, jnp.zeros((pad, ref.WORDS_PER_FRAME), jnp.uint32)], axis=0
+        )
+    padded_b = frames.shape[0]
+    scalars = jnp.stack(
+        [lb_mode.astype(jnp.uint32), n_flows.astype(jnp.uint32)]
+    )
+
+    out = pl.pallas_call(
+        _steering_kernel,
+        grid=(padded_b // block,),
+        in_specs=[
+            # Scalars are replicated to every tile.
+            pl.BlockSpec((2,), lambda i: (0,)),
+            # HBM->VMEM schedule: stream (block, 16) frame tiles.
+            pl.BlockSpec((block, ref.WORDS_PER_FRAME), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, 4), jnp.uint32),
+        interpret=interpret,
+    )(scalars, frames)
+    return out[:b]

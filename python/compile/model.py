@@ -1,0 +1,61 @@
+"""L2: the Dagger NIC RPC-unit datapath as a JAX compute graph.
+
+Composes the L1 Pallas kernels into the full per-batch NIC pipeline that
+the Rust coordinator executes as an AOT artifact:
+
+    frames --+--> steering (flow, hash, checksum, valid)   [kernels/steering]
+             +--> deserialize (masked SoA word lanes)      [kernels/serdes]
+
+Both outputs are produced in one fused program so a CCI-P batch makes a
+single trip through the artifact. The graph is lowered once by aot.py;
+Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, serdes, steering
+
+
+def nic_datapath(frames, lb_mode, n_flows):
+    """Full RX datapath for one CCI-P batch.
+
+    frames : u32[B, 16]
+    lb_mode: u32[]  (ref.LB_*)
+    n_flows: u32[]
+
+    Returns (meta, lanes):
+      meta : u32[B, 4]  (flow, hash, checksum, valid)
+      lanes: u32[16, B] masked SoA payload lanes
+    """
+    meta = steering.steering(frames, lb_mode, n_flows)
+    lanes = serdes.deserialize(frames)
+    return meta, lanes
+
+
+def nic_datapath_ref(frames, lb_mode, n_flows):
+    """Pure-jnp oracle for the fused datapath (used by tests)."""
+    return ref.datapath_ref(frames, lb_mode, n_flows), ref.deserialize_ref(
+        frames
+    )
+
+
+def nic_tx_path(lanes):
+    """TX direction: SoA lanes -> wire frames."""
+    return serdes.serialize(lanes)
+
+
+def example_frames(batch, key_seed=0):
+    """Deterministic synthetic frame batch for lowering/smoke tests."""
+    rng = jax.random.PRNGKey(key_seed)
+    words = jax.random.randint(
+        rng, (batch, ref.WORDS_PER_FRAME), 0, 2**31 - 1, dtype=jnp.int32
+    ).astype(jnp.uint32)
+    # Give every frame a valid header: magic in word0, plen <= 48.
+    word0 = jnp.full((batch,), ref.MAGIC << 16, jnp.uint32) | (
+        words[:, 0] & jnp.uint32(0xFFFF)
+    )
+    plen = words[:, 3] % jnp.uint32(ref.MAX_PAYLOAD_BYTES + 1)
+    return (
+        words.at[:, 0].set(word0).at[:, 3].set(plen)
+    )

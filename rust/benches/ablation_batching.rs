@@ -1,0 +1,16 @@
+//! `cargo bench --bench ablation_batching` — regenerates Ablation — doorbell batching vs memory interconnect.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Ablation — doorbell batching vs memory interconnect", "paper §5.2 (~14% claim)");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("ablation-batching", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench ablation_conn_cache` — regenerates Ablation — connection cache sizing.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Ablation — connection cache sizing", "paper §4.2/§6");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("ablation-conn-cache", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig10_cpu_nic_interfaces` — regenerates Fig. 10 — CPU-NIC interface comparison.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Fig. 10 — CPU-NIC interface comparison", "paper §5.3, Figure 10");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("fig10", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig12_kvs` — regenerates Fig. 12 — memcached + MICA over Dagger.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Fig. 12 — memcached + MICA over Dagger", "paper §5.6, Figure 12");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("fig12", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

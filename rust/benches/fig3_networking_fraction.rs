@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig3_networking_fraction` — regenerates Fig. 3 — networking fraction of tier latency.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Fig. 3 — networking fraction of tier latency", "paper §3.1, Figure 3");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("fig3", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

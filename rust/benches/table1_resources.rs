@@ -1,0 +1,16 @@
+//! `cargo bench --bench table1_resources` — regenerates Table 1 — NIC implementation specifications.
+//! Thin wrapper over the experiment driver in dagger::exp.
+
+fn main() {
+    dagger::bench::header("Table 1 — NIC implementation specifications", "paper §4.6, Table 1");
+    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    match dagger::exp::run_named("table1", &args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,224 @@
+//! Flight Registration service (Fig. 13, §5.7): an 8-tier microservice
+//! application with chain, one-to-many fan-out, and many-to-one
+//! dependencies, used to demonstrate Dagger under realistic multi-tier
+//! threading models.
+//!
+//! Topology:
+//! ```text
+//! Passenger FE ─▶ Check-in ─▶ {Flight, Baggage, Passport ─▶ Citizens}
+//!                     └─(after all)─▶ Airport
+//! Staff FE ───────────────────────────▶ Airport
+//! ```
+//!
+//! The Airport and Citizens tiers are MICA-backed (object-level load
+//! balancer on their NICs); the rest are stateless (round-robin).
+
+use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
+
+/// Tier indices.
+pub const PASSENGER_FE: usize = 0;
+pub const STAFF_FE: usize = 1;
+pub const CHECKIN: usize = 2;
+pub const FLIGHT: usize = 3;
+pub const BAGGAGE: usize = 4;
+pub const PASSPORT: usize = 5;
+pub const CITIZENS: usize = 6;
+pub const AIRPORT: usize = 7;
+
+pub const TIER_NAMES: [&str; 8] = [
+    "passenger-fe",
+    "staff-fe",
+    "checkin",
+    "flight",
+    "baggage",
+    "passport",
+    "citizens",
+    "airport",
+];
+
+/// Threading model selector (Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThreadingModel {
+    /// All tiers handle RPCs in dispatch threads.
+    Simple,
+    /// Flight, Check-in and Passport run handlers in worker threads
+    /// (the §5.7 "Optimized" configuration).
+    Optimized,
+}
+
+/// Build the 8-tier application for a threading model.
+///
+/// Handler-time calibration (anchors: Table 4 — Simple saturates at
+/// ~2.7 Krps bottlenecked by the Flight tier; Optimized reaches ~48 Krps
+/// with ~17x the throughput; low-load latency 13.3 µs Simple / 23.4 µs
+/// Optimized):
+/// * Flight is bimodal — usually ~4 µs, but 5 % of requests run a
+///   flight-table scan (~7 ms). Mean ≈ 354 µs -> a single dispatch
+///   thread caps the app at ~3.5 Krps (0.8 passenger share); 17 workers
+///   lift it ~17x to ~50 Krps. The heavy-scan tail means our low-load
+///   p90/p99 exceed Table 4's (documented deviation, EXPERIMENTS.md) —
+///   no single-queue model reconciles a 2.7 Krps single-thread
+///   saturation with a 20 µs low-load p90.
+/// * Check-in / Passport are cheap but *long-running* because they block
+///   on nested calls (the other reason §5.7 moves them to workers).
+pub fn app(model: ThreadingModel, hop_ns: u64, seed: u64) -> AppCfg {
+    let workers = |n: u32| match model {
+        ThreadingModel::Simple => 0,
+        ThreadingModel::Optimized => n,
+    };
+    let tiers = vec![
+        // 0: Passenger front-end — non-blocking generator side.
+        TierCfg {
+            name: TIER_NAMES[0].into(),
+            n_dispatch: 2,
+            n_workers: 0,
+            handler: DurDist::Fixed(500),
+            rpc_overhead_ns: 300,
+            stages: vec![vec![CHECKIN]],
+            queue_cap: 1024,
+            non_blocking: true,
+        },
+        // 1: Staff front-end — async checks straight to Airport.
+        TierCfg {
+            name: TIER_NAMES[1].into(),
+            n_dispatch: 1,
+            n_workers: 0,
+            handler: DurDist::Fixed(600),
+            rpc_overhead_ns: 300,
+            stages: vec![vec![AIRPORT]],
+            queue_cap: 1024,
+            non_blocking: true,
+        },
+        // 2: Check-in — fan-out to Flight/Baggage/Passport, then Airport.
+        TierCfg {
+            name: TIER_NAMES[2].into(),
+            n_dispatch: 2,
+            n_workers: workers(16),
+            handler: DurDist::Fixed(800),
+            rpc_overhead_ns: 300,
+            stages: vec![vec![FLIGHT, BAGGAGE, PASSPORT], vec![AIRPORT]],
+            queue_cap: 1024,
+            non_blocking: false,
+        },
+        // 3: Flight — the resource-demanding, long-running tier.
+        TierCfg {
+            name: TIER_NAMES[3].into(),
+            n_dispatch: 1,
+            n_workers: workers(17),
+            handler: DurDist::Bimodal { p_heavy: 0.05, light: 4_000, heavy: 7_000_000 },
+            rpc_overhead_ns: 300,
+            stages: vec![],
+            queue_cap: 4096,
+            non_blocking: false,
+        },
+        // 4: Baggage — stateless lookup.
+        TierCfg {
+            name: TIER_NAMES[4].into(),
+            n_dispatch: 1,
+            n_workers: 0,
+            handler: DurDist::Exp(1_000),
+            rpc_overhead_ns: 300,
+            stages: vec![],
+            queue_cap: 1024,
+            non_blocking: false,
+        },
+        // 5: Passport — blocks on the Citizens DB.
+        TierCfg {
+            name: TIER_NAMES[5].into(),
+            n_dispatch: 1,
+            n_workers: workers(8),
+            handler: DurDist::Fixed(600),
+            rpc_overhead_ns: 300,
+            stages: vec![vec![CITIZENS]],
+            queue_cap: 1024,
+            non_blocking: false,
+        },
+        // 6: Citizens DB (MICA-backed).
+        TierCfg {
+            name: TIER_NAMES[6].into(),
+            n_dispatch: 2,
+            n_workers: 0,
+            handler: DurDist::Fixed(400),
+            rpc_overhead_ns: 300,
+            stages: vec![],
+            queue_cap: 4096,
+            non_blocking: false,
+        },
+        // 7: Airport DB (MICA-backed), shared by Check-in and Staff FE.
+        TierCfg {
+            name: TIER_NAMES[7].into(),
+            n_dispatch: 2,
+            n_workers: 0,
+            handler: DurDist::Fixed(500),
+            rpc_overhead_ns: 300,
+            stages: vec![],
+            queue_cap: 4096,
+            non_blocking: false,
+        },
+    ];
+    AppCfg {
+        tiers,
+        // 80 % passenger registrations, 20 % staff record checks.
+        entries: vec![(PASSENGER_FE, 0.8), (STAFF_FE, 0.2)],
+        hop_ns,
+        handoff_ns: 2_500,
+        seed,
+    }
+}
+
+/// Mean Flight handler time implied by the bimodal calibration, in ns.
+pub fn flight_mean_ns() -> f64 {
+    0.95 * 4_000.0 + 0.05 * 7_000_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::microsim;
+
+    #[test]
+    fn simple_low_load_latency_matches_table4() {
+        let r = microsim::run(app(ThreadingModel::Simple, 1_000, 1), 0.5, 100_000, 10_000);
+        // Table 4: median 13.3 µs at low load (p99 23.8, though our p99
+        // also sees the heavy-scan tail).
+        assert!((10.0..18.0).contains(&r.p50_us), "p50 {}", r.p50_us);
+    }
+
+    #[test]
+    fn optimized_low_load_latency_higher_than_simple() {
+        let s = microsim::run(app(ThreadingModel::Simple, 1_000, 1), 0.5, 60_000, 6_000);
+        let o = microsim::run(app(ThreadingModel::Optimized, 1_000, 1), 0.5, 60_000, 6_000);
+        // Table 4: 13.3 -> 23.4 µs (worker handoff overhead).
+        assert!(o.p50_us > s.p50_us + 2.0, "simple {} optimized {}", s.p50_us, o.p50_us);
+    }
+
+    #[test]
+    fn optimized_throughput_an_order_of_magnitude_higher() {
+        let (s, _) = microsim::saturation_sweep(
+            app(ThreadingModel::Simple, 1_000, 1),
+            &[2.0, 3.0, 4.0],
+            60_000,
+        );
+        let (o, _) = microsim::saturation_sweep(
+            app(ThreadingModel::Optimized, 1_000, 1),
+            &[30.0, 45.0, 60.0],
+            60_000,
+        );
+        // Table 4: 2.7 Krps -> 48 Krps (~17x).
+        assert!((2.0..4.8).contains(&s), "simple sat {s}");
+        assert!((30.0..60.0).contains(&o), "optimized sat {o}");
+        assert!(o / s > 8.0, "ratio {}", o / s);
+    }
+
+    #[test]
+    fn flight_is_the_simple_mode_bottleneck() {
+        let r = microsim::run(app(ThreadingModel::Simple, 1_000, 1), 3.5, 60_000, 6_000);
+        let flight_p99 = r.tier_p99_us[FLIGHT];
+        assert!(
+            flight_p99 > r.tier_p99_us[BAGGAGE] * 2.0,
+            "flight {} baggage {}",
+            flight_p99,
+            r.tier_p99_us[BAGGAGE]
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Applications ported onto Dagger (§5.6, §5.7) plus the
+//! characterization model (§3).
+
+pub mod flightreg;
+pub mod memcached;
+pub mod mica;
+pub mod serve;
+pub mod socialnet;
+
+/// Common KVS interface both stores implement, so the serving layer and
+/// benchmarks are store-agnostic (memcached was ported with ~50 LoC,
+/// MICA with ~200 LoC — the small surface below is what those ports
+/// adapt to).
+pub trait KvStore: Send {
+    /// Store a value. Returns false if rejected (e.g. full lossy bucket).
+    fn set(&mut self, key: &[u8], value: &[u8]) -> bool;
+    /// Fetch a value.
+    fn get(&mut self, key: &[u8]) -> Option<Vec<u8>>;
+    /// Per-operation CPU cost model in ns (used by the simulation).
+    fn op_cost_ns(&self, is_set: bool) -> u64;
+    fn name(&self) -> &'static str;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

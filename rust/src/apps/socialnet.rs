@@ -1,0 +1,148 @@
+//! Social Network characterization model (§3, Figs. 3–5): the
+//! DeathStarBench-style tier graph used for the motivation studies.
+//!
+//! The real benchmark suite is not available here (DESIGN.md §6); the
+//! model reproduces the *measured properties* Fig. 3 reports: per-tier
+//! compute weights, kernel TCP/IP + Thrift-RPC processing costs, and the
+//! queueing growth that makes networking dominate at high load.
+
+use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
+use crate::interconnect::timing::{SW_KERNEL_STACK_NS, SW_RPC_LAYER_NS};
+
+/// The six profiled microservices of Fig. 3 (plus a front-end driver).
+pub const FRONTEND: usize = 0;
+pub const MEDIA: usize = 1; // s1
+pub const USER: usize = 2; // s2
+pub const UNIQUE_ID: usize = 3; // s3
+pub const TEXT: usize = 4; // s4
+pub const USER_MENTION: usize = 5; // s5
+pub const URL_SHORTEN: usize = 6; // s6
+
+pub const TIER_NAMES: [&str; 7] =
+    ["frontend", "s1:media", "s2:user", "s3:uniqueid", "s4:text", "s5:usermention", "s6:urlshorten"];
+
+/// Per-tier application compute (ns). Calibrated to Fig. 3's shape:
+/// User/UniqueID are compute-light (networking up to ~80 % of their
+/// latency); Text/UserMention are compute-heavy (processing longer than
+/// communication).
+pub fn app_compute_ns(tier: usize) -> u64 {
+    match tier {
+        MEDIA => 30_000,
+        USER => 5_000,
+        UNIQUE_ID => 4_000,
+        TEXT => 60_000,
+        USER_MENTION => 45_000,
+        URL_SHORTEN => 20_000,
+        _ => 8_000,
+    }
+}
+
+/// Networking stack variant under study.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stack {
+    /// Commodity deployment: Thrift RPC over Linux kernel TCP/IP.
+    KernelTcp,
+    /// Dagger: RPC stack offloaded; only the ring write remains on-CPU.
+    Dagger,
+}
+
+impl Stack {
+    /// Per-request RPC-layer processing on the host CPU.
+    pub fn rpc_overhead_ns(&self) -> u64 {
+        match self {
+            Stack::KernelTcp => SW_RPC_LAYER_NS,
+            Stack::Dagger => 80, // ring write only
+        }
+    }
+
+    /// One-way network hop (transport + wire) between tiers.
+    pub fn hop_ns(&self) -> u64 {
+        match self {
+            Stack::KernelTcp => SW_KERNEL_STACK_NS, // kernel TCP/IP path
+            Stack::Dagger => 1_000,
+        }
+    }
+}
+
+/// Compose-post request graph: frontend fans out to UniqueID/Media/
+/// UserMention/UrlShorten, then Text, then User (simplified from [40]).
+pub fn app(stack: Stack, n_dispatch: u32, seed: u64) -> AppCfg {
+    let mk = |idx: usize, stages: Vec<Vec<usize>>| TierCfg {
+        name: TIER_NAMES[idx].into(),
+        n_dispatch,
+        n_workers: 0,
+        handler: DurDist::Exp(app_compute_ns(idx)),
+        rpc_overhead_ns: stack.rpc_overhead_ns(),
+        stages,
+        queue_cap: 2048,
+        // The front-end (an nginx-like web server) issues its fan-outs
+        // non-blocking; mid-tiers are synchronous Thrift handlers.
+        non_blocking: idx == FRONTEND,
+    };
+    AppCfg {
+        tiers: vec![
+            mk(FRONTEND, vec![vec![UNIQUE_ID, MEDIA, USER_MENTION, URL_SHORTEN], vec![TEXT], vec![USER]]),
+            mk(MEDIA, vec![]),
+            mk(USER, vec![]),
+            mk(UNIQUE_ID, vec![]),
+            mk(TEXT, vec![]),
+            mk(USER_MENTION, vec![]),
+            mk(URL_SHORTEN, vec![]),
+        ],
+        entries: vec![(FRONTEND, 1.0)],
+        hop_ns: stack.hop_ns(),
+        handoff_ns: 800,
+        seed,
+    }
+}
+
+/// Fraction of a tier's time spent on networking (network hop + RPC
+/// processing + queueing) from a phase breakdown — the Fig. 3 metric.
+pub fn networking_fraction(
+    b: &crate::telemetry::PhaseBreakdown,
+    tier: &str,
+) -> f64 {
+    use crate::telemetry::Phase;
+    b.fraction(tier, Phase::Network)
+        + b.fraction(tier, Phase::RpcProcessing)
+        + b.fraction(tier, Phase::Queueing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::microsim;
+
+    #[test]
+    fn fig3_shape_light_tiers_dominated_by_networking() {
+        let r = microsim::run(app(Stack::KernelTcp, 1, 1), 0.4, 400_000, 40_000);
+        let b = &r.breakdown;
+        let user = networking_fraction(b, TIER_NAMES[USER]);
+        let uniq = networking_fraction(b, TIER_NAMES[UNIQUE_ID]);
+        let text = networking_fraction(b, TIER_NAMES[TEXT]);
+        // User/UniqueID: networking-heavy (paper: up to 80 %); Text is
+        // compute-dominated.
+        assert!(user > 0.6, "user networking fraction {user}");
+        assert!(uniq > 0.6, "uniqueid networking fraction {uniq}");
+        assert!(text < user, "text {text} should be below user {user}");
+        assert!(text < 0.5, "text networking fraction {text}");
+    }
+
+    #[test]
+    fn fig3_networking_fraction_grows_with_load() {
+        let lo = microsim::run(app(Stack::KernelTcp, 1, 1), 0.5, 300_000, 30_000);
+        let hi = microsim::run(app(Stack::KernelTcp, 1, 1), 9.0, 300_000, 30_000);
+        let f = |r: &microsim::MicroResult| networking_fraction(&r.breakdown, TIER_NAMES[USER]);
+        assert!(f(&hi) >= f(&lo) * 0.95, "lo {} hi {}", f(&lo), f(&hi));
+        assert!(hi.p99_us > lo.p99_us * 1.3, "queueing should grow the tail");
+    }
+
+    #[test]
+    fn dagger_stack_shrinks_networking_share() {
+        let tcp = microsim::run(app(Stack::KernelTcp, 1, 1), 0.4, 300_000, 30_000);
+        let dag = microsim::run(app(Stack::Dagger, 1, 1), 0.4, 300_000, 30_000);
+        let f = |r: &microsim::MicroResult| networking_fraction(&r.breakdown, TIER_NAMES[USER]);
+        assert!(f(&dag) < f(&tcp) * 0.5, "tcp {} dagger {}", f(&tcp), f(&dag));
+        assert!(dag.p50_us < tcp.p50_us, "dagger e2e should be faster");
+    }
+}

@@ -1,0 +1,175 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md
+//! §Substitutions): warmup + repeated timed runs, median-of-runs
+//! reporting, and paper-style table output. Every `rust/benches/*.rs`
+//! target is a plain `harness = false` binary built on this module.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: Vec<f64>, // seconds per run
+    pub work_items: u64,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut v = self.runs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.runs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Work items per second at the median run.
+    pub fn throughput(&self) -> f64 {
+        self.work_items as f64 / self.median_s()
+    }
+
+    pub fn ns_per_item(&self) -> f64 {
+        self.median_s() * 1e9 / self.work_items as f64
+    }
+}
+
+/// Run `f` (which performs `work_items` units) `runs` times after
+/// `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, work_items: u64, warmup: usize, runs: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), runs: times, work_items }
+}
+
+/// Print one result as a stable, greppable line.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<40} median {:>10.3} ms   {:>12.0} items/s   {:>8.1} ns/item",
+        r.name,
+        r.median_s() * 1e3,
+        r.throughput(),
+        r.ns_per_item()
+    );
+}
+
+/// Standard header each bench binary prints first.
+pub fn header(title: &str, paper_ref: &str) {
+    println!("==============================================================");
+    println!("{title}");
+    println!("reproduces: {paper_ref}");
+    println!("==============================================================");
+}
+
+pub mod selfprof {
+    //! `dagger selfprof`: microbenchmarks of the coordinator hot paths —
+    //! the profiling entry for the §Perf pass.
+
+    use super::*;
+    use crate::cli::Args;
+    use crate::coordinator::frame::{Frame, RpcType};
+    use crate::coordinator::rings::Ring;
+    use crate::nic::load_balancer::{steer_batch, LbMode};
+    use crate::sim::{Engine as SimEngine, Histogram, Rng};
+
+    pub fn run(args: &Args) -> anyhow::Result<()> {
+        let n = args.get_u64("iters", 1_000_000);
+        header("selfprof — coordinator hot paths", "internal (perf pass)");
+
+        // 1. Event engine push/pop.
+        let r = bench("sim.engine.push_pop", n, 1, 5, || {
+            let mut eng: SimEngine<u32> = SimEngine::new();
+            let mut rng = Rng::new(1);
+            for i in 0..n {
+                eng.at(rng.next_u64() % 1_000_000, i as u32);
+                if i % 4 == 3 {
+                    eng.next();
+                }
+            }
+            while eng.next().is_some() {}
+        });
+        report(&r);
+
+        // 2. SPSC ring push/pop.
+        let ring = Ring::with_capacity(1024);
+        let f = Frame::new(RpcType::Request, 0, 1, 2, b"key");
+        let r = bench("rings.spsc.push_pop", n, 1, 5, || {
+            for _ in 0..n {
+                let _ = ring.push(f);
+                let _ = ring.pop();
+            }
+        });
+        report(&r);
+
+        // 3. Steering batch (native datapath).
+        let frames: Vec<Frame> =
+            (0..256).map(|i| Frame::new(RpcType::Request, 0, 1, i, b"user:123")).collect();
+        let batches = n / 256;
+        let r = bench("rpc_unit.steer_batch_256", batches * 256, 1, 5, || {
+            for _ in 0..batches {
+                std::hint::black_box(steer_batch(&frames, LbMode::ObjectLevel, 8));
+            }
+        });
+        report(&r);
+
+        // 4. Histogram record.
+        let r = bench("stats.histogram.record", n, 1, 5, || {
+            let mut h = Histogram::new();
+            let mut rng = Rng::new(7);
+            for _ in 0..n {
+                h.record(rng.next_u64() % 100_000);
+            }
+            std::hint::black_box(h.p99_us());
+        });
+        report(&r);
+
+        // 5. XLA datapath (when artifacts exist).
+        if crate::runtime::artifacts_available() {
+            let rt = crate::runtime::Runtime::cpu()?;
+            let mut dp = crate::runtime::Datapath::load(&rt, 256)?;
+            let calls = 200u64;
+            let r = bench("runtime.xla_datapath_b256", calls * 256, 1, 3, || {
+                for _ in 0..calls {
+                    dp.process(&frames, 2, 8).unwrap();
+                }
+            });
+            report(&r);
+        } else {
+            println!("(artifacts missing — skipping XLA datapath bench)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let r = bench("spin", 1000, 1, 3, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(r.runs.len(), 3);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn median_is_order_insensitive() {
+        let r = BenchResult { name: "x".into(), runs: vec![3.0, 1.0, 2.0], work_items: 10 };
+        assert_eq!(r.median_s(), 2.0);
+        assert_eq!(r.min_s(), 1.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md
+//! §Substitutions). Subcommand dispatch + a small flag parser.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+const USAGE: &str = "dagger — FPGA-accelerated RPC fabric (paper reproduction)
+
+USAGE:
+    dagger <COMMAND> [OPTIONS]
+
+COMMANDS:
+    info                         platform + artifact status
+    sim <experiment>             run one paper experiment
+                                 (fig3|fig4|fig5|fig10|fig11|fig11-threads|
+                                  fig12|fig15|table1|table3|table4)
+    idl-gen <file.idl>           generate Rust service stubs from an IDL file
+                                 [--out <path>]
+    serve                        run a KVS server + client over the loop-back
+                                 fabric [--store memcached|mica] [--requests N]
+    selfprof                     microbenchmark the coordinator hot paths
+    help                         this text
+";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return 2;
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "info" => cmd_info(),
+        "sim" => cmd_sim(args),
+        "idl-gen" => cmd_idl_gen(args),
+        "serve" => crate::apps::serve::run(args),
+        "selfprof" => crate::bench::selfprof::run(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("dagger v{}", env!("CARGO_PKG_VERSION"));
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => println!("pjrt: {}", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    let dir = crate::runtime::artifacts_dir();
+    println!(
+        "artifacts: {} ({})",
+        dir.display(),
+        if crate::runtime::artifacts_available() { "present" } else { "missing — run `make artifacts`" }
+    );
+    let cfg = crate::nic::hard_config::HardConfig::paper_table1();
+    let r = cfg.resource_estimate();
+    println!(
+        "paper NIC config: {} flows, {} conn-cache entries, est. {:.1}K LUTs ({:.0}%), {:.0} M20K ({:.0}%)",
+        cfg.n_flows, cfg.conn_cache_entries, r.luts_k, r.lut_pct, r.m20k_blocks, r.m20k_pct
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let Some(exp) = args.positional.first() else {
+        anyhow::bail!("sim: missing experiment name");
+    };
+    let out = crate::exp::run_named(exp, args)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_idl_gen(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("idl-gen: missing input file");
+    };
+    let src = std::fs::read_to_string(path)?;
+    let code = crate::idl::generate(&src)
+        .map_err(|e| anyhow::anyhow!("idl: {e}"))?;
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &code)?;
+            println!("wrote {out}");
+        }
+        None => print!("{code}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = Args::parse(&argv(&["--requests", "100", "pos", "--store=mica", "--fast"]));
+        assert_eq!(a.get_u64("requests", 0), 100);
+        assert_eq!(a.get("store"), Some("mica"));
+        assert!(a.get_flag("fast"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.get_u64("x", 7), 7);
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+        assert!(!a.get_flag("z"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&argv(&["--a", "--b", "v"]));
+        assert!(a.get_flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

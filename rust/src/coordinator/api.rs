@@ -1,0 +1,481 @@
+//! Dagger RPC API (§4.2): `RpcClient` / `RpcClientPool` on the client
+//! side, `RpcThreadedServer` wrapping per-flow dispatch threads on the
+//! server side, and `CompletionQueue` for asynchronous completions with
+//! optional continuation callbacks.
+//!
+//! The API mirrors the paper's Thrift/Protobuf-inspired surface: stubs
+//! generated from the IDL (see `crate::idl`) wrap these primitives into
+//! typed service calls.
+
+use crate::coordinator::backoff::Backoff;
+use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
+use crate::coordinator::rings::RingPair;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A completed RPC: id + response payload.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub rpc_id: u32,
+    pub payload: Vec<u8>,
+}
+
+type Callback = Box<dyn Fn(&Completion) + Send + 'static>;
+
+/// Accumulates completed requests for one `RpcClient` (§4.2). Optionally
+/// invokes a continuation callback on every completion.
+pub struct CompletionQueue {
+    done: Mutex<Vec<Completion>>,
+    callback: Mutex<Option<Callback>>,
+    pub completed_count: AtomicU64,
+}
+
+impl CompletionQueue {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CompletionQueue {
+            done: Mutex::new(Vec::new()),
+            callback: Mutex::new(None),
+            completed_count: AtomicU64::new(0),
+        })
+    }
+
+    pub fn set_callback(&self, cb: Callback) {
+        *self.callback.lock().unwrap() = Some(cb);
+    }
+
+    pub fn push(&self, c: Completion) {
+        self.completed_count.fetch_add(1, Ordering::Relaxed);
+        if let Some(cb) = self.callback.lock().unwrap().as_ref() {
+            cb(&c);
+        }
+        self.done.lock().unwrap().push(c);
+    }
+
+    /// Drain all pending completions.
+    pub fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.done.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.done.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Client endpoint bound 1-to-1 to a NIC flow (ring pair). Multiple
+/// connections may share it (SRQ mode).
+pub struct RpcClient {
+    /// Connection id used on the wire.
+    pub c_id: u32,
+    rpc_seq: AtomicU32,
+    pub rings: Arc<RingPair>,
+    pub cq: Arc<CompletionQueue>,
+    pub sent: AtomicU64,
+    pub send_failures: AtomicU64,
+}
+
+impl RpcClient {
+    pub fn new(c_id: u32, rings: Arc<RingPair>) -> Arc<Self> {
+        Arc::new(RpcClient {
+            c_id,
+            rpc_seq: AtomicU32::new(0),
+            rings,
+            cq: CompletionQueue::new(),
+            sent: AtomicU64::new(0),
+            send_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// Issue a non-blocking call: `method` rides in the frame's flags
+    /// byte, `payload` must fit one cache line (§4.7: larger RPCs require
+    /// software reassembly — see `send_multi`).
+    pub fn call_async(&self, method: u8, payload: &[u8]) -> Result<u32, ()> {
+        assert!(payload.len() <= MAX_PAYLOAD_BYTES);
+        let rpc_id = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::new(RpcType::Request, method, self.c_id, rpc_id, payload);
+        match self.rings.tx.push(frame) {
+            Ok(()) => {
+                self.sent.fetch_add(1, Ordering::Relaxed);
+                Ok(rpc_id)
+            }
+            Err(_) => {
+                self.send_failures.fetch_add(1, Ordering::Relaxed);
+                Err(())
+            }
+        }
+    }
+
+    /// Blocking call: spins on the completion queue until the response
+    /// with this rpc_id arrives (dispatch-thread model, no context
+    /// switch).
+    pub fn call_blocking(&self, method: u8, payload: &[u8]) -> Option<Vec<u8>> {
+        let mut backoff = Backoff::new();
+        let rpc_id = loop {
+            match self.call_async(method, payload) {
+                Ok(id) => break id,
+                Err(()) => backoff.snooze(),
+            }
+        };
+        backoff.reset();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            self.poll_completions();
+            let mut found = None;
+            {
+                let mut done = self.cq.done.lock().unwrap();
+                if let Some(pos) = done.iter().position(|c| c.rpc_id == rpc_id) {
+                    found = Some(done.swap_remove(pos));
+                }
+            }
+            if let Some(c) = found {
+                return Some(c.payload);
+            }
+            if std::time::Instant::now() > deadline {
+                return None; // treat as lost
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Poll the RX ring, moving any responses into the completion queue.
+    /// Returns how many completions were harvested.
+    pub fn poll_completions(&self) -> usize {
+        let mut n = 0;
+        while let Some(frame) = self.rings.rx.pop() {
+            self.cq.push(Completion { rpc_id: frame.rpc_id(), payload: frame.payload() });
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Pool of RPC clients (§4.2): one per flow, sharing a server target.
+pub struct RpcClientPool {
+    pub clients: Vec<Arc<RpcClient>>,
+}
+
+impl RpcClientPool {
+    pub fn new(clients: Vec<Arc<RpcClient>>) -> Self {
+        RpcClientPool { clients }
+    }
+
+    pub fn client(&self, i: usize) -> &Arc<RpcClient> {
+        &self.clients[i % self.clients.len()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.clients
+            .iter()
+            .map(|c| c.cq.completed_count.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Server-side request handler: (method, request payload) -> response
+/// payload.
+pub type Handler = Arc<dyn Fn(u8, &[u8]) -> Vec<u8> + Send + Sync + 'static>;
+
+/// How RPC handlers execute (§5.7, Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// `Simple`: handlers run inline in the dispatch thread (lowest
+    /// latency; long handlers block the flow's RX ring).
+    Dispatch,
+    /// `Optimized`: handlers run in separate worker threads; the
+    /// dispatch thread only moves frames (higher throughput for long
+    /// RPCs, extra queueing latency).
+    Worker,
+}
+
+/// One server dispatch thread's state: its flow's rings + handler table.
+pub struct RpcServerThread {
+    pub flow: u32,
+    pub rings: Arc<RingPair>,
+}
+
+/// Threaded RPC server (§4.2): one dispatch thread per NIC flow.
+pub struct RpcThreadedServer {
+    pub threads: Vec<RpcServerThread>,
+    pub handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+    pub mode: DispatchMode,
+    stop: Arc<AtomicBool>,
+    pub handled: Arc<AtomicU64>,
+}
+
+impl RpcThreadedServer {
+    pub fn new(mode: DispatchMode) -> Self {
+        RpcThreadedServer {
+            threads: Vec::new(),
+            handlers: Arc::new(Mutex::new(HashMap::new())),
+            mode,
+            stop: Arc::new(AtomicBool::new(false)),
+            handled: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Register a remote procedure under a method id.
+    pub fn register(&self, method: u8, handler: Handler) {
+        self.handlers.lock().unwrap().insert(method, handler);
+    }
+
+    /// Attach a flow (ring pair) served by one dispatch thread.
+    pub fn add_flow(&mut self, flow: u32, rings: Arc<RingPair>) {
+        self.threads.push(RpcServerThread { flow, rings });
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Spawn the dispatch (and, in `Worker` mode, worker) threads.
+    /// Returns join handles; signal `stop_flag` to wind down.
+    pub fn start(&self) -> Vec<std::thread::JoinHandle<()>> {
+        let mut joins = Vec::new();
+        for t in &self.threads {
+            let rings = t.rings.clone();
+            let handlers = self.handlers.clone();
+            let stop = self.stop.clone();
+            let handled = self.handled.clone();
+            let mode = self.mode;
+            joins.push(std::thread::spawn(move || {
+                match mode {
+                    DispatchMode::Dispatch => {
+                        Self::dispatch_loop(rings, handlers, stop, handled)
+                    }
+                    DispatchMode::Worker => {
+                        Self::worker_loop(rings, handlers, stop, handled)
+                    }
+                };
+            }));
+        }
+        joins
+    }
+
+    fn handle_one(
+        frame: Frame,
+        handlers: &Mutex<HashMap<u8, Handler>>,
+        handled: &AtomicU64,
+    ) -> Frame {
+        let method = frame.flags();
+        let handler = handlers.lock().unwrap().get(&method).cloned();
+        let resp_payload = match handler {
+            Some(h) => h(method, &frame.payload()),
+            None => Vec::new(),
+        };
+        handled.fetch_add(1, Ordering::Relaxed);
+        let take = resp_payload.len().min(MAX_PAYLOAD_BYTES);
+        Frame::new(RpcType::Response, method, frame.c_id(), frame.rpc_id(), &resp_payload[..take])
+    }
+
+    fn dispatch_loop(
+        rings: Arc<RingPair>,
+        handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+        stop: Arc<AtomicBool>,
+        handled: Arc<AtomicU64>,
+    ) {
+        let mut backoff = Backoff::new();
+        while !stop.load(Ordering::Relaxed) {
+            match rings.rx.pop() {
+                Some(frame) => {
+                    backoff.reset();
+                    let resp = Self::handle_one(frame, &handlers, &handled);
+                    // Wait out TX backpressure (bounded ring).
+                    let mut r = resp;
+                    let mut tx_backoff = Backoff::new();
+                    while let Err(back) = rings.tx.push(r) {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        r = back;
+                        tx_backoff.snooze();
+                    }
+                }
+                None => backoff.snooze(),
+            }
+        }
+    }
+
+    fn worker_loop(
+        rings: Arc<RingPair>,
+        handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+        stop: Arc<AtomicBool>,
+        handled: Arc<AtomicU64>,
+    ) {
+        // Dispatch thread forwards to a worker over a channel; worker
+        // pushes responses back through a locked producer.
+        let (tx_work, rx_work) = std::sync::mpsc::channel::<Frame>();
+        let worker = {
+            let rings = rings.clone();
+            let handlers = handlers.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while let Ok(frame) = rx_work.recv() {
+                    let resp = Self::handle_one(frame, &handlers, &handled);
+                    let mut r = resp;
+                    let mut tx_backoff = Backoff::new();
+                    while let Err(back) = rings.tx.push(r) {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        r = back;
+                        tx_backoff.snooze();
+                    }
+                }
+            })
+        };
+        let mut backoff = Backoff::new();
+        while !stop.load(Ordering::Relaxed) {
+            match rings.rx.pop() {
+                Some(frame) => {
+                    backoff.reset();
+                    if tx_work.send(frame).is_err() {
+                        break;
+                    }
+                }
+                None => backoff.snooze(),
+            }
+        }
+        drop(tx_work);
+        let _ = worker.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_queue_callback_fires() {
+        let cq = CompletionQueue::new();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        cq.set_callback(Box::new(move |_| {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        cq.push(Completion { rpc_id: 1, payload: vec![1] });
+        cq.push(Completion { rpc_id: 2, payload: vec![2] });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        assert_eq!(cq.drain().len(), 2);
+        assert!(cq.is_empty());
+    }
+
+    #[test]
+    fn client_round_trip_via_manual_echo() {
+        // Emulate the NIC by echoing tx -> rx with type flipped.
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(9, rings.clone());
+        let id = client.call_async(3, b"ping").unwrap();
+        let req = rings.tx.pop().unwrap();
+        assert_eq!(req.rpc_type(), Some(RpcType::Request));
+        assert_eq!(req.flags(), 3);
+        let resp = Frame::new(RpcType::Response, 3, 9, req.rpc_id(), b"pong");
+        rings.rx.push(resp).unwrap();
+        assert_eq!(client.poll_completions(), 1);
+        let done = client.cq.drain();
+        assert_eq!(done[0].rpc_id, id);
+        assert_eq!(done[0].payload, b"pong");
+    }
+
+    #[test]
+    fn client_backpressure_counted() {
+        let rings = Arc::new(RingPair::new(2, 2));
+        let client = RpcClient::new(1, rings);
+        assert!(client.call_async(0, b"").is_ok());
+        assert!(client.call_async(0, b"").is_ok());
+        assert!(client.call_async(0, b"").is_err());
+        assert_eq!(client.send_failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn server_dispatch_mode_serves() {
+        let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+        let rings = Arc::new(RingPair::new(64, 64));
+        server.add_flow(0, rings.clone());
+        server.register(
+            7,
+            Arc::new(|_, req| {
+                let mut v = req.to_vec();
+                v.reverse();
+                v
+            }),
+        );
+        let joins = server.start();
+        // Push requests straight into the server's RX ring.
+        for i in 0..32 {
+            let f = Frame::new(RpcType::Request, 7, 1, i, b"abc");
+            while rings.rx.push(f).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        // Collect 32 responses from the TX ring.
+        let mut got = 0;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while got < 32 {
+            if let Some(r) = rings.tx.pop() {
+                assert_eq!(r.rpc_type(), Some(RpcType::Response));
+                assert_eq!(r.payload(), b"cba");
+                got += 1;
+            } else {
+                assert!(std::time::Instant::now() < deadline, "timed out");
+                std::thread::yield_now();
+            }
+        }
+        server.stop_flag().store(true, Ordering::Relaxed);
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(server.handled.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn server_worker_mode_serves() {
+        let mut server = RpcThreadedServer::new(DispatchMode::Worker);
+        let rings = Arc::new(RingPair::new(64, 64));
+        server.add_flow(0, rings.clone());
+        server.register(1, Arc::new(|_, req| req.to_vec()));
+        let joins = server.start();
+        for i in 0..16 {
+            let f = Frame::new(RpcType::Request, 1, 2, i, b"xyz");
+            while rings.rx.push(f).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        let mut got = 0;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while got < 16 {
+            if let Some(r) = rings.tx.pop() {
+                assert_eq!(r.payload(), b"xyz");
+                got += 1;
+            } else {
+                assert!(std::time::Instant::now() < deadline, "timed out");
+                std::thread::yield_now();
+            }
+        }
+        server.stop_flag().store(true, Ordering::Relaxed);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_method_returns_empty() {
+        let handlers: Mutex<HashMap<u8, Handler>> = Mutex::new(HashMap::new());
+        let handled = AtomicU64::new(0);
+        let req = Frame::new(RpcType::Request, 42, 1, 1, b"zz");
+        let resp = RpcThreadedServer::handle_one(req, &handlers, &handled);
+        assert_eq!(resp.payload_len(), 0);
+        assert_eq!(resp.rpc_type(), Some(RpcType::Response));
+    }
+}

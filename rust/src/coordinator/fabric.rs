@@ -1,0 +1,340 @@
+//! Software loop-back fabric: the real-thread execution path that stands
+//! in for the FPGA when running the framework as actual code (examples,
+//! KVS servers, the Flight Registration demo).
+//!
+//! A dedicated "FPGA thread" plays the NIC ensemble: it drains every
+//! endpoint's TX rings, pushes the frames through the Dagger NIC model
+//! (connection lookup, steering, serdes) — using the **AOT-compiled XLA
+//! datapath artifact** when available — and delivers them into the
+//! destination endpoint's RX rings. This mirrors the paper's evaluation
+//! setup: two (or eight) NIC instances on one FPGA joined by a loop-back
+//! network with a model ToR switch (§5.1, Fig. 14).
+
+use crate::coordinator::frame::{Frame, RpcType};
+use crate::coordinator::rings::RingPair;
+use crate::nic::connection::Agent;
+use crate::nic::hard_config::HardConfig;
+use crate::nic::load_balancer::LbMode;
+use crate::nic::DaggerNic;
+use crate::runtime::{Engine, EngineSpec};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One host endpoint: a set of flows (ring pairs) behind one NIC.
+pub struct Endpoint {
+    pub addr: u32,
+    pub flows: Vec<Arc<RingPair>>,
+}
+
+/// Counters published by the fabric thread.
+#[derive(Default)]
+pub struct FabricStats {
+    pub forwarded: AtomicU64,
+    pub dropped_rx_full: AtomicU64,
+    pub dropped_no_route: AtomicU64,
+    pub dropped_invalid: AtomicU64,
+    pub datapath_batches: AtomicU64,
+}
+
+/// Builder + runtime handle for the loop-back fabric.
+pub struct Fabric {
+    endpoints: Vec<Endpoint>,
+    nics: Vec<DaggerNic>,
+    next_c_id: u32,
+    pub stats: Arc<FabricStats>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Fabric {
+    pub fn new() -> Fabric {
+        Fabric {
+            endpoints: Vec::new(),
+            nics: Vec::new(),
+            next_c_id: 1,
+            stats: Arc::new(FabricStats::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Add a host endpoint with `n_flows` flows; returns its address.
+    pub fn add_endpoint(&mut self, n_flows: u32, ring_entries: usize) -> u32 {
+        let addr = self.endpoints.len() as u32;
+        let cfg = HardConfig { n_flows, ..Default::default() };
+        let mut nic = DaggerNic::new(addr, cfg);
+        nic.soft.batch_size = 1;
+        self.nics.push(nic);
+        self.endpoints.push(Endpoint {
+            addr,
+            flows: (0..n_flows)
+                .map(|_| Arc::new(RingPair::new(ring_entries, ring_entries)))
+                .collect(),
+        });
+        addr
+    }
+
+    /// Set the server-side load balancer for an endpoint.
+    pub fn set_lb(&mut self, addr: u32, lb: LbMode) {
+        self.nics[addr as usize].soft.lb_mode = lb;
+    }
+
+    /// Restrict request steering to the first `n` flows (soft-config
+    /// `ActiveFlows`). Flows beyond `n` still receive *responses* (their
+    /// connections' src_flow routing) — this is how an endpoint
+    /// dedicates some flows to server dispatch and others to outbound
+    /// client rings.
+    pub fn set_active_flows(&mut self, addr: u32, n: u32) {
+        assert!(n >= 1 && n as usize <= self.endpoints[addr as usize].flows.len());
+        self.nics[addr as usize].soft.active_flows = n;
+    }
+
+    pub fn rings(&self, addr: u32, flow: u32) -> Arc<RingPair> {
+        self.endpoints[addr as usize].flows[flow as usize].clone()
+    }
+
+    pub fn n_flows(&self, addr: u32) -> u32 {
+        self.endpoints[addr as usize].flows.len() as u32
+    }
+
+    /// Open a connection from (client_addr, client_flow) to server_addr.
+    /// Returns the wire c_id. Installs the tuple in both NICs' connection
+    /// managers, like the paper's hardware connection setup.
+    pub fn connect(
+        &mut self,
+        client_addr: u32,
+        client_flow: u32,
+        server_addr: u32,
+        lb: LbMode,
+    ) -> u32 {
+        let c_id = self.next_c_id;
+        self.next_c_id += 1;
+        self.nics[client_addr as usize].open_connection(c_id, client_flow, server_addr, lb);
+        self.nics[server_addr as usize].open_connection(c_id, 0, client_addr, lb);
+        c_id
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Start the FPGA thread. Consumes the builder; returns a handle that
+    /// stops the thread when dropped (or via the stop flag). The engine
+    /// is constructed on the FPGA thread (PJRT handles are not `Send`).
+    pub fn start(self, spec: EngineSpec) -> FabricHandle {
+        let stop = self.stop.clone();
+        let stats = self.stats.clone();
+        let join = std::thread::Builder::new()
+            .name("dagger-fpga".into())
+            .spawn(move || {
+                let engine = spec.build();
+                run_fabric(self, engine)
+            })
+            .expect("spawn fabric");
+        FabricHandle { stop, stats, join: Some(join) }
+    }
+}
+
+impl Default for Fabric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct FabricHandle {
+    stop: Arc<AtomicBool>,
+    pub stats: Arc<FabricStats>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FabricHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for FabricHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The FPGA thread body: move frames endpoint->endpoint through the NIC
+/// datapath until stopped.
+fn run_fabric(mut fabric: Fabric, mut engine: Engine) {
+    let stop = fabric.stop.clone();
+    let stats = fabric.stats.clone();
+    let n_endpoints = fabric.endpoints.len();
+    let mut batch_buf: Vec<Frame> = Vec::with_capacity(64);
+    let mut idle_spins = 0u32;
+
+    while !stop.load(Ordering::Relaxed) {
+        let mut moved = false;
+        for src in 0..n_endpoints {
+            // Drain each TX ring of this endpoint into a batch.
+            for flow in 0..fabric.endpoints[src].flows.len() {
+                batch_buf.clear();
+                let rings = fabric.endpoints[src].flows[flow].clone();
+                rings.tx.pop_batch(&mut batch_buf, 32);
+                if batch_buf.is_empty() {
+                    continue;
+                }
+                moved = true;
+                deliver_batch(&mut fabric, &mut engine, src, &batch_buf, &stats);
+            }
+        }
+        if moved {
+            idle_spins = 0;
+        } else {
+            idle_spins += 1;
+            if idle_spins > 64 {
+                // Let co-located endpoint threads run (single-CPU boxes).
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+fn deliver_batch(
+    fabric: &mut Fabric,
+    engine: &mut Engine,
+    src: usize,
+    frames: &[Frame],
+    stats: &FabricStats,
+) {
+    for frame in frames {
+        if !frame.is_valid() {
+            stats.dropped_invalid.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        // Egress on the source NIC resolves the destination address.
+        let dst_addr = match fabric.nics[src].egress(0, frame) {
+            Some((dst, _lat)) => dst,
+            None => {
+                stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let dst = dst_addr as usize;
+        if dst >= fabric.endpoints.len() {
+            stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        // Ingress steering at the destination NIC.
+        let n_flows = fabric.endpoints[dst].flows.len() as u32;
+        let flow = match frame.rpc_type() {
+            Some(RpcType::Response) => {
+                match fabric.nics[dst].cm.lookup(Agent::IncomingFlow, frame.c_id()) {
+                    Some((t, _)) => t.src_flow % n_flows,
+                    None => {
+                        stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+            }
+            _ => {
+                // Request path: steering runs on the datapath engine —
+                // the AOT XLA artifact when loaded. Only the endpoint's
+                // *active* (server) flows are steering targets.
+                let lb = fabric.nics[dst].soft.lb_mode;
+                let active = fabric.nics[dst].soft.active_flows.min(n_flows).max(1);
+                match engine {
+                    Engine::Xla(dp) if 1 <= dp.batch => {
+                        stats.datapath_batches.fetch_add(1, Ordering::Relaxed);
+                        match dp.process(std::slice::from_ref(frame), lb.as_u32(), active) {
+                            Ok((meta, _lanes)) => meta[0].flow,
+                            Err(_) => crate::nic::load_balancer::steer(frame, lb, active),
+                        }
+                    }
+                    _ => crate::nic::load_balancer::steer(frame, lb, active),
+                }
+            }
+        };
+        let rx = &fabric.endpoints[dst].flows[flow as usize].rx;
+        match rx.push(*frame) {
+            Ok(()) => {
+                stats.forwarded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                stats.dropped_rx_full.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
+    use std::sync::Arc;
+
+    /// Full round trip through the fabric with the native engine:
+    /// client -> fabric -> server dispatch thread -> fabric -> client.
+    #[test]
+    fn end_to_end_echo_native_engine() {
+        let mut fabric = Fabric::new();
+        let client_addr = fabric.add_endpoint(2, 64);
+        let server_addr = fabric.add_endpoint(2, 64);
+        fabric.set_lb(server_addr, LbMode::RoundRobin);
+        let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::RoundRobin);
+
+        let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
+
+        let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+        for flow in 0..2 {
+            server.add_flow(flow, fabric.rings(server_addr, flow));
+        }
+        server.register(5, Arc::new(|_, req| {
+            let mut v = req.to_vec();
+            v.push(b'!');
+            v
+        }));
+        let server_joins = server.start();
+        let handle = fabric.start(EngineSpec::Native);
+
+        let resp = client.call_blocking(5, b"hi").expect("response");
+        assert_eq!(resp, b"hi!");
+
+        // A burst of async calls all complete.
+        for _ in 0..64 {
+            while client.call_async(5, b"x").is_err() {
+                std::thread::yield_now();
+            }
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while client.cq.completed_count.load(Ordering::Relaxed) < 65 {
+            client.poll_completions();
+            assert!(std::time::Instant::now() < deadline, "timeout");
+            std::thread::yield_now();
+        }
+
+        server.stop_flag().store(true, Ordering::Relaxed);
+        handle.shutdown();
+        for j in server_joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_destination_counted() {
+        let mut fabric = Fabric::new();
+        let a = fabric.add_endpoint(1, 16);
+        let rings = fabric.rings(a, 0);
+        // No connection installed: egress fails.
+        let stats = fabric.stats.clone();
+        let handle = fabric.start(EngineSpec::Native);
+        rings.tx.push(Frame::new(RpcType::Request, 0, 999, 0, b"?")).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while stats.dropped_no_route.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "timeout");
+            std::thread::yield_now();
+        }
+        handle.shutdown();
+    }
+}

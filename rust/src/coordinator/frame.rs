@@ -1,0 +1,259 @@
+//! RPC wire frame: one 64-byte cache line = 16 little-endian u32 words.
+//!
+//! This layout is shared bit-for-bit with the Pallas datapath kernels
+//! (python/compile/kernels/ref.py) — rust/tests/runtime_artifacts.rs
+//! cross-checks the two implementations through the AOT artifact.
+//!
+//! ```text
+//! word 0   : magic(16) | rpc_type(8) | flags(8)
+//! word 1   : connection id (c_id)
+//! word 2   : rpc id (monotonic per client)
+//! word 3   : payload length in bytes (0..=48)
+//! words 4..15 : payload (48 bytes; KVS keys first)
+//! ```
+
+/// Magic tag in the top 16 bits of word 0 (must match ref.MAGIC).
+pub const MAGIC: u32 = 0xDA66;
+pub const WORDS_PER_FRAME: usize = 16;
+pub const FRAME_BYTES: usize = 64;
+pub const PAYLOAD_WORDS: usize = 12;
+pub const MAX_PAYLOAD_BYTES: usize = 48;
+/// Words 4..12 participate in the object-level load-balancer hash.
+pub const KEY_WORDS: usize = 8;
+
+pub const FNV_OFFSET: u32 = 2166136261;
+pub const FNV_PRIME: u32 = 16777619;
+
+/// murmur3 avalanche finisher — mirror of kernels/ref.py `fmix32`.
+#[inline]
+pub fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h
+}
+
+/// RPC kinds carried in the `rpc_type` header field. Request/response
+/// share the same stack (§4.4: "the stack is symmetric"); the type field
+/// disambiguates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RpcType {
+    Request = 0,
+    Response = 1,
+    ConnSetup = 2,
+    ConnTeardown = 3,
+}
+
+impl RpcType {
+    pub fn from_u8(v: u8) -> Option<RpcType> {
+        match v {
+            0 => Some(RpcType::Request),
+            1 => Some(RpcType::Response),
+            2 => Some(RpcType::ConnSetup),
+            3 => Some(RpcType::ConnTeardown),
+            _ => None,
+        }
+    }
+}
+
+/// One RPC frame (a 64-byte cache line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub words: [u32; WORDS_PER_FRAME],
+}
+
+impl Frame {
+    /// Build a frame with a valid header.
+    pub fn new(rpc_type: RpcType, flags: u8, c_id: u32, rpc_id: u32, payload: &[u8]) -> Frame {
+        assert!(payload.len() <= MAX_PAYLOAD_BYTES, "payload too large");
+        let mut words = [0u32; WORDS_PER_FRAME];
+        words[0] = (MAGIC << 16) | ((rpc_type as u32) << 8) | flags as u32;
+        words[1] = c_id;
+        words[2] = rpc_id;
+        words[3] = payload.len() as u32;
+        for (i, chunk) in payload.chunks(4).enumerate() {
+            let mut w = [0u8; 4];
+            w[..chunk.len()].copy_from_slice(chunk);
+            words[4 + i] = u32::from_le_bytes(w);
+        }
+        Frame { words }
+    }
+
+    pub fn zeroed() -> Frame {
+        Frame { words: [0; WORDS_PER_FRAME] }
+    }
+
+    #[inline]
+    pub fn magic(&self) -> u32 {
+        self.words[0] >> 16
+    }
+
+    #[inline]
+    pub fn rpc_type_raw(&self) -> u8 {
+        ((self.words[0] >> 8) & 0xFF) as u8
+    }
+
+    pub fn rpc_type(&self) -> Option<RpcType> {
+        RpcType::from_u8(self.rpc_type_raw())
+    }
+
+    #[inline]
+    pub fn flags(&self) -> u8 {
+        (self.words[0] & 0xFF) as u8
+    }
+
+    #[inline]
+    pub fn c_id(&self) -> u32 {
+        self.words[1]
+    }
+
+    #[inline]
+    pub fn rpc_id(&self) -> u32 {
+        self.words[2]
+    }
+
+    #[inline]
+    pub fn payload_len(&self) -> usize {
+        self.words[3] as usize
+    }
+
+    /// Header validity — mirrors the kernel's `valid` output.
+    pub fn is_valid(&self) -> bool {
+        self.magic() == MAGIC && self.payload_len() <= MAX_PAYLOAD_BYTES
+    }
+
+    pub fn payload(&self) -> Vec<u8> {
+        let len = self.payload_len().min(MAX_PAYLOAD_BYTES);
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len.div_ceil(4) {
+            let bytes = self.words[4 + i].to_le_bytes();
+            let take = (len - i * 4).min(4);
+            out.extend_from_slice(&bytes[..take]);
+        }
+        out
+    }
+
+    /// FNV-1a over the 8 key words + fmix32 finisher — identical to the
+    /// Pallas kernel. (The finisher restores low-bit avalanche that
+    /// word-wise FNV lacks; `hash % n_flows` partitioning depends on it.)
+    pub fn key_hash(&self) -> u32 {
+        let mut h = FNV_OFFSET;
+        for i in 0..KEY_WORDS {
+            h = (h ^ self.words[4 + i]).wrapping_mul(FNV_PRIME);
+        }
+        fmix32(h)
+    }
+
+    /// XOR checksum fold over all 16 words.
+    pub fn checksum(&self) -> u32 {
+        self.words.iter().fold(0u32, |a, w| a ^ w)
+    }
+
+    /// Serialize to wire bytes (little-endian words).
+    pub fn to_bytes(&self) -> [u8; FRAME_BYTES] {
+        let mut out = [0u8; FRAME_BYTES];
+        for (i, w) in self.words.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8; FRAME_BYTES]) -> Frame {
+        let mut words = [0u32; WORDS_PER_FRAME];
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        Frame { words }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let f = Frame::new(RpcType::Request, 0x5A, 77, 1234, b"hello");
+        assert!(f.is_valid());
+        assert_eq!(f.rpc_type(), Some(RpcType::Request));
+        assert_eq!(f.flags(), 0x5A);
+        assert_eq!(f.c_id(), 77);
+        assert_eq!(f.rpc_id(), 1234);
+        assert_eq!(f.payload(), b"hello");
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let f = Frame::new(RpcType::Response, 1, 2, 3, &[9u8; 48]);
+        let g = Frame::from_bytes(&f.to_bytes());
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn max_payload_ok() {
+        let f = Frame::new(RpcType::Request, 0, 0, 0, &[0xAB; MAX_PAYLOAD_BYTES]);
+        assert!(f.is_valid());
+        assert_eq!(f.payload().len(), MAX_PAYLOAD_BYTES);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload too large")]
+    fn oversize_payload_panics() {
+        Frame::new(RpcType::Request, 0, 0, 0, &[0; 49]);
+    }
+
+    #[test]
+    fn zeroed_is_invalid() {
+        assert!(!Frame::zeroed().is_valid());
+    }
+
+    #[test]
+    fn fnv_matches_python_vector() {
+        // Same vector as python/tests test_fnv1a_known_vector: all-zero
+        // key words, FNV-1a then fmix32.
+        let mut h: u32 = 2166136261;
+        for _ in 0..KEY_WORDS {
+            h = (h ^ 0).wrapping_mul(16777619);
+        }
+        let f = Frame::zeroed();
+        assert_eq!(f.key_hash(), fmix32(h));
+    }
+
+    #[test]
+    fn key_hash_low_bits_avalanche() {
+        // Differences confined to byte 1 of a key word must spread over
+        // hash % 8 — the property the fmix32 finisher exists for.
+        let flows: std::collections::HashSet<u32> = (0..8u32)
+            .map(|i| {
+                let mut f = Frame::zeroed();
+                f.words[5] = (0x30 + i) << 8;
+                f.key_hash() % 8
+            })
+            .collect();
+        assert!(flows.len() > 2, "{flows:?}");
+    }
+
+    #[test]
+    fn checksum_detects_corruption() {
+        let f = Frame::new(RpcType::Request, 0, 1, 2, b"payload");
+        let c = f.checksum();
+        let mut g = f;
+        g.words[5] ^= 0x1000;
+        assert_ne!(g.checksum(), c);
+    }
+
+    #[test]
+    fn payload_partial_word() {
+        let f = Frame::new(RpcType::Request, 0, 0, 0, &[1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(f.payload(), vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn rpc_type_raw_bounds() {
+        assert_eq!(RpcType::from_u8(4), None);
+        assert_eq!(RpcType::from_u8(1), Some(RpcType::Response));
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the Dagger RPC software stack.
+//!
+//! * [`frame`] — the 64-byte wire format shared with the Pallas kernels.
+//! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O).
+//! * [`api`] — RpcClient / RpcClientPool / RpcThreadedServer /
+//!   CompletionQueue and the dispatch/worker threading models.
+//! * [`fabric`] — the real-thread loop-back fabric standing in for the
+//!   FPGA, optionally executing the AOT XLA datapath artifact.
+
+pub mod api;
+pub mod backoff;
+pub mod fabric;
+pub mod reassembly;
+pub mod frame;
+pub mod rings;
+
+pub use api::{
+    Completion, CompletionQueue, DispatchMode, Handler, RpcClient, RpcClientPool,
+    RpcThreadedServer,
+};
+pub use fabric::{Fabric, FabricHandle};
+pub use frame::{Frame, RpcType};
+pub use rings::{Ring, RingPair};

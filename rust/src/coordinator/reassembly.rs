@@ -1,0 +1,271 @@
+//! Software RPC reassembly (§4.7): transferring RPCs larger than one
+//! cache line.
+//!
+//! The memory-interconnect MTU is a single 64 B line; relaxed memory
+//! ordering means multi-line messages cannot assume in-order delivery.
+//! The paper's hardware reassembly (NeBuLa-style CAM) is future work —
+//! "as of now, Dagger only features software-based RPC reassembling".
+//! This module is that software path:
+//!
+//! * the sender splits a large payload into fragments, each a normal
+//!   frame whose flags byte carries `frag_index`, and whose payload is
+//!   prefixed with a 4-byte fragment header (message id, total length);
+//! * the receiver collects fragments per (c_id, msg_id) out of order and
+//!   yields the full payload when every byte has arrived;
+//! * incomplete messages are garbage-collected after a timeout budget
+//!   (counted in collector sweeps).
+
+use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
+use std::collections::HashMap;
+
+/// Per-fragment overhead: msg_id (u16) | total_len (u16).
+const FRAG_HEADER_BYTES: usize = 4;
+/// Payload bytes carried by each fragment.
+pub const FRAG_CAPACITY: usize = MAX_PAYLOAD_BYTES - FRAG_HEADER_BYTES;
+/// flags byte holds the fragment index -> max 256 fragments.
+pub const MAX_MESSAGE_BYTES: usize = FRAG_CAPACITY * 256;
+
+/// Split a large payload into fragment frames. `msg_id` must be unique
+/// per (connection, in-flight message).
+pub fn fragment(
+    rpc_type: RpcType,
+    c_id: u32,
+    rpc_id: u32,
+    msg_id: u16,
+    payload: &[u8],
+) -> Result<Vec<Frame>, String> {
+    if payload.len() > MAX_MESSAGE_BYTES {
+        return Err(format!(
+            "message of {} bytes exceeds the {} byte reassembly budget",
+            payload.len(),
+            MAX_MESSAGE_BYTES
+        ));
+    }
+    let total = payload.len() as u16;
+    let frames = payload
+        .chunks(FRAG_CAPACITY.max(1))
+        .enumerate()
+        .map(|(i, chunk)| {
+            let mut buf = Vec::with_capacity(FRAG_HEADER_BYTES + chunk.len());
+            buf.extend_from_slice(&msg_id.to_le_bytes());
+            buf.extend_from_slice(&total.to_le_bytes());
+            buf.extend_from_slice(chunk);
+            Frame::new(rpc_type, i as u8, c_id, rpc_id, &buf)
+        })
+        .collect::<Vec<_>>();
+    if frames.is_empty() {
+        // Zero-length message still needs one fragment to carry the header.
+        let mut buf = Vec::with_capacity(FRAG_HEADER_BYTES);
+        buf.extend_from_slice(&msg_id.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        return Ok(vec![Frame::new(rpc_type, 0, c_id, rpc_id, &buf)]);
+    }
+    Ok(frames)
+}
+
+struct Partial {
+    total_len: usize,
+    received: usize,
+    chunks: HashMap<u8, Vec<u8>>,
+    age: u32,
+}
+
+/// Receiver-side reassembler, one per endpoint.
+#[derive(Default)]
+pub struct Reassembler {
+    partial: HashMap<(u32, u16), Partial>,
+    pub completed: u64,
+    pub expired: u64,
+    pub duplicate_fragments: u64,
+}
+
+impl Reassembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one fragment frame. Returns the whole payload when the
+    /// message completes.
+    pub fn push(&mut self, frame: &Frame) -> Option<Vec<u8>> {
+        let payload = frame.payload();
+        if payload.len() < FRAG_HEADER_BYTES {
+            return None;
+        }
+        let msg_id = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+        let total_len = u16::from_le_bytes(payload[2..4].try_into().unwrap()) as usize;
+        let chunk = payload[FRAG_HEADER_BYTES..].to_vec();
+        let idx = frame.flags();
+        let key = (frame.c_id(), msg_id);
+
+        let p = self.partial.entry(key).or_insert_with(|| Partial {
+            total_len,
+            received: 0,
+            chunks: HashMap::new(),
+            age: 0,
+        });
+        if p.chunks.contains_key(&idx) {
+            self.duplicate_fragments += 1;
+            return None;
+        }
+        p.received += chunk.len();
+        p.chunks.insert(idx, chunk);
+
+        if p.received >= p.total_len {
+            let p = self.partial.remove(&key).unwrap();
+            let mut out = Vec::with_capacity(p.total_len);
+            let mut indices: Vec<u8> = p.chunks.keys().copied().collect();
+            indices.sort_unstable();
+            for i in indices {
+                out.extend_from_slice(&p.chunks[&i]);
+            }
+            out.truncate(p.total_len);
+            self.completed += 1;
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Garbage-collection sweep: ages every partial message; drops those
+    /// seen `max_age` sweeps without completing.
+    pub fn sweep(&mut self, max_age: u32) {
+        let before = self.partial.len();
+        self.partial.retain(|_, p| {
+            p.age += 1;
+            p.age <= max_age
+        });
+        self.expired += (before - self.partial.len()) as u64;
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::prop;
+
+    #[test]
+    fn small_message_one_fragment() {
+        let frames = fragment(RpcType::Request, 1, 2, 7, b"tiny").unwrap();
+        assert_eq!(frames.len(), 1);
+        let mut r = Reassembler::new();
+        assert_eq!(r.push(&frames[0]), Some(b"tiny".to_vec()));
+        assert_eq!(r.completed, 1);
+    }
+
+    #[test]
+    fn large_message_in_order() {
+        let payload: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+        let frames = fragment(RpcType::Request, 1, 2, 9, &payload).unwrap();
+        assert_eq!(frames.len(), payload.len().div_ceil(FRAG_CAPACITY));
+        let mut r = Reassembler::new();
+        let mut out = None;
+        for f in &frames {
+            out = out.or(r.push(f));
+        }
+        assert_eq!(out, Some(payload));
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn out_of_order_reassembly() {
+        // Relaxed memory consistency: fragments arrive in any order.
+        let payload: Vec<u8> = (0..500u32).map(|i| (i * 7) as u8).collect();
+        let mut frames = fragment(RpcType::Response, 3, 4, 11, &payload).unwrap();
+        frames.reverse();
+        let mut r = Reassembler::new();
+        let mut out = None;
+        for f in &frames {
+            out = out.or(r.push(f));
+        }
+        assert_eq!(out, Some(payload));
+    }
+
+    #[test]
+    fn interleaved_messages_dont_mix() {
+        let a: Vec<u8> = vec![0xAA; 200];
+        let b: Vec<u8> = vec![0xBB; 200];
+        let fa = fragment(RpcType::Request, 1, 2, 1, &a).unwrap();
+        let fb = fragment(RpcType::Request, 1, 3, 2, &b).unwrap();
+        let mut r = Reassembler::new();
+        let mut done = vec![];
+        for (x, y) in fa.iter().zip(fb.iter()) {
+            if let Some(m) = r.push(x) {
+                done.push(m);
+            }
+            if let Some(m) = r.push(y) {
+                done.push(m);
+            }
+        }
+        assert_eq!(done.len(), 2);
+        assert!(done.contains(&a));
+        assert!(done.contains(&b));
+    }
+
+    #[test]
+    fn duplicates_ignored() {
+        let payload = vec![1u8; 100];
+        let frames = fragment(RpcType::Request, 1, 2, 5, &payload).unwrap();
+        let mut r = Reassembler::new();
+        r.push(&frames[0]);
+        r.push(&frames[0]); // dup
+        assert_eq!(r.duplicate_fragments, 1);
+        let mut out = None;
+        for f in &frames[1..] {
+            out = out.or(r.push(f));
+        }
+        assert_eq!(out, Some(payload));
+    }
+
+    #[test]
+    fn gc_expires_stale_partials() {
+        let frames = fragment(RpcType::Request, 1, 2, 5, &vec![0u8; 500]).unwrap();
+        let mut r = Reassembler::new();
+        r.push(&frames[0]); // lose the rest
+        assert_eq!(r.in_flight(), 1);
+        r.sweep(2);
+        r.sweep(2);
+        r.sweep(2);
+        assert_eq!(r.in_flight(), 0);
+        assert_eq!(r.expired, 1);
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        assert!(fragment(RpcType::Request, 1, 2, 3, &vec![0; MAX_MESSAGE_BYTES + 1]).is_err());
+    }
+
+    #[test]
+    fn empty_message_roundtrip() {
+        let frames = fragment(RpcType::Request, 1, 2, 3, b"").unwrap();
+        assert_eq!(frames.len(), 1);
+        let mut r = Reassembler::new();
+        assert_eq!(r.push(&frames[0]), Some(vec![]));
+    }
+
+    #[test]
+    fn prop_roundtrip_any_order() {
+        prop::check("reassembly-roundtrip", |rng| {
+            let len = rng.gen_range(4000) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let mut frames =
+                fragment(RpcType::Request, rng.next_u32(), 1, rng.next_u32() as u16, &payload)
+                    .map_err(|e| e.to_string())?;
+            rng.shuffle(&mut frames);
+            let mut r = Reassembler::new();
+            let mut out = None;
+            for f in &frames {
+                if let Some(m) = r.push(f) {
+                    out = Some(m);
+                }
+            }
+            if out.as_deref() != Some(&payload[..]) {
+                return Err(format!("roundtrip failed for len {len}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! RX/TX rings (§4.4, Fig. 8): the software side of the CPU-NIC
+//! interface. Each NIC flow maps 1-to-1 to an RX/TX ring pair; rings are
+//! provisioned per flow so dispatch threads access them lock-free
+//! (single-producer/single-consumer). When several connections share one
+//! `RpcClient` (SRQ mode), the producer side is wrapped in a lock.
+//!
+//! A ring is a bounded SPSC queue of 64-byte frames plus the free-buffer
+//! bookkeeping: a slot becomes reusable only after the consumer
+//! acknowledges it (mirrors the NIC's asynchronous bookkeeping path,
+//! Fig. 8 ④/⑥).
+
+use crate::coordinator::frame::Frame;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Bounded lock-free SPSC ring of frames.
+pub struct Ring {
+    buf: Box<[UnsafeCell<Frame>]>,
+    cap: usize,
+    /// Next slot the producer writes (monotonic).
+    tail: AtomicUsize,
+    /// Next slot the consumer reads (monotonic).
+    head: AtomicUsize,
+}
+
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    pub fn with_capacity(cap: usize) -> Arc<Ring> {
+        assert!(cap.is_power_of_two(), "ring capacity must be 2^k");
+        Arc::new(Ring {
+            buf: (0..cap).map(|_| UnsafeCell::new(Frame::zeroed())).collect(),
+            cap,
+            tail: AtomicUsize::new(0),
+            head: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.tail
+            .load(Ordering::Acquire)
+            .wrapping_sub(self.head.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.cap
+    }
+
+    /// Producer side: write one frame. Fails (backpressure) when the ring
+    /// is full — the caller decides whether to spin, drop, or batch.
+    ///
+    /// Safety: at most one producer thread at a time (enforce with
+    /// [`LockedProducer`] when sharing).
+    pub fn push(&self, frame: Frame) -> Result<(), Frame> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= self.cap {
+            return Err(frame);
+        }
+        unsafe {
+            *self.buf[tail & (self.cap - 1)].get() = frame;
+        }
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: pop one frame.
+    ///
+    /// Safety: at most one consumer thread at a time.
+    pub fn pop(&self) -> Option<Frame> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let frame = unsafe { *self.buf[head & (self.cap - 1)].get() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(frame)
+    }
+
+    /// Consumer side: pop up to `max` frames into `out` (batch drain —
+    /// the CCI-P batching analogue in software).
+    pub fn pop_batch(&self, out: &mut Vec<Frame>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.pop() {
+                Some(f) => {
+                    out.push(f);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+}
+
+/// Producer handle serialized by a lock — used when multiple connections
+/// share one `RpcClient`'s TX ring (SRQ mode, §4.2: "explicit locking in
+/// the RpcClient RX/TX path is required").
+pub struct LockedProducer {
+    ring: Arc<Ring>,
+    lock: std::sync::Mutex<()>,
+}
+
+impl LockedProducer {
+    pub fn new(ring: Arc<Ring>) -> Self {
+        LockedProducer { ring, lock: std::sync::Mutex::new(()) }
+    }
+
+    pub fn push(&self, frame: Frame) -> Result<(), Frame> {
+        let _g = self.lock.lock().unwrap();
+        self.ring.push(frame)
+    }
+}
+
+/// A flow's ring pair as seen from the software endpoint.
+pub struct RingPair {
+    pub tx: Arc<Ring>,
+    pub rx: Arc<Ring>,
+}
+
+impl RingPair {
+    pub fn new(tx_entries: usize, rx_entries: usize) -> RingPair {
+        RingPair {
+            tx: Ring::with_capacity(tx_entries),
+            rx: Ring::with_capacity(rx_entries),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::RpcType;
+    use std::thread;
+
+    fn f(id: u32) -> Frame {
+        Frame::new(RpcType::Request, 0, 0, id, b"")
+    }
+
+    #[test]
+    fn fifo_order() {
+        let r = Ring::with_capacity(8);
+        for i in 0..5 {
+            r.push(f(i)).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(r.pop().unwrap().rpc_id(), i);
+        }
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let r = Ring::with_capacity(4);
+        for i in 0..4 {
+            r.push(f(i)).unwrap();
+        }
+        assert!(r.is_full());
+        assert!(r.push(f(9)).is_err());
+        r.pop().unwrap();
+        assert!(r.push(f(9)).is_ok());
+    }
+
+    #[test]
+    fn batch_drain() {
+        let r = Ring::with_capacity(16);
+        for i in 0..10 {
+            r.push(f(i)).unwrap();
+        }
+        let mut out = vec![];
+        assert_eq!(r.pop_batch(&mut out, 4), 4);
+        assert_eq!(out.len(), 4);
+        assert_eq!(r.len(), 6);
+    }
+
+    #[test]
+    fn spsc_cross_thread_stress() {
+        let r = Ring::with_capacity(64);
+        let n = 100_000u32;
+        let prod = {
+            let r = r.clone();
+            thread::spawn(move || {
+                for i in 0..n {
+                    loop {
+                        if r.push(f(i)).is_ok() {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+        let mut expected = 0u32;
+        while expected < n {
+            if let Some(frame) = r.pop() {
+                assert_eq!(frame.rpc_id(), expected, "out of order");
+                expected += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        prod.join().unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn locked_producer_many_threads() {
+        let r = Ring::with_capacity(1024);
+        let p = Arc::new(LockedProducer::new(r.clone()));
+        let mut handles = vec![];
+        for t in 0..4u32 {
+            let p = p.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..200u32 {
+                    while p.push(f(t * 1000 + i)).is_err() {
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        let mut got = 0;
+        while got < 800 {
+            if r.pop().is_some() {
+                got += 1;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k")]
+    fn non_pow2_rejected() {
+        Ring::with_capacity(10);
+    }
+}

@@ -1,0 +1,541 @@
+//! Multi-tier microservice discrete-event simulation — the engine behind
+//! the Flight Registration evaluation (Table 4, Fig. 15) and the §3
+//! characterization studies (Figs. 3 and 5).
+//!
+//! Each tier has dispatch threads (and optionally worker threads), a
+//! handler-time distribution, and a nested-call plan: a list of stages,
+//! each a parallel fan-out to downstream tiers that blocks until all
+//! responses return (the Check-in pattern: non-blocking calls to Flight/
+//! Baggage/Passport, then block for all, then a blocking call to
+//! Airport).
+//!
+//! Threading models (§5.7):
+//! * `Simple`  — handlers (including nested-call waits) run in the
+//!   dispatch thread, blocking the flow's RX ring;
+//! * `Optimized` — dispatch threads only move frames; handlers run in a
+//!   worker pool (extra handoff latency, much higher throughput for
+//!   long-running RPCs).
+
+use crate::sim::{Engine, Histogram, Ns, Rng};
+use crate::telemetry::{Phase, PhaseBreakdown};
+use std::collections::VecDeque;
+
+/// Handler compute-time distribution.
+#[derive(Clone, Debug)]
+pub enum DurDist {
+    Fixed(u64),
+    /// Exponential with the given mean.
+    Exp(u64),
+    /// Mostly `light`, occasionally (`p_heavy`) `heavy` — the paper's
+    /// "resource-demanding and long-running Flight service".
+    Bimodal { p_heavy: f64, light: u64, heavy: u64 },
+}
+
+impl DurDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            DurDist::Fixed(ns) => *ns,
+            DurDist::Exp(mean) => rng.exp(*mean as f64) as u64,
+            DurDist::Bimodal { p_heavy, light, heavy } => {
+                if rng.chance(*p_heavy) {
+                    *heavy
+                } else {
+                    *light
+                }
+            }
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        match self {
+            DurDist::Fixed(ns) | DurDist::Exp(ns) => *ns as f64,
+            DurDist::Bimodal { p_heavy, light, heavy } => {
+                (1.0 - p_heavy) * *light as f64 + p_heavy * *heavy as f64
+            }
+        }
+    }
+}
+
+/// One tier's configuration.
+#[derive(Clone, Debug)]
+pub struct TierCfg {
+    pub name: String,
+    pub n_dispatch: u32,
+    /// 0 => Simple model (handler inline in dispatch thread).
+    pub n_workers: u32,
+    pub handler: DurDist,
+    /// Per-request RPC processing in the dispatch thread (ring read,
+    /// deserialize, response write).
+    pub rpc_overhead_ns: u64,
+    /// Nested-call plan: stages of parallel fan-outs (tier indices).
+    pub stages: Vec<Vec<usize>>,
+    /// Dispatch queue bound; arrivals beyond it drop.
+    pub queue_cap: usize,
+    /// Non-blocking nested calls: the thread is released when the fan-out
+    /// is issued instead of blocking until responses return (the paper's
+    /// front-end tiers: "run non-blocking RPCs to avoid throughput
+    /// bottlenecks due to high request propagation times", §5.7).
+    pub non_blocking: bool,
+}
+
+impl TierCfg {
+    pub fn leaf(name: &str, handler: DurDist) -> TierCfg {
+        TierCfg {
+            name: name.into(),
+            n_dispatch: 1,
+            n_workers: 0,
+            handler,
+            rpc_overhead_ns: 300,
+            stages: vec![],
+            queue_cap: 256,
+            non_blocking: false,
+        }
+    }
+}
+
+/// Whole-application configuration.
+#[derive(Clone, Debug)]
+pub struct AppCfg {
+    pub tiers: Vec<TierCfg>,
+    /// Entry tiers with their share of the external load: (tier, weight).
+    pub entries: Vec<(usize, f64)>,
+    /// One-way network hop between tiers, ns (Dagger: ~1 µs; kernel
+    /// TCP/IP: tens of µs).
+    pub hop_ns: u64,
+    /// Worker handoff cost (inter-thread queueing), ns.
+    pub handoff_ns: u64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MicroResult {
+    pub offered_krps: f64,
+    pub achieved_krps: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub sent: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Per-tier phase accounting (Fig. 3).
+    pub breakdown: std::rc::Rc<PhaseBreakdown>,
+    /// Per-tier p50/p99 latency (request arrival -> response sent).
+    pub tier_p50_us: Vec<f64>,
+    pub tier_p99_us: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ThreadKind {
+    Dispatch,
+    Worker,
+}
+
+struct Req {
+    tier: usize,
+    parent: Option<u32>,
+    stage: usize,
+    pending_children: u32,
+    conceived: Ns,
+    tier_arrive: Ns,
+    /// Which thread pool the request currently holds (for release).
+    holds: Option<ThreadKind>,
+}
+
+enum Ev {
+    Arrive { tier: usize, req: u32 },
+    /// Lazily generate the next external arrival for an entry stream
+    /// (keeps the event heap small — see rpc_sim §Perf note).
+    NextArrival { entry: usize },
+    /// A dispatch or worker thread becomes free; try to start queued work.
+    Pump { tier: usize, kind: ThreadKind },
+    /// rpc_overhead done in dispatch: run inline (Simple) or hand off.
+    DispatchDone { req: u32 },
+    /// Handler compute finished: begin stage 0 / respond.
+    ComputeDone { req: u32 },
+    /// A nested child finished; response arrived back at the parent.
+    ChildDone { parent: u32 },
+    /// Response delivered to the requester (root completion).
+    RootDone { req: u32 },
+}
+
+struct Tier {
+    cfg: TierCfg,
+    dispatch_free: u32,
+    worker_free: u32,
+    dispatch_q: VecDeque<u32>,
+    worker_q: VecDeque<u32>,
+    hist: Histogram,
+}
+
+struct World {
+    app: AppCfg,
+    tiers: Vec<Tier>,
+    reqs: Vec<Req>,
+    /// Per-entry-stream arrival state: (tier, rng, mean gap ns).
+    arrival_gen: Vec<(usize, Rng, f64)>,
+    rng: Rng,
+    hist: Histogram,
+    breakdown: PhaseBreakdown,
+    sent: u64,
+    completed: u64,
+    completed_measured: u64,
+    dropped: u64,
+    warmup_end: Ns,
+    horizon: Ns,
+}
+
+impl World {
+    fn release(&mut self, eng: &mut Engine<Ev>, req: u32) {
+        if let Some(kind) = self.reqs[req as usize].holds.take() {
+            let tier = self.reqs[req as usize].tier;
+            match kind {
+                ThreadKind::Dispatch => self.tiers[tier].dispatch_free += 1,
+                ThreadKind::Worker => self.tiers[tier].worker_free += 1,
+            }
+            eng.at(eng.now(), Ev::Pump { tier, kind });
+        }
+    }
+
+    fn respond(&mut self, eng: &mut Engine<Ev>, req: u32, now: Ns) {
+        let tier = self.reqs[req as usize].tier;
+        let arrive = self.reqs[req as usize].tier_arrive;
+        self.tiers[tier].hist.record(now - arrive);
+        self.release(eng, req);
+        let hop = self.app.hop_ns;
+        match self.reqs[req as usize].parent {
+            Some(parent) => eng.at(now + hop, Ev::ChildDone { parent }),
+            None => eng.at(now + hop, Ev::RootDone { req }),
+        }
+    }
+
+    fn begin_stage(&mut self, eng: &mut Engine<Ev>, req: u32, now: Ns) {
+        loop {
+            let tier = self.reqs[req as usize].tier;
+            let stage = self.reqs[req as usize].stage;
+            let stages = &self.tiers[tier].cfg.stages;
+            if stage >= stages.len() {
+                self.respond(eng, req, now);
+                return;
+            }
+            let targets = stages[stage].clone();
+            self.reqs[req as usize].stage += 1;
+            if targets.is_empty() {
+                continue;
+            }
+            self.reqs[req as usize].pending_children = targets.len() as u32;
+            if self.tiers[tier].cfg.non_blocking {
+                // Fire-and-continue: free the thread at issue time.
+                self.release(eng, req);
+            }
+            for t in targets {
+                let child = self.reqs.len() as u32;
+                self.reqs.push(Req {
+                    tier: t,
+                    parent: Some(req),
+                    stage: 0,
+                    pending_children: 0,
+                    conceived: now,
+                    tier_arrive: 0,
+                    holds: None,
+                });
+                eng.at(now + self.app.hop_ns, Ev::Arrive { tier: t, req: child });
+            }
+            return;
+        }
+    }
+}
+
+fn pump(eng: &mut Engine<Ev>, w: &mut World, now: Ns, tier: usize, kind: ThreadKind) {
+    match kind {
+        ThreadKind::Dispatch => {
+            while w.tiers[tier].dispatch_free > 0 {
+                let Some(req) = w.tiers[tier].dispatch_q.pop_front() else { break };
+                w.tiers[tier].dispatch_free -= 1;
+                w.reqs[req as usize].holds = Some(ThreadKind::Dispatch);
+                let wait = now - w.reqs[req as usize].tier_arrive;
+                let name = w.tiers[tier].cfg.name.clone();
+                w.breakdown.add(&name, Phase::Queueing, wait);
+                let overhead = w.tiers[tier].cfg.rpc_overhead_ns;
+                w.breakdown.add(&name, Phase::RpcProcessing, overhead);
+                eng.at(now + overhead, Ev::DispatchDone { req });
+            }
+        }
+        ThreadKind::Worker => {
+            while w.tiers[tier].worker_free > 0 {
+                let Some(req) = w.tiers[tier].worker_q.pop_front() else { break };
+                w.tiers[tier].worker_free -= 1;
+                w.reqs[req as usize].holds = Some(ThreadKind::Worker);
+                let compute = w.tiers[tier].cfg.handler.sample(&mut w.rng);
+                let name = w.tiers[tier].cfg.name.clone();
+                w.breakdown.add(&name, Phase::AppLogic, compute);
+                eng.at(now + compute, Ev::ComputeDone { req });
+            }
+        }
+    }
+}
+
+/// Run the application at a given external load.
+pub fn run(app: AppCfg, offered_krps: f64, duration_us: u64, warmup_us: u64) -> MicroResult {
+    let horizon: Ns = duration_us * 1000;
+    let warmup_end: Ns = warmup_us * 1000;
+    let mut w = World {
+        tiers: app
+            .tiers
+            .iter()
+            .map(|cfg| Tier {
+                cfg: cfg.clone(),
+                dispatch_free: cfg.n_dispatch,
+                worker_free: cfg.n_workers,
+                dispatch_q: VecDeque::new(),
+                worker_q: VecDeque::new(),
+                hist: Histogram::new(),
+            })
+            .collect(),
+        reqs: Vec::with_capacity(1 << 16),
+        arrival_gen: Vec::new(),
+        rng: Rng::new(app.seed),
+        hist: Histogram::new(),
+        breakdown: PhaseBreakdown::new(),
+        sent: 0,
+        completed: 0,
+        completed_measured: 0,
+        dropped: 0,
+        warmup_end,
+        horizon,
+        app,
+    };
+
+    let mut eng: Engine<Ev> = Engine::new();
+
+    // External arrivals: Poisson per entry tier, generated lazily.
+    let total_w: f64 = w.app.entries.iter().map(|(_, wt)| wt).sum();
+    for (i, &(tier, weight)) in w.app.entries.clone().iter().enumerate() {
+        let rate = offered_krps * 1e3 * weight / total_w;
+        if rate <= 0.0 {
+            continue;
+        }
+        let gap = 1e9 / rate;
+        w.arrival_gen.push((tier, Rng::new(w.app.seed ^ (0xE117 + i as u64)), gap));
+        eng.at(0, Ev::NextArrival { entry: w.arrival_gen.len() - 1 });
+    }
+
+    let step = |eng: &mut Engine<Ev>, w: &mut World, now: Ns, ev: Ev| match ev {
+        Ev::NextArrival { entry } => {
+            let (tier, rng, gap) = &mut w.arrival_gen[entry];
+            let tier = *tier;
+            let at = now + rng.exp(*gap) as Ns;
+            if at < w.horizon {
+                let req = w.reqs.len() as u32;
+                w.reqs.push(Req {
+                    tier,
+                    parent: None,
+                    stage: 0,
+                    pending_children: 0,
+                    conceived: at,
+                    tier_arrive: 0,
+                    holds: None,
+                });
+                eng.at(at + w.app.hop_ns, Ev::Arrive { tier, req });
+                w.sent += 1;
+                eng.at(at, Ev::NextArrival { entry });
+            }
+        }
+        Ev::Arrive { tier, req } => {
+            let name = w.tiers[tier].cfg.name.clone();
+            w.breakdown.add(&name, Phase::Network, w.app.hop_ns);
+            if w.tiers[tier].dispatch_q.len() >= w.tiers[tier].cfg.queue_cap {
+                w.dropped += 1;
+                return;
+            }
+            w.reqs[req as usize].tier_arrive = now;
+            w.tiers[tier].dispatch_q.push_back(req);
+            pump(eng, w, now, tier, ThreadKind::Dispatch);
+        }
+        Ev::Pump { tier, kind } => pump(eng, w, now, tier, kind),
+        Ev::DispatchDone { req } => {
+            let tier = w.reqs[req as usize].tier;
+            if w.tiers[tier].cfg.n_workers == 0 {
+                // Simple: keep the dispatch thread; run handler inline.
+                let compute = w.tiers[tier].cfg.handler.sample(&mut w.rng);
+                let name = w.tiers[tier].cfg.name.clone();
+                w.breakdown.add(&name, Phase::AppLogic, compute);
+                eng.at(now + compute, Ev::ComputeDone { req });
+            } else {
+                // Optimized: free the dispatch thread, hand to a worker.
+                w.release(eng, req);
+                let handoff = w.app.handoff_ns;
+                let tier_q = tier;
+                eng.at(now + handoff, Ev::Pump { tier: tier_q, kind: ThreadKind::Worker });
+                w.tiers[tier].worker_q.push_back(req);
+            }
+        }
+        Ev::ComputeDone { req } => {
+            w.begin_stage(eng, req, now);
+        }
+        Ev::ChildDone { parent } => {
+            let p = &mut w.reqs[parent as usize];
+            debug_assert!(p.pending_children > 0);
+            p.pending_children -= 1;
+            if p.pending_children == 0 {
+                w.begin_stage(eng, parent, now);
+            }
+        }
+        Ev::RootDone { req } => {
+            let conceived = w.reqs[req as usize].conceived;
+            w.completed += 1;
+            if now >= w.warmup_end && now <= w.horizon {
+                w.completed_measured += 1;
+            }
+            if conceived >= w.warmup_end && now <= w.horizon {
+                w.hist.record(now - conceived);
+            }
+        }
+    };
+
+    eng.run_until(&mut w, horizon + 500_000, step);
+
+    let window_us = (duration_us - warmup_us) as f64;
+    MicroResult {
+        offered_krps,
+        achieved_krps: w.completed_measured as f64 * 1000.0 / window_us,
+        p50_us: w.hist.p50_us(),
+        p90_us: w.hist.p90_us(),
+        p99_us: w.hist.p99_us(),
+        sent: w.sent,
+        completed: w.completed,
+        dropped: w.dropped,
+        tier_p50_us: w.tiers.iter().map(|t| t.hist.p50_us()).collect(),
+        tier_p99_us: w.tiers.iter().map(|t| t.hist.p99_us()).collect(),
+        breakdown: std::rc::Rc::new(w.breakdown),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tier(workers: u32) -> AppCfg {
+        AppCfg {
+            tiers: vec![
+                TierCfg {
+                    name: "front".into(),
+                    n_dispatch: 8,
+                    n_workers: 0,
+                    handler: DurDist::Fixed(500),
+                    rpc_overhead_ns: 300,
+                    stages: vec![vec![1]],
+                    queue_cap: 512,
+                    non_blocking: false,
+                },
+                TierCfg {
+                    name: "back".into(),
+                    n_dispatch: 1,
+                    n_workers: workers,
+                    handler: DurDist::Fixed(5_000),
+                    rpc_overhead_ns: 300,
+                    stages: vec![],
+                    queue_cap: 512,
+                    non_blocking: false,
+                },
+            ],
+            entries: vec![(0, 1.0)],
+            hop_ns: 1000,
+            handoff_ns: 800,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn low_load_latency_is_sum_of_path() {
+        let r = run(two_tier(0), 1.0, 50_000, 5_000);
+        // Path: hop + overhead(300) + front(500) + hop + overhead + back
+        // (5000) + hop(resp) + hop(resp) ≈ 10.1 µs.
+        assert!((8.0..13.0).contains(&r.p50_us), "p50 {}", r.p50_us);
+        assert!(r.dropped == 0);
+        assert!((r.achieved_krps - 1.0).abs() < 0.15, "thr {}", r.achieved_krps);
+    }
+
+    #[test]
+    fn simple_mode_throughput_capped_by_back_tier() {
+        // Back tier: 1 dispatch thread, 5.3 µs busy per req -> ~188 Krps.
+        let (sat, _) = saturation_sweep(two_tier(0), &[100.0, 150.0, 200.0, 250.0]);
+        assert!((140.0..200.0).contains(&sat), "sat {sat}");
+    }
+
+    #[test]
+    fn workers_raise_throughput() {
+        let (sat_simple, _) = saturation_sweep(two_tier(0), &[150.0, 250.0]);
+        let (sat_opt, _) = saturation_sweep(two_tier(8), &[400.0, 800.0]);
+        assert!(
+            sat_opt > sat_simple * 2.0,
+            "simple {sat_simple} optimized {sat_opt}"
+        );
+    }
+
+    #[test]
+    fn workers_add_latency_at_low_load() {
+        let simple = run(two_tier(0), 1.0, 30_000, 3_000);
+        let opt = run(two_tier(8), 1.0, 30_000, 3_000);
+        assert!(opt.p50_us > simple.p50_us, "{} vs {}", opt.p50_us, simple.p50_us);
+    }
+
+    #[test]
+    fn fanout_waits_for_all_children() {
+        let app = AppCfg {
+            tiers: vec![
+                TierCfg {
+                    name: "root".into(),
+                    n_dispatch: 4,
+                    n_workers: 0,
+                    handler: DurDist::Fixed(100),
+                    rpc_overhead_ns: 100,
+                    stages: vec![vec![1, 2]],
+                    queue_cap: 64,
+                    non_blocking: false,
+                },
+                TierCfg::leaf("fast", DurDist::Fixed(1_000)),
+                TierCfg::leaf("slow", DurDist::Fixed(20_000)),
+            ],
+            entries: vec![(0, 1.0)],
+            hop_ns: 500,
+            handoff_ns: 500,
+            seed: 3,
+        };
+        let r = run(app, 0.5, 40_000, 4_000);
+        // Latency dominated by the slow child (20 µs), not the fast one.
+        assert!(r.p50_us > 20.0, "p50 {}", r.p50_us);
+        assert!(r.p50_us < 30.0, "p50 {}", r.p50_us);
+    }
+
+    #[test]
+    fn drops_counted_when_queues_overflow() {
+        let mut app = two_tier(0);
+        app.tiers[1].queue_cap = 4;
+        let r = run(app, 400.0, 20_000, 2_000);
+        assert!(r.dropped > 0);
+    }
+
+    /// Helper shared with the benches: highest achieved rate over a sweep.
+    pub fn saturation_sweep(app: AppCfg, loads: &[f64]) -> (f64, Vec<MicroResult>) {
+        let mut best = 0f64;
+        let mut out = vec![];
+        for &l in loads {
+            let r = run(app.clone(), l, 40_000, 4_000);
+            best = best.max(r.achieved_krps);
+            out.push(r);
+        }
+        (best, out)
+    }
+}
+
+/// Highest achieved rate over a load sweep (saturation point).
+pub fn saturation_sweep(app: AppCfg, loads: &[f64], duration_us: u64) -> (f64, Vec<MicroResult>) {
+    let mut best = 0f64;
+    let mut out = vec![];
+    for &l in loads {
+        let r = run(app.clone(), l, duration_us, duration_us / 10);
+        best = best.max(r.achieved_krps);
+        out.push(r);
+    }
+    (best, out)
+}

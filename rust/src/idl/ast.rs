@@ -1,0 +1,81 @@
+//! IDL abstract syntax tree.
+
+/// Scalar + fixed-array field types. The wire layout is fixed-offset
+//  little-endian (RPC arguments must be "continuous ... that do not
+//  contain references", §4.5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FieldType {
+    Int32,
+    Int64,
+    Uint32,
+    Uint64,
+    /// `char[N]` fixed byte array.
+    CharArray(usize),
+}
+
+impl FieldType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            FieldType::Int32 | FieldType::Uint32 => 4,
+            FieldType::Int64 | FieldType::Uint64 => 8,
+            FieldType::CharArray(n) => *n,
+        }
+    }
+
+    pub fn rust_type(&self) -> String {
+        match self {
+            FieldType::Int32 => "i32".into(),
+            FieldType::Int64 => "i64".into(),
+            FieldType::Uint32 => "u32".into(),
+            FieldType::Uint64 => "u64".into(),
+            FieldType::CharArray(n) => format!("[u8; {n}]"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Field {
+    pub ty: FieldType,
+    pub name: String,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Message {
+    pub name: String,
+    pub fields: Vec<Field>,
+}
+
+impl Message {
+    pub fn size_bytes(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.size_bytes()).sum()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Method {
+    pub name: String,
+    pub request: String,
+    pub response: String,
+    /// Method id on the wire (frame flags byte) — assigned in
+    /// declaration order.
+    pub id: u8,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Service {
+    pub name: String,
+    pub methods: Vec<Method>,
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Document {
+    pub messages: Vec<Message>,
+    pub services: Vec<Service>,
+}
+
+impl Document {
+    pub fn message(&self, name: &str) -> Option<&Message> {
+        self.messages.iter().find(|m| m.name == name)
+    }
+}

@@ -1,0 +1,119 @@
+//! IDL lexer: C-style identifiers, integers, punctuation, `//` comments.
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Token {
+    Ident(String),
+    Int(u64),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+}
+
+pub fn tokenize(src: &str) -> Result<Vec<Token>, String> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '{' => {
+                out.push(Token::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Token::RBrace);
+                i += 1;
+            }
+            '(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            '[' => {
+                out.push(Token::LBracket);
+                i += 1;
+            }
+            ']' => {
+                out.push(Token::RBracket);
+                i += 1;
+            }
+            ';' => {
+                out.push(Token::Semi);
+                i += 1;
+            }
+            ',' => {
+                out.push(Token::Comma);
+                i += 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                out.push(Token::Int(text.parse().map_err(|_| format!("bad integer '{text}'"))?));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push(Token::Ident(src[start..i].to_string()));
+            }
+            other => return Err(format!("unexpected character '{other}' at byte {i}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizes_listing1_fragment() {
+        let toks = tokenize("Message GetRequest { char[32] key; }").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::Ident("Message".into()),
+                Token::Ident("GetRequest".into()),
+                Token::LBrace,
+                Token::Ident("char".into()),
+                Token::LBracket,
+                Token::Int(32),
+                Token::RBracket,
+                Token::Ident("key".into()),
+                Token::Semi,
+                Token::RBrace,
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let toks = tokenize("// a comment\nfoo // trailing\nbar").unwrap();
+        assert_eq!(toks, vec![Token::Ident("foo".into()), Token::Ident("bar".into())]);
+    }
+
+    #[test]
+    fn bad_char_errors() {
+        assert!(tokenize("foo @ bar").is_err());
+    }
+}

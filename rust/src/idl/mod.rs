@@ -1,0 +1,85 @@
+//! Dagger IDL + code generator (§4.2, Listing 1).
+//!
+//! The paper adopts a Protobuf-flavoured IDL:
+//!
+//! ```text
+//! Message GetRequest {
+//!   int32 timestamp;
+//!   char[32] key;
+//! }
+//!
+//! Service KeyValueStore {
+//!   rpc get(GetRequest) returns(GetResponse);
+//!   rpc set(SetRequest) returns(SetResponse);
+//! }
+//! ```
+//!
+//! `generate` parses IDL source and emits Rust client/server stubs over
+//! [`crate::coordinator::api`]: a typed client wrapper per service (one
+//! method per rpc, request/response structs with fixed-layout
+//! (de)serialization into the 48-byte frame payload) and a server
+//! `register_*` helper that adapts typed handlers onto the byte-level
+//! `Handler` interface.
+
+mod ast;
+mod codegen;
+mod lexer;
+mod parser;
+
+pub use ast::{Document, Field, FieldType, Message, Method, Service};
+pub use codegen::generate_rust;
+pub use lexer::{tokenize, Token};
+pub use parser::parse;
+
+/// Parse IDL source and generate Rust stubs.
+pub fn generate(src: &str) -> Result<String, String> {
+    let doc = parse(src)?;
+    Ok(generate_rust(&doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KVS_IDL: &str = r#"
+        // The paper's Listing 1.
+        Message GetRequest {
+            int32 timestamp;
+            char[32] key;
+        }
+        Message GetResponse {
+            int32 status;
+            char[32] value;
+        }
+        Service KeyValueStore {
+            rpc get(GetRequest) returns(GetResponse);
+        }
+    "#;
+
+    #[test]
+    fn listing1_parses_and_generates() {
+        let code = generate(KVS_IDL).unwrap();
+        assert!(code.contains("pub struct GetRequest"));
+        assert!(code.contains("pub struct KeyValueStoreClient"));
+        assert!(code.contains("pub fn get("));
+        assert!(code.contains("register_key_value_store"));
+    }
+
+    #[test]
+    fn unknown_type_is_error() {
+        let err = generate("Message M { quux x; }").unwrap_err();
+        assert!(err.contains("quux"), "{err}");
+    }
+
+    #[test]
+    fn oversize_message_rejected() {
+        // 13 int32 = 52 bytes > 48-byte payload budget.
+        let mut src = String::from("Message Big {");
+        for i in 0..13 {
+            src.push_str(&format!("int32 f{i};"));
+        }
+        src.push('}');
+        let err = generate(&src).unwrap_err();
+        assert!(err.contains("48"), "{err}");
+    }
+}

@@ -1,0 +1,181 @@
+//! IDL recursive-descent parser.
+
+use super::ast::*;
+use super::lexer::{tokenize, Token};
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Token, String> {
+        let t = self.toks.get(self.pos).cloned().ok_or("unexpected end of input")?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &Token) -> Result<(), String> {
+        let got = self.next()?;
+        if &got == want {
+            Ok(())
+        } else {
+            Err(format!("expected {want:?}, got {got:?}"))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, String> {
+        match self.next()? {
+            Token::Ident(s) => Ok(s),
+            other => Err(format!("expected identifier, got {other:?}")),
+        }
+    }
+
+    fn field_type(&mut self) -> Result<FieldType, String> {
+        let name = self.ident()?;
+        match name.as_str() {
+            "int32" => Ok(FieldType::Int32),
+            "int64" => Ok(FieldType::Int64),
+            "uint32" => Ok(FieldType::Uint32),
+            "uint64" => Ok(FieldType::Uint64),
+            "char" => {
+                self.expect(&Token::LBracket)?;
+                let n = match self.next()? {
+                    Token::Int(n) => n as usize,
+                    other => return Err(format!("expected array size, got {other:?}")),
+                };
+                self.expect(&Token::RBracket)?;
+                if n == 0 {
+                    return Err("char[0] not allowed".into());
+                }
+                Ok(FieldType::CharArray(n))
+            }
+            other => Err(format!("unknown type '{other}'")),
+        }
+    }
+
+    fn message(&mut self) -> Result<Message, String> {
+        let name = self.ident()?;
+        self.expect(&Token::LBrace)?;
+        let mut fields = Vec::new();
+        let mut offset = 0usize;
+        while self.peek() != Some(&Token::RBrace) {
+            let ty = self.field_type()?;
+            let fname = self.ident()?;
+            self.expect(&Token::Semi)?;
+            let size = ty.size_bytes();
+            fields.push(Field { ty, name: fname, offset });
+            offset += size;
+        }
+        self.expect(&Token::RBrace)?;
+        let msg = Message { name, fields };
+        if msg.size_bytes() > crate::coordinator::frame::MAX_PAYLOAD_BYTES {
+            return Err(format!(
+                "message {} is {} bytes; the single-frame payload budget is 48 \
+                 (larger RPCs need software reassembly, paper §4.7)",
+                msg.name,
+                msg.size_bytes()
+            ));
+        }
+        Ok(msg)
+    }
+
+    fn service(&mut self) -> Result<Service, String> {
+        let name = self.ident()?;
+        self.expect(&Token::LBrace)?;
+        let mut methods = Vec::new();
+        while self.peek() != Some(&Token::RBrace) {
+            let kw = self.ident()?;
+            if kw != "rpc" {
+                return Err(format!("expected 'rpc', got '{kw}'"));
+            }
+            let mname = self.ident()?;
+            self.expect(&Token::LParen)?;
+            let request = self.ident()?;
+            self.expect(&Token::RParen)?;
+            let ret = self.ident()?;
+            if ret != "returns" {
+                return Err(format!("expected 'returns', got '{ret}'"));
+            }
+            self.expect(&Token::LParen)?;
+            let response = self.ident()?;
+            self.expect(&Token::RParen)?;
+            self.expect(&Token::Semi)?;
+            if methods.len() >= 256 {
+                return Err("a service supports at most 256 methods".into());
+            }
+            methods.push(Method { name: mname, request, response, id: methods.len() as u8 });
+        }
+        self.expect(&Token::RBrace)?;
+        Ok(Service { name, methods })
+    }
+}
+
+/// Parse a full IDL document and resolve message references.
+pub fn parse(src: &str) -> Result<Document, String> {
+    let toks = tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut doc = Document::default();
+    while p.peek().is_some() {
+        match p.ident()?.as_str() {
+            "Message" => doc.messages.push(p.message()?),
+            "Service" => doc.services.push(p.service()?),
+            other => return Err(format!("expected 'Message' or 'Service', got '{other}'")),
+        }
+    }
+    // Resolve method message references.
+    for s in &doc.services {
+        for m in &s.methods {
+            for msg in [&m.request, &m.response] {
+                if doc.message(msg).is_none() {
+                    return Err(format!(
+                        "service {}: rpc {} references unknown message '{msg}'",
+                        s.name, m.name
+                    ));
+                }
+            }
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_messages_and_services() {
+        let doc = parse(
+            "Message A { int32 x; char[8] k; }\n\
+             Message B { int64 y; }\n\
+             Service S { rpc f(A) returns(B); rpc g(B) returns(A); }",
+        )
+        .unwrap();
+        assert_eq!(doc.messages.len(), 2);
+        assert_eq!(doc.services[0].methods.len(), 2);
+        assert_eq!(doc.services[0].methods[1].id, 1);
+        let a = doc.message("A").unwrap();
+        assert_eq!(a.size_bytes(), 12);
+        assert_eq!(a.fields[1].offset, 4);
+    }
+
+    #[test]
+    fn unresolved_message_is_error() {
+        let err = parse("Service S { rpc f(Nope) returns(Nope); }").unwrap_err();
+        assert!(err.contains("Nope"));
+    }
+
+    #[test]
+    fn zero_len_array_rejected() {
+        assert!(parse("Message M { char[0] k; }").is_err());
+    }
+
+    #[test]
+    fn junk_keyword_rejected() {
+        assert!(parse("Banana M {}").is_err());
+    }
+}

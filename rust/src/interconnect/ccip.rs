@@ -1,0 +1,209 @@
+//! CCI-P bus model: the protocol stack between host CPU and FPGA that
+//! multiplexes one UPI link and two PCIe Gen3x8 links (§4.1, Table 2).
+//!
+//! Responsibilities modeled:
+//! * **outstanding-request window** — CCI-P supports at most 128
+//!   in-flight cache-line requests (§4.4); transfers beyond that stall.
+//! * **endpoint serialization** — the blue-region read engine services
+//!   one cache line every `occupancy` ns; this is the resource whose
+//!   saturation produces the 80 Mrps raw-read ceiling (Fig. 11 right).
+//! * **fair round-robin arbitration** across NIC instances sharing the
+//!   bus (used by the virtualized multi-NIC setup, Fig. 14 — "we give
+//!   the NICs fair round-robin access to the CCI-P bus by multiplexing
+//!   it", §5.1).
+
+use super::timing::CCIP_MAX_OUTSTANDING;
+use crate::sim::Ns;
+
+/// Outcome of asking the bus to carry a batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grant {
+    /// When the endpoint starts serving this batch.
+    pub start: Ns,
+    /// When the last line of the batch has crossed (endpoint freed).
+    pub done: Ns,
+}
+
+/// Shared CCI-P endpoint: single-server FIFO resource with an
+/// outstanding-line window.
+#[derive(Debug)]
+pub struct CcipBus {
+    /// Per-line serialization cost of the current transfer mode.
+    occupancy_ns: u64,
+    /// Endpoint busy horizon.
+    busy_until: Ns,
+    /// Lines currently in flight (granted but not yet retired).
+    outstanding: u32,
+    max_outstanding: u32,
+    /// Round-robin cursor over NIC instances.
+    rr_cursor: usize,
+    /// Stats.
+    pub lines_carried: u64,
+    pub stall_events: u64,
+    pub busy_ns_accum: u64,
+}
+
+impl CcipBus {
+    pub fn new(occupancy_ns: u64) -> Self {
+        CcipBus {
+            occupancy_ns,
+            busy_until: 0,
+            outstanding: 0,
+            max_outstanding: CCIP_MAX_OUTSTANDING,
+            rr_cursor: 0,
+            lines_carried: 0,
+            stall_events: 0,
+            busy_ns_accum: 0,
+        }
+    }
+
+    pub fn with_max_outstanding(mut self, max: u32) -> Self {
+        self.max_outstanding = max.max(1);
+        self
+    }
+
+    /// True if `lines` more lines fit in the outstanding window.
+    pub fn can_issue(&self, lines: u32) -> bool {
+        self.outstanding + lines <= self.max_outstanding
+    }
+
+    pub fn outstanding(&self) -> u32 {
+        self.outstanding
+    }
+
+    /// Reserve the endpoint for a batch of `lines` starting no earlier
+    /// than `now`. Returns the service window. Caller must later call
+    /// [`CcipBus::retire`] when the bookkeeping round-trip completes.
+    ///
+    /// If the outstanding window is full the caller should retry after
+    /// retirement; `can_issue` exposes the check (the DES models stall
+    /// by rescheduling).
+    pub fn issue(&mut self, now: Ns, lines: u32) -> Grant {
+        debug_assert!(lines > 0);
+        if !self.can_issue(lines) {
+            self.stall_events += 1;
+        }
+        let start = now.max(self.busy_until);
+        let service = self.occupancy_ns * lines as u64;
+        let done = start + service;
+        self.busy_until = done;
+        self.outstanding = (self.outstanding + lines).min(self.max_outstanding);
+        self.lines_carried += lines as u64;
+        self.busy_ns_accum += service;
+        Grant { start, done }
+    }
+
+    /// Retire `lines` outstanding lines (bookkeeping acknowledged).
+    pub fn retire(&mut self, lines: u32) {
+        self.outstanding = self.outstanding.saturating_sub(lines);
+    }
+
+    /// Fair round-robin pick among `n` requesters with a ready mask.
+    /// Returns the chosen index, advancing the cursor past it.
+    pub fn arbitrate(&mut self, ready: &[bool]) -> Option<usize> {
+        let n = ready.len();
+        if n == 0 {
+            return None;
+        }
+        for k in 0..n {
+            let idx = (self.rr_cursor + k) % n;
+            if ready[idx] {
+                self.rr_cursor = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Endpoint utilization over a window of `elapsed` ns.
+    pub fn utilization(&self, elapsed: Ns) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            (self.busy_ns_accum as f64 / elapsed as f64).min(1.0)
+        }
+    }
+
+    pub fn occupancy_ns(&self) -> u64 {
+        self.occupancy_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_back_to_back_batches() {
+        let mut bus = CcipBus::new(12);
+        let g1 = bus.issue(0, 4);
+        let g2 = bus.issue(0, 4);
+        assert_eq!(g1, Grant { start: 0, done: 48 });
+        assert_eq!(g2, Grant { start: 48, done: 96 });
+    }
+
+    #[test]
+    fn idle_gap_not_charged() {
+        let mut bus = CcipBus::new(12);
+        bus.issue(0, 1);
+        let g = bus.issue(1000, 1);
+        assert_eq!(g.start, 1000);
+        assert_eq!(g.done, 1012);
+    }
+
+    #[test]
+    fn outstanding_window_enforced() {
+        let mut bus = CcipBus::new(12).with_max_outstanding(8);
+        assert!(bus.can_issue(8));
+        bus.issue(0, 8);
+        assert!(!bus.can_issue(1));
+        bus.retire(4);
+        assert!(bus.can_issue(4));
+        assert!(!bus.can_issue(5));
+    }
+
+    #[test]
+    fn retire_never_underflows() {
+        let mut bus = CcipBus::new(12);
+        bus.retire(100);
+        assert_eq!(bus.outstanding(), 0);
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut bus = CcipBus::new(12);
+        let ready = vec![true, true, true];
+        let picks: Vec<usize> =
+            (0..6).map(|_| bus.arbitrate(&ready).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_not_ready() {
+        let mut bus = CcipBus::new(12);
+        assert_eq!(bus.arbitrate(&[false, true, false]), Some(1));
+        assert_eq!(bus.arbitrate(&[true, false, false]), Some(0)); // cursor wrapped
+        assert_eq!(bus.arbitrate(&[false, false, false]), None);
+    }
+
+    #[test]
+    fn aggregate_rate_matches_occupancy() {
+        // 83 M lines/s at 12 ns occupancy.
+        let mut bus = CcipBus::new(12);
+        let mut t = 0;
+        for _ in 0..1000 {
+            let g = bus.issue(t, 1);
+            t = g.done;
+            bus.retire(1);
+        }
+        let rate_mlps = 1000.0 / (t as f64 / 1000.0); // lines per us = M/s
+        assert!((rate_mlps - 83.3).abs() < 1.0, "{rate_mlps}");
+    }
+
+    #[test]
+    fn utilization_tracks_busy_time() {
+        let mut bus = CcipBus::new(10);
+        bus.issue(0, 10); // 100 ns busy
+        assert!((bus.utilization(200) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,173 @@
+//! Host Coherent Cache (HCC) model (§4.1): a small 128 KB direct-mapped
+//! cache in the FPGA blue bitstream, fully coherent with host memory via
+//! CCI-P. Dagger keeps connection state and transport structures in the
+//! HCC while bulk data stays in host DRAM, so NIC cache misses cost one
+//! coherent fetch (≈ UPI one-way) instead of a PCIe DMA round trip.
+//!
+//! The model is functional (tag array + valid bits) with hit/miss/
+//! invalidation accounting; the connection manager (nic/connection.rs)
+//! and the UPI polling path both sit on top of it.
+
+use super::timing::{CACHE_LINE_BYTES, UPI_ONE_WAY_NS};
+
+/// Default HCC geometry: 128 KB, 64 B lines, direct-mapped (§4.1).
+pub const HCC_BYTES: u64 = 128 * 1024;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    Miss,
+    /// Line was present but owned by the CPU since the last write
+    /// (coherence invalidation forced a re-fetch).
+    CoherenceMiss,
+}
+
+#[derive(Debug)]
+pub struct Hcc {
+    /// tag per set; u64::MAX = invalid.
+    tags: Vec<u64>,
+    /// line valid but invalidated by a host write (needs re-fetch).
+    stale: Vec<bool>,
+    sets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub coherence_misses: u64,
+    pub invalidations: u64,
+}
+
+impl Hcc {
+    pub fn new() -> Self {
+        Self::with_capacity(HCC_BYTES)
+    }
+
+    pub fn with_capacity(bytes: u64) -> Self {
+        let sets = (bytes / CACHE_LINE_BYTES).max(1);
+        Hcc {
+            tags: vec![u64::MAX; sets as usize],
+            stale: vec![false; sets as usize],
+            sets,
+            hits: 0,
+            misses: 0,
+            coherence_misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line_addr: u64) -> usize {
+        (line_addr % self.sets) as usize
+    }
+
+    /// NIC-side read of cache line `line_addr` (already in line units).
+    /// Returns the access class and its latency contribution in ns.
+    pub fn read(&mut self, line_addr: u64) -> (Access, u64) {
+        let set = self.set_of(line_addr);
+        if self.tags[set] == line_addr {
+            if self.stale[set] {
+                self.stale[set] = false;
+                self.coherence_misses += 1;
+                (Access::CoherenceMiss, UPI_ONE_WAY_NS)
+            } else {
+                self.hits += 1;
+                (Access::Hit, 5) // BRAM access, one NIC cycle
+            }
+        } else {
+            self.tags[set] = line_addr;
+            self.stale[set] = false;
+            self.misses += 1;
+            (Access::Miss, UPI_ONE_WAY_NS)
+        }
+    }
+
+    /// Host CPU wrote `line_addr`: coherence protocol invalidates the
+    /// FPGA's copy (this is exactly how the UPI polling mode learns about
+    /// new ring entries — "relies on invalidation messages to bring new
+    /// data from software buffers", §4.4.1).
+    pub fn host_write(&mut self, line_addr: u64) {
+        let set = self.set_of(line_addr);
+        if self.tags[set] == line_addr && !self.stale[set] {
+            self.stale[set] = true;
+            self.invalidations += 1;
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.coherence_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn sets(&self) -> u64 {
+        self.sets
+    }
+}
+
+impl Default for Hcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let h = Hcc::new();
+        assert_eq!(h.sets(), 2048); // 128 KB / 64 B
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut h = Hcc::new();
+        let (a, lat) = h.read(7);
+        assert_eq!(a, Access::Miss);
+        assert_eq!(lat, UPI_ONE_WAY_NS);
+        let (a, lat) = h.read(7);
+        assert_eq!(a, Access::Hit);
+        assert!(lat < 10);
+    }
+
+    #[test]
+    fn conflict_eviction_direct_mapped() {
+        let mut h = Hcc::with_capacity(64 * 4); // 4 sets
+        assert_eq!(h.read(1).0, Access::Miss);
+        assert_eq!(h.read(5).0, Access::Miss); // same set (5 % 4 == 1)
+        assert_eq!(h.read(1).0, Access::Miss); // evicted
+    }
+
+    #[test]
+    fn host_write_invalidates() {
+        let mut h = Hcc::new();
+        h.read(42);
+        h.host_write(42);
+        let (a, lat) = h.read(42);
+        assert_eq!(a, Access::CoherenceMiss);
+        assert_eq!(lat, UPI_ONE_WAY_NS);
+        assert_eq!(h.invalidations, 1);
+        // Re-fetch makes it clean again.
+        assert_eq!(h.read(42).0, Access::Hit);
+    }
+
+    #[test]
+    fn host_write_to_absent_line_is_noop() {
+        let mut h = Hcc::new();
+        h.host_write(9);
+        assert_eq!(h.invalidations, 0);
+        assert_eq!(h.read(9).0, Access::Miss);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut h = Hcc::new();
+        h.read(1);
+        h.read(1);
+        h.read(1);
+        h.read(2);
+        assert!((h.hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! # Dagger — FPGA-accelerated RPC fabric for cloud microservices
+//!
+//! Full-system reproduction of *"Dagger: Accelerating RPCs in Cloud
+//! Microservices Through Tightly-Coupled Reconfigurable NICs"* (Lazarev
+//! et al., 2021) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the RPC framework, the NIC hardware model,
+//!   the CPU↔NIC interconnect models (PCIe doorbell variants vs. the
+//!   UPI/CCI-P memory interconnect), the discrete-event simulator that
+//!   regenerates every table and figure of the paper, and the
+//!   applications (memcached- and MICA-style KVS, the 8-tier Flight
+//!   Registration service).
+//! * **L2/L1 (python/, build-time only)** — the NIC RPC-unit datapath as
+//!   a JAX graph over Pallas kernels, AOT-lowered to HLO text and
+//!   executed from Rust via PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod exp;
+pub mod idl;
+pub mod interconnect;
+pub mod nic;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod workload;
+
+pub use coordinator::frame::Frame;

@@ -1,0 +1,5 @@
+//! `dagger` CLI — leader entrypoint.
+
+fn main() {
+    std::process::exit(dagger::cli::main());
+}

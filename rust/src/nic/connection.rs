@@ -1,0 +1,283 @@
+//! Connection Manager (§4.2): hardware connection table, designed as a
+//! direct-mapped cache with 1W3R banking.
+//!
+//! The connection table maps `c_id -> <src_flow, dest_addr,
+//! load_balancer>`. To serve three concurrent hardware agents per cycle
+//! (outgoing flow, incoming flow, and the CM itself), the tuple is split
+//! across three tables indexed by the ⌈log N⌉ LSBs of the connection id.
+//! We model the three banks and their per-cycle port contention, plus the
+//! DRAM-backed miss path the paper leaves as future work (red lines in
+//! Fig. 6) — implemented here so cache-size ablations are possible.
+
+use crate::nic::load_balancer::LbMode;
+use std::collections::HashMap;
+
+/// Connection tuple stored per c_id (8–12 B × 3 banks in the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConnTuple {
+    pub c_id: u32,
+    /// Flow that receives this connection's requests; responses are
+    /// steered back to the same flow (§4.2).
+    pub src_flow: u32,
+    /// Destination host (loopback network address).
+    pub dest_addr: u32,
+    pub lb: LbMode,
+}
+
+/// Which hardware agent is reading (each has a dedicated read port).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Agent {
+    OutgoingFlow = 0,
+    IncomingFlow = 1,
+    Manager = 2,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CmStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub dram_fills: u64,
+    pub opens: u64,
+    pub closes: u64,
+    pub capacity_evictions: u64,
+}
+
+/// Direct-mapped connection cache backed by (host-DRAM-modeled) full map.
+pub struct ConnectionManager {
+    /// Cache entries: index -> tuple (None = invalid).
+    cache: Vec<Option<ConnTuple>>,
+    /// Backing store (host DRAM): all open connections.
+    dram: HashMap<u32, ConnTuple>,
+    /// Entries in the cache (≤ cache.len()).
+    resident: usize,
+    pub stats: CmStats,
+    /// Latency of a hit (one NIC cycle per bank read).
+    pub hit_ns: u64,
+    /// Miss penalty: fetch tuple from host DRAM over CCI-P.
+    pub miss_ns: u64,
+}
+
+impl ConnectionManager {
+    /// `entries` must be a power of two (hardware indexes by LSBs).
+    pub fn new(entries: usize) -> Self {
+        assert!(entries.is_power_of_two(), "connection cache size must be 2^k");
+        ConnectionManager {
+            cache: vec![None; entries],
+            dram: HashMap::new(),
+            resident: 0,
+            stats: CmStats::default(),
+            hit_ns: crate::interconnect::timing::NIC_CYCLE_NS,
+            miss_ns: crate::interconnect::timing::UPI_ONE_WAY_NS,
+        }
+    }
+
+    #[inline]
+    fn index(&self, c_id: u32) -> usize {
+        (c_id as usize) & (self.cache.len() - 1)
+    }
+
+    /// Open a connection: install in DRAM and the cache (possibly evicting
+    /// a conflicting entry, which stays resident in DRAM only).
+    pub fn open(&mut self, tuple: ConnTuple) {
+        self.stats.opens += 1;
+        self.dram.insert(tuple.c_id, tuple);
+        let idx = self.index(tuple.c_id);
+        match self.cache[idx] {
+            Some(old) if old.c_id != tuple.c_id => {
+                self.stats.capacity_evictions += 1;
+            }
+            None => self.resident += 1,
+            _ => {}
+        }
+        self.cache[idx] = Some(tuple);
+    }
+
+    /// Close a connection: remove everywhere.
+    pub fn close(&mut self, c_id: u32) -> bool {
+        self.stats.closes += 1;
+        let existed = self.dram.remove(&c_id).is_some();
+        let idx = self.index(c_id);
+        if matches!(self.cache[idx], Some(t) if t.c_id == c_id) {
+            self.cache[idx] = None;
+            self.resident -= 1;
+        }
+        existed
+    }
+
+    /// Look up a connection from one of the three read agents. Returns
+    /// the tuple and the access latency in ns (hit: one BRAM cycle; miss:
+    /// DRAM fill over the memory interconnect). Unknown connection ->
+    /// None (frame dropped / exception path).
+    pub fn lookup(&mut self, _agent: Agent, c_id: u32) -> Option<(ConnTuple, u64)> {
+        let idx = self.index(c_id);
+        if let Some(t) = self.cache[idx] {
+            if t.c_id == c_id {
+                self.stats.hits += 1;
+                return Some((t, self.hit_ns));
+            }
+        }
+        // Miss path: consult host DRAM via CCI-P, fill the cache.
+        match self.dram.get(&c_id).copied() {
+            Some(t) => {
+                self.stats.misses += 1;
+                self.stats.dram_fills += 1;
+                if self.cache[idx].is_none() {
+                    self.resident += 1;
+                } else {
+                    self.stats.capacity_evictions += 1;
+                }
+                self.cache[idx] = Some(t);
+                Some((t, self.miss_ns))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn open_connections(&self) -> usize {
+        self.dram.len()
+    }
+
+    pub fn cache_entries(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / total as f64
+        }
+    }
+
+    /// The paper's sizing bound: with 53 Mb of FPGA BRAM minus 8.8 Mb in
+    /// the green region and a (8–12 B × 3) tuple, at most ~153 K
+    /// connections can be cached (§4.2). Returns the max entries for a
+    /// given per-bank tuple size.
+    pub fn max_cacheable_connections(tuple_bytes: u64) -> u64 {
+        let avail_bits: u64 = (53 - 9) * 1024 * 1024; // blue-usable BRAM, ~44 Mb
+        let bits_per_conn = tuple_bytes * 8 * 3;
+        avail_bits / bits_per_conn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::prop;
+
+    fn tuple(c_id: u32) -> ConnTuple {
+        ConnTuple { c_id, src_flow: c_id % 8, dest_addr: 1, lb: LbMode::RoundRobin }
+    }
+
+    #[test]
+    fn open_lookup_close() {
+        let mut cm = ConnectionManager::new(64);
+        cm.open(tuple(5));
+        let (t, lat) = cm.lookup(Agent::IncomingFlow, 5).unwrap();
+        assert_eq!(t.c_id, 5);
+        assert_eq!(lat, cm.hit_ns);
+        assert!(cm.close(5));
+        assert!(cm.lookup(Agent::IncomingFlow, 5).is_none());
+    }
+
+    #[test]
+    fn conflict_goes_to_dram_and_refills() {
+        let mut cm = ConnectionManager::new(4);
+        cm.open(tuple(1));
+        cm.open(tuple(5)); // same slot (5 & 3 == 1), evicts 1 from cache
+        // 1 is a miss (DRAM fill) with the miss penalty.
+        let (t, lat) = cm.lookup(Agent::OutgoingFlow, 1).unwrap();
+        assert_eq!(t.c_id, 1);
+        assert_eq!(lat, cm.miss_ns);
+        // Now 1 is resident; 5 would miss.
+        let (_, lat) = cm.lookup(Agent::OutgoingFlow, 1).unwrap();
+        assert_eq!(lat, cm.hit_ns);
+        let (_, lat) = cm.lookup(Agent::OutgoingFlow, 5).unwrap();
+        assert_eq!(lat, cm.miss_ns);
+    }
+
+    #[test]
+    fn unknown_connection_is_none() {
+        let mut cm = ConnectionManager::new(8);
+        assert!(cm.lookup(Agent::Manager, 99).is_none());
+        assert_eq!(cm.stats.misses, 1);
+    }
+
+    #[test]
+    fn close_unknown_is_false() {
+        let mut cm = ConnectionManager::new(8);
+        assert!(!cm.close(1));
+    }
+
+    #[test]
+    fn hit_rate_high_when_working_set_fits() {
+        let mut cm = ConnectionManager::new(1024);
+        for c in 0..512 {
+            cm.open(tuple(c));
+        }
+        for round in 0..10 {
+            for c in 0..512 {
+                cm.lookup(Agent::IncomingFlow, c).unwrap();
+            }
+            let _ = round;
+        }
+        assert!(cm.hit_rate() > 0.99, "rate={}", cm.hit_rate());
+    }
+
+    #[test]
+    fn hit_rate_degrades_when_overcommitted() {
+        let mut cm = ConnectionManager::new(64);
+        for c in 0..4096 {
+            cm.open(tuple(c));
+        }
+        // Scan: almost everything conflicts.
+        for c in 0..4096 {
+            cm.lookup(Agent::IncomingFlow, c).unwrap();
+        }
+        assert!(cm.hit_rate() < 0.3, "rate={}", cm.hit_rate());
+        assert_eq!(cm.open_connections(), 4096); // DRAM holds all
+    }
+
+    #[test]
+    fn paper_sizing_bound() {
+        // 8-12 B tuples x3 -> ~153K connections cacheable (§4.2).
+        let lo = ConnectionManager::max_cacheable_connections(12);
+        let hi = ConnectionManager::max_cacheable_connections(8);
+        assert!(lo >= 128_000 && hi <= 260_000, "lo={lo} hi={hi}");
+        assert!((128_000..=200_000).contains(&ConnectionManager::max_cacheable_connections(10)));
+    }
+
+    #[test]
+    fn prop_dram_is_ground_truth() {
+        prop::check("cm-dram-ground-truth", |rng| {
+            let mut cm = ConnectionManager::new(32);
+            let mut reference: HashMap<u32, ConnTuple> = HashMap::new();
+            for _ in 0..200 {
+                let c_id = rng.gen_range(64) as u32;
+                match rng.gen_range(3) {
+                    0 => {
+                        let t = tuple(c_id);
+                        cm.open(t);
+                        reference.insert(c_id, t);
+                    }
+                    1 => {
+                        cm.close(c_id);
+                        reference.remove(&c_id);
+                    }
+                    _ => {
+                        let got = cm.lookup(Agent::Manager, c_id).map(|(t, _)| t);
+                        let want = reference.get(&c_id).copied();
+                        if got != want {
+                            return Err(format!("lookup({c_id}): {got:?} != {want:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,258 @@
+//! NIC flow structures (§4.4.2, Fig. 9B): the request buffer (slot-indexed
+//! lookup table), the Free-Slot FIFO, and per-flow FIFOs of slot
+//! references.
+//!
+//! Since RPCs are ≥ 64 B, buffering full payloads per flow FIFO would be
+//! wasteful; instead all incoming RPCs live in one request buffer and the
+//! flow FIFOs carry only `slot_id` references. The Flow Scheduler picks a
+//! flow FIFO that has accumulated a transmission batch and hands the
+//! referenced frames to the CCI-P transmitter.
+
+use crate::coordinator::frame::Frame;
+use std::collections::VecDeque;
+
+/// Slot-indexed request buffer + free-slot FIFO. Sized `B * n_flows`
+/// entries (§4.4.2).
+pub struct RequestBuffer {
+    slots: Vec<Option<Frame>>,
+    free: VecDeque<u32>,
+    pub high_watermark: usize,
+    in_use: usize,
+}
+
+impl RequestBuffer {
+    pub fn new(capacity: usize) -> Self {
+        RequestBuffer {
+            slots: vec![None; capacity],
+            free: (0..capacity as u32).collect(),
+            high_watermark: 0,
+            in_use: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Allocate a slot and store the frame; None when the buffer is full
+    /// (backpressure to the transport).
+    pub fn insert(&mut self, frame: Frame) -> Option<u32> {
+        let slot = self.free.pop_front()?;
+        self.slots[slot as usize] = Some(frame);
+        self.in_use += 1;
+        self.high_watermark = self.high_watermark.max(self.in_use);
+        Some(slot)
+    }
+
+    /// Read a slot without freeing (CCI-P transmitter reads payloads by
+    /// reference).
+    pub fn peek(&self, slot: u32) -> Option<&Frame> {
+        self.slots.get(slot as usize)?.as_ref()
+    }
+
+    /// Free a slot, returning its frame.
+    pub fn take(&mut self, slot: u32) -> Option<Frame> {
+        let f = self.slots.get_mut(slot as usize)?.take()?;
+        self.free.push_back(slot);
+        self.in_use -= 1;
+        Some(f)
+    }
+}
+
+/// One flow FIFO: slot references awaiting transmission to the flow's RX
+/// ring, plus batch-formation state.
+#[derive(Debug)]
+pub struct FlowFifo {
+    refs: VecDeque<u32>,
+    capacity: usize,
+    pub enqueued: u64,
+    pub dropped: u64,
+}
+
+impl FlowFifo {
+    pub fn new(capacity: usize) -> Self {
+        FlowFifo { refs: VecDeque::with_capacity(capacity), capacity, enqueued: 0, dropped: 0 }
+    }
+
+    pub fn push(&mut self, slot: u32) -> bool {
+        if self.refs.len() >= self.capacity {
+            self.dropped += 1;
+            return false;
+        }
+        self.refs.push_back(slot);
+        self.enqueued += 1;
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.refs.is_empty()
+    }
+
+    /// Pop up to `batch` slot references (batch formation).
+    pub fn pop_batch(&mut self, batch: usize) -> Vec<u32> {
+        let n = batch.min(self.refs.len());
+        self.refs.drain(..n).collect()
+    }
+}
+
+/// Flow Scheduler: scans flow FIFOs and picks one with >= `batch`
+/// requests pending (or, when `allow_partial`, any non-empty FIFO — used
+/// by the adaptive-batching timeout path). Round-robin over flows for
+/// fairness.
+pub struct FlowScheduler {
+    cursor: usize,
+}
+
+impl FlowScheduler {
+    pub fn new() -> Self {
+        FlowScheduler { cursor: 0 }
+    }
+
+    pub fn pick(&mut self, fifos: &[FlowFifo], batch: usize, allow_partial: bool) -> Option<usize> {
+        let n = fifos.len();
+        for k in 0..n {
+            let idx = (self.cursor + k) % n;
+            let len = fifos[idx].len();
+            if len >= batch || (allow_partial && len > 0) {
+                self.cursor = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+impl Default for FlowScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::RpcType;
+    use crate::sim::prop;
+
+    fn f(rpc_id: u32) -> Frame {
+        Frame::new(RpcType::Request, 0, 1, rpc_id, b"x")
+    }
+
+    #[test]
+    fn insert_take_roundtrip() {
+        let mut rb = RequestBuffer::new(4);
+        let s = rb.insert(f(7)).unwrap();
+        assert_eq!(rb.peek(s).unwrap().rpc_id(), 7);
+        assert_eq!(rb.take(s).unwrap().rpc_id(), 7);
+        assert_eq!(rb.in_use(), 0);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let mut rb = RequestBuffer::new(2);
+        rb.insert(f(0)).unwrap();
+        rb.insert(f(1)).unwrap();
+        assert!(rb.is_full());
+        assert!(rb.insert(f(2)).is_none());
+        rb.take(0).unwrap();
+        assert!(rb.insert(f(3)).is_some());
+    }
+
+    #[test]
+    fn slots_recycled_fifo() {
+        let mut rb = RequestBuffer::new(2);
+        let a = rb.insert(f(0)).unwrap();
+        let _b = rb.insert(f(1)).unwrap();
+        rb.take(a).unwrap();
+        let c = rb.insert(f(2)).unwrap();
+        assert_eq!(c, a); // freed slot reused
+    }
+
+    #[test]
+    fn high_watermark_tracks_peak() {
+        let mut rb = RequestBuffer::new(8);
+        let s0 = rb.insert(f(0)).unwrap();
+        rb.insert(f(1)).unwrap();
+        rb.insert(f(2)).unwrap();
+        rb.take(s0).unwrap();
+        assert_eq!(rb.high_watermark, 3);
+    }
+
+    #[test]
+    fn fifo_drops_when_full() {
+        let mut ff = FlowFifo::new(2);
+        assert!(ff.push(0));
+        assert!(ff.push(1));
+        assert!(!ff.push(2));
+        assert_eq!(ff.dropped, 1);
+        assert_eq!(ff.pop_batch(10), vec![0, 1]);
+    }
+
+    #[test]
+    fn scheduler_requires_full_batch() {
+        let mut fifos = vec![FlowFifo::new(8), FlowFifo::new(8)];
+        fifos[1].push(0);
+        let mut sched = FlowScheduler::new();
+        assert_eq!(sched.pick(&fifos, 4, false), None);
+        assert_eq!(sched.pick(&fifos, 4, true), Some(1));
+        fifos[0].push(1);
+        fifos[0].push(2);
+        fifos[0].push(3);
+        fifos[0].push(4);
+        assert_eq!(sched.pick(&fifos, 4, false), Some(0));
+    }
+
+    #[test]
+    fn scheduler_round_robins() {
+        let mut fifos = vec![FlowFifo::new(8), FlowFifo::new(8)];
+        fifos[0].push(0);
+        fifos[1].push(1);
+        let mut sched = FlowScheduler::new();
+        let a = sched.pick(&fifos, 1, false).unwrap();
+        let b = sched.pick(&fifos, 1, false).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prop_buffer_conservation() {
+        prop::check("request-buffer-conservation", |rng| {
+            let cap = (rng.gen_range(16) + 1) as usize;
+            let mut rb = RequestBuffer::new(cap);
+            let mut live: Vec<u32> = vec![];
+            for i in 0..200u32 {
+                if rng.chance(0.6) {
+                    if let Some(s) = rb.insert(f(i)) {
+                        if live.contains(&s) {
+                            return Err(format!("slot {s} double-allocated"));
+                        }
+                        live.push(s);
+                    } else if live.len() != cap {
+                        return Err("full but not at capacity".into());
+                    }
+                } else if !live.is_empty() {
+                    let idx = rng.gen_range(live.len() as u64) as usize;
+                    let s = live.swap_remove(idx);
+                    if rb.take(s).is_none() {
+                        return Err(format!("live slot {s} missing"));
+                    }
+                }
+                if rb.in_use() != live.len() {
+                    return Err("in_use out of sync".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

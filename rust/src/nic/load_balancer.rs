@@ -1,0 +1,181 @@
+//! NIC load balancers (§4.4.2, §5.7): decide which flow (RX ring /
+//! dispatch thread) an incoming RPC is steered to.
+//!
+//! Three schemes, selected per server at connection-registration time:
+//! * **dynamic uniform (round-robin)** — even spread; best for stateless
+//!   tiers.
+//! * **static** — steering fixed by the connection tuple (the
+//!   `src_flow`/`load_balancer` fields in the connection table).
+//! * **object-level** — MICA-style affinity: hash of the request key
+//!   picks the flow, so a given key always lands on the same partition
+//!   ("we implement our own application-specific Object-Level load
+//!   balancer for MICA tiers by applying the hash function to each
+//!   request's key on the FPGA", §5.7).
+//!
+//! Steering arithmetic is identical to the Pallas kernel
+//! (python/compile/kernels/steering.py); LB_* discriminants must match
+//! ref.py.
+
+use crate::coordinator::frame::Frame;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum LbMode {
+    /// Dynamic uniform steering (rpc_id round-robin).
+    RoundRobin = 0,
+    /// Static steering from the connection tuple (c_id-keyed).
+    Static = 1,
+    /// Object-level key-hash affinity.
+    ObjectLevel = 2,
+}
+
+impl LbMode {
+    pub fn as_u32(self) -> u32 {
+        self as u32
+    }
+
+    pub fn from_u32(v: u32) -> LbMode {
+        match v {
+            0 => LbMode::RoundRobin,
+            1 => LbMode::Static,
+            _ => LbMode::ObjectLevel,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LbMode::RoundRobin => "round-robin",
+            LbMode::Static => "static",
+            LbMode::ObjectLevel => "object-level",
+        }
+    }
+}
+
+/// Steer one frame to a flow in [0, n_flows). Invalid frames go to the
+/// exception flow 0 — exactly the kernel's behaviour.
+#[inline]
+pub fn steer(frame: &Frame, mode: LbMode, n_flows: u32) -> u32 {
+    let n = n_flows.max(1);
+    if !frame.is_valid() {
+        return 0;
+    }
+    match mode {
+        LbMode::RoundRobin => frame.rpc_id() % n,
+        LbMode::Static => frame.c_id() % n,
+        LbMode::ObjectLevel => frame.key_hash() % n,
+    }
+}
+
+/// Batched steering — the software mirror of one AOT-kernel invocation:
+/// returns (flow, hash, checksum, valid) per frame, identical to the
+/// artifact's `meta` output.
+pub fn steer_batch(frames: &[Frame], mode: LbMode, n_flows: u32) -> Vec<[u32; 4]> {
+    frames
+        .iter()
+        .map(|f| {
+            [
+                steer(f, mode, n_flows),
+                f.key_hash(),
+                f.checksum(),
+                f.is_valid() as u32,
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::RpcType;
+    use crate::sim::prop;
+
+    fn frame(c_id: u32, rpc_id: u32, key: &[u8]) -> Frame {
+        Frame::new(RpcType::Request, 0, c_id, rpc_id, key)
+    }
+
+    #[test]
+    fn round_robin_cycles_with_rpc_id() {
+        let flows: Vec<u32> = (0..8)
+            .map(|i| steer(&frame(1, i, b"k"), LbMode::RoundRobin, 4))
+            .collect();
+        assert_eq!(flows, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn static_follows_connection() {
+        for c in 0..16 {
+            assert_eq!(steer(&frame(c, 9, b"k"), LbMode::Static, 4), c % 4);
+        }
+    }
+
+    #[test]
+    fn object_level_same_key_same_flow() {
+        let a = steer(&frame(1, 10, b"user:42"), LbMode::ObjectLevel, 8);
+        let b = steer(&frame(7, 99, b"user:42"), LbMode::ObjectLevel, 8);
+        assert_eq!(a, b, "same key must hit the same partition");
+        // Across many distinct keys, flows must differ (hash actually
+        // depends on the key).
+        let distinct: std::collections::HashSet<u32> = (0..64u32)
+            .map(|i| steer(&frame(1, 10, format!("user:{i}").as_bytes()), LbMode::ObjectLevel, 8))
+            .collect();
+        assert!(distinct.len() > 1);
+    }
+
+    #[test]
+    fn invalid_frames_to_exception_flow() {
+        let mut f = frame(3, 3, b"k");
+        f.words[0] = 0; // destroy magic
+        assert_eq!(steer(&f, LbMode::ObjectLevel, 8), 0);
+    }
+
+    #[test]
+    fn object_level_spreads_keys() {
+        // 1000 distinct keys over 8 flows: no flow should be empty or
+        // hold a wildly disproportionate share.
+        let mut counts = [0u32; 8];
+        for i in 0..1000u32 {
+            let key = format!("key-{i}");
+            counts[steer(&frame(0, 0, key.as_bytes()), LbMode::ObjectLevel, 8) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 60, "flow {i} starved: {c}");
+            assert!(c < 250, "flow {i} overloaded: {c}");
+        }
+    }
+
+    #[test]
+    fn prop_steer_in_range_and_matches_batch() {
+        prop::check("steer-in-range", |rng| {
+            let n_flows = (rng.gen_range(64) + 1) as u32;
+            let mode = LbMode::from_u32(rng.next_u32() % 3);
+            let frames: Vec<Frame> = (0..rng.gen_range(32) + 1)
+                .map(|_| {
+                    let mut f = Frame::new(
+                        RpcType::Request,
+                        0,
+                        rng.next_u32(),
+                        rng.next_u32(),
+                        &rng.next_u64().to_le_bytes(),
+                    );
+                    if rng.chance(0.2) {
+                        f.words[0] = rng.next_u32(); // possibly invalid
+                    }
+                    f
+                })
+                .collect();
+            let metas = steer_batch(&frames, mode, n_flows);
+            for (f, m) in frames.iter().zip(&metas) {
+                if m[0] >= n_flows.max(1) {
+                    return Err(format!("flow {} out of range", m[0]));
+                }
+                if m[0] != steer(f, mode, n_flows) {
+                    return Err("batch/minibatch mismatch".into());
+                }
+                if m[3] != f.is_valid() as u32 {
+                    return Err("valid bit mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

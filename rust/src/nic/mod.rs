@@ -1,0 +1,279 @@
+//! The Dagger NIC hardware model (§4, Fig. 6): composition of the CPU-NIC
+//! interface, RPC unit, load balancers, connection manager, flow
+//! structures, transport, packet monitor, and the soft/hard configuration
+//! planes.
+
+pub mod connection;
+pub mod flows;
+pub mod hard_config;
+pub mod load_balancer;
+pub mod packet_monitor;
+pub mod protocol;
+pub mod rpc_unit;
+pub mod soft_config;
+pub mod transport;
+pub mod virtualization;
+
+use crate::coordinator::frame::{Frame, RpcType};
+use crate::interconnect::timing::{NIC_CYCLE_NS, NIC_PIPELINE_STAGES};
+use crate::sim::Ns;
+use connection::{Agent, ConnTuple, ConnectionManager};
+use flows::{FlowFifo, FlowScheduler, RequestBuffer};
+use hard_config::HardConfig;
+use load_balancer::{steer, LbMode};
+use packet_monitor::PacketMonitor;
+use rpc_unit::RpcUnit;
+use soft_config::SoftConfig;
+use transport::Transport;
+
+/// One Dagger NIC instance (green-region module).
+pub struct DaggerNic {
+    /// This NIC's network address (switch table key).
+    pub addr: u32,
+    pub hard: HardConfig,
+    pub soft: SoftConfig,
+    pub cm: ConnectionManager,
+    pub rpc_unit: RpcUnit,
+    pub transport: Transport,
+    pub monitor: PacketMonitor,
+    pub request_buffer: RequestBuffer,
+    pub flow_fifos: Vec<FlowFifo>,
+    pub scheduler: FlowScheduler,
+}
+
+/// Outcome of pushing an ingress packet through the RX pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ingress {
+    /// Steered to a flow; deliver to that flow's RX ring after
+    /// `pipeline_ns`.
+    Deliver { flow: u32, pipeline_ns: u64 },
+    DropInvalid,
+    DropNoConnection,
+    DropBufferFull,
+}
+
+impl DaggerNic {
+    pub fn new(addr: u32, hard: HardConfig) -> Self {
+        hard.validate().expect("invalid hard config");
+        let n_flows = hard.n_flows as usize;
+        let batch = hard.iface.batch() as usize;
+        let soft = SoftConfig::new(hard.n_flows);
+        DaggerNic {
+            addr,
+            cm: ConnectionManager::new(hard.conn_cache_entries as usize),
+            rpc_unit: RpcUnit::new(),
+            transport: Transport::new(),
+            monitor: PacketMonitor::new(n_flows),
+            request_buffer: RequestBuffer::new((batch * n_flows).max(16)),
+            flow_fifos: (0..n_flows)
+                .map(|_| FlowFifo::new(hard.flow_fifo_depth as usize))
+                .collect(),
+            scheduler: FlowScheduler::new(),
+            hard,
+            soft,
+        }
+    }
+
+    /// Fixed RPC-pipeline latency (header parse → CM → hash → steer →
+    /// serdes) at the 200 MHz RPC clock.
+    pub fn pipeline_latency_ns(&self) -> u64 {
+        NIC_CYCLE_NS * NIC_PIPELINE_STAGES * 200 / self.hard.rpc_clock_mhz as u64
+    }
+
+    /// Register a connection on this NIC (hardware connection setup).
+    pub fn open_connection(&mut self, c_id: u32, src_flow: u32, dest_addr: u32, lb: LbMode) {
+        self.cm.open(ConnTuple { c_id, src_flow, dest_addr, lb });
+    }
+
+    pub fn close_connection(&mut self, c_id: u32) -> bool {
+        self.cm.close(c_id)
+    }
+
+    /// RX pipeline for a packet arriving from the network: validate,
+    /// steer (responses go back to the connection's src_flow; requests go
+    /// through the server's load balancer), and account.
+    pub fn ingress(&mut self, now: Ns, frame: &Frame) -> Ingress {
+        if !frame.is_valid() {
+            self.monitor.on_drop_invalid(0);
+            return Ingress::DropInvalid;
+        }
+        let mut extra_ns = 0u64;
+        let flow = match frame.rpc_type() {
+            Some(RpcType::Response) => {
+                // Steer to the flow the request originated from (§4.2).
+                match self.cm.lookup(Agent::IncomingFlow, frame.c_id()) {
+                    Some((t, lat)) => {
+                        extra_ns += lat;
+                        t.src_flow % self.hard.n_flows
+                    }
+                    None => {
+                        self.monitor.on_drop_no_connection(0);
+                        return Ingress::DropNoConnection;
+                    }
+                }
+            }
+            _ => steer(frame, self.soft.lb_mode, self.soft.active_flows.min(self.hard.n_flows)),
+        };
+        // Buffer the frame until the CCI-P transmitter picks it up.
+        let slot = match self.request_buffer.insert(*frame) {
+            Some(s) => s,
+            None => {
+                self.monitor.on_drop_ring_full(flow as usize);
+                return Ingress::DropBufferFull;
+            }
+        };
+        if !self.flow_fifos[flow as usize].push(slot) {
+            self.request_buffer.take(slot);
+            self.monitor.on_drop_ring_full(flow as usize);
+            return Ingress::DropBufferFull;
+        }
+        self.monitor.on_rx(now, flow as usize);
+        Ingress::Deliver { flow, pipeline_ns: self.pipeline_latency_ns() + extra_ns }
+    }
+
+    /// Form the next delivery batch for the CPU (CCI-P transmitter): pick
+    /// a flow with >= batch pending (or any, if `allow_partial`), pop the
+    /// slot refs, and take the frames out of the request buffer.
+    pub fn form_delivery_batch(&mut self, allow_partial: bool) -> Option<(u32, Vec<Frame>)> {
+        let b = self.soft.batch_size as usize;
+        let flow = self.scheduler.pick(&self.flow_fifos, b, allow_partial)?;
+        let slots = self.flow_fifos[flow].pop_batch(b);
+        let frames = slots
+            .into_iter()
+            .filter_map(|s| self.request_buffer.take(s))
+            .collect();
+        Some((flow as u32, frames))
+    }
+
+    /// TX pipeline: an outgoing frame fetched from the host's TX ring.
+    /// Returns (destination address, pipeline latency) or None if the
+    /// connection is unknown.
+    pub fn egress(&mut self, now: Ns, frame: &Frame) -> Option<(u32, u64)> {
+        if !frame.is_valid() {
+            self.monitor.on_drop_invalid(0);
+            return None;
+        }
+        let (tuple, cm_lat) = match self.cm.lookup(Agent::OutgoingFlow, frame.c_id()) {
+            Some(x) => x,
+            None => {
+                self.monitor.on_drop_no_connection(0);
+                return None;
+            }
+        };
+        self.monitor.on_tx(now, (tuple.src_flow % self.hard.n_flows) as usize);
+        Some((tuple.dest_addr, self.pipeline_latency_ns() + cm_lat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nic() -> DaggerNic {
+        let mut n = DaggerNic::new(1, HardConfig::default());
+        n.open_connection(7, 3, 2, LbMode::RoundRobin);
+        n
+    }
+
+    fn req(c_id: u32, rpc_id: u32) -> Frame {
+        Frame::new(RpcType::Request, 0, c_id, rpc_id, b"key")
+    }
+
+    #[test]
+    fn ingress_request_steers_via_lb() {
+        let mut n = nic();
+        match n.ingress(0, &req(7, 5)) {
+            Ingress::Deliver { flow, pipeline_ns } => {
+                assert_eq!(flow, 5 % n.hard.n_flows); // round-robin by rpc_id
+                assert!(pipeline_ns >= 50);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ingress_response_steers_to_src_flow() {
+        let mut n = nic();
+        let resp = Frame::new(RpcType::Response, 0, 7, 5, b"val");
+        match n.ingress(0, &resp) {
+            Ingress::Deliver { flow, .. } => assert_eq!(flow, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ingress_response_unknown_conn_dropped() {
+        let mut n = nic();
+        let resp = Frame::new(RpcType::Response, 0, 99, 5, b"val");
+        assert_eq!(n.ingress(0, &resp), Ingress::DropNoConnection);
+    }
+
+    #[test]
+    fn ingress_invalid_dropped() {
+        let mut n = nic();
+        let mut f = req(7, 0);
+        f.words[0] = 0;
+        assert_eq!(n.ingress(0, &f), Ingress::DropInvalid);
+        assert_eq!(n.monitor.total_drops(), 1);
+    }
+
+    #[test]
+    fn buffer_full_backpressure() {
+        let mut n = nic();
+        let cap = n.request_buffer.capacity();
+        let mut delivered = 0;
+        let mut dropped = 0;
+        for i in 0..(cap as u32 + 10) {
+            match n.ingress(0, &req(7, i)) {
+                Ingress::Deliver { .. } => delivered += 1,
+                Ingress::DropBufferFull => dropped += 1,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(delivered, cap as u32);
+        assert_eq!(dropped, 10);
+    }
+
+    #[test]
+    fn batch_formation_drains_buffer() {
+        let mut n = nic();
+        n.soft.batch_size = 4;
+        for i in 0..4 {
+            // Same flow: rpc_id fixed, c_id varies? round-robin keys off
+            // rpc_id, so use identical rpc_id to hit one flow.
+            n.ingress(0, &req(7, i * n.hard.n_flows));
+        }
+        let (flow, frames) = n.form_delivery_batch(false).unwrap();
+        assert_eq!(flow, 0);
+        assert_eq!(frames.len(), 4);
+        assert_eq!(n.request_buffer.in_use(), 0);
+        assert!(n.form_delivery_batch(false).is_none());
+    }
+
+    #[test]
+    fn partial_batch_needs_flag() {
+        let mut n = nic();
+        n.soft.batch_size = 4;
+        n.ingress(0, &req(7, 0));
+        assert!(n.form_delivery_batch(false).is_none());
+        let (_, frames) = n.form_delivery_batch(true).unwrap();
+        assert_eq!(frames.len(), 1);
+    }
+
+    #[test]
+    fn egress_resolves_destination() {
+        let mut n = nic();
+        let (dst, lat) = n.egress(0, &req(7, 1)).unwrap();
+        assert_eq!(dst, 2);
+        assert!(lat >= n.pipeline_latency_ns());
+        assert!(n.egress(0, &req(42, 1)).is_none()); // unknown conn
+    }
+
+    #[test]
+    fn pipeline_latency_scales_with_clock() {
+        let mut cfg = HardConfig::default();
+        cfg.rpc_clock_mhz = 100; // half clock, double latency
+        let slow = DaggerNic::new(0, cfg);
+        assert_eq!(slow.pipeline_latency_ns(), 100);
+    }
+}

@@ -1,0 +1,126 @@
+//! Packet Monitor (§4.1): the NIC unit that collects networking
+//! statistics — per-flow counters, drop accounting, and a coarse
+//! per-epoch rate estimator that feeds the soft-configuration controller
+//! (adaptive batching needs a load estimate).
+
+use crate::sim::Ns;
+
+#[derive(Debug, Default, Clone)]
+pub struct FlowCounters {
+    pub rx_rpcs: u64,
+    pub tx_rpcs: u64,
+    pub drops_ring_full: u64,
+    pub drops_invalid: u64,
+    pub drops_no_connection: u64,
+}
+
+#[derive(Debug)]
+pub struct PacketMonitor {
+    pub flows: Vec<FlowCounters>,
+    /// Rate estimation epoch.
+    epoch_start: Ns,
+    epoch_rpcs: u64,
+    epoch_len_ns: Ns,
+    last_rate_mrps: f64,
+}
+
+impl PacketMonitor {
+    pub fn new(n_flows: usize) -> Self {
+        PacketMonitor {
+            flows: vec![FlowCounters::default(); n_flows],
+            epoch_start: 0,
+            epoch_rpcs: 0,
+            epoch_len_ns: 100_000, // 100 us epochs
+            last_rate_mrps: 0.0,
+        }
+    }
+
+    pub fn on_rx(&mut self, now: Ns, flow: usize) {
+        self.flows[flow].rx_rpcs += 1;
+        self.tick(now);
+    }
+
+    pub fn on_tx(&mut self, now: Ns, flow: usize) {
+        self.flows[flow].tx_rpcs += 1;
+        self.tick(now);
+    }
+
+    pub fn on_drop_ring_full(&mut self, flow: usize) {
+        self.flows[flow].drops_ring_full += 1;
+    }
+
+    pub fn on_drop_invalid(&mut self, flow: usize) {
+        self.flows[flow].drops_invalid += 1;
+    }
+
+    pub fn on_drop_no_connection(&mut self, flow: usize) {
+        self.flows[flow].drops_no_connection += 1;
+    }
+
+    fn tick(&mut self, now: Ns) {
+        self.epoch_rpcs += 1;
+        if now >= self.epoch_start + self.epoch_len_ns {
+            let elapsed = (now - self.epoch_start).max(1) as f64;
+            self.last_rate_mrps = self.epoch_rpcs as f64 * 1000.0 / elapsed;
+            self.epoch_start = now;
+            self.epoch_rpcs = 0;
+        }
+    }
+
+    /// Most recent per-epoch RPC rate estimate, in Mrps.
+    pub fn rate_mrps(&self) -> f64 {
+        self.last_rate_mrps
+    }
+
+    pub fn total_rx(&self) -> u64 {
+        self.flows.iter().map(|f| f.rx_rpcs).sum()
+    }
+
+    pub fn total_tx(&self) -> u64 {
+        self.flows.iter().map(|f| f.tx_rpcs).sum()
+    }
+
+    pub fn total_drops(&self) -> u64 {
+        self.flows
+            .iter()
+            .map(|f| f.drops_ring_full + f.drops_invalid + f.drops_no_connection)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut pm = PacketMonitor::new(2);
+        pm.on_rx(0, 0);
+        pm.on_rx(10, 1);
+        pm.on_tx(20, 0);
+        pm.on_drop_ring_full(1);
+        assert_eq!(pm.total_rx(), 2);
+        assert_eq!(pm.total_tx(), 1);
+        assert_eq!(pm.total_drops(), 1);
+        assert_eq!(pm.flows[1].drops_ring_full, 1);
+    }
+
+    #[test]
+    fn rate_estimator_converges() {
+        let mut pm = PacketMonitor::new(1);
+        // 1 RPC every 100 ns for 1 ms -> 10 Mrps.
+        let mut t = 0;
+        for _ in 0..10_000 {
+            pm.on_rx(t, 0);
+            t += 100;
+        }
+        assert!((pm.rate_mrps() - 10.0).abs() < 0.5, "{}", pm.rate_mrps());
+    }
+
+    #[test]
+    fn rate_zero_before_first_epoch() {
+        let mut pm = PacketMonitor::new(1);
+        pm.on_rx(5, 0);
+        assert_eq!(pm.rate_mrps(), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! RPC unit (§4.5, Fig. 6 bottom): serialization/de-serialization between
+//! ready-to-use RPC objects and wire frames, request-type demux, load-
+//! balancer steering, and the (pass-through) Protocol unit.
+//!
+//! Two interchangeable datapath engines exist:
+//! * this module — the native Rust mirror (used on the simulation fast
+//!   path and by the real-thread coordinator when artifacts are absent);
+//! * [`crate::runtime::Datapath`] — the AOT-compiled XLA artifact lowered
+//!   from the Pallas kernels (the "FPGA bitstream" of this repro).
+//!
+//! `rust/tests/runtime_artifacts.rs` proves the two are bit-identical.
+
+use crate::coordinator::frame::{Frame, WORDS_PER_FRAME};
+use crate::nic::load_balancer::{steer_batch, LbMode};
+
+/// Per-frame datapath outputs — matches the artifact's `meta` rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RpcMeta {
+    pub flow: u32,
+    pub hash: u32,
+    pub checksum: u32,
+    pub valid: bool,
+}
+
+/// Result of processing one CCI-P batch through the RPC unit.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    pub meta: Vec<RpcMeta>,
+    /// Deserialized SoA word lanes [16][batch] with payload masking.
+    pub lanes: Vec<Vec<u32>>,
+}
+
+/// The RPC-unit datapath, native engine.
+#[derive(Debug, Default)]
+pub struct RpcUnit {
+    pub batches_processed: u64,
+    pub frames_processed: u64,
+}
+
+impl RpcUnit {
+    pub fn new() -> Self {
+        RpcUnit::default()
+    }
+
+    /// RX direction: parse + steer + deserialize one batch.
+    pub fn process_rx(&mut self, frames: &[Frame], lb: LbMode, n_flows: u32) -> BatchResult {
+        self.batches_processed += 1;
+        self.frames_processed += frames.len() as u64;
+        let meta = steer_batch(frames, lb, n_flows)
+            .into_iter()
+            .map(|m| RpcMeta { flow: m[0], hash: m[1], checksum: m[2], valid: m[3] == 1 })
+            .collect();
+        let lanes = deserialize(frames);
+        BatchResult { meta, lanes }
+    }
+
+    /// TX direction: SoA lanes back to wire frames.
+    pub fn process_tx(&mut self, lanes: &[Vec<u32>]) -> Vec<Frame> {
+        serialize(lanes)
+    }
+}
+
+/// AoS->SoA with payload masking — mirror of kernels/serdes.py
+/// `deserialize` (exact integer semantics).
+pub fn deserialize(frames: &[Frame]) -> Vec<Vec<u32>> {
+    let b = frames.len();
+    let mut lanes = vec![vec![0u32; b]; WORDS_PER_FRAME];
+    for (j, f) in frames.iter().enumerate() {
+        let plen = f.words[3];
+        let payload_words = plen.div_ceil(4);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let keep = i < 4 || (i as u32) < 4 + payload_words;
+            lane[j] = if keep { f.words[i] } else { 0 };
+        }
+    }
+    lanes
+}
+
+/// SoA->AoS — mirror of kernels/serdes.py `serialize`.
+pub fn serialize(lanes: &[Vec<u32>]) -> Vec<Frame> {
+    assert_eq!(lanes.len(), WORDS_PER_FRAME);
+    let b = lanes.first().map_or(0, |l| l.len());
+    (0..b)
+        .map(|j| {
+            let mut f = Frame::zeroed();
+            for i in 0..WORDS_PER_FRAME {
+                f.words[i] = lanes[i][j];
+            }
+            f
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::RpcType;
+    use crate::sim::prop;
+
+    fn f(rpc_id: u32, payload: &[u8]) -> Frame {
+        Frame::new(RpcType::Request, 0, 1, rpc_id, payload)
+    }
+
+    #[test]
+    fn rx_batch_meta_consistent() {
+        let mut unit = RpcUnit::new();
+        let frames = vec![f(0, b"aaaa"), f(1, b"bbbb"), f(2, b"cccc")];
+        let r = unit.process_rx(&frames, LbMode::RoundRobin, 2);
+        assert_eq!(r.meta.len(), 3);
+        assert_eq!(r.meta[0].flow, 0);
+        assert_eq!(r.meta[1].flow, 1);
+        assert_eq!(r.meta[2].flow, 0);
+        assert!(r.meta.iter().all(|m| m.valid));
+        assert_eq!(unit.frames_processed, 3);
+    }
+
+    #[test]
+    fn deserialize_masks_beyond_payload() {
+        let mut fr = f(0, &[0xFF; 8]); // 2 payload words
+        // Poison a word beyond the payload (stale ring data).
+        fr.words[10] = 0xDEAD_BEEF;
+        let lanes = deserialize(&[fr]);
+        assert_eq!(lanes[4][0], 0xFFFF_FFFF);
+        assert_eq!(lanes[5][0], 0xFFFF_FFFF);
+        assert_eq!(lanes[6][0], 0); // masked
+        assert_eq!(lanes[10][0], 0); // poisoned word masked out
+        assert_eq!(lanes[0][0], fr.words[0]); // header intact
+    }
+
+    #[test]
+    fn serialize_inverts_deserialize_on_clean_frames() {
+        let frames: Vec<Frame> =
+            (0..7).map(|i| f(i, &[i as u8 + 1; 12])).collect();
+        let lanes = deserialize(&frames);
+        let back = serialize(&lanes);
+        assert_eq!(frames, back);
+    }
+
+    #[test]
+    fn partial_word_payload_kept() {
+        let fr = f(0, &[1, 2, 3, 4, 5]); // 5 bytes -> 2 words kept
+        let lanes = deserialize(&[fr]);
+        assert_eq!(lanes[4][0], fr.words[4]);
+        assert_eq!(lanes[5][0], fr.words[5]);
+        assert_eq!(lanes[6][0], 0);
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let mut unit = RpcUnit::new();
+        let r = unit.process_rx(&[], LbMode::Static, 4);
+        assert!(r.meta.is_empty());
+        assert_eq!(r.lanes.len(), WORDS_PER_FRAME);
+    }
+
+    #[test]
+    fn prop_serde_roundtrip_preserves_valid_payloads() {
+        prop::check("serde-roundtrip", |rng| {
+            let n = rng.gen_range(20) as usize + 1;
+            let frames: Vec<Frame> = (0..n)
+                .map(|i| {
+                    let len = rng.gen_range(49) as usize;
+                    let payload: Vec<u8> =
+                        (0..len).map(|_| rng.next_u32() as u8).collect();
+                    f(i as u32, &payload)
+                })
+                .collect();
+            let back = serialize(&deserialize(&frames));
+            for (a, b) in frames.iter().zip(&back) {
+                // Headers and payload bytes must survive; masked words
+                // were zero in the original (Frame::new zero-fills).
+                if a != b {
+                    return Err(format!("{a:?} != {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

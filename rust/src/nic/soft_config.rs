@@ -1,0 +1,190 @@
+//! Soft configuration (§4.1): runtime-tunable NIC parameters exposed as a
+//! soft register file accessible from the host over PCIe MMIOs, plus the
+//! adaptive-batching controller used in §5.4 ("Dagger leverages soft
+//! configuration to adjust the batch size dynamically when the load
+//! becomes high so that the throughput advantages of batching do not come
+//! at a latency cost").
+
+use crate::nic::load_balancer::LbMode;
+
+/// Soft register addresses (MMIO offsets into the soft register file).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum Reg {
+    BatchSize = 0x00,
+    ActiveFlows = 0x04,
+    LbMode = 0x08,
+    RxRingEntries = 0x0C,
+    TxRingEntries = 0x10,
+    PollingMode = 0x14,
+    LoadThresholdKrps = 0x18,
+}
+
+/// Polling source for the UPI RX path (§4.4.1): the NIC either polls its
+/// local HCC (invalidation-driven) or polls the CPU LLC directly; Dagger
+/// switches dynamically on a programmable load threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PollingMode {
+    LocalCache = 0,
+    DirectLlc = 1,
+}
+
+/// The soft register file + reconfiguration logic.
+#[derive(Debug)]
+pub struct SoftConfig {
+    pub batch_size: u32,
+    pub active_flows: u32,
+    pub lb_mode: LbMode,
+    pub rx_ring_entries: u32,
+    pub tx_ring_entries: u32,
+    pub polling_mode: PollingMode,
+    /// Load threshold (Krps) above which batching ramps up and polling
+    /// switches to direct-LLC.
+    pub load_threshold_krps: u32,
+    /// Max batch the adaptive controller may select (bounded by the hard
+    /// config's ring provisioning).
+    pub max_batch: u32,
+    pub mmio_writes: u64,
+}
+
+impl SoftConfig {
+    pub fn new(active_flows: u32) -> Self {
+        SoftConfig {
+            batch_size: 1,
+            active_flows,
+            lb_mode: LbMode::RoundRobin,
+            rx_ring_entries: 64,
+            tx_ring_entries: 32,
+            polling_mode: PollingMode::LocalCache,
+            load_threshold_krps: 3000,
+            max_batch: 4,
+            mmio_writes: 0,
+        }
+    }
+
+    /// Host-side MMIO write into the register file.
+    pub fn write(&mut self, reg: Reg, value: u32) -> Result<(), String> {
+        self.mmio_writes += 1;
+        match reg {
+            Reg::BatchSize => {
+                if value == 0 || value > 64 {
+                    return Err(format!("batch {value} out of range 1..=64"));
+                }
+                self.batch_size = value;
+            }
+            Reg::ActiveFlows => {
+                if value == 0 {
+                    return Err("active_flows must be >= 1".into());
+                }
+                self.active_flows = value;
+            }
+            Reg::LbMode => self.lb_mode = LbMode::from_u32(value),
+            Reg::RxRingEntries => self.rx_ring_entries = value.max(1),
+            Reg::TxRingEntries => self.tx_ring_entries = value.max(1),
+            Reg::PollingMode => {
+                self.polling_mode = if value == 0 {
+                    PollingMode::LocalCache
+                } else {
+                    PollingMode::DirectLlc
+                }
+            }
+            Reg::LoadThresholdKrps => self.load_threshold_krps = value,
+        }
+        Ok(())
+    }
+
+    pub fn read(&self, reg: Reg) -> u32 {
+        match reg {
+            Reg::BatchSize => self.batch_size,
+            Reg::ActiveFlows => self.active_flows,
+            Reg::LbMode => self.lb_mode.as_u32(),
+            Reg::RxRingEntries => self.rx_ring_entries,
+            Reg::TxRingEntries => self.tx_ring_entries,
+            Reg::PollingMode => self.polling_mode as u32,
+            Reg::LoadThresholdKrps => self.load_threshold_krps,
+        }
+    }
+
+    /// Adaptive batching (Fig. 11 left, green dashed line): pick the batch
+    /// size for the observed offered load. Low load -> B=1 for minimum
+    /// latency; ramp to `max_batch` as load approaches the per-flow
+    /// saturation point.
+    pub fn adapt_batch(&mut self, offered_mrps: f64) -> u32 {
+        // Knees: below ~half the B=1 saturation point (7.2 Mrps single
+        // core), stay unbatched; then grow roughly linearly.
+        let b = if offered_mrps < 3.5 {
+            1
+        } else if offered_mrps < 6.5 {
+            2
+        } else if offered_mrps < 9.5 {
+            3
+        } else {
+            4
+        };
+        self.batch_size = (b as u32).min(self.max_batch);
+        self.batch_size
+    }
+
+    /// Polling-mode switch (§4.4.1): direct LLC polling at high load.
+    pub fn adapt_polling(&mut self, offered_krps: f64) -> PollingMode {
+        self.polling_mode = if offered_krps > self.load_threshold_krps as f64 {
+            PollingMode::DirectLlc
+        } else {
+            PollingMode::LocalCache
+        };
+        self.polling_mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_readback() {
+        let mut sc = SoftConfig::new(8);
+        sc.write(Reg::BatchSize, 4).unwrap();
+        sc.write(Reg::LbMode, 2).unwrap();
+        assert_eq!(sc.read(Reg::BatchSize), 4);
+        assert_eq!(sc.lb_mode, LbMode::ObjectLevel);
+        assert_eq!(sc.mmio_writes, 2);
+    }
+
+    #[test]
+    fn invalid_writes_rejected() {
+        let mut sc = SoftConfig::new(8);
+        assert!(sc.write(Reg::BatchSize, 0).is_err());
+        assert!(sc.write(Reg::BatchSize, 65).is_err());
+        assert!(sc.write(Reg::ActiveFlows, 0).is_err());
+        assert_eq!(sc.batch_size, 1); // unchanged
+    }
+
+    #[test]
+    fn adaptive_batching_monotone() {
+        let mut sc = SoftConfig::new(8);
+        let loads = [0.5, 2.0, 4.0, 7.0, 10.0, 12.0];
+        let mut last = 0;
+        for &l in &loads {
+            let b = sc.adapt_batch(l);
+            assert!(b >= last, "batch must not shrink as load grows");
+            last = b;
+        }
+        assert_eq!(sc.adapt_batch(0.5), 1);
+        assert_eq!(sc.adapt_batch(12.0), 4);
+    }
+
+    #[test]
+    fn adaptive_batch_respects_max() {
+        let mut sc = SoftConfig::new(8);
+        sc.max_batch = 2;
+        assert_eq!(sc.adapt_batch(12.0), 2);
+    }
+
+    #[test]
+    fn polling_switches_at_threshold() {
+        let mut sc = SoftConfig::new(8);
+        sc.write(Reg::LoadThresholdKrps, 1000).unwrap();
+        assert_eq!(sc.adapt_polling(500.0), PollingMode::LocalCache);
+        assert_eq!(sc.adapt_polling(1500.0), PollingMode::DirectLlc);
+    }
+}

@@ -1,0 +1,122 @@
+//! NIC virtualization (Fig. 14, §5.7, §6): multiple independent Dagger
+//! NIC instances on one physical FPGA, sharing the CCI-P bus through a
+//! fair round-robin arbiter and connected by the model ToR switch with a
+//! static switching table.
+//!
+//! Each instance serves one tenant/tier ("virtual but physical" NICs) and
+//! carries its own soft configuration — e.g. the MICA-backed tiers run an
+//! object-level load balancer while the stateless tiers round-robin.
+
+use super::hard_config::HardConfig;
+use super::transport::{Packet, TorSwitch};
+use super::DaggerNic;
+use crate::interconnect::ccip::CcipBus;
+use crate::sim::Ns;
+
+/// A physical FPGA hosting several NIC instances.
+pub struct MultiNic {
+    pub instances: Vec<DaggerNic>,
+    pub arbiter: CcipBus,
+    pub switch: TorSwitch,
+}
+
+impl MultiNic {
+    /// Create `n` instances with the given per-instance configs. Panics
+    /// if the combined FPGA resources don't fit (hard-configuration is a
+    /// synthesis-time decision; overcommit must fail loudly).
+    pub fn new(configs: Vec<HardConfig>, bus_occupancy_ns: u64) -> Self {
+        let total_bram: f64 = configs
+            .iter()
+            .map(|c| c.resource_estimate().bram_mbits)
+            .sum();
+        let budget = super::hard_config::FPGA_BRAM_MBITS
+            - super::hard_config::GREEN_RESERVED_MBITS;
+        assert!(
+            total_bram <= budget,
+            "virtualized NICs over BRAM budget: {total_bram:.1} Mb > {budget:.1} Mb"
+        );
+        let n = configs.len();
+        let instances: Vec<DaggerNic> = configs
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| DaggerNic::new(i as u32, c))
+            .collect();
+        let mut switch = TorSwitch::new(n, n as u32);
+        for (i, nic) in instances.iter().enumerate() {
+            switch.table.set(nic.addr, i);
+        }
+        MultiNic { instances, arbiter: CcipBus::new(bus_occupancy_ns), switch }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Route a packet from NIC `src` through the switch; returns the
+    /// destination instance index and its arrival time.
+    pub fn route(&mut self, now: Ns, src: usize, pkt: &Packet) -> Option<(usize, Ns)> {
+        debug_assert!(src < self.instances.len());
+        self.switch.forward(now, pkt)
+    }
+
+    /// Arbitrate CCI-P access among instances that have pending bus work.
+    pub fn arbitrate(&mut self, ready: &[bool]) -> Option<usize> {
+        self.arbiter.arbitrate(ready)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::{Frame, RpcType};
+    use crate::interconnect::timing::UPI_LINE_OCCUPANCY_NS;
+
+    fn small_cfg() -> HardConfig {
+        HardConfig { n_flows: 4, conn_cache_entries: 256, ..Default::default() }
+    }
+
+    #[test]
+    fn eight_instances_fit_like_fig14() {
+        let m = MultiNic::new(vec![small_cfg(); 8], UPI_LINE_OCCUPANCY_NS);
+        assert_eq!(m.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "over BRAM budget")]
+    fn overcommit_rejected() {
+        let big = HardConfig {
+            n_flows: 64,
+            conn_cache_entries: 65_536,
+            ..Default::default()
+        };
+        MultiNic::new(vec![big; 12], UPI_LINE_OCCUPANCY_NS);
+    }
+
+    #[test]
+    fn switch_connects_instances() {
+        let mut m = MultiNic::new(vec![small_cfg(); 3], UPI_LINE_OCCUPANCY_NS);
+        let pkt = Packet {
+            frame: Frame::new(RpcType::Request, 0, 1, 2, b"k"),
+            src_addr: 0,
+            dst_addr: 2,
+        };
+        let (dst, arrival) = m.route(100, 0, &pkt).unwrap();
+        assert_eq!(dst, 2);
+        assert!(arrival > 100);
+    }
+
+    #[test]
+    fn arbiter_shares_bus_fairly() {
+        let mut m = MultiNic::new(vec![small_cfg(); 4], UPI_LINE_OCCUPANCY_NS);
+        let mut picks = vec![0u32; 4];
+        for _ in 0..400 {
+            let idx = m.arbitrate(&[true, true, true, true]).unwrap();
+            picks[idx] += 1;
+        }
+        assert!(picks.iter().all(|&p| p == 100), "{picks:?}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Discrete-event simulation engine.
+//!
+//! A deterministic single-threaded event loop: events are (time, seq)
+//! ordered in a binary heap; `seq` breaks ties in scheduling order so runs
+//! are bit-reproducible. Models interact through a shared `World` (the
+//! experiment's state) — each experiment module defines its own event enum
+//! and drives the engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulated time in nanoseconds.
+pub type Ns = u64;
+
+/// A scheduled event: the engine is generic over the payload `E`.
+///
+/// Ordering key is `time << 64 | seq` packed into one u128 — a single
+/// comparison per sift step instead of a two-field tuple compare (§Perf:
+/// ~15 % fewer ns/op on large heaps).
+struct Scheduled<E> {
+    key: u128,
+    event: E,
+}
+
+impl<E> Scheduled<E> {
+    #[inline]
+    fn time(&self) -> Ns {
+        (self.key >> 64) as Ns
+    }
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// The event queue + clock.
+pub struct Engine<E> {
+    queue: BinaryHeap<Reverse<Scheduled<E>>>,
+    now: Ns,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine {
+            queue: BinaryHeap::with_capacity(4096),
+            now: 0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `event` at absolute time `at` (>= now).
+    #[inline]
+    pub fn at(&mut self, at: Ns, event: E) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        let seq = self.seq;
+        self.seq += 1;
+        let key = ((at.max(self.now) as u128) << 64) | seq as u128;
+        self.queue.push(Reverse(Scheduled { key, event }));
+    }
+
+    /// Schedule `event` after `delay` ns.
+    #[inline]
+    pub fn after(&mut self, delay: Ns, event: E) {
+        let t = self.now + delay;
+        self.at(t, event);
+    }
+
+    /// Pop the next event, advancing the clock. Returns None when the
+    /// queue is empty.
+    #[inline]
+    pub fn next(&mut self) -> Option<(Ns, E)> {
+        let Reverse(s) = self.queue.pop()?;
+        let t = s.time();
+        self.now = t;
+        self.processed += 1;
+        Some((t, s.event))
+    }
+
+    /// Run until `horizon` (events at t > horizon stay queued) or the
+    /// queue drains. `step` handles one event and may schedule more.
+    pub fn run_until<W>(
+        &mut self,
+        world: &mut W,
+        horizon: Ns,
+        mut step: impl FnMut(&mut Self, &mut W, Ns, E),
+    ) {
+        while let Some(&Reverse(ref s)) = self.queue.peek() {
+            if s.time() > horizon {
+                break;
+            }
+            let (t, e) = self.next().unwrap();
+            step(self, world, t, e);
+        }
+        // All events <= horizon consumed: the clock stands at the horizon.
+        self.now = self.now.max(horizon);
+    }
+
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.queue.peek().map(|Reverse(s)| s.time())
+    }
+
+    /// Drain everything (use with care — needs a terminating event flow).
+    pub fn run_to_completion<W>(
+        &mut self,
+        world: &mut W,
+        mut step: impl FnMut(&mut Self, &mut W, Ns, E),
+    ) {
+        while let Some((t, e)) = self.next() {
+            step(self, world, t, e);
+        }
+    }
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Convert ns to microseconds (display helper).
+pub fn ns_to_us(ns: Ns) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Convert a requests/second rate to a mean inter-arrival gap in ns.
+pub fn rate_to_gap_ns(rps: f64) -> f64 {
+    if rps <= 0.0 {
+        f64::INFINITY
+    } else {
+        1e9 / rps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Tick(u32),
+    }
+
+    #[test]
+    fn fifo_order_on_ties() {
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.at(100, Ev::Tick(1));
+        eng.at(100, Ev::Tick(2));
+        eng.at(50, Ev::Tick(0));
+        let mut order = vec![];
+        while let Some((_, Ev::Tick(i))) = eng.next() {
+            order.push(i);
+        }
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut eng: Engine<Ev> = Engine::new();
+        for i in 0..100 {
+            eng.at((i * 7) % 400, Ev::Tick(i as u32));
+        }
+        let mut last = 0;
+        while let Some((t, _)) = eng.next() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(eng.processed(), 100);
+    }
+
+    #[test]
+    fn run_until_respects_horizon() {
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.at(10, Ev::Tick(0));
+        eng.at(20, Ev::Tick(1));
+        eng.at(30, Ev::Tick(2));
+        let mut seen = vec![];
+        let mut world = ();
+        eng.run_until(&mut world, 20, |_, _, t, _| seen.push(t));
+        assert_eq!(seen, vec![10, 20]);
+        assert_eq!(eng.peek_time(), Some(30));
+        assert!(eng.now() >= 20);
+    }
+
+    #[test]
+    fn cascading_events() {
+        // Each event schedules the next until a counter hits 10.
+        let mut eng: Engine<Ev> = Engine::new();
+        eng.at(0, Ev::Tick(0));
+        let mut count = 0u32;
+        eng.run_to_completion(&mut count, |eng, count, _, Ev::Tick(i)| {
+            *count += 1;
+            if i < 9 {
+                eng.after(5, Ev::Tick(i + 1));
+            }
+        });
+        assert_eq!(count, 10);
+        assert_eq!(eng.now(), 45);
+    }
+
+    #[test]
+    fn rate_conversion() {
+        assert!((rate_to_gap_ns(1_000_000.0) - 1000.0).abs() < 1e-9);
+        assert!(rate_to_gap_ns(0.0).is_infinite());
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulation substrate: deterministic discrete-event engine, PRNG,
+//! streaming statistics, and a property-testing mini-framework.
+//!
+//! The paper's testbed (Broadwell Xeon + Arria 10 over CCI-P) is not
+//! available; every hardware component is modeled as a cycle-accounted
+//! discrete-event simulation built on this substrate (DESIGN.md §6).
+
+pub mod engine;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use engine::{Engine, Ns};
+pub use rng::{Rng, Zipf};
+pub use stats::{Histogram, Summary};

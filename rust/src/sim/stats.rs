@@ -1,0 +1,289 @@
+//! Streaming statistics: log-bucketed latency histograms (HdrHistogram-
+//! style, 2 decimal digits of precision), counters, and summary records.
+//!
+//! All simulation latencies are recorded in integer nanoseconds; summaries
+//! are reported in microseconds to match the paper's tables.
+
+/// Log-bucketed histogram over [1 ns, ~17 min] with bounded relative
+/// error (sub-bucket resolution 1/64 ≈ 1.6 %).
+#[derive(Clone)]
+pub struct Histogram {
+    /// buckets[b][s]: bucket b covers [2^b * 64, 2^(b+1) * 64) split into
+    /// 64 linear sub-buckets (values < 64 land in bucket 0 directly).
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+const BUCKETS: usize = 40;
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS * SUB],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros() as usize;
+        let bucket = msb - SUB_BITS as usize; // >= 0 since value >= 64
+        let shifted = (value >> bucket) as usize - SUB; // 0..SUB
+        ((bucket + 1) * SUB + shifted).min(BUCKETS * SUB - 1)
+    }
+
+    #[inline]
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let bucket = idx / SUB; // >= 1
+        let sub = idx % SUB;
+        ((SUB + sub) as u64) << (bucket - 1)
+    }
+
+    #[inline]
+    pub fn record(&mut self, value_ns: u64) {
+        let v = value_ns.max(1);
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Value at quantile q in [0,1]; returns the representative value of
+    /// the containing bucket.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_ns(0.50) as f64 / 1000.0
+    }
+    pub fn p90_us(&self) -> f64 {
+        self.quantile_ns(0.90) as f64 / 1000.0
+    }
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_ns(0.99) as f64 / 1000.0
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns() / 1000.0
+    }
+    pub fn max_us(&self) -> f64 {
+        self.max as f64 / 1000.0
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+        self.sum = 0;
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram{{n={}, p50={:.2}us, p99={:.2}us, max={:.2}us}}",
+            self.total,
+            self.p50_us(),
+            self.p99_us(),
+            self.max_us()
+        )
+    }
+}
+
+/// Result summary for one experiment point — the row format every bench
+/// prints.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub label: String,
+    pub offered_mrps: f64,
+    pub achieved_mrps: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub drops: u64,
+    pub sent: u64,
+    pub completed: u64,
+}
+
+impl Summary {
+    pub fn from_hist(label: impl Into<String>, hist: &Histogram) -> Self {
+        Summary {
+            label: label.into(),
+            p50_us: hist.p50_us(),
+            p90_us: hist.p90_us(),
+            p99_us: hist.p99_us(),
+            mean_us: hist.mean_us(),
+            completed: hist.count(),
+            ..Default::default()
+        }
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.drops as f64 / self.sent as f64
+        }
+    }
+}
+
+/// Render a list of summaries as an aligned text table (paper-style rows).
+pub fn render_table(title: &str, rows: &[Summary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title}\n"));
+    out.push_str(&format!(
+        "{:<34} {:>10} {:>10} {:>9} {:>9} {:>9} {:>8}\n",
+        "config", "offered", "Mrps", "p50 us", "p90 us", "p99 us", "drop%"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<34} {:>10.3} {:>10.3} {:>9.2} {:>9.2} {:>9.2} {:>8.3}\n",
+            r.label,
+            r.offered_mrps,
+            r.achieved_mrps,
+            r.p50_us,
+            r.p90_us,
+            r.p99_us,
+            r.drop_rate() * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1800);
+        assert_eq!(h.count(), 1);
+        let p50 = h.quantile_ns(0.5);
+        assert!((p50 as f64 - 1800.0).abs() / 1800.0 < 0.02, "p50={p50}");
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile_ns(0.5) as f64;
+        let p99 = h.quantile_ns(0.99) as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.03, "p50={p50}");
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.03, "p99={p99}");
+        assert!((h.mean_ns() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new();
+        for &v in &[1u64, 63, 64, 65, 1000, 123_456, 9_999_999, 1 << 33] {
+            h.clear();
+            h.record(v);
+            let got = h.quantile_ns(1.0) as f64;
+            assert!(
+                (got - v as f64).abs() / v as f64 <= 1.0 / 64.0 + 1e-9,
+                "v={v} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 1..=100 {
+            a.record(v);
+        }
+        for v in 101..=200 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        let p50 = a.quantile_ns(0.5) as f64;
+        assert!((p50 - 100.0).abs() < 5.0, "p50={p50}");
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![Summary {
+            label: "upi b=4".into(),
+            offered_mrps: 12.0,
+            achieved_mrps: 12.4,
+            p50_us: 2.8,
+            p99_us: 4.1,
+            sent: 1000,
+            drops: 10,
+            ..Default::default()
+        }];
+        let t = render_table("fig10", &rows);
+        assert!(t.contains("upi b=4"));
+        assert!(t.contains("12.4"));
+        assert!(t.contains("1.000")); // drop%
+    }
+}

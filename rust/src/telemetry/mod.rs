@@ -1,0 +1,205 @@
+//! Telemetry: the lightweight request-tracing system from §5.7 ("we
+//! design a lightweight request tracing system and integrate it with
+//! Dagger") plus a metrics registry.
+//!
+//! A trace is a list of spans — (tier, phase, start, end) — recorded in
+//! simulated or wall-clock nanoseconds. The Flight Registration analysis
+//! uses traces to find the bottleneck tier (the paper found the Flight
+//! service dominated with the Simple threading model).
+
+use crate::sim::Ns;
+use std::collections::HashMap;
+
+/// Phase of a request's life inside one tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Network,
+    RpcProcessing,
+    Queueing,
+    AppLogic,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Network => "network",
+            Phase::RpcProcessing => "rpc",
+            Phase::Queueing => "queue",
+            Phase::AppLogic => "app",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub tier: String,
+    pub phase: Phase,
+    pub start: Ns,
+    pub end: Ns,
+}
+
+impl Span {
+    pub fn dur(&self) -> Ns {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// One request's trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn record(&mut self, tier: &str, phase: Phase, start: Ns, end: Ns) {
+        self.spans.push(Span { tier: tier.to_string(), phase, start, end });
+    }
+
+    /// Total time attributed to a phase across all tiers.
+    pub fn phase_total(&self, phase: Phase) -> Ns {
+        self.spans.iter().filter(|s| s.phase == phase).map(|s| s.dur()).sum()
+    }
+
+    /// Per-tier busy time (all phases).
+    pub fn tier_totals(&self) -> HashMap<String, Ns> {
+        let mut out: HashMap<String, Ns> = HashMap::new();
+        for s in &self.spans {
+            *out.entry(s.tier.clone()).or_default() += s.dur();
+        }
+        out
+    }
+
+    /// The tier with the largest attributed time — the bottleneck finder
+    /// used in §5.7 to identify the Flight service.
+    pub fn bottleneck_tier(&self) -> Option<(String, Ns)> {
+        self.tier_totals().into_iter().max_by_key(|(_, v)| *v)
+    }
+}
+
+/// Aggregated per-tier, per-phase accounting across many requests — the
+/// data behind Fig. 3's stacked bars.
+#[derive(Debug, Default)]
+pub struct PhaseBreakdown {
+    /// (tier, phase) -> accumulated ns.
+    acc: HashMap<(String, Phase), u128>,
+    pub requests: u64,
+}
+
+impl PhaseBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_trace(&mut self, t: &Trace) {
+        self.requests += 1;
+        for s in &t.spans {
+            *self.acc.entry((s.tier.clone(), s.phase)).or_default() += s.dur() as u128;
+        }
+    }
+
+    pub fn add(&mut self, tier: &str, phase: Phase, dur: Ns) {
+        *self.acc.entry((tier.to_string(), phase)).or_default() += dur as u128;
+    }
+
+    /// Fraction of `tier`'s total time spent in `phase`.
+    pub fn fraction(&self, tier: &str, phase: Phase) -> f64 {
+        let tier_total: u128 = self
+            .acc
+            .iter()
+            .filter(|((t, _), _)| t == tier)
+            .map(|(_, v)| *v)
+            .sum();
+        if tier_total == 0 {
+            return 0.0;
+        }
+        let p = self.acc.get(&(tier.to_string(), phase)).copied().unwrap_or(0);
+        p as f64 / tier_total as f64
+    }
+
+    pub fn tiers(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.acc.keys().map(|(t, _)| t.clone()).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Simple counter/gauge registry for runtime metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: HashMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut keys: Vec<_> = self.counters.keys().collect();
+        keys.sort();
+        keys.iter().map(|k| format!("{k} {}\n", self.counters[*k])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_phase_accounting() {
+        let mut t = Trace::default();
+        t.record("user", Phase::Network, 0, 100);
+        t.record("user", Phase::AppLogic, 100, 150);
+        t.record("text", Phase::Network, 150, 400);
+        assert_eq!(t.phase_total(Phase::Network), 350);
+        assert_eq!(t.phase_total(Phase::AppLogic), 50);
+    }
+
+    #[test]
+    fn bottleneck_found() {
+        let mut t = Trace::default();
+        t.record("flight", Phase::AppLogic, 0, 10_000);
+        t.record("checkin", Phase::AppLogic, 0, 500);
+        let (tier, ns) = t.bottleneck_tier().unwrap();
+        assert_eq!(tier, "flight");
+        assert_eq!(ns, 10_000);
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let mut b = PhaseBreakdown::new();
+        b.add("s1", Phase::Network, 300);
+        b.add("s1", Phase::RpcProcessing, 200);
+        b.add("s1", Phase::AppLogic, 500);
+        let sum = b.fraction("s1", Phase::Network)
+            + b.fraction("s1", Phase::RpcProcessing)
+            + b.fraction("s1", Phase::AppLogic)
+            + b.fraction("s1", Phase::Queueing);
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((b.fraction("s1", Phase::Network) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_tier_zero() {
+        let b = PhaseBreakdown::new();
+        assert_eq!(b.fraction("nope", Phase::Network), 0.0);
+    }
+
+    #[test]
+    fn metrics_roundtrip() {
+        let mut m = Metrics::new();
+        m.incr("rpc.sent", 5);
+        m.incr("rpc.sent", 2);
+        assert_eq!(m.get("rpc.sent"), 7);
+        assert!(m.render().contains("rpc.sent 7"));
+    }
+}

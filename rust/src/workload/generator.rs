@@ -1,0 +1,208 @@
+//! Load generators.
+//!
+//! * [`OpenLoopGen`] — Poisson arrivals at a target rate (the latency-vs-
+//!   load sweeps; arrival times independent of completions).
+//! * [`ClosedLoopGen`] — a fixed number of outstanding requests; a new
+//!   request issues when one completes (the peak-throughput runs).
+//!
+//! Both also carry a KVS operation mix (set/get ratio, zipfian keys,
+//! tiny/small value classes) matching §5.6's methodology.
+
+use crate::sim::{Ns, Rng, Zipf};
+
+/// KVS dataset classes used in the paper (§5.6, after MICA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    /// 8 B keys, 8 B values, 10 M (memcached) / 200 M (MICA) pairs.
+    Tiny,
+    /// 16 B keys, 32 B values.
+    Small,
+}
+
+impl Dataset {
+    pub fn key_bytes(&self) -> usize {
+        match self {
+            Dataset::Tiny => 8,
+            Dataset::Small => 16,
+        }
+    }
+
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            Dataset::Tiny => 8,
+            Dataset::Small => 32,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Tiny => "tiny(8B/8B)",
+            Dataset::Small => "small(16B/32B)",
+        }
+    }
+}
+
+/// Workload mix (§5.6): write-intensive 50/50 or read-intensive 5/95.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mix {
+    WriteIntense,
+    ReadIntense,
+}
+
+impl Mix {
+    pub fn set_fraction(&self) -> f64 {
+        match self {
+            Mix::WriteIntense => 0.50,
+            Mix::ReadIntense => 0.05,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::WriteIntense => "set/get=50/50",
+            Mix::ReadIntense => "set/get=5/95",
+        }
+    }
+}
+
+/// One generated KVS operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvsOp {
+    pub is_set: bool,
+    pub key: u64,
+}
+
+/// Zipfian KVS op stream.
+pub struct KvsWorkload {
+    pub dataset: Dataset,
+    pub mix: Mix,
+    zipf: Zipf,
+    rng: Rng,
+}
+
+impl KvsWorkload {
+    pub fn new(dataset: Dataset, mix: Mix, n_keys: u64, skew: f64, seed: u64) -> Self {
+        KvsWorkload { dataset, mix, zipf: Zipf::new(n_keys, skew), rng: Rng::new(seed) }
+    }
+
+    pub fn next_op(&mut self) -> KvsOp {
+        KvsOp {
+            is_set: self.rng.chance(self.mix.set_fraction()),
+            key: self.zipf.sample(&mut self.rng),
+        }
+    }
+}
+
+/// Open-loop Poisson arrival process.
+pub struct OpenLoopGen {
+    rng: Rng,
+    mean_gap_ns: f64,
+    next_at: f64,
+    pub issued: u64,
+}
+
+impl OpenLoopGen {
+    pub fn new(rate_rps: f64, seed: u64) -> Self {
+        assert!(rate_rps > 0.0);
+        OpenLoopGen { rng: Rng::new(seed), mean_gap_ns: 1e9 / rate_rps, next_at: 0.0, issued: 0 }
+    }
+
+    /// Time of the next arrival (monotone).
+    pub fn next_arrival(&mut self) -> Ns {
+        self.next_at += self.rng.exp(self.mean_gap_ns);
+        self.issued += 1;
+        self.next_at as Ns
+    }
+}
+
+/// Closed-loop generator: `outstanding` requests always in flight.
+pub struct ClosedLoopGen {
+    pub outstanding: u32,
+    pub in_flight: u32,
+    pub issued: u64,
+    pub completed: u64,
+}
+
+impl ClosedLoopGen {
+    pub fn new(outstanding: u32) -> Self {
+        ClosedLoopGen { outstanding, in_flight: 0, issued: 0, completed: 0 }
+    }
+
+    /// How many new requests to issue right now.
+    pub fn want_issue(&self) -> u32 {
+        self.outstanding.saturating_sub(self.in_flight)
+    }
+
+    pub fn on_issue(&mut self, n: u32) {
+        self.in_flight += n;
+        self.issued += n as u64;
+    }
+
+    pub fn on_complete(&mut self) {
+        debug_assert!(self.in_flight > 0);
+        self.in_flight -= 1;
+        self.completed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_loop_rate_converges() {
+        let mut g = OpenLoopGen::new(1_000_000.0, 3); // 1 Mrps -> 1000ns gaps
+        let mut last = 0;
+        let n = 100_000;
+        for _ in 0..n {
+            last = g.next_arrival();
+        }
+        let mean_gap = last as f64 / n as f64;
+        assert!((mean_gap - 1000.0).abs() < 20.0, "gap={mean_gap}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let mut g = OpenLoopGen::new(5e6, 4);
+        let mut prev = 0;
+        for _ in 0..10_000 {
+            let t = g.next_arrival();
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn closed_loop_invariant() {
+        let mut g = ClosedLoopGen::new(8);
+        assert_eq!(g.want_issue(), 8);
+        g.on_issue(8);
+        assert_eq!(g.want_issue(), 0);
+        g.on_complete();
+        g.on_complete();
+        assert_eq!(g.want_issue(), 2);
+        assert_eq!(g.issued, 8);
+        assert_eq!(g.completed, 2);
+    }
+
+    #[test]
+    fn kvs_mix_ratio() {
+        let mut w = KvsWorkload::new(Dataset::Tiny, Mix::ReadIntense, 1000, 0.99, 5);
+        let sets = (0..100_000).filter(|_| w.next_op().is_set).count();
+        let frac = sets as f64 / 100_000.0;
+        assert!((frac - 0.05).abs() < 0.01, "set frac={frac}");
+    }
+
+    #[test]
+    fn kvs_keys_zipfian() {
+        let mut w = KvsWorkload::new(Dataset::Small, Mix::WriteIntense, 10_000, 0.99, 6);
+        let hot = (0..50_000).filter(|_| w.next_op().key < 100).count();
+        assert!(hot > 15_000, "hot-key share too low: {hot}");
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        assert_eq!(Dataset::Tiny.key_bytes(), 8);
+        assert_eq!(Dataset::Small.value_bytes(), 32);
+    }
+}

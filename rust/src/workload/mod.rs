@@ -1,0 +1,9 @@
+//! Workload generators: RPC size distributions measured from the
+//! DeathStarBench-style services (Fig. 4), zipfian KVS key popularity
+//! (§5.6), and open/closed-loop load generation.
+
+pub mod generator;
+pub mod rpc_sizes;
+
+pub use generator::{ClosedLoopGen, OpenLoopGen};
+pub use rpc_sizes::{RpcSizeDist, TierSizeProfile};

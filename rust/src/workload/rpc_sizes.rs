@@ -1,0 +1,210 @@
+//! RPC size distributions (Fig. 4): request/response size CDFs for the
+//! Social Network and Media services, and per-tier size profiles.
+//!
+//! Anchors from the paper (§3.2):
+//! * 75 % of all RPC requests are < 512 B;
+//! * > 90 % of responses are < 64 B;
+//! * per-tier medians vary widely: Text ≈ 580 B median, while Media,
+//!   User and UniqueID never exceed 64 B.
+
+use crate::sim::Rng;
+
+/// A piecewise-uniform size distribution: (cumulative probability, max
+/// bytes of the segment) — sampling picks the segment then a uniform
+/// size inside it.
+#[derive(Clone, Debug)]
+pub struct RpcSizeDist {
+    /// (cdf, lo_bytes, hi_bytes) segments, cdf ascending to 1.0.
+    segments: Vec<(f64, u32, u32)>,
+}
+
+impl RpcSizeDist {
+    pub fn new(segments: Vec<(f64, u32, u32)>) -> Self {
+        assert!(!segments.is_empty());
+        let last = segments.last().unwrap().0;
+        assert!((last - 1.0).abs() < 1e-9, "cdf must end at 1.0");
+        RpcSizeDist { segments }
+    }
+
+    /// Social Network request sizes (Fig. 4 left, "requests" CDF).
+    pub fn social_network_requests() -> Self {
+        RpcSizeDist::new(vec![
+            (0.35, 16, 64),    // tiny control RPCs
+            (0.60, 65, 256),   // small metadata
+            (0.75, 257, 512),  // 75% below 512B
+            (0.92, 513, 1024), // text bodies
+            (1.00, 1025, 4096),
+        ])
+    }
+
+    /// Social Network / Media response sizes: >90 % under 64 B.
+    pub fn responses() -> Self {
+        RpcSizeDist::new(vec![
+            (0.91, 8, 64),
+            (0.97, 65, 512),
+            (1.00, 513, 2048),
+        ])
+    }
+
+    /// Media service request sizes (slightly larger tail: embedded
+    /// media metadata).
+    pub fn media_requests() -> Self {
+        RpcSizeDist::new(vec![
+            (0.30, 16, 64),
+            (0.55, 65, 256),
+            (0.73, 257, 512),
+            (0.90, 513, 1536),
+            (1.00, 1537, 8192),
+        ])
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let u = rng.next_f64();
+        let mut prev_cdf = 0.0;
+        for &(cdf, lo, hi) in &self.segments {
+            if u <= cdf || (cdf - prev_cdf) <= 0.0 {
+                let span = (hi - lo) as u64 + 1;
+                return lo + rng.gen_range(span) as u32;
+            }
+            prev_cdf = cdf;
+        }
+        self.segments.last().unwrap().2
+    }
+
+    /// Empirical CDF at `bytes` from `n` samples.
+    pub fn cdf_at(&self, bytes: u32, rng: &mut Rng, n: usize) -> f64 {
+        let mut below = 0usize;
+        for _ in 0..n {
+            if self.sample(rng) <= bytes {
+                below += 1;
+            }
+        }
+        below as f64 / n as f64
+    }
+}
+
+/// Fig. 4 (right): per-tier request size profiles for s1–s6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierSizeProfile {
+    /// s1 Media: never larger than 64 B.
+    Media,
+    /// s2 User: never larger than 64 B.
+    User,
+    /// s3 UniqueID: never larger than 64 B.
+    UniqueId,
+    /// s4 Text: median 580 B.
+    Text,
+    /// s5 UserMention: mid-size.
+    UserMention,
+    /// s6 UrlShorten: small-to-mid.
+    UrlShorten,
+}
+
+impl TierSizeProfile {
+    pub fn all() -> [TierSizeProfile; 6] {
+        [
+            TierSizeProfile::Media,
+            TierSizeProfile::User,
+            TierSizeProfile::UniqueId,
+            TierSizeProfile::Text,
+            TierSizeProfile::UserMention,
+            TierSizeProfile::UrlShorten,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierSizeProfile::Media => "s1:Media",
+            TierSizeProfile::User => "s2:User",
+            TierSizeProfile::UniqueId => "s3:UniqueID",
+            TierSizeProfile::Text => "s4:Text",
+            TierSizeProfile::UserMention => "s5:UserMention",
+            TierSizeProfile::UrlShorten => "s6:UrlShorten",
+        }
+    }
+
+    pub fn dist(&self) -> RpcSizeDist {
+        match self {
+            TierSizeProfile::Media | TierSizeProfile::User | TierSizeProfile::UniqueId => {
+                RpcSizeDist::new(vec![(1.0, 8, 64)])
+            }
+            TierSizeProfile::Text => RpcSizeDist::new(vec![
+                (0.25, 64, 320),
+                (0.50, 321, 580), // median ~580B
+                (0.85, 581, 1024),
+                (1.00, 1025, 2048),
+            ]),
+            TierSizeProfile::UserMention => RpcSizeDist::new(vec![
+                (0.50, 32, 128),
+                (0.90, 129, 512),
+                (1.00, 513, 1024),
+            ]),
+            TierSizeProfile::UrlShorten => RpcSizeDist::new(vec![
+                (0.60, 32, 160),
+                (1.00, 161, 512),
+            ]),
+        }
+    }
+
+    pub fn median_bytes(&self, rng: &mut Rng) -> u32 {
+        let d = self.dist();
+        let mut v: Vec<u32> = (0..2001).map(|_| d.sample(rng)).collect();
+        v.sort();
+        v[v.len() / 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_75pct_requests_under_512() {
+        let d = RpcSizeDist::social_network_requests();
+        let mut rng = Rng::new(1);
+        let c = d.cdf_at(512, &mut rng, 50_000);
+        assert!((c - 0.75).abs() < 0.02, "cdf(512B)={c}");
+    }
+
+    #[test]
+    fn paper_anchor_90pct_responses_under_64() {
+        let d = RpcSizeDist::responses();
+        let mut rng = Rng::new(2);
+        let c = d.cdf_at(64, &mut rng, 50_000);
+        assert!(c > 0.90, "cdf(64B)={c}");
+    }
+
+    #[test]
+    fn small_tiers_never_exceed_64() {
+        let mut rng = Rng::new(3);
+        for p in [TierSizeProfile::Media, TierSizeProfile::User, TierSizeProfile::UniqueId] {
+            let d = p.dist();
+            for _ in 0..10_000 {
+                assert!(d.sample(&mut rng) <= 64);
+            }
+        }
+    }
+
+    #[test]
+    fn text_median_near_580() {
+        let mut rng = Rng::new(4);
+        let m = TierSizeProfile::Text.median_bytes(&mut rng);
+        assert!((450..=700).contains(&m), "median={m}");
+    }
+
+    #[test]
+    fn sample_in_segment_bounds() {
+        let d = RpcSizeDist::new(vec![(0.5, 10, 20), (1.0, 100, 200)]);
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let s = d.sample(&mut rng);
+            assert!((10..=20).contains(&s) || (100..=200).contains(&s));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cdf must end at 1.0")]
+    fn bad_cdf_rejected() {
+        RpcSizeDist::new(vec![(0.9, 1, 2)]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: the real-thread RPC framework end-to-end — client pools,
+//! SRQ sharing, worker-mode servers, MICA object-level steering, and the
+//! XLA datapath on the fabric hot path.
+
+use dagger::apps::mica::Mica;
+use dagger::apps::serve::{decode_kv, encode_kv, kvs_handler, METHOD_GET, METHOD_SET};
+use dagger::coordinator::api::{DispatchMode, RpcClient, RpcClientPool, RpcThreadedServer};
+use dagger::coordinator::fabric::Fabric;
+use dagger::nic::load_balancer::LbMode;
+use dagger::runtime::EngineSpec;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+fn engine_spec() -> EngineSpec {
+    if dagger::runtime::artifacts_available() {
+        EngineSpec::XlaAuto { batch: 4 }
+    } else {
+        eprintln!("note: artifacts missing; e2e test runs with the native datapath");
+        EngineSpec::Native
+    }
+}
+
+#[test]
+fn client_pool_many_flows_round_trip() {
+    let mut fabric = Fabric::new();
+    let client_addr = fabric.add_endpoint(4, 128);
+    let server_addr = fabric.add_endpoint(4, 128);
+    fabric.set_lb(server_addr, LbMode::RoundRobin);
+
+    let clients: Vec<Arc<RpcClient>> = (0..4)
+        .map(|flow| {
+            let c_id = fabric.connect(client_addr, flow, server_addr, LbMode::RoundRobin);
+            RpcClient::new(c_id, fabric.rings(client_addr, flow))
+        })
+        .collect();
+    let pool = RpcClientPool::new(clients);
+
+    let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+    for flow in 0..4 {
+        server.add_flow(flow, fabric.rings(server_addr, flow));
+    }
+    server.register(9, Arc::new(|_, req| req.iter().rev().cloned().collect()));
+    let joins = server.start();
+    let handle = fabric.start(engine_spec());
+
+    // 200 blocking calls spread over the pool.
+    for i in 0..200u32 {
+        let c = pool.client(i as usize);
+        let payload = i.to_le_bytes();
+        let resp = c.call_blocking(9, &payload).expect("rpc");
+        let mut want = payload.to_vec();
+        want.reverse();
+        assert_eq!(resp, want);
+    }
+    assert_eq!(pool.total_completed(), 200);
+
+    server.stop_flag().store(true, Ordering::Relaxed);
+    handle.shutdown();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn mica_object_level_steering_serves_kvs() {
+    let mut fabric = Fabric::new();
+    let client_addr = fabric.add_endpoint(1, 256);
+    let server_addr = fabric.add_endpoint(4, 256);
+    fabric.set_lb(server_addr, LbMode::ObjectLevel);
+    let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::ObjectLevel);
+    let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
+
+    let store = Arc::new(Mutex::new(Mica::new(4, 1 << 12, false)));
+    let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+    for flow in 0..4 {
+        server.add_flow(flow, fabric.rings(server_addr, flow));
+    }
+    let h = kvs_handler(store.clone());
+    server.register(METHOD_GET, h.clone());
+    server.register(METHOD_SET, h);
+    let joins = server.start();
+    let handle = fabric.start(engine_spec());
+
+    // SET then GET 100 keys; every GET must return its value.
+    for i in 0..100u32 {
+        let key = format!("user:{i:04}");
+        let val = format!("v{i}");
+        let r = client
+            .call_blocking(METHOD_SET, &encode_kv(key.as_bytes(), val.as_bytes()))
+            .expect("set");
+        assert_eq!(r[0], 1, "set rejected");
+    }
+    for i in 0..100u32 {
+        let key = format!("user:{i:04}");
+        let r = client
+            .call_blocking(METHOD_GET, &encode_kv(key.as_bytes(), b""))
+            .expect("get");
+        assert_eq!(r[0], 1, "miss on {key}");
+        assert_eq!(&r[1..], format!("v{i}").as_bytes());
+    }
+
+    server.stop_flag().store(true, Ordering::Relaxed);
+    handle.shutdown();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn worker_mode_survives_slow_handlers() {
+    let mut fabric = Fabric::new();
+    let client_addr = fabric.add_endpoint(1, 128);
+    let server_addr = fabric.add_endpoint(1, 128);
+    let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::RoundRobin);
+    let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
+
+    let mut server = RpcThreadedServer::new(DispatchMode::Worker);
+    server.add_flow(0, fabric.rings(server_addr, 0));
+    server.register(
+        1,
+        Arc::new(|_, req| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            req.to_vec()
+        }),
+    );
+    let joins = server.start();
+    let handle = fabric.start(EngineSpec::Native);
+
+    for _ in 0..50 {
+        assert_eq!(client.call_blocking(1, b"slow").expect("rpc"), b"slow");
+    }
+
+    server.stop_flag().store(true, Ordering::Relaxed);
+    handle.shutdown();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn kv_codec_fuzz_roundtrip() {
+    let mut rng = dagger::sim::Rng::new(5);
+    for _ in 0..500 {
+        let klen = rng.gen_range(20) as usize;
+        let vlen = rng.gen_range(26) as usize;
+        let key: Vec<u8> = (0..klen).map(|_| rng.next_u32() as u8).collect();
+        let val: Vec<u8> = (0..vlen).map(|_| rng.next_u32() as u8).collect();
+        let enc = encode_kv(&key, &val);
+        assert!(enc.len() <= 48, "encoded KV must fit a frame payload");
+        let (k, v) = decode_kv(&enc).unwrap();
+        assert_eq!(k, key);
+        assert_eq!(v, val);
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration: the AOT-compiled XLA datapath artifact (lowered from the
+//! Pallas kernels) must be bit-identical to the native Rust mirror.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifacts are missing so `cargo test` still works standalone.
+
+use dagger::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
+use dagger::nic::load_balancer::LbMode;
+use dagger::nic::rpc_unit::RpcUnit;
+use dagger::runtime::{artifacts_available, Datapath, Runtime, TxPath};
+use dagger::sim::Rng;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return true;
+    }
+    false
+}
+
+fn random_frames(rng: &mut Rng, n: usize, invalid_frac: f64) -> Vec<Frame> {
+    (0..n)
+        .map(|i| {
+            let len = rng.gen_range(MAX_PAYLOAD_BYTES as u64 + 1) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let mut f = Frame::new(
+                RpcType::Request,
+                rng.next_u32() as u8,
+                rng.next_u32(),
+                i as u32,
+                &payload,
+            );
+            if rng.chance(invalid_frac) {
+                f.words[0] = rng.next_u32(); // likely-destroyed magic
+            }
+            f
+        })
+        .collect()
+}
+
+#[test]
+fn xla_datapath_matches_native_bit_for_bit() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let mut rng = Rng::new(0xDA66);
+    for &batch in &[4usize, 16, 64, 256] {
+        let mut dp = Datapath::load(&rt, batch).expect("load artifact");
+        let mut native = RpcUnit::new();
+        for lb in [LbMode::RoundRobin, LbMode::Static, LbMode::ObjectLevel] {
+            for n_flows in [1u32, 3, 8, 64] {
+                let frames = random_frames(&mut rng, batch, 0.15);
+                let (meta, lanes) =
+                    dp.process(&frames, lb.as_u32(), n_flows).expect("xla process");
+                let want = native.process_rx(&frames, lb, n_flows);
+                assert_eq!(meta, want.meta, "meta mismatch b={batch} lb={lb:?} f={n_flows}");
+                assert_eq!(lanes, want.lanes, "lanes mismatch b={batch} lb={lb:?} f={n_flows}");
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_datapath_handles_partial_batches() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut dp = Datapath::load(&rt, 16).unwrap();
+    let mut rng = Rng::new(7);
+    for n in [0usize, 1, 5, 15, 16] {
+        let frames = random_frames(&mut rng, n, 0.0);
+        let (meta, lanes) = dp.process(&frames, 2, 8).unwrap();
+        assert_eq!(meta.len(), n);
+        assert!(lanes.iter().all(|l| l.len() == n));
+        let mut native = RpcUnit::new();
+        let want = native.process_rx(&frames, LbMode::ObjectLevel, 8);
+        assert_eq!(meta, want.meta);
+    }
+}
+
+#[test]
+fn xla_tx_path_serializes_lanes() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let tx = TxPath::load(&rt, 16).unwrap();
+    let mut rng = Rng::new(9);
+    let frames = random_frames(&mut rng, 16, 0.0);
+    let lanes = dagger::nic::rpc_unit::deserialize(&frames);
+    let out = tx.process(&lanes).expect("tx process");
+    let want = dagger::nic::rpc_unit::serialize(&lanes);
+    assert_eq!(out, want);
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut dp = Datapath::load(&rt, 4).unwrap();
+    let mut rng = Rng::new(1);
+    let frames = random_frames(&mut rng, 5, 0.0);
+    assert!(dp.process(&frames, 0, 4).is_err());
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    if skip() {
+        return;
+    }
+    let manifest =
+        std::fs::read_to_string(dagger::runtime::artifacts_dir().join("manifest.txt")).unwrap();
+    for b in dagger::runtime::ARTIFACT_BATCHES {
+        assert!(
+            manifest.contains(&format!("nic_datapath_b{b}.hlo.txt")),
+            "missing datapath artifact for batch {b}"
+        );
+        assert!(
+            manifest.contains(&format!("nic_tx_b{b}.hlo.txt")),
+            "missing tx artifact for batch {b}"
+        );
+    }
+}
