@@ -1,16 +1,13 @@
-//! `cargo bench --bench ablation_batching` — regenerates Ablation — doorbell batching vs memory interconnect.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench ablation_batching` — ablation for §5.2's "~14%
+//! of the improvement comes from the memory-interconnect messaging
+//! model": doorbell batching vs UPI at matched batch widths, with the
+//! rest of the stack held fixed.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_ablation-batching.json` / `.csv` (default `./bench_out`).
+//! Anchor: at the paper's operating points (doorbell B=11 vs UPI B=4)
+//! the gain is ~14%. See REPRODUCING.md §Ablations.
 
 fn main() {
-    dagger::bench::header("Ablation — doorbell batching vs memory interconnect", "paper §5.2 (~14% claim)");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("ablation-batching", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("ablation-batching");
 }

@@ -1,16 +1,11 @@
-//! `cargo bench --bench ablation_conn_cache` — regenerates Ablation — connection cache sizing.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench ablation_conn_cache` — ablation for the §4.2/§6
+//! BRAM-allocation discussion: connection-cache hit rate and effective
+//! lookup cost vs open-connection count under zipfian popularity.
+//!
+//! Flags (after `--`): `--out-dir DIR` (analytic, no DES run).
+//! Writes `BENCH_ablation-conn-cache.json` / `.csv` (default
+//! `./bench_out`). See REPRODUCING.md §Ablations.
 
 fn main() {
-    dagger::bench::header("Ablation — connection cache sizing", "paper §4.2/§6");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("ablation-conn-cache", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("ablation-conn-cache");
 }

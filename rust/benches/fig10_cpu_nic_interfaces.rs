@@ -1,16 +1,13 @@
-//! `cargo bench --bench fig10_cpu_nic_interfaces` — regenerates Fig. 10 — CPU-NIC interface comparison.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig10_cpu_nic_interfaces` — regenerates Fig. 10
+//! (§5.3): single-core saturation throughput and latency for every
+//! CPU-NIC interface (WQE-by-MMIO, doorbell, doorbell batching, UPI),
+//! plus the RPC-payload-size sweep and the best-effort peak.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig10.json` / `BENCH_fig10.csv` (default `./bench_out`).
+//! Paper anchors: MMIO 4.2, doorbell 4.3, doorbell-batch(B=11) 10.8,
+//! UPI(B=4) 12.4 Mrps; 16.5 Mrps best-effort. See REPRODUCING.md §Fig. 10.
 
 fn main() {
-    dagger::bench::header("Fig. 10 — CPU-NIC interface comparison", "paper §5.3, Figure 10");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig10", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig10");
 }

@@ -1,16 +1,13 @@
-//! `cargo bench --bench fig11_latency_throughput` — regenerates Fig. 11 (left) — latency vs throughput.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig11_latency_throughput` — regenerates Fig. 11
+//! left panel (§5.4): latency vs offered load for B=1, B=4, and
+//! soft-config adaptive batching on the UPI interface.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig11.json` / `BENCH_fig11.csv` (default `./bench_out`).
+//! Paper anchor: ~2.1 us median RTT at low load (B=1); adaptive batching
+//! holds B=1 latency at low load and reaches B=4's 12.4 Mrps saturation.
+//! See REPRODUCING.md §Fig. 11 (left).
 
 fn main() {
-    dagger::bench::header("Fig. 11 (left) — latency vs throughput", "paper §5.4, Figure 11");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig11", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig11");
 }

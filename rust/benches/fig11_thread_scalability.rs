@@ -1,16 +1,12 @@
-//! `cargo bench --bench fig11_thread_scalability` — regenerates Fig. 11 (right) — thread scalability.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig11_thread_scalability` — regenerates Fig. 11
+//! right panel (§5.5): end-to-end throughput vs thread count, the
+//! as-seen-by-the-processor line, and the raw-UPI-read ceiling.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig11-threads.json` / `.csv` (default `./bench_out`).
+//! Paper anchor: linear to 4 threads, then flat at ~42 Mrps e2e (84 Mrps
+//! as seen by the processor). See REPRODUCING.md §Fig. 11 (right).
 
 fn main() {
-    dagger::bench::header("Fig. 11 (right) — thread scalability", "paper §5.5, Figure 11");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig11-threads", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig11-threads");
 }

@@ -1,16 +1,12 @@
-//! `cargo bench --bench fig12_kvs` — regenerates Fig. 12 — memcached + MICA over Dagger.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig12_kvs` — regenerates Fig. 12 (§5.6):
+//! memcached and MICA served over Dagger — closed-loop peak single-core
+//! throughput and latency at ~70% of peak, per dataset and set/get mix.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig12.json` / `BENCH_fig12.csv` (default `./bench_out`).
+//! Paper anchors: memcached ~2.8-3.2 us median; MICA 4.8-7.8 Mrps
+//! single-core. See REPRODUCING.md §Fig. 12.
 
 fn main() {
-    dagger::bench::header("Fig. 12 — memcached + MICA over Dagger", "paper §5.6, Figure 12");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig12", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig12");
 }

@@ -1,16 +1,12 @@
-//! `cargo bench --bench fig3_networking_fraction` — regenerates Fig. 3 — networking fraction of tier latency.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig3_networking_fraction` — regenerates Fig. 3
+//! (§3.1): networking's share of per-tier latency in the Social Network
+//! service over kernel TCP/IP + Thrift-style RPC, at three load levels.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig3.json` / `BENCH_fig3.csv` (default `./bench_out`).
+//! Paper anchor: networking+RPC+queueing is 40-65% of tier time and
+//! grows with load. See REPRODUCING.md §Fig. 3.
 
 fn main() {
-    dagger::bench::header("Fig. 3 — networking fraction of tier latency", "paper §3.1, Figure 3");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig3", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig3");
 }

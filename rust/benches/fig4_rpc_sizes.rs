@@ -1,16 +1,13 @@
-//! `cargo bench --bench fig4_rpc_sizes` — regenerates Fig. 4 — RPC size distributions.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig4_rpc_sizes` — regenerates Fig. 4 (§3.2):
+//! RPC size CDFs for the Social Network / Media services and the
+//! per-tier request-size breakdown.
+//!
+//! Flags (after `--`): `--out-dir DIR` (`--fast` accepted, no effect —
+//! this experiment is sampling-based and already fast).
+//! Writes `BENCH_fig4.json` / `BENCH_fig4.csv` (default `./bench_out`).
+//! Paper anchor: ~75% of requests fit in 512 B; >90% of responses fit
+//! in one 64 B cache line. See REPRODUCING.md §Fig. 4.
 
 fn main() {
-    dagger::bench::header("Fig. 4 — RPC size distributions", "paper §3.2, Figure 4");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig4", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig4");
 }

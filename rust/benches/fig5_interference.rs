@@ -1,16 +1,11 @@
-//! `cargo bench --bench fig5_interference` — regenerates Fig. 5 — CPU interference networking vs app logic.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench fig5_interference` — regenerates Fig. 5 (§3.3):
+//! end-to-end latency with networking on separate vs shared CPU cores,
+//! showing interference grow with load (tail first).
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_fig5.json` / `BENCH_fig5.csv` (default `./bench_out`).
+//! See REPRODUCING.md §Fig. 5.
 
 fn main() {
-    dagger::bench::header("Fig. 5 — CPU interference networking vs app logic", "paper §3.3, Figure 5");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("fig5", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("fig5");
 }

@@ -1,16 +1,13 @@
-//! `cargo bench --bench table1_resources` — regenerates Table 1 — NIC implementation specifications.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench table1_resources` — regenerates Table 1 (§4.6):
+//! Dagger NIC implementation specifications — clocks, flows, and the
+//! FPGA resource estimate (LUTs, M20K BRAM, registers) for the paper's
+//! evaluation configuration.
+//!
+//! Flags (after `--`): `--out-dir DIR` (analytic, no simulation).
+//! Writes `BENCH_table1.json` / `BENCH_table1.csv` (default `./bench_out`).
+//! Paper anchors: 200 MHz RPC unit, 512 max flows. See REPRODUCING.md
+//! §Table 1.
 
 fn main() {
-    dagger::bench::header("Table 1 — NIC implementation specifications", "paper §4.6, Table 1");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("table1", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("table1");
 }

@@ -1,16 +1,13 @@
-//! `cargo bench --bench table3_rpc_platforms` — regenerates Table 3 — RPC platform comparison.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench table3_rpc_platforms` — regenerates Table 3
+//! (§5.2): median RTT and single-core throughput vs IX, FaSST, eRPC and
+//! NetDIMM (paper-reported rows) with the Dagger row measured from the
+//! calibrated simulation.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_table3.json` / `BENCH_table3.csv` (default `./bench_out`).
+//! Paper anchors: Dagger 2.1 us median RTT, 12.4 Mrps/core → 1.3-3.8x
+//! per-core gain. See REPRODUCING.md §Table 3.
 
 fn main() {
-    dagger::bench::header("Table 3 — RPC platform comparison", "paper §5.2, Table 3");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("table3", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("table3");
 }

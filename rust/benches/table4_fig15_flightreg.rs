@@ -1,16 +1,13 @@
-//! `cargo bench --bench table4_fig15_flightreg` — regenerates Table 4 + Fig. 15 — Flight Registration service.
-//! Thin wrapper over the experiment driver in dagger::exp.
+//! `cargo bench --bench table4_fig15_flightreg` — regenerates Table 4 +
+//! Fig. 15 (§5.7): the 8-tier Flight Registration service under the
+//! Simple vs Optimized threading models — max sustainable load (<1%
+//! drops) and the latency/load curve.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--out-dir DIR`.
+//! Writes `BENCH_table4-fig15.json` / `.csv` (default `./bench_out`).
+//! Paper anchor: Optimized sustains ~15x Simple's load. See
+//! REPRODUCING.md §Table 4 / Fig. 15.
 
 fn main() {
-    dagger::bench::header("Table 4 + Fig. 15 — Flight Registration service", "paper §5.7");
-    let args = dagger::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let t0 = std::time::Instant::now();
-    match dagger::exp::run_named("table4", &args) {
-        Ok(out) => print!("{out}"),
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-    println!("\n[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    dagger::exp::harness::bench_main("table4-fig15");
 }

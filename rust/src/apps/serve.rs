@@ -1,7 +1,8 @@
 //! `dagger serve`: run a real KVS server + client over the loop-back
 //! fabric (actual threads, actual rings, optional XLA datapath), report
-//! wall-clock latency and throughput. This is the "framework is real
-//! code" path; the paper-figure numbers come from the calibrated
+//! wall-clock latency and throughput — the live analogue of the §5.6
+//! memcached/MICA-over-Dagger experiments. This is the "framework is
+//! real code" path; the paper-figure numbers come from the calibrated
 //! simulation in `exp/`.
 
 use crate::apps::{memcached::Memcached, mica::Mica, KvStore};

@@ -131,7 +131,7 @@ pub mod selfprof {
         report(&r);
 
         // 5. XLA datapath (when artifacts exist).
-        if crate::runtime::artifacts_available() {
+        if crate::runtime::artifacts_available() && crate::runtime::pjrt_enabled() {
             let rt = crate::runtime::Runtime::cpu()?;
             let mut dp = crate::runtime::Datapath::load(&rt, 256)?;
             let calls = 200u64;
@@ -142,7 +142,7 @@ pub mod selfprof {
             });
             report(&r);
         } else {
-            println!("(artifacts missing — skipping XLA datapath bench)");
+            println!("(artifacts or `xla` feature missing — skipping XLA datapath bench)");
         }
         Ok(())
     }

@@ -57,15 +57,19 @@ USAGE:
 
 COMMANDS:
     info                         platform + artifact status
-    sim <experiment>             run one paper experiment
-                                 (fig3|fig4|fig5|fig10|fig11|fig11-threads|
-                                  fig12|fig15|table1|table3|table4)
+    list                         list the reproducible paper experiments
+    sim <experiment>             run one paper experiment (see `dagger list`)
+                                 [--fast] [--out-dir DIR writes
+                                 BENCH_<name>.json/.csv artifacts]
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back
                                  fabric [--store memcached|mica] [--requests N]
     selfprof                     microbenchmark the coordinator hot paths
     help                         this text
+
+REPRODUCING.md documents the full artifact-evaluation flow; each
+experiment is also a `cargo bench --bench <target>` target.
 ";
 
 /// CLI entrypoint; returns the process exit code.
@@ -89,6 +93,7 @@ pub fn main() -> i32 {
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "info" => cmd_info(),
+        "list" => cmd_list(),
         "sim" => cmd_sim(args),
         "idl-gen" => cmd_idl_gen(args),
         "serve" => crate::apps::serve::run(args),
@@ -122,12 +127,28 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_list() -> anyhow::Result<()> {
+    println!("{:<22} {:<28} {}", "experiment", "paper ref", "bench target");
+    for s in crate::exp::EXPERIMENTS {
+        println!("{:<22} {:<28} {}", s.name, s.paper_ref, s.bench);
+    }
+    println!("\nrun one: dagger sim <experiment> [--fast] [--out-dir DIR]");
+    Ok(())
+}
+
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let Some(exp) = args.positional.first() else {
-        anyhow::bail!("sim: missing experiment name");
+        anyhow::bail!("sim: missing experiment name (see `dagger list`)");
     };
-    let out = crate::exp::run_named(exp, args)?;
-    print!("{out}");
+    let fig = crate::exp::run_figure(exp, args)?;
+    print!("{}", fig.render_text());
+    // Write artifacts when a destination is named, via the same
+    // resolution the bench targets use (--out-dir, then $DAGGER_BENCH_DIR).
+    if let Some(dir) = crate::exp::harness::explicit_artifact_dir(args) {
+        for p in fig.write_artifacts(&dir)? {
+            println!("wrote {}", p.display());
+        }
+    }
     Ok(())
 }
 

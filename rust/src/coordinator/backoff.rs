@@ -1,6 +1,6 @@
 //! Adaptive wait backoff: spin briefly, then yield to the OS scheduler.
 //!
-//! The paper's testbed pins polling threads to dedicated cores of a
+//! The paper's testbed (§5.1) pins polling threads to dedicated cores of a
 //! 12-core Xeon, where pure spinning is right. This repro must also run
 //! on small CI boxes (down to 1 CPU), where a pure spin loop starves the
 //! very thread it is waiting on for a whole scheduler quantum. `Backoff`

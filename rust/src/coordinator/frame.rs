@@ -1,4 +1,6 @@
-//! RPC wire frame: one 64-byte cache line = 16 little-endian u32 words.
+//! RPC wire frame: one 64-byte cache line = 16 little-endian u32 words
+//! (§4.7: the memory interconnect's MTU is a single cache line, so the
+//! frame *is* the unit of transfer end-to-end).
 //!
 //! This layout is shared bit-for-bit with the Pallas datapath kernels
 //! (python/compile/kernels/ref.py) — rust/tests/runtime_artifacts.rs

@@ -1,4 +1,5 @@
-//! L3 coordinator: the Dagger RPC software stack.
+//! L3 coordinator: the Dagger RPC software stack (§4.3 "RPC
+//! processing flow", the grey CPU-side region of Fig. 2).
 //!
 //! * [`frame`] — the 64-byte wire format shared with the Pallas kernels.
 //! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O).

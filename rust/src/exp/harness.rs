@@ -1,0 +1,1273 @@
+//! Experiment harness: the shared driver behind every `rust/benches/*`
+//! target and `dagger sim` (paper §5.1 evaluation methodology).
+//!
+//! Three responsibilities:
+//!
+//! 1. **Parameter sweeps** — [`Sweep`] runs the cartesian grid of
+//!    `SimConfig` axes (interface × offered load × threads × RPC size ×
+//!    batching) through [`rpc_sim::run`] and collects per-point
+//!    percentile stats.
+//! 2. **Figure artifacts** — [`Figure`] is the machine-readable form of
+//!    one paper figure/table: named [`Series`] of typed rows, emitted as
+//!    `BENCH_<name>.json` (schema `dagger-bench/v1`, round-trippable via
+//!    [`Figure::from_json`]) and `BENCH_<name>.csv` (long format), plus
+//!    an aligned text rendering for the terminal.
+//! 3. **Bench entrypoint** — [`bench_main`] is the whole body of each
+//!    `harness = false` bench binary: parse flags, run the named
+//!    experiment from `exp`, print the table, write the artifacts.
+//!
+//! The JSON artifacts are the repo's performance trajectory: future PRs
+//! regenerate them and diff against the committed paper anchors
+//! (REPRODUCING.md lists the reference numbers per figure).
+
+use crate::cli::Args;
+use crate::exp::rpc_sim::{self, SimConfig, SimResult};
+use crate::interconnect::Iface;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+// ===================================================================
+// Typed cells
+// ===================================================================
+
+/// One cell of a data series. The JSON mapping is the obvious one;
+/// numbers come back from [`Figure::from_json`] as `U64` when they are
+/// non-negative integers, `F64` otherwise.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// Equality follows the JSON value, not the Rust variant: `F64(4.0)`
+/// equals `U64(4)` (a round-tripped artifact re-types integer-valued
+/// floats).
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Null, Value::Null) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::U64(a), Value::U64(b)) => a == b,
+            (Value::F64(a), Value::F64(b)) => a == b,
+            (Value::U64(a), Value::F64(b)) | (Value::F64(b), Value::U64(a)) => {
+                *b == *a as f64
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Value {
+    /// Terminal rendering: floats trimmed to 3 decimals for alignment
+    /// (JSON rendering lives in [`json`]).
+    fn display(&self) -> String {
+        match self {
+            Value::Null => "-".into(),
+            Value::Bool(b) => b.to_string(),
+            Value::U64(u) => u.to_string(),
+            Value::F64(f) => tidy_f64(*f),
+            Value::Str(s) => s.clone(),
+        }
+    }
+
+    /// Machine rendering for CSV: full float precision (shortest
+    /// round-trip form), empty cell for Null — the CSV must agree with
+    /// the JSON artifact, not with the rounded terminal table.
+    fn machine_display(&self) -> String {
+        match self {
+            Value::Null => String::new(),
+            Value::F64(f) => f.to_string(),
+            other => other.display(),
+        }
+    }
+
+    fn is_numeric(&self) -> bool {
+        matches!(self, Value::U64(_) | Value::F64(_))
+    }
+
+    fn to_json(&self) -> json::Json {
+        match self {
+            Value::Null => json::Json::Null,
+            Value::Bool(b) => json::Json::Bool(*b),
+            Value::U64(u) => json::Json::Num(*u as f64),
+            Value::F64(f) => json::Json::Num(*f),
+            Value::Str(s) => json::Json::Str(s.clone()),
+        }
+    }
+
+    fn from_json(j: &json::Json) -> Value {
+        match j {
+            json::Json::Null => Value::Null,
+            json::Json::Bool(b) => Value::Bool(*b),
+            json::Json::Num(n) => {
+                if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n < 9.0e15 {
+                    Value::U64(*n as u64)
+                } else {
+                    Value::F64(*n)
+                }
+            }
+            json::Json::Str(s) => Value::Str(s.clone()),
+            // Artifact rows never nest; collapse defensively.
+            _ => Value::Null,
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+impl From<f64> for Value {
+    fn from(f: f64) -> Value {
+        Value::F64(f)
+    }
+}
+impl From<u64> for Value {
+    fn from(u: u64) -> Value {
+        Value::U64(u)
+    }
+}
+impl From<u32> for Value {
+    fn from(u: u32) -> Value {
+        Value::U64(u as u64)
+    }
+}
+impl From<usize> for Value {
+    fn from(u: usize) -> Value {
+        Value::U64(u as u64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+/// `{:.3}` with trailing zeros trimmed: 12.400 -> "12.4", 2.000 -> "2".
+fn tidy_f64(f: f64) -> String {
+    if !f.is_finite() {
+        return f.to_string();
+    }
+    let s = format!("{f:.3}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    if s.is_empty() || s == "-" {
+        "0".into()
+    } else {
+        s.to_string()
+    }
+}
+
+// ===================================================================
+// Series + Figure
+// ===================================================================
+
+/// One labelled data series (a line/bar-group of a figure, or a table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Series {
+    pub label: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, columns: &[&str]) -> Series {
+        Series {
+            label: label.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row; must match the column count.
+    pub fn push(&mut self, row: Vec<Value>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "series '{}': row width {} != {} columns",
+            self.label,
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+}
+
+/// A regenerated paper figure/table: metadata + data series + notes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Figure {
+    /// Canonical experiment name ("fig10"); artifact files are
+    /// `BENCH_<name>.json` / `BENCH_<name>.csv`.
+    pub name: String,
+    pub title: String,
+    /// Paper cross-reference ("§5.3, Figure 10").
+    pub paper_ref: String,
+    pub notes: Vec<String>,
+    pub series: Vec<Series>,
+}
+
+/// Artifact schema tag; bump on breaking changes to the JSON layout.
+pub const SCHEMA: &str = "dagger-bench/v1";
+
+impl Figure {
+    pub fn new(
+        name: impl Into<String>,
+        title: impl Into<String>,
+        paper_ref: impl Into<String>,
+    ) -> Figure {
+        Figure {
+            name: name.into(),
+            title: title.into(),
+            paper_ref: paper_ref.into(),
+            notes: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    /// Start a new series and return it for row pushes.
+    pub fn series(&mut self, label: impl Into<String>, columns: &[&str]) -> &mut Series {
+        self.series.push(Series::new(label, columns));
+        self.series.last_mut().unwrap()
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Total data points across all series.
+    pub fn n_rows(&self) -> usize {
+        self.series.iter().map(|s| s.rows.len()).sum()
+    }
+
+    // ------------------------------------------------------------ JSON
+
+    pub fn to_json(&self) -> String {
+        use json::Json;
+        let series = self
+            .series
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("label".into(), Json::Str(s.label.clone())),
+                    (
+                        "columns".into(),
+                        Json::Arr(s.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+                    ),
+                    (
+                        "rows".into(),
+                        Json::Arr(
+                            s.rows
+                                .iter()
+                                .map(|r| Json::Arr(r.iter().map(Value::to_json).collect()))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Str(SCHEMA.into())),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("title".into(), Json::Str(self.title.clone())),
+            ("paper_ref".into(), Json::Str(self.paper_ref.clone())),
+            (
+                "notes".into(),
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+            ("series".into(), Json::Arr(series)),
+        ])
+        .render_pretty()
+    }
+
+    /// Parse an artifact back (schema round-trip; used by tests and by
+    /// downstream tooling that diffs bench trajectories).
+    pub fn from_json(text: &str) -> Result<Figure, String> {
+        use json::Json;
+        let j = Json::parse(text)?;
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or_default();
+        if schema != SCHEMA {
+            return Err(format!("unsupported artifact schema '{schema}' (want {SCHEMA})"));
+        }
+        let field = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("missing string field '{k}'"))
+        };
+        let mut fig = Figure::new(field("name")?, field("title")?, field("paper_ref")?);
+        if let Some(notes) = j.get("notes").and_then(Json::as_arr) {
+            for n in notes {
+                if let Some(s) = n.as_str() {
+                    fig.notes.push(s.to_string());
+                }
+            }
+        }
+        let series = j
+            .get("series")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'series' array")?;
+        for s in series {
+            let label = s
+                .get("label")
+                .and_then(Json::as_str)
+                .ok_or("series missing 'label'")?;
+            let raw_columns = s
+                .get("columns")
+                .and_then(Json::as_arr)
+                .ok_or("series missing 'columns'")?;
+            let columns: Vec<&str> = raw_columns.iter().filter_map(Json::as_str).collect();
+            if columns.len() != raw_columns.len() {
+                return Err(format!("series '{label}': non-string column name"));
+            }
+            let n_cols = columns.len();
+            let out = fig.series(label, &columns);
+            for row in s
+                .get("rows")
+                .and_then(Json::as_arr)
+                .ok_or("series missing 'rows'")?
+            {
+                let cells = row.as_arr().ok_or("row is not an array")?;
+                if cells.len() != n_cols {
+                    return Err(format!(
+                        "series '{label}': row width {} != {n_cols} columns",
+                        cells.len()
+                    ));
+                }
+                out.push(cells.iter().map(Value::from_json).collect());
+            }
+        }
+        Ok(fig)
+    }
+
+    // ------------------------------------------------------------- CSV
+
+    /// Long-format CSV: `series,<union of all columns>`; cells missing
+    /// from a series' column set are left empty.
+    pub fn to_csv(&self) -> String {
+        let mut cols: Vec<&str> = Vec::new();
+        for s in &self.series {
+            for c in &s.columns {
+                if !cols.iter().any(|x| x == c) {
+                    cols.push(c);
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str("series");
+        for c in &cols {
+            out.push(',');
+            out.push_str(&csv_escape(c));
+        }
+        out.push('\n');
+        for s in &self.series {
+            for row in &s.rows {
+                out.push_str(&csv_escape(&s.label));
+                for c in &cols {
+                    out.push(',');
+                    if let Some(i) = s.columns.iter().position(|x| x == c) {
+                        out.push_str(&csv_escape(&row[i].machine_display()));
+                    }
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------ text
+
+    /// Aligned terminal table, one block per series.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "== {}   [{}]", self.title, self.paper_ref).unwrap();
+        for s in &self.series {
+            writeln!(out, "\n-- {}", s.label).unwrap();
+            // Column widths: header vs widest cell.
+            let mut w: Vec<usize> = s.columns.iter().map(|c| c.len()).collect();
+            let rendered: Vec<Vec<String>> = s
+                .rows
+                .iter()
+                .map(|r| r.iter().map(Value::display).collect())
+                .collect();
+            for row in &rendered {
+                for (i, cell) in row.iter().enumerate() {
+                    w[i] = w[i].max(cell.len());
+                }
+            }
+            let numeric: Vec<bool> = (0..s.columns.len())
+                .map(|i| s.rows.iter().all(|r| r[i].is_numeric() || r[i] == Value::Null))
+                .collect();
+            for (i, c) in s.columns.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                if numeric[i] {
+                    write!(out, "{c:>width$}", width = w[i]).unwrap();
+                } else {
+                    write!(out, "{c:<width$}", width = w[i]).unwrap();
+                }
+            }
+            out.push('\n');
+            for row in &rendered {
+                for (i, cell) in row.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str("  ");
+                    }
+                    if numeric[i] {
+                        write!(out, "{cell:>width$}", width = w[i]).unwrap();
+                    } else {
+                        write!(out, "{cell:<width$}", width = w[i]).unwrap();
+                    }
+                }
+                out.push('\n');
+            }
+        }
+        for n in &self.notes {
+            writeln!(out, "\n({n})").unwrap();
+        }
+        out
+    }
+
+    // ------------------------------------------------------- artifacts
+
+    /// Write `BENCH_<name>.json` + `BENCH_<name>.csv` into `dir`
+    /// (created if needed). Returns the paths written.
+    pub fn write_artifacts(&self, dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let json_path = dir.join(format!("BENCH_{}.json", self.name));
+        let csv_path = dir.join(format!("BENCH_{}.csv", self.name));
+        std::fs::write(&json_path, self.to_json())?;
+        std::fs::write(&csv_path, self.to_csv())?;
+        Ok(vec![json_path, csv_path])
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+// ===================================================================
+// Sweeps
+// ===================================================================
+
+/// Cartesian parameter sweep over [`SimConfig`] axes. Unset axes take
+/// the base config's value; `grid()` is the full cross product in
+/// deterministic order (iface, threads, payload, batching, load —
+/// innermost last).
+#[derive(Clone)]
+pub struct Sweep {
+    pub base: SimConfig,
+    pub ifaces: Vec<Iface>,
+    pub threads: Vec<u32>,
+    pub payload_bytes: Vec<usize>,
+    pub adaptive_batch: Vec<bool>,
+    pub loads_mrps: Vec<f64>,
+}
+
+/// One executed grid point.
+pub struct SweepPoint {
+    pub cfg: SimConfig,
+    pub result: SimResult,
+}
+
+impl Sweep {
+    pub fn new(base: SimConfig) -> Sweep {
+        Sweep {
+            ifaces: vec![base.iface],
+            threads: vec![base.n_threads],
+            payload_bytes: vec![base.payload_bytes],
+            adaptive_batch: vec![base.adaptive_batch],
+            loads_mrps: vec![base.offered_mrps],
+            base,
+        }
+    }
+
+    pub fn ifaces(mut self, v: &[Iface]) -> Sweep {
+        self.ifaces = v.to_vec();
+        self
+    }
+    pub fn threads(mut self, v: &[u32]) -> Sweep {
+        self.threads = v.to_vec();
+        self
+    }
+    pub fn payloads(mut self, v: &[usize]) -> Sweep {
+        self.payload_bytes = v.to_vec();
+        self
+    }
+    pub fn adaptive(mut self, v: &[bool]) -> Sweep {
+        self.adaptive_batch = v.to_vec();
+        self
+    }
+    pub fn loads(mut self, v: &[f64]) -> Sweep {
+        self.loads_mrps = v.to_vec();
+        self
+    }
+
+    /// All grid points (configs only, not yet run).
+    pub fn grid(&self) -> Vec<SimConfig> {
+        let mut out = Vec::with_capacity(
+            self.ifaces.len()
+                * self.threads.len()
+                * self.payload_bytes.len()
+                * self.adaptive_batch.len()
+                * self.loads_mrps.len(),
+        );
+        for &iface in &self.ifaces {
+            for &n_threads in &self.threads {
+                for &payload_bytes in &self.payload_bytes {
+                    for &adaptive_batch in &self.adaptive_batch {
+                        for &offered_mrps in &self.loads_mrps {
+                            out.push(SimConfig {
+                                iface,
+                                n_threads,
+                                payload_bytes,
+                                adaptive_batch,
+                                offered_mrps,
+                                ..self.base.clone()
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Run every grid point through the discrete-event simulator.
+    pub fn run(&self) -> Vec<SweepPoint> {
+        self.grid()
+            .into_iter()
+            .map(|cfg| SweepPoint { result: rpc_sim::run(cfg.clone()), cfg })
+            .collect()
+    }
+}
+
+/// Standard sweep columns (shared across rpc_sim-backed figures so CSV
+/// artifacts concatenate cleanly).
+pub const SWEEP_COLUMNS: &[&str] = &[
+    "iface",
+    "threads",
+    "payload_b",
+    "adaptive",
+    "offered_mrps",
+    "achieved_mrps",
+    "p50_us",
+    "p90_us",
+    "p99_us",
+    "mean_us",
+    "drop_pct",
+    "ccip_util",
+];
+
+/// Render executed sweep points as a [`Series`] with [`SWEEP_COLUMNS`].
+pub fn sweep_series(label: impl Into<String>, points: &[SweepPoint]) -> Series {
+    let mut s = Series::new(label, SWEEP_COLUMNS);
+    for p in points {
+        s.push(sweep_row(&p.cfg, &p.result));
+    }
+    s
+}
+
+/// One [`SWEEP_COLUMNS`] row.
+pub fn sweep_row(cfg: &SimConfig, r: &SimResult) -> Vec<Value> {
+    vec![
+        Value::Str(cfg.iface.name()),
+        Value::from(cfg.n_threads),
+        Value::from(cfg.payload_bytes),
+        Value::from(cfg.adaptive_batch),
+        Value::from(r.offered_mrps),
+        Value::from(r.achieved_mrps),
+        Value::from(r.p50_us),
+        Value::from(r.p90_us),
+        Value::from(r.p99_us),
+        Value::from(r.mean_us),
+        Value::from(r.drop_rate() * 100.0),
+        Value::from(r.ccip_util),
+    ]
+}
+
+// ===================================================================
+// Bench entrypoint
+// ===================================================================
+
+/// The artifact directory the caller explicitly asked for, if any:
+/// `--out-dir`, else `$DAGGER_BENCH_DIR`. `dagger sim` writes
+/// artifacts only when this is `Some`; bench targets always write
+/// (see [`artifact_dir`] for their default).
+pub fn explicit_artifact_dir(args: &Args) -> Option<PathBuf> {
+    if let Some(d) = args.get("out-dir") {
+        return Some(PathBuf::from(d));
+    }
+    std::env::var("DAGGER_BENCH_DIR").ok().map(PathBuf::from)
+}
+
+/// Resolve the artifact output directory: `--out-dir`, else
+/// `$DAGGER_BENCH_DIR`, else `./bench_out`.
+pub fn artifact_dir(args: &Args) -> PathBuf {
+    explicit_artifact_dir(args).unwrap_or_else(|| PathBuf::from("bench_out"))
+}
+
+/// The entire body of a `harness = false` bench binary: run the named
+/// experiment end-to-end, print its table, write its artifacts.
+///
+/// Flags (after `--` under `cargo bench`): `--fast` (1/8 duration),
+/// `--out-dir DIR`, `--no-artifacts`.
+pub fn bench_main(name: &str) -> ! {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let spec = match crate::exp::spec(name) {
+        Some(s) => s,
+        None => {
+            eprintln!("error: unknown experiment '{name}'");
+            std::process::exit(2);
+        }
+    };
+    crate::bench::header(spec.title, spec.paper_ref);
+    let t0 = std::time::Instant::now();
+    match crate::exp::run_figure(name, &args) {
+        Ok(fig) => {
+            print!("{}", fig.render_text());
+            if !args.get_flag("no-artifacts") {
+                let dir = artifact_dir(&args);
+                match fig.write_artifacts(&dir) {
+                    Ok(paths) => {
+                        for p in paths {
+                            println!("wrote {}", p.display());
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("error writing artifacts to {}: {e}", dir.display());
+                        std::process::exit(1);
+                    }
+                }
+            }
+            println!("[bench completed in {:.1}s]", t0.elapsed().as_secs_f64());
+            std::process::exit(0);
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+// ===================================================================
+// Minimal JSON tree (emit + parse) — no external deps offline.
+// ===================================================================
+
+pub mod json {
+    //! Small JSON emitter/parser for the `dagger-bench/v1` artifacts.
+    //! Supports exactly the JSON grammar; numbers are f64 (artifact
+    //! values are small enough that this is lossless in practice).
+
+    use std::fmt::Write as _;
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Json {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Json>),
+        Obj(Vec<(String, Json)>),
+    }
+
+    impl Json {
+        pub fn get(&self, key: &str) -> Option<&Json> {
+            match self {
+                Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Json::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Json::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        pub fn as_arr(&self) -> Option<&[Json]> {
+            match self {
+                Json::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+
+        // ------------------------------------------------------ render
+
+        pub fn render(&self) -> String {
+            let mut out = String::new();
+            self.write(&mut out, None, 0);
+            out
+        }
+
+        /// Two-space-indented rendering (artifacts are meant to be
+        /// diffed in code review).
+        pub fn render_pretty(&self) -> String {
+            let mut out = String::new();
+            self.write(&mut out, Some(2), 0);
+            out.push('\n');
+            out
+        }
+
+        fn write(&self, out: &mut String, indent: Option<usize>, level: usize) {
+            let (nl, pad, pad_in) = match indent {
+                Some(n) => (
+                    "\n",
+                    " ".repeat(n * level),
+                    " ".repeat(n * (level + 1)),
+                ),
+                None => ("", String::new(), String::new()),
+            };
+            match self {
+                Json::Null => out.push_str("null"),
+                Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+                Json::Num(n) => write_num(out, *n),
+                Json::Str(s) => write_str(out, s),
+                Json::Arr(items) => {
+                    if items.is_empty() {
+                        out.push_str("[]");
+                        return;
+                    }
+                    // Rows of scalars stay on one line even in pretty mode.
+                    let scalar_only = items
+                        .iter()
+                        .all(|i| !matches!(i, Json::Arr(_) | Json::Obj(_)));
+                    if scalar_only || indent.is_none() {
+                        out.push('[');
+                        for (i, item) in items.iter().enumerate() {
+                            if i > 0 {
+                                out.push_str(", ");
+                            }
+                            item.write(out, None, 0);
+                        }
+                        out.push(']');
+                    } else {
+                        out.push('[');
+                        for (i, item) in items.iter().enumerate() {
+                            if i > 0 {
+                                out.push(',');
+                            }
+                            out.push_str(nl);
+                            out.push_str(&pad_in);
+                            item.write(out, indent, level + 1);
+                        }
+                        out.push_str(nl);
+                        out.push_str(&pad);
+                        out.push(']');
+                    }
+                }
+                Json::Obj(kv) => {
+                    if kv.is_empty() {
+                        out.push_str("{}");
+                        return;
+                    }
+                    out.push('{');
+                    for (i, (k, v)) in kv.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(nl);
+                        out.push_str(&pad_in);
+                        write_str(out, k);
+                        out.push_str(": ");
+                        v.write(out, indent, level + 1);
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad);
+                    out.push('}');
+                }
+            }
+        }
+
+        // ------------------------------------------------------- parse
+
+        pub fn parse(text: &str) -> Result<Json, String> {
+            let mut p = Parser { b: text.as_bytes(), i: 0 };
+            p.skip_ws();
+            let v = p.value()?;
+            p.skip_ws();
+            if p.i != p.b.len() {
+                return Err(format!("trailing data at byte {}", p.i));
+            }
+            Ok(v)
+        }
+    }
+
+    fn write_num(out: &mut String, n: f64) {
+        if !n.is_finite() {
+            out.push_str("null"); // JSON has no NaN/Inf
+        } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+            write!(out, "{}", n as i64).unwrap();
+        } else {
+            write!(out, "{n}").unwrap();
+        }
+    }
+
+    fn write_str(out: &mut String, s: &str) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    write!(out, "\\u{:04x}", c as u32).unwrap();
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn skip_ws(&mut self) {
+            while self.i < self.b.len()
+                && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+            {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.i).copied()
+        }
+
+        fn eat(&mut self, c: u8) -> Result<(), String> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                Err(format!("expected '{}' at byte {}", c as char, self.i))
+            }
+        }
+
+        fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+            if self.b[self.i..].starts_with(s.as_bytes()) {
+                self.i += s.len();
+                Ok(v)
+            } else {
+                Err(format!("invalid literal at byte {}", self.i))
+            }
+        }
+
+        fn value(&mut self) -> Result<Json, String> {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'n') => self.lit("null", Json::Null),
+                Some(b't') => self.lit("true", Json::Bool(true)),
+                Some(b'f') => self.lit("false", Json::Bool(false)),
+                Some(b'"') => Ok(Json::Str(self.string()?)),
+                Some(b'[') => self.array(),
+                Some(b'{') => self.object(),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                _ => Err(format!("unexpected byte at {}", self.i)),
+            }
+        }
+
+        fn array(&mut self) -> Result<Json, String> {
+            self.eat(b'[')?;
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Json::Arr(out));
+            }
+            loop {
+                out.push(self.value()?);
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b']') => {
+                        self.i += 1;
+                        return Ok(Json::Arr(out));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+                }
+            }
+        }
+
+        fn object(&mut self) -> Result<Json, String> {
+            self.eat(b'{')?;
+            let mut out = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Json::Obj(out));
+            }
+            loop {
+                self.skip_ws();
+                let k = self.string()?;
+                self.skip_ws();
+                self.eat(b':')?;
+                let v = self.value()?;
+                out.push((k, v));
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Json::Obj(out));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                let c = self
+                    .peek()
+                    .ok_or_else(|| "unterminated string".to_string())?;
+                self.i += 1;
+                match c {
+                    b'"' => return Ok(out),
+                    b'\\' => {
+                        let e = self
+                            .peek()
+                            .ok_or_else(|| "unterminated escape".to_string())?;
+                        self.i += 1;
+                        match e {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'/' => out.push('/'),
+                            b'n' => out.push('\n'),
+                            b'r' => out.push('\r'),
+                            b't' => out.push('\t'),
+                            b'b' => out.push('\u{0008}'),
+                            b'f' => out.push('\u{000c}'),
+                            b'u' => {
+                                let hi = self.hex4()?;
+                                let cp = if (0xD800..0xDC00).contains(&hi) {
+                                    // Surrogate pair: expect \uXXXX low half.
+                                    if self.peek() == Some(b'\\') {
+                                        self.i += 1;
+                                        self.eat(b'u')?;
+                                        let lo = self.hex4()?;
+                                        0x10000
+                                            + ((hi - 0xD800) << 10)
+                                            + (lo.wrapping_sub(0xDC00) & 0x3FF)
+                                    } else {
+                                        0xFFFD
+                                    }
+                                } else {
+                                    hi
+                                };
+                                out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            }
+                            _ => return Err(format!("bad escape at byte {}", self.i)),
+                        }
+                    }
+                    c => {
+                        // Re-decode multi-byte UTF-8 from the raw input.
+                        if c < 0x80 {
+                            out.push(c as char);
+                        } else {
+                            let start = self.i - 1;
+                            let len = utf8_len(c);
+                            let end = (start + len).min(self.b.len());
+                            match std::str::from_utf8(&self.b[start..end]) {
+                                Ok(s) => {
+                                    out.push_str(s);
+                                    self.i = end;
+                                }
+                                Err(_) => return Err(format!("bad utf8 at byte {start}")),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        fn hex4(&mut self) -> Result<u32, String> {
+            if self.i + 4 > self.b.len() {
+                return Err("truncated \\u escape".into());
+            }
+            let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                .map_err(|_| "bad \\u escape".to_string())?;
+            let v = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape".to_string())?;
+            self.i += 4;
+            Ok(v)
+        }
+
+        fn number(&mut self) -> Result<Json, String> {
+            let start = self.i;
+            if self.peek() == Some(b'-') {
+                self.i += 1;
+            }
+            while matches!(
+                self.peek(),
+                Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+            ) {
+                self.i += 1;
+            }
+            let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number '{s}' at byte {start}"))
+        }
+    }
+
+    fn utf8_len(first: u8) -> usize {
+        match first {
+            0xC0..=0xDF => 2,
+            0xE0..=0xEF => 3,
+            0xF0..=0xF7 => 4,
+            _ => 1,
+        }
+    }
+}
+
+// ===================================================================
+// Tests
+// ===================================================================
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Histogram, Rng};
+
+    // ------------------------------------------------------ sweep grid
+
+    #[test]
+    fn grid_is_full_cross_product_in_order() {
+        let sweep = Sweep::new(SimConfig::default())
+            .ifaces(&[Iface::Doorbell, Iface::Upi(4)])
+            .threads(&[1, 4])
+            .payloads(&[64, 512])
+            .loads(&[1.0, 5.0, 10.0]);
+        let grid = sweep.grid();
+        assert_eq!(grid.len(), 2 * 2 * 2 * 1 * 3);
+        // Innermost axis is load; outermost is iface.
+        assert_eq!(grid[0].iface, Iface::Doorbell);
+        assert_eq!(grid[0].offered_mrps, 1.0);
+        assert_eq!(grid[1].offered_mrps, 5.0);
+        assert_eq!(grid[2].offered_mrps, 10.0);
+        assert_eq!(grid[3].payload_bytes, 512);
+        assert_eq!(grid[6].n_threads, 4);
+        assert_eq!(grid[12].iface, Iface::Upi(4));
+        // Unswept axes inherit the base.
+        assert!(grid.iter().all(|c| !c.adaptive_batch));
+        assert!(grid.iter().all(|c| c.duration_us == SimConfig::default().duration_us));
+    }
+
+    #[test]
+    fn singleton_sweep_is_base() {
+        let base = SimConfig { offered_mrps: 3.0, ..Default::default() };
+        let grid = Sweep::new(base.clone()).grid();
+        assert_eq!(grid.len(), 1);
+        assert_eq!(grid[0].offered_mrps, 3.0);
+    }
+
+    #[test]
+    fn sweep_runs_and_rows_align() {
+        let sweep = Sweep::new(SimConfig {
+            duration_us: 1_500,
+            warmup_us: 200,
+            ..Default::default()
+        })
+        .loads(&[0.5, 2.0]);
+        let points = sweep.run();
+        assert_eq!(points.len(), 2);
+        let s = sweep_series("test", &points);
+        assert_eq!(s.columns.len(), SWEEP_COLUMNS.len());
+        assert_eq!(s.rows.len(), 2);
+        assert!(points.iter().all(|p| p.result.completed > 0));
+    }
+
+    // ------------------------------------- percentile aggregation
+
+    #[test]
+    fn percentiles_of_known_exponential() {
+        // Exp(mean=10_000 ns): quantile q = -mean * ln(1-q).
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(42);
+        let mean = 10_000.0;
+        for _ in 0..200_000 {
+            h.record(rng.exp(mean) as u64);
+        }
+        let qs = [0.5, 0.9, 0.99];
+        let got = h.quantiles_ns(&qs);
+        for (q, g) in qs.iter().zip(&got) {
+            let want = -mean * (1.0 - q).ln();
+            let rel = (*g as f64 - want).abs() / want;
+            assert!(rel < 0.05, "q={q}: got {g}, want {want:.0}, rel {rel:.3}");
+        }
+    }
+
+    #[test]
+    fn percentiles_of_uniform_via_sweep_columns() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let got = h.quantiles_ns(&[0.25, 0.5, 0.75]);
+        for (g, want) in got.iter().zip([25_000.0, 50_000.0, 75_000.0]) {
+            assert!((*g as f64 - want).abs() / want < 0.03, "got {g} want {want}");
+        }
+    }
+
+    // ------------------------------------------------- JSON round-trip
+
+    fn sample_figure() -> Figure {
+        let mut fig = Figure::new("figX", "sample title", "§9.9, Figure X");
+        fig.note("note with \"quotes\" and, commas");
+        let s = fig.series("série-α", &["iface", "mrps", "ok"]);
+        s.push(vec!["upi(B=4)".into(), 12.4_f64.into(), true.into()]);
+        s.push(vec!["doorbell".into(), 4.3_f64.into(), false.into()]);
+        let t = fig.series("counts", &["threads", "sent"]);
+        t.push(vec![8u32.into(), 123_456u64.into()]);
+        t.push(vec![4u32.into(), Value::Null]);
+        fig
+    }
+
+    #[test]
+    fn json_round_trip_preserves_figure() {
+        let fig = sample_figure();
+        let text = fig.to_json();
+        let back = Figure::from_json(&text).expect("parse back");
+        assert_eq!(back, fig);
+        // And the canonical rendering is a fixed point.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn json_schema_fields_present() {
+        let j = json::Json::parse(&sample_figure().to_json()).unwrap();
+        assert_eq!(j.get("schema").and_then(json::Json::as_str), Some(SCHEMA));
+        assert_eq!(j.get("name").and_then(json::Json::as_str), Some("figX"));
+        let series = j.get("series").and_then(json::Json::as_arr).unwrap();
+        assert_eq!(series.len(), 2);
+        assert!(series[0].get("rows").and_then(json::Json::as_arr).unwrap().len() == 2);
+    }
+
+    #[test]
+    fn json_rejects_wrong_schema() {
+        let bad = r#"{"schema":"other/v9","name":"x","title":"t","paper_ref":"p","series":[]}"#;
+        assert!(Figure::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn json_rejects_malformed_series_without_panicking() {
+        let head = r#"{"schema":"dagger-bench/v1","name":"x","title":"t","paper_ref":"p","#;
+        // Row narrower than the columns.
+        let bad_row = format!(
+            r#"{head}"series":[{{"label":"s","columns":["a","b"],"rows":[[1]]}}]}}"#
+        );
+        assert!(Figure::from_json(&bad_row).is_err());
+        // Non-string column name.
+        let bad_col = format!(
+            r#"{head}"series":[{{"label":"s","columns":["a",2],"rows":[]}}]}}"#
+        );
+        assert!(Figure::from_json(&bad_col).is_err());
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_unicode() {
+        use json::Json;
+        let j = Json::parse(r#"{"a": "x\n\"y\"", "b": [1, -2.5, 3e2, null], "µ": true}"#).unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_str), Some("x\n\"y\""));
+        let b = j.get("b").and_then(Json::as_arr).unwrap();
+        assert_eq!(b[0].as_f64(), Some(1.0));
+        assert_eq!(b[1].as_f64(), Some(-2.5));
+        assert_eq!(b[2].as_f64(), Some(300.0));
+        assert_eq!(b[3], Json::Null);
+        assert_eq!(j.get("µ"), Some(&Json::Bool(true)));
+        let esc = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(esc.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(json::Json::parse("{").is_err());
+        assert!(json::Json::parse("[1,]").is_err());
+        assert!(json::Json::parse("[1] extra").is_err());
+        assert!(json::Json::parse("nul").is_err());
+    }
+
+    // -------------------------------------------------------- CSV/text
+
+    #[test]
+    fn csv_unions_columns_and_escapes() {
+        let csv = sample_figure().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "series,iface,mrps,ok,threads,sent");
+        let first = lines.next().unwrap();
+        assert!(first.starts_with("série-α,upi(B=4),12.4,true,,"), "{first}");
+        // Rows from the second series leave the first series' cells empty.
+        let later: Vec<&str> = csv.lines().collect();
+        assert!(later.iter().any(|l| l.starts_with("counts,,,,8,123456")), "{csv}");
+    }
+
+    #[test]
+    fn text_render_contains_labels_and_values() {
+        let t = sample_figure().render_text();
+        assert!(t.contains("sample title"));
+        assert!(t.contains("série-α"));
+        assert!(t.contains("upi(B=4)"));
+        assert!(t.contains("12.4"));
+        assert!(t.contains("note with"));
+    }
+
+    #[test]
+    fn tidy_floats() {
+        assert_eq!(tidy_f64(12.400), "12.4");
+        assert_eq!(tidy_f64(2.0), "2");
+        assert_eq!(tidy_f64(0.0), "0");
+        assert_eq!(tidy_f64(1.2345), "1.234"); // 3 decimals
+        assert_eq!(tidy_f64(-3.10), "-3.1");
+    }
+
+    // -------------------------------------------------- artifact files
+
+    #[test]
+    fn write_artifacts_round_trips_from_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "dagger_harness_test_{}",
+            std::process::id()
+        ));
+        let fig = sample_figure();
+        let paths = fig.write_artifacts(&dir).expect("write");
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].ends_with("BENCH_figX.json"));
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        assert_eq!(Figure::from_json(&text).unwrap(), fig);
+        let csv = std::fs::read_to_string(&paths[1]).unwrap();
+        assert!(csv.starts_with("series,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

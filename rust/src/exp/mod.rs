@@ -1,7 +1,18 @@
-//! Experiment drivers: one function per paper table/figure. Each returns
-//! the rendered rows; `dagger sim <name>` and the bench targets print
-//! them. The per-experiment index lives in DESIGN.md §3.
+//! Experiment drivers: one function per paper table/figure, each
+//! returning a [`harness::Figure`] — the machine-readable data series
+//! behind the plot — which the bench targets write as
+//! `BENCH_<name>.json` / `.csv` and render as a terminal table.
+//!
+//! * [`EXPERIMENTS`] — the registry: canonical name, title, paper
+//!   cross-reference, and owning `cargo bench` target per experiment.
+//! * [`run_figure`] — dispatch by name (aliases included), honoring the
+//!   shared `--fast` flag (1/8 simulated duration).
+//! * [`run_named`] — text-only convenience used by `dagger sim`.
+//!
+//! REPRODUCING.md documents, per figure, the exact command, the artifact
+//! written, and the paper's reference numbers.
 
+pub mod harness;
 pub mod microsim;
 pub mod rpc_sim;
 
@@ -10,30 +21,156 @@ use crate::cli::Args;
 use crate::interconnect::Iface;
 use crate::sim::Rng;
 use crate::workload::rpc_sizes::{RpcSizeDist, TierSizeProfile};
+use harness::{sweep_row, sweep_series, Figure, Sweep, Value, SWEEP_COLUMNS};
 use rpc_sim::{HandlerCost, SimConfig};
-use std::fmt::Write as _;
 
-/// Dispatch by experiment name.
-pub fn run_named(name: &str, args: &Args) -> anyhow::Result<String> {
+/// Registry entry for one reproducible figure/table.
+pub struct ExpSpec {
+    /// Canonical experiment name (CLI + artifact file stem).
+    pub name: &'static str,
+    pub title: &'static str,
+    /// Paper cross-reference, e.g. "§5.3, Figure 10".
+    pub paper_ref: &'static str,
+    /// The `cargo bench --bench <...>` target that regenerates it.
+    pub bench: &'static str,
+    /// Accepted alternative names.
+    pub aliases: &'static [&'static str],
+    /// The driver: `fast` -> regenerated figure. Keeping it in the
+    /// registry means dispatch cannot drift from the entry list.
+    pub run: fn(bool) -> Figure,
+}
+
+/// All 12 figure/table reproductions, in paper order.
+pub const EXPERIMENTS: &[ExpSpec] = &[
+    ExpSpec {
+        name: "fig3",
+        title: "Fig. 3 — networking fraction of tier latency",
+        paper_ref: "§3.1, Figure 3",
+        bench: "fig3_networking_fraction",
+        aliases: &[],
+        run: fig3,
+    },
+    ExpSpec {
+        name: "fig4",
+        title: "Fig. 4 — RPC size distributions",
+        paper_ref: "§3.2, Figure 4",
+        bench: "fig4_rpc_sizes",
+        aliases: &[],
+        run: fig4_driver,
+    },
+    ExpSpec {
+        name: "fig5",
+        title: "Fig. 5 — CPU interference: separate vs shared networking cores",
+        paper_ref: "§3.3, Figure 5",
+        bench: "fig5_interference",
+        aliases: &[],
+        run: fig5,
+    },
+    ExpSpec {
+        name: "fig10",
+        title: "Fig. 10 — single-core throughput and latency per CPU-NIC interface",
+        paper_ref: "§5.3, Figure 10",
+        bench: "fig10_cpu_nic_interfaces",
+        aliases: &[],
+        run: fig10,
+    },
+    ExpSpec {
+        name: "fig11",
+        title: "Fig. 11 (left) — latency vs load, single-core async RPCs",
+        paper_ref: "§5.4, Figure 11 (left)",
+        bench: "fig11_latency_throughput",
+        aliases: &[],
+        run: fig11_latency_throughput,
+    },
+    ExpSpec {
+        name: "fig11-threads",
+        title: "Fig. 11 (right) — thread scalability",
+        paper_ref: "§5.5, Figure 11 (right)",
+        bench: "fig11_thread_scalability",
+        aliases: &["fig11_threads"],
+        run: fig11_threads,
+    },
+    ExpSpec {
+        name: "fig12",
+        title: "Fig. 12 — KVS over Dagger (memcached, MICA)",
+        paper_ref: "§5.6, Figure 12",
+        bench: "fig12_kvs",
+        aliases: &[],
+        run: fig12,
+    },
+    ExpSpec {
+        name: "table1",
+        title: "Table 1 — Dagger NIC implementation specifications",
+        paper_ref: "§4.6, Table 1",
+        bench: "table1_resources",
+        aliases: &[],
+        run: table1_driver,
+    },
+    ExpSpec {
+        name: "table3",
+        title: "Table 3 — median RTT and single-core throughput vs prior platforms",
+        paper_ref: "§5.2, Table 3",
+        bench: "table3_rpc_platforms",
+        aliases: &[],
+        run: table3,
+    },
+    ExpSpec {
+        name: "table4-fig15",
+        title: "Table 4 / Fig. 15 — Flight Registration service threading models",
+        paper_ref: "§5.7, Table 4 + Figure 15",
+        bench: "table4_fig15_flightreg",
+        aliases: &["table4", "fig15", "table4_fig15"],
+        run: table4_fig15,
+    },
+    ExpSpec {
+        name: "ablation-batching",
+        title: "Ablation — messaging model: doorbell batching vs memory interconnect",
+        paper_ref: "§5.2 (the ~14% claim)",
+        bench: "ablation_batching",
+        aliases: &["ablation_batching"],
+        run: ablation_batching,
+    },
+    ExpSpec {
+        name: "ablation-conn-cache",
+        title: "Ablation — connection cache sizing",
+        paper_ref: "§4.2/§6 (BRAM allocation)",
+        bench: "ablation_conn_cache",
+        aliases: &["ablation_conn_cache"],
+        run: ablation_conn_cache_driver,
+    },
+];
+
+/// Look up a registry entry by canonical name or alias.
+pub fn spec(name: &str) -> Option<&'static ExpSpec> {
+    EXPERIMENTS
+        .iter()
+        .find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+/// Dispatch by experiment name; `--fast` runs 1/8 durations.
+pub fn run_figure(name: &str, args: &Args) -> anyhow::Result<Figure> {
     let fast = args.get_flag("fast");
-    Ok(match name {
-        "fig3" => fig3(fast),
-        "fig4" => fig4(),
-        "fig5" => fig5(fast),
-        "fig10" => fig10(fast),
-        "fig11" => fig11_latency_throughput(fast),
-        "fig11-threads" => fig11_threads(fast),
-        "fig12" => fig12(fast),
-        "fig15" => table4_fig15(fast),
-        "table1" => table1(),
-        "table3" => table3(fast),
-        "table4" => table4_fig15(fast),
-        "ablation-batching" => ablation_batching(fast),
-        "ablation-conn-cache" => ablation_conn_cache(),
-        other => anyhow::bail!(
-            "unknown experiment '{other}' (try fig3|fig4|fig5|fig10|fig11|fig11-threads|fig12|fig15|table1|table3|table4|ablation-batching|ablation-conn-cache)"
-        ),
-    })
+    let Some(spec) = spec(name) else {
+        let names: Vec<&str> = EXPERIMENTS.iter().map(|s| s.name).collect();
+        anyhow::bail!("unknown experiment '{name}' (try one of: {})", names.join("|"));
+    };
+    Ok((spec.run)(fast))
+}
+
+/// `fast`-signature adapters for the drivers that are already fast.
+fn fig4_driver(_fast: bool) -> Figure {
+    fig4()
+}
+fn table1_driver(_fast: bool) -> Figure {
+    table1()
+}
+fn ablation_conn_cache_driver(_fast: bool) -> Figure {
+    ablation_conn_cache()
+}
+
+/// Text-only rendering of an experiment (the `dagger sim` path).
+pub fn run_named(name: &str, args: &Args) -> anyhow::Result<String> {
+    Ok(run_figure(name, args)?.render_text())
 }
 
 fn dur(fast: bool, full_us: u64) -> u64 {
@@ -44,84 +181,92 @@ fn dur(fast: bool, full_us: u64) -> u64 {
     }
 }
 
+fn fig_for(name: &str) -> Figure {
+    let s = spec(name).expect("fig_for: name must be registered");
+    Figure::new(s.name, s.title, s.paper_ref)
+}
+
 // ---------------------------------------------------------------- Fig. 3
 
-/// Networking as a fraction of per-tier latency, three load levels.
-pub fn fig3(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 3 — networking fraction of tier latency (Social Network, kernel TCP/IP + Thrift)").unwrap();
-    writeln!(out, "{:<16} {:>8} {:>8} {:>8}   (fraction of tier time in network+rpc+queue)", "tier", "low", "mid", "high").unwrap();
+/// Networking as a fraction of per-tier latency, three load levels
+/// (Social Network over kernel TCP/IP + Thrift-style RPC).
+pub fn fig3(fast: bool) -> Figure {
+    let mut fig = fig_for("fig3");
     let loads = [0.5, 6.0, 12.0]; // Krps — low/mid/near-saturation
     let d = dur(fast, 300_000);
     let runs: Vec<_> = loads
         .iter()
         .map(|&l| microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, 1), l, d, d / 10))
         .collect();
+
+    let s = fig.series("networking-fraction", &["tier", "load_krps", "net_frac_pct"]);
     for tier in 1..socialnet::TIER_NAMES.len() {
         let name = socialnet::TIER_NAMES[tier];
-        let f: Vec<f64> = runs
-            .iter()
-            .map(|r| socialnet::networking_fraction(&r.breakdown, name))
-            .collect();
-        writeln!(out, "{:<16} {:>7.0}% {:>7.0}% {:>7.0}%", name, f[0] * 100.0, f[1] * 100.0, f[2] * 100.0).unwrap();
+        for (i, &l) in loads.iter().enumerate() {
+            let f = socialnet::networking_fraction(&runs[i].breakdown, name);
+            s.push(vec![name.into(), l.into(), (f * 100.0).into()]);
+        }
     }
-    // End-to-end: median / p99 latency growth with load (queueing).
-    writeln!(out, "\n{:<16} {:>10} {:>10} {:>10}", "e2e", "low", "mid", "high").unwrap();
-    writeln!(
-        out,
-        "{:<16} {:>9.1}us {:>9.1}us {:>9.1}us   (median)",
-        "latency p50", runs[0].p50_us, runs[1].p50_us, runs[2].p50_us
-    )
-    .unwrap();
-    writeln!(
-        out,
-        "{:<16} {:>9.1}us {:>9.1}us {:>9.1}us   (p99)",
-        "latency p99", runs[0].p99_us, runs[1].p99_us, runs[2].p99_us
-    )
-    .unwrap();
-    out
+
+    // Full per-tier, per-phase accounting at the mid load (the stacked
+    // bars' raw data, via telemetry::PhaseBreakdown::rows).
+    let s = fig.series("phase-breakdown-mid-load", &["tier", "phase", "total_ns", "frac_pct"]);
+    for (tier, phase, ns, frac) in runs[1].breakdown.rows() {
+        s.push(vec![
+            tier.into(),
+            phase.into(),
+            Value::U64(ns.min(u64::MAX as u128) as u64),
+            (frac * 100.0).into(),
+        ]);
+    }
+
+    let s = fig.series("e2e-latency", &["load_krps", "p50_us", "p99_us"]);
+    for (i, &l) in loads.iter().enumerate() {
+        s.push(vec![l.into(), runs[i].p50_us.into(), runs[i].p99_us.into()]);
+    }
+    fig.note("networking+rpc+queueing dominates tier time and grows with load (paper: 40-65% across tiers)");
+    fig
 }
 
 // ---------------------------------------------------------------- Fig. 4
 
 /// RPC size distributions: service-level CDFs + per-tier breakdown.
-pub fn fig4() -> String {
-    let mut out = String::new();
+pub fn fig4() -> Figure {
+    let mut fig = fig_for("fig4");
     let mut rng = Rng::new(4);
-    writeln!(out, "== Fig. 4 — RPC size distributions").unwrap();
-    writeln!(out, "cumulative fraction of requests/responses under a size:").unwrap();
-    writeln!(out, "{:<26} {:>7} {:>7} {:>7} {:>7}", "distribution", "64B", "256B", "512B", "1KB").unwrap();
     for (name, d) in [
         ("socialnet requests", RpcSizeDist::social_network_requests()),
         ("media requests", RpcSizeDist::media_requests()),
         ("responses (both)", RpcSizeDist::responses()),
     ] {
-        let cdf: Vec<f64> = [64, 256, 512, 1024]
-            .iter()
-            .map(|&b| d.cdf_at(b, &mut rng, 40_000))
-            .collect();
-        writeln!(out, "{:<26} {:>6.0}% {:>6.0}% {:>6.0}% {:>6.0}%", name, cdf[0] * 100.0, cdf[1] * 100.0, cdf[2] * 100.0, cdf[3] * 100.0).unwrap();
+        let s = fig.series(name, &["size_b", "cdf_pct"]);
+        for &b in &[64u32, 128, 256, 512, 1024] {
+            let c = d.cdf_at(b, &mut rng, 40_000);
+            s.push(vec![b.into(), (c * 100.0).into()]);
+        }
     }
-    writeln!(out, "\nper-tier request sizes (bytes):").unwrap();
-    writeln!(out, "{:<18} {:>8} {:>8}", "tier", "median", "max<=64B").unwrap();
+    let s = fig.series("tier-request-sizes", &["tier", "median_b", "all_le_64b"]);
     for p in TierSizeProfile::all() {
         let m = p.median_bytes(&mut rng);
         let d = p.dist();
         let all_small = (0..5_000).all(|_| d.sample(&mut rng) <= 64);
-        writeln!(out, "{:<18} {:>8} {:>8}", p.name(), m, if all_small { "yes" } else { "no" }).unwrap();
+        s.push(vec![p.name().into(), m.into(), all_small.into()]);
     }
-    out
+    fig.note("paper: ~75% of socialnet requests fit in 512B; >90% of responses fit in one 64B cache line");
+    fig
 }
 
 // ---------------------------------------------------------------- Fig. 5
 
 /// CPU interference between networking and application logic.
-pub fn fig5(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 5 — end-to-end latency: networking on separate vs shared CPU cores").unwrap();
-    writeln!(out, "{:<10} {:>12} {:>12} {:>12} {:>12}", "load", "sep p50", "sep p99", "shared p50", "shared p99").unwrap();
+pub fn fig5(fast: bool) -> Figure {
+    let mut fig = fig_for("fig5");
     let d = dur(fast, 300_000);
-    for (i, &load) in [0.5f64, 6.0, 11.0].iter().enumerate() {
+    let loads = [0.5f64, 6.0, 11.0];
+
+    let mut sep_rows = Vec::new();
+    let mut shared_rows = Vec::new();
+    for (i, &load) in loads.iter().enumerate() {
         let sep = microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, 1), load, d, d / 10);
         // Shared cores: network interrupt handling steals cycles from the
         // application — model as load-dependent service-time inflation
@@ -137,28 +282,33 @@ pub fn fig5(fast: bool) -> String {
             };
         }
         let sh = microsim::run(shared_app, load, d, d / 10);
-        writeln!(
-            out,
-            "{:<10} {:>10.1}us {:>10.1}us {:>10.1}us {:>10.1}us",
-            format!("{load:.1}Krps"),
-            sep.p50_us,
-            sep.p99_us,
-            sh.p50_us,
-            sh.p99_us
-        )
-        .unwrap();
+        sep_rows.push(vec![load.into(), sep.p50_us.into(), sep.p99_us.into()]);
+        shared_rows.push(vec![load.into(), sh.p50_us.into(), sh.p99_us.into()]);
     }
-    writeln!(out, "(shared-core interference grows with load, hitting the tail hardest)").unwrap();
-    out
+    let cols = ["load_krps", "p50_us", "p99_us"];
+    let s = fig.series("separate-cores", &cols);
+    for r in sep_rows {
+        s.push(r);
+    }
+    let s = fig.series("shared-cores", &cols);
+    for r in shared_rows {
+        s.push(r);
+    }
+    fig.note("shared-core interference grows with load and hits the tail hardest");
+    fig
 }
 
 // --------------------------------------------------------------- Fig. 10
 
-/// Single-core throughput + latency per CPU-NIC interface.
-pub fn fig10(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 10 — single-core throughput and latency per CPU-NIC interface (64B RPCs)").unwrap();
-    writeln!(out, "{:<24} {:>10} {:>9} {:>9}", "interface", "sat Mrps", "p50 us", "p99 us").unwrap();
+/// Single-core throughput + latency per CPU-NIC interface, plus the
+/// payload-size sweep and the best-effort peak.
+pub fn fig10(fast: bool) -> Figure {
+    let mut fig = fig_for("fig10");
+    let base = SimConfig {
+        duration_us: dur(fast, 20_000),
+        warmup_us: dur(fast, 2_000),
+        ..Default::default()
+    };
     let cases: Vec<Iface> = vec![
         Iface::WqeByMmio,
         Iface::Doorbell,
@@ -168,86 +318,79 @@ pub fn fig10(fast: bool) -> String {
         Iface::Upi(2),
         Iface::Upi(4),
     ];
-    for iface in cases {
-        let cap = iface.single_core_mrps();
-        // Saturation: drive 10% above the model cap.
-        let sat = rpc_sim::run(SimConfig {
-            iface,
-            offered_mrps: cap * 1.1,
-            duration_us: dur(fast, 20_000),
-            warmup_us: dur(fast, 2_000),
-            ..Default::default()
-        });
-        // Latency: at 60% of capacity (comparable operating point).
-        let lat = rpc_sim::run(SimConfig {
-            iface,
-            offered_mrps: cap * 0.6,
-            duration_us: dur(fast, 20_000),
-            warmup_us: dur(fast, 2_000),
-            ..Default::default()
-        });
-        writeln!(
-            out,
-            "{:<24} {:>10.1} {:>9.2} {:>9.2}",
-            iface.name(),
-            sat.achieved_mrps,
-            lat.p50_us,
-            lat.p99_us
-        )
-        .unwrap();
+
+    // Saturation: drive each interface 10% above its model capacity.
+    let s = fig.series("saturation", SWEEP_COLUMNS);
+    for &iface in &cases {
+        let cfg = SimConfig { iface, offered_mrps: iface.single_core_mrps() * 1.1, ..base.clone() };
+        let r = rpc_sim::run(cfg.clone());
+        s.push(sweep_row(&cfg, &r));
     }
+
+    // Latency at a comparable operating point: 60% of capacity.
+    let s = fig.series("latency-at-60pct", SWEEP_COLUMNS);
+    for &iface in &cases {
+        let cfg = SimConfig { iface, offered_mrps: iface.single_core_mrps() * 0.6, ..base.clone() };
+        let r = rpc_sim::run(cfg.clone());
+        s.push(sweep_row(&cfg, &r));
+    }
+
+    // RPC-size sweep on the UPI interface (multi-line RPCs, §4.7): the
+    // harness grid exercises the payload axis.
+    let sweep = Sweep::new(SimConfig { iface: Iface::Upi(4), offered_mrps: 14.0, ..base.clone() })
+        .payloads(&[64, 128, 256, 512, 1024]);
+    fig.series.push(sweep_series("upi-payload-sweep", &sweep.run()));
+
     // Best-effort peak (paper: 16.5 Mrps with arbitrary server drops).
-    let be = rpc_sim::run(SimConfig {
+    let be_cfg = SimConfig {
         iface: Iface::Upi(4),
         offered_mrps: 18.0,
         server_ring_entries: 64,
-        duration_us: dur(fast, 20_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
-    });
-    writeln!(out, "{:<24} {:>10.1}   (server drops allowed: {:.1}% dropped)", "upi(B=4) best-effort", be.achieved_mrps + be.dropped as f64 / (dur(fast, 20_000) - dur(fast, 2_000)) as f64, be.drop_rate() * 100.0).unwrap();
-    out
+        ..base.clone()
+    };
+    let be = rpc_sim::run(be_cfg.clone());
+    let window_us = (be_cfg.duration_us - be_cfg.warmup_us) as f64;
+    let s = fig.series("best-effort", &["iface", "client_side_mrps", "drop_pct"]);
+    s.push(vec![
+        be_cfg.iface.name().into(),
+        (be.achieved_mrps + be.dropped as f64 / window_us).into(),
+        (be.drop_rate() * 100.0).into(),
+    ]);
+    fig.note("paper anchors: MMIO 4.2, doorbell 4.3, doorbell-batch(11) 10.8, UPI(4) 12.4 Mrps; 16.5 Mrps best-effort");
+    fig
 }
 
 // --------------------------------------------------------------- Fig. 11
 
-/// Latency-vs-load curves (left panel).
-pub fn fig11_latency_throughput(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 11 (left) — latency vs load, single-core async 64B RPCs").unwrap();
-    writeln!(out, "{:<12} {:>12} {:>9} {:>9} {:>9}", "config", "offered Mrps", "ach.", "p50 us", "p99 us").unwrap();
+/// Latency-vs-load curves (left panel): B=1, B=4, adaptive batching.
+pub fn fig11_latency_throughput(fast: bool) -> Figure {
+    let mut fig = fig_for("fig11");
+    let base = SimConfig {
+        duration_us: dur(fast, 16_000),
+        warmup_us: dur(fast, 2_000),
+        ..Default::default()
+    };
     let loads = [0.5, 2.0, 4.0, 6.0, 7.0, 9.0, 11.0, 12.0, 12.4];
     for (label, iface, adaptive) in [
         ("B=1", Iface::Upi(1), false),
         ("B=4", Iface::Upi(4), false),
         ("adaptive", Iface::Upi(4), true),
     ] {
-        for &l in &loads {
-            let r = rpc_sim::run(SimConfig {
-                iface,
-                offered_mrps: l,
-                adaptive_batch: adaptive,
-                duration_us: dur(fast, 16_000),
-                warmup_us: dur(fast, 2_000),
-                ..Default::default()
-            });
-            writeln!(
-                out,
-                "{:<12} {:>12.1} {:>9.2} {:>9.2} {:>9.2}",
-                label, l, r.achieved_mrps, r.p50_us, r.p99_us
-            )
-            .unwrap();
-        }
-        writeln!(out).unwrap();
+        let sweep = Sweep::new(SimConfig { iface, adaptive_batch: adaptive, ..base.clone() })
+            .loads(&loads);
+        fig.series.push(sweep_series(label, &sweep.run()));
     }
-    out
+    fig.note("batching trades latency for throughput; the soft-config adaptive mode gets B=1 latency at low load and B=4 throughput at saturation");
+    fig
 }
 
 /// Thread scalability (right panel) + the raw-UPI-read ceiling.
-pub fn fig11_threads(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 11 (right) — thread scalability, 64B requests").unwrap();
-    writeln!(out, "{:<9} {:>12} {:>14} {:>12}", "threads", "e2e Mrps", "as-seen-by-cpu", "raw-UPI Mrps").unwrap();
+pub fn fig11_threads(fast: bool) -> Figure {
+    let mut fig = fig_for("fig11-threads");
+    let s = fig.series(
+        "thread-scaling",
+        &["threads", "e2e_mrps", "cpu_view_mrps", "raw_upi_mrps"],
+    );
     for n in 1..=8u32 {
         let r = rpc_sim::run(SimConfig {
             iface: Iface::Upi(4),
@@ -262,20 +405,26 @@ pub fn fig11_threads(fast: bool) -> String {
         // the endpoint occupancy; ceiling ~83 M lines/s.
         let per_thread_raw = 11.9; // Mrps of raw reads a polling thread sustains
         let raw = (per_thread_raw * n as f64).min(1000.0 / 12.0);
-        writeln!(out, "{:<9} {:>12.1} {:>14.1} {:>12.1}", n, r.achieved_mrps, r.achieved_mrps * 2.0, raw).unwrap();
+        s.push(vec![
+            n.into(),
+            r.achieved_mrps.into(),
+            (r.achieved_mrps * 2.0).into(),
+            raw.into(),
+        ]);
     }
-    writeln!(out, "(e2e saturates at the blue-region UPI endpoint: ~42 Mrps; 84 Mrps as seen by the processor)").unwrap();
-    out
+    fig.note("e2e saturates at the blue-region UPI endpoint: ~42 Mrps, i.e. 84 Mrps as seen by the processor; linear up to 4 threads");
+    fig
 }
 
 // --------------------------------------------------------------- Fig. 12
 
 /// memcached + MICA over Dagger: latency + peak single-core throughput.
-pub fn fig12(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Fig. 12 — KVS over Dagger (single core)").unwrap();
-    writeln!(out, "{:<34} {:>10} {:>9} {:>9}", "config", "peak Mrps", "p50 us", "p99 us").unwrap();
-
+pub fn fig12(fast: bool) -> Figure {
+    let mut fig = fig_for("fig12");
+    let s = fig.series(
+        "kvs",
+        &["store", "dataset", "set_get_mix", "peak_mrps", "p50_us", "p99_us"],
+    );
     // (store, dataset, set_ns, get_ns) — op costs from apps::{memcached,
     // mica} cost models; 'small' values cost slightly more than 'tiny'.
     let cases: Vec<(&str, &str, u64, u64)> = vec![
@@ -309,19 +458,18 @@ pub fn fig12(fast: bool) -> String {
                 warmup_us: dur(fast, 2_000),
                 ..Default::default()
             });
-            writeln!(
-                out,
-                "{:<34} {:>10.2} {:>9.2} {:>9.2}",
-                format!("{store} {dataset} set/get={mix_name}"),
-                peak.achieved_mrps,
-                lat.p50_us,
-                lat.p99_us
-            )
-            .unwrap();
+            s.push(vec![
+                store.into(),
+                dataset.into(),
+                mix_name.into(),
+                peak.achieved_mrps.into(),
+                lat.p50_us.into(),
+                lat.p99_us.into(),
+            ]);
         }
     }
     // Higher-skew MICA (0.9999): better cache locality -> cheaper ops.
-    let r = rpc_sim::run(SimConfig {
+    let hot = rpc_sim::run(SimConfig {
         iface: Iface::Upi(4),
         offered_mrps: 0.0,
         closed_window: 64,
@@ -330,50 +478,72 @@ pub fn fig12(fast: bool) -> String {
         warmup_us: dur(fast, 2_000),
         ..Default::default()
     });
-    writeln!(out, "{:<34} {:>10.2}   (skew 0.9999, read-intense)", "mica tiny hot", r.achieved_mrps).unwrap();
-    writeln!(out, "\nDagger RPC fabric peak (no KVS): 12.4 Mrps — the stores, not the stack, are the bottleneck").unwrap();
-    out
+    s.push(vec![
+        "mica".into(),
+        "tiny-hot (skew 0.9999)".into(),
+        "5/95".into(),
+        hot.achieved_mrps.into(),
+        Value::Null,
+        Value::Null,
+    ]);
+    fig.note("paper: memcached ~2.8-3.2us median, MICA 4.8-7.8 Mrps single-core; the stores, not the 12.4 Mrps RPC fabric, are the bottleneck");
+    fig
 }
 
 // --------------------------------------------------------------- Table 1
 
-pub fn table1() -> String {
+pub fn table1() -> Figure {
     use crate::nic::hard_config::HardConfig;
-    let mut out = String::new();
-    writeln!(out, "== Table 1 — Dagger NIC implementation specifications").unwrap();
+    let mut fig = fig_for("table1");
     let cfg = HardConfig::paper_table1();
     let r = cfg.resource_estimate();
-    writeln!(out, "CPU-NIC interface clock      : {} MHz", cfg.io_clock_mhz).unwrap();
-    writeln!(out, "RPC unit clock               : {} MHz", cfg.rpc_clock_mhz).unwrap();
-    writeln!(out, "Transport clock              : {} MHz", cfg.transport_clock_mhz).unwrap();
-    writeln!(out, "Max NIC flows                : 512").unwrap();
-    writeln!(out, "Eval config                  : {} flows, {} conn-cache entries", cfg.n_flows, cfg.conn_cache_entries).unwrap();
-    writeln!(out, "FPGA LUTs                    : {:.1}K ({:.0}%)", r.luts_k, r.lut_pct).unwrap();
-    writeln!(out, "FPGA BRAM (M20K)             : {:.0} ({:.0}%)", r.m20k_blocks, r.m20k_pct).unwrap();
-    writeln!(out, "FPGA registers               : {:.1}K", r.regs_k).unwrap();
-    writeln!(out, "Max cacheable connections    : {}K (12B tuple x3 banks)", crate::nic::connection::ConnectionManager::max_cacheable_connections(12) / 1000).unwrap();
-    writeln!(out, "NIC instances that fit       : {}", cfg.max_instances()).unwrap();
-    out
+    let s = fig.series("nic-specs", &["spec", "value"]);
+    let rows: Vec<(&str, Value)> = vec![
+        ("CPU-NIC interface clock", format!("{} MHz", cfg.io_clock_mhz).into()),
+        ("RPC unit clock", format!("{} MHz", cfg.rpc_clock_mhz).into()),
+        ("Transport clock", format!("{} MHz", cfg.transport_clock_mhz).into()),
+        ("Max NIC flows", Value::U64(512)),
+        (
+            "Eval config",
+            format!("{} flows, {} conn-cache entries", cfg.n_flows, cfg.conn_cache_entries).into(),
+        ),
+        ("FPGA LUTs", format!("{:.1}K ({:.0}%)", r.luts_k, r.lut_pct).into()),
+        ("FPGA BRAM (M20K)", format!("{:.0} ({:.0}%)", r.m20k_blocks, r.m20k_pct).into()),
+        ("FPGA registers", format!("{:.1}K", r.regs_k).into()),
+        (
+            "Max cacheable connections",
+            format!(
+                "{}K (12B tuple x3 banks)",
+                crate::nic::connection::ConnectionManager::max_cacheable_connections(12) / 1000
+            )
+            .into(),
+        ),
+        ("NIC instances that fit", Value::U64(cfg.max_instances() as u64)),
+    ];
+    for (k, v) in rows {
+        s.push(vec![k.into(), v]);
+    }
+    fig
 }
 
 // --------------------------------------------------------------- Table 3
 
-pub fn table3(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Table 3 — median RTT and single-core throughput vs prior platforms").unwrap();
-    writeln!(out, "{:<10} {:>8} {:>6} {:>9} {:>9} {:>11}", "system", "object", "kind", "TOR us", "RTT us", "thr Mrps").unwrap();
+pub fn table3(fast: bool) -> Figure {
+    let mut fig = fig_for("table3");
+    let s = fig.series(
+        "platforms",
+        &["system", "object_b", "kind", "tor_us", "rtt_us", "thr_mrps", "source"],
+    );
     for p in crate::baselines::platforms() {
-        writeln!(
-            out,
-            "{:<10} {:>7}B {:>6} {:>9} {:>9.1} {:>11}",
-            p.name,
-            p.object_bytes,
-            if p.object_kind == crate::baselines::ObjectKind::Rpc { "RPC" } else { "msg" },
-            p.tor_ns.map(|t| format!("{:.1}", t as f64 / 1000.0)).unwrap_or_else(|| "N/A".into()),
-            p.rtt_us,
-            p.mrps.map(|m| format!("{m:.2}")).unwrap_or_else(|| "N/A".into()),
-        )
-        .unwrap();
+        s.push(vec![
+            p.name.into(),
+            Value::U64(p.object_bytes as u64),
+            (if p.object_kind == crate::baselines::ObjectKind::Rpc { "RPC" } else { "msg" }).into(),
+            p.tor_ns.map(|t| Value::F64(t as f64 / 1000.0)).unwrap_or(Value::Null),
+            p.rtt_us.into(),
+            p.mrps.map(Value::F64).unwrap_or(Value::Null),
+            "paper".into(),
+        ]);
     }
     // Dagger row: measured from the simulation.
     let lat = rpc_sim::run(SimConfig {
@@ -390,25 +560,34 @@ pub fn table3(fast: bool) -> String {
         warmup_us: dur(fast, 2_000),
         ..Default::default()
     });
-    writeln!(
-        out,
-        "{:<10} {:>7}B {:>6} {:>9.1} {:>9.1} {:>11.2}   <- this repro (measured)",
-        "Dagger", 64, "RPC", 0.3, lat.p50_us, sat.achieved_mrps
-    )
-    .unwrap();
+    s.push(vec![
+        "Dagger".into(),
+        Value::U64(64),
+        "RPC".into(),
+        Value::F64(0.3),
+        lat.p50_us.into(),
+        sat.achieved_mrps.into(),
+        "measured".into(),
+    ]);
     let erpc = 4.96;
-    writeln!(out, "\nper-core gain vs eRPC: {:.1}x; vs FaSST: {:.1}x; vs IX: {:.1}x", sat.achieved_mrps / erpc, sat.achieved_mrps / 4.8, sat.achieved_mrps / 1.5).unwrap();
-    out
+    let s = fig.series("per-core-gain", &["vs", "gain_x"]);
+    s.push(vec!["eRPC".into(), (sat.achieved_mrps / erpc).into()]);
+    s.push(vec!["FaSST".into(), (sat.achieved_mrps / 4.8).into()]);
+    s.push(vec!["IX".into(), (sat.achieved_mrps / 1.5).into()]);
+    fig.note("paper: Dagger achieves the lowest median RTT (2.1us) and 1.3-3.8x per-core gain over eRPC/FaSST");
+    fig
 }
 
 // ------------------------------------------------------- Table 4 / Fig 15
 
-pub fn table4_fig15(fast: bool) -> String {
+pub fn table4_fig15(fast: bool) -> Figure {
     use flightreg::ThreadingModel;
-    let mut out = String::new();
+    let mut fig = fig_for("table4-fig15");
     let d = dur(fast, 400_000);
-    writeln!(out, "== Table 4 — Flight Registration service: threading models").unwrap();
-    writeln!(out, "{:<11} {:>14} {:>9} {:>9} {:>9}", "model", "max load Krps", "p50 us", "p90 us", "p99 us").unwrap();
+    let s = fig.series(
+        "table4-threading-models",
+        &["model", "max_load_krps", "p50_us", "p90_us", "p99_us"],
+    );
     for (name, model, loads) in [
         ("Simple", ThreadingModel::Simple, vec![1.5, 2.2, 2.8, 3.3]),
         ("Optimized", ThreadingModel::Optimized, vec![20.0, 35.0, 47.5, 52.0]),
@@ -424,26 +603,34 @@ pub fn table4_fig15(fast: bool) -> String {
         }
         // Lowest latency: light load.
         let lo = microsim::run(flightreg::app(model, 1_000, 1), 0.5, d, d / 10);
-        writeln!(out, "{:<11} {:>14.1} {:>9.1} {:>9.1} {:>9.1}", name, max_ok, lo.p50_us, lo.p90_us, lo.p99_us).unwrap();
+        s.push(vec![
+            name.into(),
+            max_ok.into(),
+            lo.p50_us.into(),
+            lo.p90_us.into(),
+            lo.p99_us.into(),
+        ]);
     }
 
-    writeln!(out, "\n== Fig. 15 — latency/load curves (Optimized threading)").unwrap();
-    writeln!(out, "{:<12} {:>10} {:>9} {:>9}", "load Krps", "ach.", "p50 us", "p99 us").unwrap();
+    let s = fig.series(
+        "fig15-latency-load-optimized",
+        &["load_krps", "achieved_krps", "p50_us", "p99_us"],
+    );
     for &l in &[2.0, 5.0, 10.0, 15.0, 20.0, 25.0, 30.0, 40.0, 48.0, 52.0, 56.0, 60.0] {
         let r = microsim::run(flightreg::app(ThreadingModel::Optimized, 1_000, 1), l, d, d / 10);
-        writeln!(out, "{:<12.1} {:>10.1} {:>9.1} {:>9.1}", l, r.achieved_krps, r.p50_us, r.p99_us).unwrap();
+        s.push(vec![l.into(), r.achieved_krps.into(), r.p50_us.into(), r.p99_us.into()]);
     }
-    out
+    fig.note("paper: the Optimized threading model sustains ~15x the Simple model's load at lower median latency");
+    fig
 }
 
 // ------------------------------------------------------------- Ablations
 
 /// §5.2's "~14 % from the memory-interconnect messaging model" claim:
 /// doorbell batching vs UPI at each batch width, stack held fixed.
-pub fn ablation_batching(fast: bool) -> String {
-    let mut out = String::new();
-    writeln!(out, "== Ablation — messaging model: doorbell batching vs memory interconnect").unwrap();
-    writeln!(out, "{:<8} {:>16} {:>12} {:>8}", "batch", "doorbell Mrps", "upi Mrps", "gain").unwrap();
+pub fn ablation_batching(fast: bool) -> Figure {
+    let mut fig = fig_for("ablation-batching");
+    let s = fig.series("batch-width", &["batch", "doorbell_mrps", "upi_mrps", "gain_pct"]);
     for b in [1u32, 2, 4, 8, 11, 14] {
         let run_one = |iface: Iface| {
             rpc_sim::run(SimConfig {
@@ -457,20 +644,22 @@ pub fn ablation_batching(fast: bool) -> String {
         };
         let db = run_one(Iface::DoorbellBatch(b));
         let upi = run_one(Iface::Upi(b));
-        writeln!(out, "{:<8} {:>16.2} {:>12.2} {:>7.1}%", b, db, upi, (upi / db - 1.0) * 100.0).unwrap();
+        s.push(vec![b.into(), db.into(), upi.into(), ((upi / db - 1.0) * 100.0).into()]);
     }
-    writeln!(out, "(at the paper's operating points — doorbell B=11 vs UPI B=4 — the gain is ~14%)").unwrap();
-    out
+    fig.note("at the paper's operating points — doorbell B=11 vs UPI B=4 — the gain is ~14%");
+    fig
 }
 
 /// Connection-cache sizing: hit rate and effective lookup cost vs the
 /// number of open connections (the §4.2/§6 BRAM-allocation discussion).
-pub fn ablation_conn_cache() -> String {
+pub fn ablation_conn_cache() -> Figure {
     use crate::nic::connection::{Agent, ConnTuple, ConnectionManager};
     use crate::nic::load_balancer::LbMode;
-    let mut out = String::new();
-    writeln!(out, "== Ablation — connection cache sizing (zipfian connection popularity)").unwrap();
-    writeln!(out, "{:<14} {:<14} {:>9} {:>14}", "cache entries", "open conns", "hit rate", "mean lookup ns").unwrap();
+    let mut fig = fig_for("ablation-conn-cache");
+    let s = fig.series(
+        "zipfian-lookup",
+        &["cache_entries", "open_conns", "hit_rate_pct", "mean_lookup_ns"],
+    );
     for &entries in &[256usize, 1024, 4096, 16_384, 65_536] {
         for &conns in &[1_000u32, 10_000, 100_000] {
             let mut cm = ConnectionManager::new(entries);
@@ -487,19 +676,19 @@ pub fn ablation_conn_cache() -> String {
                     total_ns += lat;
                 }
             }
-            writeln!(
-                out,
-                "{:<14} {:<14} {:>8.1}% {:>14.1}",
-                entries,
-                conns,
-                cm.hit_rate() * 100.0,
-                total_ns as f64 / n as f64
-            )
-            .unwrap();
+            s.push(vec![
+                entries.into(),
+                conns.into(),
+                (cm.hit_rate() * 100.0).into(),
+                (total_ns as f64 / n as f64).into(),
+            ]);
         }
     }
-    writeln!(out, "(misses pay a host-DRAM fill over CCI-P: {} ns)", crate::interconnect::timing::UPI_ONE_WAY_NS).unwrap();
-    out
+    fig.note(format!(
+        "misses pay a host-DRAM fill over CCI-P: {} ns",
+        crate::interconnect::timing::UPI_ONE_WAY_NS
+    ));
+    fig
 }
 
 #[cfg(test)]
@@ -511,34 +700,62 @@ mod tests {
     }
 
     #[test]
-    fn all_experiments_render() {
-        for name in [
-            "fig4",
-            "table1",
-            "ablation-conn-cache",
-        ] {
-            let out = run_named(name, &args()).unwrap();
-            assert!(out.len() > 100, "{name} output too short");
+    fn registry_covers_dispatch_and_aliases() {
+        for s in EXPERIMENTS {
+            assert!(spec(s.name).is_some(), "{}", s.name);
+            for a in s.aliases {
+                assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
+            }
+        }
+        assert_eq!(EXPERIMENTS.len(), 12);
+        assert_eq!(spec("table4").unwrap().name, "table4-fig15");
+    }
+
+    #[test]
+    fn cheap_experiments_render_with_data() {
+        for name in ["fig4", "table1", "ablation-conn-cache"] {
+            let fig = run_figure(name, &args()).unwrap();
+            assert!(fig.n_rows() > 0, "{name} has no rows");
+            let text = fig.render_text();
+            assert!(text.len() > 100, "{name} output too short");
+            // Artifact JSON round-trips.
+            let back = harness::Figure::from_json(&fig.to_json()).unwrap();
+            assert_eq!(back, fig);
         }
     }
 
     #[test]
     fn unknown_experiment_errors() {
+        assert!(run_figure("fig99", &args()).is_err());
         assert!(run_named("fig99", &args()).is_err());
     }
 
     #[test]
     fn table1_contains_anchors() {
-        let t = table1();
+        let t = table1().render_text();
         assert!(t.contains("200 MHz"));
         assert!(t.contains("512"));
     }
 
     #[test]
     fn fig4_paper_anchors_present() {
-        let t = fig4();
+        let fig = fig4();
+        let t = fig.render_text();
         // 75% under 512B for socialnet requests; >90% responses under 64B.
         assert!(t.contains("socialnet requests"));
         assert!(t.contains("s4:Text"));
+        // CDFs are monotone in every distribution series.
+        for s in fig.series.iter().take(3) {
+            let cdfs: Vec<f64> = s
+                .rows
+                .iter()
+                .map(|r| match r[1] {
+                    Value::F64(f) => f,
+                    Value::U64(u) => u as f64,
+                    _ => panic!("cdf cell must be numeric"),
+                })
+                .collect();
+            assert!(cdfs.windows(2).all(|w| w[0] <= w[1]), "{}: {cdfs:?}", s.label);
+        }
     }
 }

@@ -71,8 +71,21 @@ pub struct SimConfig {
     /// Server RX ring bound; arrivals beyond it drop (best-effort mode
     /// tolerates this — §5.3's 16.5 Mrps figure).
     pub server_ring_entries: usize,
+    /// RPC payload size in bytes (§4.7: the interconnect MTU is one 64 B
+    /// cache line; larger RPCs occupy ⌈size/64⌉ lines on every stage —
+    /// extra ring-write CPU, delivery latency, and endpoint occupancy).
+    /// Supported up to the 128-line CCI-P outstanding window (8 KiB);
+    /// larger values are clamped to it (debug builds assert).
+    pub payload_bytes: usize,
     pub tor_ns: u64,
     pub seed: u64,
+}
+
+impl SimConfig {
+    /// Cache lines per RPC implied by the payload size (≥ 1).
+    pub fn lines_per_rpc(&self) -> u32 {
+        ((self.payload_bytes.max(1) as u64 + CACHE_LINE_BYTES - 1) / CACHE_LINE_BYTES) as u32
+    }
 }
 
 impl Default for SimConfig {
@@ -88,6 +101,7 @@ impl Default for SimConfig {
             batch_timeout_ns: 3_000,
             handler: HandlerCost::Echo,
             server_ring_entries: 512,
+            payload_bytes: 64,
             tor_ns: TOR_DELAY_NS,
             seed: 1,
         }
@@ -172,6 +186,8 @@ struct PendingXfer {
     is_client: bool,
     idx: u32,
     rpcs: Vec<u32>,
+    /// Cache lines this transfer occupies (rpcs × lines-per-RPC).
+    lines: u32,
     ready_at: Ns,
 }
 
@@ -236,6 +252,7 @@ struct World {
     dropped: u64,
     per_rpc_cpu: u64,
     per_batch_cpu: u64,
+    lines_per_rpc: u32,
     warmup_end: Ns,
     horizon: Ns,
     /// Per-thread open-loop arrival state: (rng, mean gap ns).
@@ -291,21 +308,34 @@ fn launch_batch(
     let at = launch_at.max(sender.cpu_free);
     sender.cpu_free = at + w.per_batch_cpu;
     let handoff = sender.cpu_free;
-    submit_xfer(eng, w, PendingXfer { is_client, idx, rpcs, ready_at: handoff });
+    // A transfer can never exceed the CCI-P outstanding window or it
+    // would stall forever (can_issue is monotone in `lines`): split
+    // multi-line batches into window-sized transfers, like the FPGA's
+    // read engine streaming a large batch in window-bounded bursts.
+    let lpr = w.lines_per_rpc.max(1);
+    let rpcs_per_xfer = (CCIP_MAX_OUTSTANDING / lpr).max(1) as usize;
+    for chunk in rpcs.chunks(rpcs_per_xfer) {
+        let lines = (chunk.len() as u32 * lpr).min(CCIP_MAX_OUTSTANDING);
+        submit_xfer(
+            eng,
+            w,
+            PendingXfer { is_client, idx, rpcs: chunk.to_vec(), lines, ready_at: handoff },
+        );
+    }
 }
 
 /// Hand a transfer to the CCI-P endpoint, honoring the outstanding
 /// window; queue it (per NIC instance, round-robin drained) when full.
 fn submit_xfer(eng: &mut Engine<Ev>, w: &mut World, x: PendingXfer) {
-    let lines = x.rpcs.len() as u32;
-    if !w.arbiter.bus.can_issue(lines) || w.arbiter.has_pending() {
+    if !w.arbiter.bus.can_issue(x.lines) || w.arbiter.has_pending() {
         w.arbiter.queues[BusArbiter::class_of(x.is_client)].push_back(x);
         return;
     }
-    start_xfer(eng, w, x, lines);
+    start_xfer(eng, w, x);
 }
 
-fn start_xfer(eng: &mut Engine<Ev>, w: &mut World, x: PendingXfer, lines: u32) {
+fn start_xfer(eng: &mut Engine<Ev>, w: &mut World, x: PendingXfer) {
+    let lines = x.lines;
     let grant = w.arbiter.bus.issue(x.ready_at.max(eng.now()), lines);
     let arrive = grant.start + transit_ns(&w.cfg, lines);
     // Bookkeeping frees the outstanding window one round-trip later.
@@ -320,7 +350,20 @@ fn start_xfer(eng: &mut Engine<Ev>, w: &mut World, x: PendingXfer, lines: u32) {
 /// Run one experiment point.
 pub fn run(cfg: SimConfig) -> SimResult {
     let n_threads = cfg.n_threads.max(1);
-    let (per_rpc_cpu, per_batch_cpu) = cpu_costs(&cfg.iface);
+    let (base_rpc_cpu, per_batch_cpu) = cpu_costs(&cfg.iface);
+    // Multi-line RPCs pay one more ring write per extra cache line
+    // (64 B payloads — the paper's default — take the original path).
+    // One RPC cannot exceed the CCI-P outstanding window; beyond 8 KiB
+    // the model would silently under-account occupancy, so clamp
+    // loudly rather than report optimistic numbers.
+    debug_assert!(
+        cfg.lines_per_rpc() <= CCIP_MAX_OUTSTANDING,
+        "payload_bytes {} exceeds the {}-line CCI-P window (8 KiB max)",
+        cfg.payload_bytes,
+        CCIP_MAX_OUTSTANDING
+    );
+    let lines_per_rpc = cfg.lines_per_rpc().min(CCIP_MAX_OUTSTANDING);
+    let per_rpc_cpu = base_rpc_cpu + (lines_per_rpc as u64 - 1) * SW_RING_WRITE_NS;
     let occupancy = cfg.iface.endpoint_occupancy_per_line_ns();
     let horizon: Ns = cfg.duration_us * 1000;
     let warmup_end: Ns = cfg.warmup_us * 1000;
@@ -348,6 +391,7 @@ pub fn run(cfg: SimConfig) -> SimResult {
         dropped: 0,
         per_rpc_cpu,
         per_batch_cpu,
+        lines_per_rpc,
         warmup_end,
         horizon,
         cfg,
@@ -512,14 +556,13 @@ pub fn run(cfg: SimConfig) -> SimResult {
                     .queues
                     .iter()
                     .flat_map(|q| q.front())
-                    .any(|x| w.arbiter.bus.can_issue(x.rpcs.len() as u32));
+                    .any(|x| w.arbiter.bus.can_issue(x.lines));
                 if !can {
                     break;
                 }
                 if let Some(x) = w.arbiter.pop_next() {
-                    let lines = x.rpcs.len() as u32;
-                    if w.arbiter.bus.can_issue(lines) {
-                        start_xfer(eng, w, x, lines);
+                    if w.arbiter.bus.can_issue(x.lines) {
+                        start_xfer(eng, w, x);
                     } else {
                         // Put it back at the head of its class.
                         let c = BusArbiter::class_of(x.is_client);
@@ -535,12 +578,13 @@ pub fn run(cfg: SimConfig) -> SimResult {
     eng.run_until(&mut w, horizon + 50_000, step);
 
     let measured_window_us = (w.cfg.duration_us - w.cfg.warmup_us) as f64;
+    let q = w.hist.quantiles_ns(&[0.50, 0.90, 0.99]);
     SimResult {
         offered_mrps: w.cfg.offered_mrps,
         achieved_mrps: w.completed_measured as f64 / measured_window_us,
-        p50_us: w.hist.p50_us(),
-        p90_us: w.hist.p90_us(),
-        p99_us: w.hist.p99_us(),
+        p50_us: q[0] as f64 / 1000.0,
+        p90_us: q[1] as f64 / 1000.0,
+        p99_us: q[2] as f64 / 1000.0,
         mean_us: w.hist.mean_us(),
         sent: w.sent,
         completed: w.completed,
@@ -646,6 +690,50 @@ mod tests {
             ..Default::default()
         });
         assert!(kvs.achieved_mrps < echo.achieved_mrps / 2.0);
+    }
+
+    #[test]
+    fn larger_payloads_cost_throughput_and_latency() {
+        let small = quick(SimConfig { offered_mrps: 14.0, ..Default::default() });
+        let big = quick(SimConfig {
+            offered_mrps: 14.0,
+            payload_bytes: 512, // 8 cache lines per RPC
+            ..Default::default()
+        });
+        assert!(big.achieved_mrps < small.achieved_mrps * 0.6,
+            "big {} small {}", big.achieved_mrps, small.achieved_mrps);
+
+        let lat_small = quick(SimConfig { offered_mrps: 0.5, iface: Iface::Upi(1), ..Default::default() });
+        let lat_big = quick(SimConfig {
+            offered_mrps: 0.5,
+            iface: Iface::Upi(1),
+            payload_bytes: 512,
+            ..Default::default()
+        });
+        assert!(lat_big.p50_us > lat_small.p50_us, "big {} small {}", lat_big.p50_us, lat_small.p50_us);
+    }
+
+    #[test]
+    fn oversized_batches_split_across_ccip_window() {
+        // 11 RPCs x 16 lines = 176 lines > the 128-line window; without
+        // transfer splitting this configuration deadlocks at 0 Mrps.
+        let r = quick(SimConfig {
+            iface: Iface::DoorbellBatch(11),
+            payload_bytes: 1024,
+            offered_mrps: 0.5,
+            ..Default::default()
+        });
+        assert!(r.achieved_mrps > 0.3, "thr {}", r.achieved_mrps);
+        assert!(r.completed > 500, "completed {}", r.completed);
+    }
+
+    #[test]
+    fn payload_line_rounding() {
+        let c = |b: usize| SimConfig { payload_bytes: b, ..Default::default() };
+        assert_eq!(c(0).lines_per_rpc(), 1);
+        assert_eq!(c(64).lines_per_rpc(), 1);
+        assert_eq!(c(65).lines_per_rpc(), 2);
+        assert_eq!(c(512).lines_per_rpc(), 8);
     }
 
     #[test]

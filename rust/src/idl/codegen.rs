@@ -1,4 +1,5 @@
-//! Rust stub generation from the IDL AST.
+//! Rust stub generation from the IDL AST — the §4.2 code generator
+//! ("the RPC stub code is auto-generated"), retargeted from C++ to Rust.
 //!
 //! For each `Message`, a plain struct with fixed-offset little-endian
 //! `to_bytes`/`from_bytes`. For each `Service`:

@@ -1,4 +1,5 @@
-//! IDL lexer: C-style identifiers, integers, punctuation, `//` comments.
+//! IDL lexer: C-style identifiers, integers, punctuation, `//` comments
+//! (front half of the §4.2 Protobuf-flavoured IDL toolchain).
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Token {

@@ -1,4 +1,6 @@
-//! IDL recursive-descent parser.
+//! IDL recursive-descent parser for the §4.2 grammar (Listing 1):
+//! `Message` blocks of typed fields and `Service` blocks of rpc
+//! signatures.
 
 use super::ast::*;
 use super::lexer::{tokenize, Token};

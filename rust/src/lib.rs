@@ -12,10 +12,14 @@
 //!   Registration service).
 //! * **L2/L1 (python/, build-time only)** — the NIC RPC-unit datapath as
 //!   a JAX graph over Pallas kernels, AOT-lowered to HLO text and
-//!   executed from Rust via PJRT ([`runtime`]).
+//!   executed from Rust via PJRT ([`runtime`]; gated behind the `xla`
+//!   cargo feature, with a native bit-identical fallback).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! Every paper figure/table is a bench target built on the shared
+//! experiment harness ([`exp::harness`]) and writes a machine-readable
+//! `BENCH_<fig>.json`/`.csv` artifact. See README.md for the layout and
+//! the Fig. 2 architecture mapping, and REPRODUCING.md for the
+//! per-figure commands and paper reference numbers.
 
 pub mod apps;
 pub mod baselines;

@@ -2,21 +2,38 @@
 //! lowered from the JAX/Pallas kernels by `python/compile/aot.py`) and
 //! execute them from the Rust hot path.
 //!
-//! This is the "FPGA bitstream" of the reproduction: the same arithmetic
-//! the paper synthesizes to the green region is compiled once, ahead of
-//! time, and invoked per CCI-P batch. Python never runs at request time.
+//! This is the "FPGA bitstream" of the reproduction (the paper's green
+//! region, §4.1/Fig. 2): the same arithmetic the paper synthesizes to
+//! the FPGA is compiled once, ahead of time, and invoked per CCI-P
+//! batch. Python never runs at request time.
 //!
 //! HLO *text* (not serialized proto) is the interchange format — jax
 //! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Feature gate
+//!
+//! The PJRT client comes from the external `xla` crate, which is not
+//! vendored (the build must work offline — Cargo.toml §Offline policy).
+//! The real implementation lives behind the `xla` feature, and enabling
+//! it takes two steps: add an `xla` dependency to Cargo.toml, then
+//! build with `--features xla` (the feature alone cannot resolve the
+//! crate). The default build compiles an API-identical stub whose
+//! constructors return an error, so every caller ([`Engine::auto`],
+//! `apps::serve`, `coordinator::fabric`) transparently falls back to
+//! the bit-identical native datapath in `nic::rpc_unit`.
 
-use crate::coordinator::frame::{Frame, WORDS_PER_FRAME};
-use crate::nic::rpc_unit::RpcMeta;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Batch sizes emitted by aot.py (keep in sync with BATCH_SIZES there).
 pub const ARTIFACT_BATCHES: &[usize] = &[4, 16, 64, 256, 1024];
+
+/// True when this build can actually host a PJRT client (i.e. was
+/// compiled with `--features xla`). Tests that need the artifact
+/// datapath skip when false.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "xla")
+}
 
 /// Locate the artifacts directory: $DAGGER_ARTIFACTS, else
 /// `<manifest>/artifacts`, else `./artifacts`.
@@ -36,154 +53,243 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.txt").exists()
 }
 
-/// Shared PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-
-    pub fn platform(&self) -> String {
-        format!(
-            "{} ({} devices)",
-            self.client.platform_name(),
-            self.client.device_count()
-        )
-    }
-
-    /// Compile an HLO-text artifact into a loaded executable.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
-    }
-}
-
-/// The compiled NIC datapath for one batch size: fused steering +
-/// deserialize, mirroring `RpcUnit::process_rx` bit-for-bit.
-pub struct Datapath {
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-    pub invocations: u64,
-    pub frames_processed: u64,
-}
-
-impl Datapath {
-    /// Load `nic_datapath_b{batch}.hlo.txt` from the artifacts dir.
-    pub fn load(rt: &Runtime, batch: usize) -> Result<Datapath> {
-        let path = artifacts_dir().join(format!("nic_datapath_b{batch}.hlo.txt"));
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {} missing — run `make artifacts`",
-                path.display()
-            ));
+/// Pick the smallest compiled batch size >= n (or the largest).
+fn pick_batch_impl(n: usize) -> usize {
+    for &b in ARTIFACT_BATCHES {
+        if n <= b {
+            return b;
         }
-        Ok(Datapath { exe: rt.load_hlo_text(&path)?, batch, invocations: 0, frames_processed: 0 })
+    }
+    *ARTIFACT_BATCHES.last().unwrap()
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{artifacts_dir, pick_batch_impl};
+    use crate::coordinator::frame::{Frame, WORDS_PER_FRAME};
+    use crate::nic::rpc_unit::RpcMeta;
+    use anyhow::{anyhow, Context, Result};
+    use std::path::Path;
+
+    /// Shared PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Pick the smallest compiled batch size >= n (or the largest).
-    pub fn pick_batch(n: usize) -> usize {
-        for &b in ARTIFACT_BATCHES {
-            if n <= b {
-                return b;
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { client: xla::PjRtClient::cpu()? })
+        }
+
+        pub fn platform(&self) -> String {
+            format!(
+                "{} ({} devices)",
+                self.client.platform_name(),
+                self.client.device_count()
+            )
+        }
+
+        /// Compile an HLO-text artifact into a loaded executable.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(self.client.compile(&comp)?)
+        }
+    }
+
+    /// The compiled NIC datapath for one batch size: fused steering +
+    /// deserialize, mirroring `RpcUnit::process_rx` bit-for-bit.
+    pub struct Datapath {
+        exe: xla::PjRtLoadedExecutable,
+        pub batch: usize,
+        pub invocations: u64,
+        pub frames_processed: u64,
+    }
+
+    impl Datapath {
+        /// Load `nic_datapath_b{batch}.hlo.txt` from the artifacts dir.
+        pub fn load(rt: &Runtime, batch: usize) -> Result<Datapath> {
+            let path = artifacts_dir().join(format!("nic_datapath_b{batch}.hlo.txt"));
+            if !path.exists() {
+                return Err(anyhow!(
+                    "artifact {} missing — run `make artifacts`",
+                    path.display()
+                ));
             }
+            Ok(Datapath { exe: rt.load_hlo_text(&path)?, batch, invocations: 0, frames_processed: 0 })
         }
-        *ARTIFACT_BATCHES.last().unwrap()
+
+        /// Pick the smallest compiled batch size >= n (or the largest).
+        pub fn pick_batch(n: usize) -> usize {
+            pick_batch_impl(n)
+        }
+
+        /// Run one CCI-P batch through the artifact. `frames.len()` must be
+        /// <= self.batch; shorter batches are zero-padded (padding frames are
+        /// invalid by construction and steered to flow 0, then trimmed).
+        pub fn process(
+            &mut self,
+            frames: &[Frame],
+            lb_mode: u32,
+            n_flows: u32,
+        ) -> Result<(Vec<RpcMeta>, Vec<Vec<u32>>)> {
+            if frames.len() > self.batch {
+                return Err(anyhow!("batch {} > artifact batch {}", frames.len(), self.batch));
+            }
+            let mut words = vec![0u32; self.batch * WORDS_PER_FRAME];
+            for (i, f) in frames.iter().enumerate() {
+                words[i * WORDS_PER_FRAME..(i + 1) * WORDS_PER_FRAME]
+                    .copy_from_slice(&f.words);
+            }
+            let frames_lit = xla::Literal::vec1(&words)
+                .reshape(&[self.batch as i64, WORDS_PER_FRAME as i64])?;
+            let lb_lit = xla::Literal::scalar(lb_mode);
+            let nf_lit = xla::Literal::scalar(n_flows);
+
+            let result = self.exe.execute::<xla::Literal>(&[frames_lit, lb_lit, nf_lit])?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: (meta u32[B,4], lanes u32[16,B]).
+            let (meta_lit, lanes_lit) = result.to_tuple2()?;
+            let meta_v = meta_lit.to_vec::<u32>()?;
+            let lanes_v = lanes_lit.to_vec::<u32>()?;
+
+            self.invocations += 1;
+            self.frames_processed += frames.len() as u64;
+
+            let n = frames.len();
+            let meta = (0..n)
+                .map(|i| RpcMeta {
+                    flow: meta_v[i * 4],
+                    hash: meta_v[i * 4 + 1],
+                    checksum: meta_v[i * 4 + 2],
+                    valid: meta_v[i * 4 + 3] == 1,
+                })
+                .collect();
+            let lanes = (0..WORDS_PER_FRAME)
+                .map(|w| lanes_v[w * self.batch..w * self.batch + n].to_vec())
+                .collect();
+            Ok((meta, lanes))
+        }
     }
 
-    /// Run one CCI-P batch through the artifact. `frames.len()` must be
-    /// <= self.batch; shorter batches are zero-padded (padding frames are
-    /// invalid by construction and steered to flow 0, then trimmed).
-    pub fn process(
-        &mut self,
-        frames: &[Frame],
-        lb_mode: u32,
-        n_flows: u32,
-    ) -> Result<(Vec<RpcMeta>, Vec<Vec<u32>>)> {
-        if frames.len() > self.batch {
-            return Err(anyhow!("batch {} > artifact batch {}", frames.len(), self.batch));
+    /// The TX-direction artifact (serialize lanes -> frames).
+    pub struct TxPath {
+        exe: xla::PjRtLoadedExecutable,
+        pub batch: usize,
+    }
+
+    impl TxPath {
+        pub fn load(rt: &Runtime, batch: usize) -> Result<TxPath> {
+            let path = artifacts_dir().join(format!("nic_tx_b{batch}.hlo.txt"));
+            Ok(TxPath { exe: rt.load_hlo_text(&path)?, batch })
         }
-        let mut words = vec![0u32; self.batch * WORDS_PER_FRAME];
-        for (i, f) in frames.iter().enumerate() {
-            words[i * WORDS_PER_FRAME..(i + 1) * WORDS_PER_FRAME]
-                .copy_from_slice(&f.words);
+
+        pub fn process(&self, lanes: &[Vec<u32>]) -> Result<Vec<Frame>> {
+            if lanes.len() != WORDS_PER_FRAME {
+                return Err(anyhow!("need {WORDS_PER_FRAME} lanes"));
+            }
+            let n = lanes[0].len();
+            if n > self.batch {
+                return Err(anyhow!("batch too large"));
+            }
+            let mut words = vec![0u32; WORDS_PER_FRAME * self.batch];
+            for (w, lane) in lanes.iter().enumerate() {
+                words[w * self.batch..w * self.batch + n].copy_from_slice(lane);
+            }
+            let lit = xla::Literal::vec1(&words)
+                .reshape(&[WORDS_PER_FRAME as i64, self.batch as i64])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let v = out.to_vec::<u32>()?;
+            Ok((0..n)
+                .map(|i| {
+                    let mut f = Frame::zeroed();
+                    f.words
+                        .copy_from_slice(&v[i * WORDS_PER_FRAME..(i + 1) * WORDS_PER_FRAME]);
+                    f
+                })
+                .collect())
         }
-        let frames_lit = xla::Literal::vec1(&words)
-            .reshape(&[self.batch as i64, WORDS_PER_FRAME as i64])?;
-        let lb_lit = xla::Literal::scalar(lb_mode);
-        let nf_lit = xla::Literal::scalar(n_flows);
-
-        let result = self.exe.execute::<xla::Literal>(&[frames_lit, lb_lit, nf_lit])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: (meta u32[B,4], lanes u32[16,B]).
-        let (meta_lit, lanes_lit) = result.to_tuple2()?;
-        let meta_v = meta_lit.to_vec::<u32>()?;
-        let lanes_v = lanes_lit.to_vec::<u32>()?;
-
-        self.invocations += 1;
-        self.frames_processed += frames.len() as u64;
-
-        let n = frames.len();
-        let meta = (0..n)
-            .map(|i| RpcMeta {
-                flow: meta_v[i * 4],
-                hash: meta_v[i * 4 + 1],
-                checksum: meta_v[i * 4 + 2],
-                valid: meta_v[i * 4 + 3] == 1,
-            })
-            .collect();
-        let lanes = (0..WORDS_PER_FRAME)
-            .map(|w| lanes_v[w * self.batch..w * self.batch + n].to_vec())
-            .collect();
-        Ok((meta, lanes))
     }
 }
 
-/// The TX-direction artifact (serialize lanes -> frames).
-pub struct TxPath {
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-}
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    //! Stub implementations compiled when the `xla` feature is off.
+    //! Same API surface as the real module; every constructor fails, so
+    //! callers take their documented native-fallback path.
 
-impl TxPath {
-    pub fn load(rt: &Runtime, batch: usize) -> Result<TxPath> {
-        let path = artifacts_dir().join(format!("nic_tx_b{batch}.hlo.txt"));
-        Ok(TxPath { exe: rt.load_hlo_text(&path)?, batch })
+    use super::pick_batch_impl;
+    use crate::coordinator::frame::Frame;
+    use crate::nic::rpc_unit::RpcMeta;
+    use anyhow::{anyhow, Result};
+
+    fn unavailable() -> anyhow::Error {
+        anyhow!("PJRT runtime unavailable: built without the `xla` cargo feature (see README §Runtime layers)")
     }
 
-    pub fn process(&self, lanes: &[Vec<u32>]) -> Result<Vec<Frame>> {
-        if lanes.len() != WORDS_PER_FRAME {
-            return Err(anyhow!("need {WORDS_PER_FRAME} lanes"));
+    /// Stub PJRT client handle (never constructible).
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(unavailable())
         }
-        let n = lanes[0].len();
-        if n > self.batch {
-            return Err(anyhow!("batch too large"));
+
+        pub fn platform(&self) -> String {
+            "stub (xla feature disabled)".into()
         }
-        let mut words = vec![0u32; WORDS_PER_FRAME * self.batch];
-        for (w, lane) in lanes.iter().enumerate() {
-            words[w * self.batch..w * self.batch + n].copy_from_slice(lane);
+    }
+
+    /// Stub RX datapath; [`Datapath::load`] always errors.
+    pub struct Datapath {
+        pub batch: usize,
+        pub invocations: u64,
+        pub frames_processed: u64,
+    }
+
+    impl Datapath {
+        pub fn load(_rt: &Runtime, _batch: usize) -> Result<Datapath> {
+            Err(unavailable())
         }
-        let lit = xla::Literal::vec1(&words)
-            .reshape(&[WORDS_PER_FRAME as i64, self.batch as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<u32>()?;
-        Ok((0..n)
-            .map(|i| {
-                let mut f = Frame::zeroed();
-                f.words
-                    .copy_from_slice(&v[i * WORDS_PER_FRAME..(i + 1) * WORDS_PER_FRAME]);
-                f
-            })
-            .collect())
+
+        /// Pick the smallest compiled batch size >= n (or the largest).
+        pub fn pick_batch(n: usize) -> usize {
+            pick_batch_impl(n)
+        }
+
+        pub fn process(
+            &mut self,
+            _frames: &[Frame],
+            _lb_mode: u32,
+            _n_flows: u32,
+        ) -> Result<(Vec<RpcMeta>, Vec<Vec<u32>>)> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub TX datapath; [`TxPath::load`] always errors.
+    pub struct TxPath {
+        pub batch: usize,
+    }
+
+    impl TxPath {
+        pub fn load(_rt: &Runtime, _batch: usize) -> Result<TxPath> {
+            Err(unavailable())
+        }
+
+        pub fn process(&self, _lanes: &[Vec<u32>]) -> Result<Vec<Frame>> {
+            Err(unavailable())
+        }
     }
 }
+
+pub use pjrt::{Datapath, Runtime, TxPath};
 
 /// Engine selection for the RX datapath: the AOT artifact when available,
 /// otherwise the bit-identical native mirror.
@@ -199,7 +305,7 @@ pub enum Engine {
 impl Engine {
     /// Prefer the artifact; fall back to native with a log line.
     pub fn auto(batch: usize) -> Engine {
-        if !artifacts_available() {
+        if !artifacts_available() || !pjrt_enabled() {
             return Engine::Native;
         }
         match Runtime::cpu().and_then(|rt| Datapath::load(&rt, Datapath::pick_batch(batch))) {
@@ -252,5 +358,20 @@ mod tests {
     fn artifacts_dir_resolves() {
         let d = artifacts_dir();
         assert!(d.ends_with("artifacts"));
+    }
+
+    #[test]
+    fn engine_auto_falls_back_without_pjrt() {
+        if !pjrt_enabled() {
+            assert!(matches!(Engine::auto(4), Engine::Native));
+        }
+    }
+
+    #[test]
+    fn stub_surfaces_clear_error() {
+        if !pjrt_enabled() {
+            let e = Runtime::cpu().err().expect("stub must fail");
+            assert!(format!("{e}").contains("xla"), "{e}");
+        }
     }
 }

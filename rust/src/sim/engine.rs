@@ -1,4 +1,6 @@
-//! Discrete-event simulation engine.
+//! Discrete-event simulation engine — the substrate on which the §5
+//! evaluation testbed (Broadwell + Arria 10 over CCI-P, §5.1) is
+//! re-created as cycle-accounted models.
 //!
 //! A deterministic single-threaded event loop: events are (time, seq)
 //! ordered in a binary heap; `seq` breaks ties in scheduling order so runs

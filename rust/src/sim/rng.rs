@@ -3,7 +3,9 @@
 //! No `rand` crate is available offline; this is a faithful implementation
 //! of the public-domain xoshiro256** generator (Blackman & Vigna), which
 //! is the same family `rand_xoshiro` uses. Every experiment seeds its own
-//! generator so runs are bit-reproducible.
+//! generator so runs are bit-reproducible — a property the paper's
+//! hardware runs (§5.1) cannot offer, and the reason every BENCH_*
+//! artifact is byte-stable across machines.
 
 /// SplitMix64 — used to expand a single u64 seed into the xoshiro state.
 #[inline]

@@ -2,7 +2,8 @@
 //! style, 2 decimal digits of precision), counters, and summary records.
 //!
 //! All simulation latencies are recorded in integer nanoseconds; summaries
-//! are reported in microseconds to match the paper's tables.
+//! are reported in microseconds to match the paper's tables (Table 3's
+//! median RTTs, Table 4's p50/p90/p99 columns).
 
 /// Log-bucketed histogram over [1 ns, ~17 min] with bounded relative
 /// error (sub-bucket resolution 1/64 ≈ 1.6 %).
@@ -89,6 +90,42 @@ impl Histogram {
             }
         }
         self.max
+    }
+
+    /// Values at several quantiles in one histogram walk (how
+    /// `exp::rpc_sim` summarizes each sweep point; qs must be
+    /// ascending).
+    pub fn quantiles_ns(&self, qs: &[f64]) -> Vec<u64> {
+        debug_assert!(qs.windows(2).all(|w| w[0] <= w[1]), "quantiles must ascend");
+        if self.total == 0 {
+            return vec![0; qs.len()];
+        }
+        let mut out = Vec::with_capacity(qs.len());
+        let mut seen = 0u64;
+        let mut it = self.counts.iter().enumerate();
+        let mut cur = it.next();
+        for &q in qs {
+            let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+            // Advance the shared cursor until the cumulative count
+            // covers this quantile's rank.
+            loop {
+                match cur {
+                    Some((i, &c)) => {
+                        if seen + c >= rank {
+                            out.push(Self::bucket_value(i).clamp(self.min, self.max));
+                            break;
+                        }
+                        seen += c;
+                        cur = it.next();
+                    }
+                    None => {
+                        out.push(self.max);
+                        break;
+                    }
+                }
+            }
+        }
+        out
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -251,6 +288,25 @@ mod tests {
                 "v={v} got={got}"
             );
         }
+    }
+
+    #[test]
+    fn multi_quantile_matches_single() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let qs = [0.1, 0.5, 0.9, 0.99, 1.0];
+        let multi = h.quantiles_ns(&qs);
+        for (q, m) in qs.iter().zip(&multi) {
+            assert_eq!(*m, h.quantile_ns(*q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn multi_quantile_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantiles_ns(&[0.5, 0.99]), vec![0, 0]);
     }
 
     #[test]

@@ -116,6 +116,23 @@ impl PhaseBreakdown {
         p as f64 / tier_total as f64
     }
 
+    /// Flatten to `(tier, phase, total_ns, fraction_of_tier)` rows in a
+    /// stable (tier, phase) order — the machine-readable form behind the
+    /// Fig. 3 stacked bars, consumed by `exp::harness` artifacts.
+    pub fn rows(&self) -> Vec<(String, &'static str, u128, f64)> {
+        const ORDER: [Phase; 4] =
+            [Phase::Network, Phase::RpcProcessing, Phase::Queueing, Phase::AppLogic];
+        let mut out = Vec::new();
+        for tier in self.tiers() {
+            for phase in ORDER {
+                if let Some(&ns) = self.acc.get(&(tier.clone(), phase)) {
+                    out.push((tier.clone(), phase.name(), ns, self.fraction(&tier, phase)));
+                }
+            }
+        }
+        out
+    }
+
     pub fn tiers(&self) -> Vec<String> {
         let mut v: Vec<String> =
             self.acc.keys().map(|(t, _)| t.clone()).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
@@ -186,6 +203,23 @@ mod tests {
             + b.fraction("s1", Phase::Queueing);
         assert!((sum - 1.0).abs() < 1e-9);
         assert!((b.fraction("s1", Phase::Network) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_are_stable_and_fractional() {
+        let mut b = PhaseBreakdown::new();
+        b.add("s1", Phase::AppLogic, 500);
+        b.add("s1", Phase::Network, 300);
+        b.add("s0", Phase::Network, 100);
+        let rows = b.rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, "s0");
+        assert_eq!(rows[0].1, "network");
+        assert!((rows[0].3 - 1.0).abs() < 1e-9);
+        // s1: network listed before app, fractions 0.375 / 0.625.
+        assert_eq!(rows[1].1, "network");
+        assert!((rows[1].3 - 0.375).abs() < 1e-9);
+        assert_eq!(rows[2].1, "app");
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Integration: the experiment harness end-to-end — a real (fast)
+//! Fig. 10 sweep must produce a schema-valid JSON artifact whose data
+//! series carry the paper's anchor numbers, and the artifact must
+//! round-trip through the parser bit-for-bit.
+
+use dagger::cli::Args;
+use dagger::exp::harness::{json::Json, Figure, Value};
+use dagger::exp::{run_figure, spec, EXPERIMENTS};
+
+fn fast_args() -> Args {
+    Args::parse(&["--fast".to_string()])
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dagger_it_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn fig10_fast_sweep_writes_schema_valid_artifacts() {
+    let fig = run_figure("fig10", &fast_args()).expect("fig10 runs");
+    assert_eq!(fig.name, "fig10");
+    assert!(fig.n_rows() >= 7 + 7 + 5 + 1, "rows: {}", fig.n_rows());
+
+    let dir = tmp_dir("fig10");
+    let paths = fig.write_artifacts(&dir).expect("artifacts written");
+    assert!(paths[0].ends_with("BENCH_fig10.json"));
+    assert!(paths[1].ends_with("BENCH_fig10.csv"));
+
+    // JSON parses, carries the schema tag, and round-trips exactly.
+    let text = std::fs::read_to_string(&paths[0]).unwrap();
+    let j = Json::parse(&text).expect("valid JSON");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("dagger-bench/v1"));
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("fig10"));
+    let back = Figure::from_json(&text).expect("round-trip");
+    assert_eq!(back, fig);
+
+    // CSV has the union header and one line per data row.
+    let csv = std::fs::read_to_string(&paths[1]).unwrap();
+    assert!(csv.starts_with("series,iface,"), "{}", &csv[..60.min(csv.len())]);
+    assert_eq!(csv.lines().count(), 1 + fig.n_rows());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig10_fast_sweep_hits_paper_anchors() {
+    let fig = run_figure("fig10", &fast_args()).unwrap();
+    let sat = fig
+        .series
+        .iter()
+        .find(|s| s.label == "saturation")
+        .expect("saturation series");
+    let col = |name: &str| sat.columns.iter().position(|c| c == name).unwrap();
+    let (iface_c, thr_c) = (col("iface"), col("achieved_mrps"));
+    let thr_of = |name: &str| -> f64 {
+        let row = sat
+            .rows
+            .iter()
+            .find(|r| matches!(&r[iface_c], Value::Str(s) if s == name))
+            .unwrap_or_else(|| panic!("row for {name}"));
+        match row[thr_c] {
+            Value::F64(f) => f,
+            Value::U64(u) => u as f64,
+            _ => panic!("non-numeric throughput"),
+        }
+    };
+    // Fig. 10 anchors, with slack for the fast (1/8 duration) run.
+    let upi4 = thr_of("upi(B=4)");
+    assert!((11.0..13.5).contains(&upi4), "upi(B=4) {upi4}");
+    let db = thr_of("doorbell");
+    assert!((3.8..4.8).contains(&db), "doorbell {db}");
+    let dbb = thr_of("doorbell-batch(B=11)");
+    assert!((10.0..11.8).contains(&dbb), "doorbell-batch {dbb}");
+    // Interface ordering: UPI > doorbell-batch > doorbell.
+    assert!(upi4 > dbb && dbb > db);
+
+    // Payload sweep: throughput must fall monotonically with RPC size.
+    let ps = fig
+        .series
+        .iter()
+        .find(|s| s.label == "upi-payload-sweep")
+        .expect("payload sweep series");
+    let thr_i = ps.columns.iter().position(|c| c == "achieved_mrps").unwrap();
+    let thrs: Vec<f64> = ps
+        .rows
+        .iter()
+        .map(|r| match r[thr_i] {
+            Value::F64(f) => f,
+            Value::U64(u) => u as f64,
+            _ => panic!(),
+        })
+        .collect();
+    assert_eq!(thrs.len(), 5);
+    assert!(
+        thrs.windows(2).all(|w| w[1] <= w[0] * 1.02),
+        "payload sweep not monotone: {thrs:?}"
+    );
+}
+
+#[test]
+fn every_registered_experiment_names_a_bench_target() {
+    assert_eq!(EXPERIMENTS.len(), 12);
+    for s in EXPERIMENTS {
+        assert!(spec(s.name).is_some());
+        assert!(!s.bench.is_empty());
+        assert!(s.paper_ref.contains('§'), "{} missing paper ref", s.name);
+    }
+}
+
+#[test]
+fn cheap_experiments_write_artifacts_via_cli_path() {
+    // The `dagger sim --out-dir` path shares Figure::write_artifacts;
+    // exercise it for an analytic (no-DES) experiment.
+    let fig = run_figure("table1", &fast_args()).unwrap();
+    let dir = tmp_dir("table1");
+    let paths = fig.write_artifacts(&dir).unwrap();
+    let parsed = Figure::from_json(&std::fs::read_to_string(&paths[0]).unwrap()).unwrap();
+    assert_eq!(parsed.name, "table1");
+    assert!(parsed.render_text().contains("200 MHz"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

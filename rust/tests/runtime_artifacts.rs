@@ -7,10 +7,14 @@
 use dagger::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
 use dagger::nic::load_balancer::LbMode;
 use dagger::nic::rpc_unit::RpcUnit;
-use dagger::runtime::{artifacts_available, Datapath, Runtime, TxPath};
+use dagger::runtime::{artifacts_available, pjrt_enabled, Datapath, Runtime, TxPath};
 use dagger::sim::Rng;
 
 fn skip() -> bool {
+    if !pjrt_enabled() {
+        eprintln!("SKIP: built without the `xla` feature — PJRT datapath unavailable");
+        return true;
+    }
     if !artifacts_available() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return true;

@@ -1,0 +1,268 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, providing the subset of its API that the `dagger` crate uses:
+//!
+//! * [`Error`] — an opaque error carrying a message and an optional
+//!   source chain (like `anyhow::Error`, it deliberately does **not**
+//!   implement `std::error::Error`, which is what makes the blanket
+//!   `From<E: std::error::Error>` conversion coherent);
+//! * [`Result`] — `Result<T, Error>` alias with a defaultable error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/format constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Formatting matches anyhow's conventions closely enough for log
+//! output: `{}` prints the outermost message, `{:#}` prints the full
+//! `outer: cause: root` chain, and `{:?}` prints the message plus a
+//! `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque error: a display message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// Internal adapter that lets a whole [`Error`] act as the `source` of
+/// an outer context layer. Implements `std::error::Error` (which
+/// `Error` itself deliberately does not).
+struct ChainLink {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl fmt::Display for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl StdError for ChainLink {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|s| s.as_ref() as _)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with `Error` as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with an outer context message; the previous
+    /// error becomes the new error's source.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(ChainLink { msg: self.msg, source: self.source })),
+        }
+    }
+
+    /// The root cause's display text (the innermost message).
+    pub fn root_cause_text(&self) -> String {
+        let mut cur: &(dyn StdError + 'static) = match &self.source {
+            Some(s) => s.as_ref(),
+            None => return self.msg.clone(),
+        };
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur.to_string()
+    }
+
+    fn chain_texts(&self) -> Vec<String> {
+        let mut out = vec![self.msg.clone()];
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|s| s.as_ref() as _);
+        while let Some(e) = cur {
+            out.push(e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut texts = self.chain_texts();
+            // Skip duplicated adjacent messages (Error::new copies the
+            // source's text into msg).
+            texts.dedup();
+            write!(f, "{}", texts.join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut texts = self.chain_texts();
+        texts.dedup();
+        write!(f, "{}", texts[0])?;
+        if texts.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for t in &texts[1..] {
+                write!(f, "\n    {t}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// Attach context to fallible values (`Result` / `Option`).
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("inline {n}");
+        assert_eq!(b.to_string(), "inline 3");
+        let c = anyhow!("args {} and {}", 1, 2);
+        assert_eq!(c.to_string(), "args 1 and 2");
+        let d = anyhow!(io_err());
+        assert_eq!(d.to_string(), "file missing");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn ensure_checks() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(11).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            Err::<String, std::io::Error>(io_err())?;
+            unreachable!()
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_chains_and_alt_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}
