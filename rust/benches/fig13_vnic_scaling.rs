@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig13_vnic_scaling` — regenerates Fig. 13
+//! (§4.8/§5.7): aggregate and per-tenant throughput of 1→8 virtualized
+//! NIC instances sharing the CCI-P bus through the round-robin arbiter,
+//! plus the solo-vs-shared interference breakdown and the multi-core
+//! server-dispatch comparison.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--seed N`,
+//! `--duration-us N`, `--out-dir DIR`.
+//! Writes `BENCH_fig13.json` / `BENCH_fig13.csv` (default `./bench_out`).
+//! Expected: aggregate throughput scales with vNIC count until the
+//! shared UPI endpoint (~42 Mrps e2e) binds; per-tenant throughput
+//! degrades gracefully and evenly. See REPRODUCING.md §Fig. 13.
+
+fn main() {
+    dagger::exp::harness::bench_main("fig13");
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig14_vnic_latency` — regenerates Fig. 14
+//! (§4.8/§5.7): per-tenant tail latency under asymmetric multi-tenant
+//! load — one light "victim" vNIC against background tenants swept
+//! toward bus saturation, compared to the victim's solo baseline.
+//!
+//! Flags (after `--`): `--fast` (1/8 duration), `--seed N`,
+//! `--duration-us N`, `--out-dir DIR`.
+//! Writes `BENCH_fig14.json` / `BENCH_fig14.csv` (default `./bench_out`).
+//! Expected: the round-robin bus arbiter bounds interference — the
+//! victim keeps its throughput while its p99 inflates modestly (shared
+//! p99 ≥ solo p99). See REPRODUCING.md §Fig. 14.
+
+fn main() {
+    dagger::exp::harness::bench_main("fig14");
+}

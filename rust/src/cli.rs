@@ -59,7 +59,8 @@ COMMANDS:
     info                         platform + artifact status
     list                         list the reproducible paper experiments
     sim <experiment>             run one paper experiment (see `dagger list`)
-                                 [--fast] [--out-dir DIR writes
+                                 [--fast] [--seed N] [--duration-us N]
+                                 [--out-dir DIR writes
                                  BENCH_<name>.json/.csv artifacts]
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]

@@ -547,12 +547,66 @@ impl Sweep {
     }
 
     /// Run every grid point through the discrete-event simulator.
+    ///
+    /// Grid points are independent, so they run on a [`std::thread`]
+    /// pool sized to the available cores (this is what makes the
+    /// `bench_main`-driven figure sweeps use the whole machine). Output
+    /// ordering is deterministic — results come back in grid order, and
+    /// each point's simulation is seeded by its own config — so
+    /// artifacts are byte-identical to a serial run.
     pub fn run(&self) -> Vec<SweepPoint> {
+        run_grid(self.grid())
+    }
+
+    /// Serial reference path (used by tests to pin down determinism).
+    pub fn run_serial(&self) -> Vec<SweepPoint> {
         self.grid()
             .into_iter()
             .map(|cfg| SweepPoint { result: rpc_sim::run(cfg.clone()), cfg })
             .collect()
     }
+}
+
+/// Execute a list of grid points on a thread pool, preserving input
+/// order in the output.
+pub fn run_grid(configs: Vec<SimConfig>) -> Vec<SweepPoint> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let n = configs.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    if workers <= 1 {
+        return configs
+            .into_iter()
+            .map(|cfg| SweepPoint { result: rpc_sim::run(cfg.clone()), cfg })
+            .collect();
+    }
+
+    // Work-stealing by index: each worker claims the next unclaimed grid
+    // point; results carry their index so the output is re-sorted into
+    // deterministic grid order.
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, SweepPoint)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let cfg = configs[i].clone();
+                let point = SweepPoint { result: rpc_sim::run(cfg.clone()), cfg };
+                done.lock().unwrap().push((i, point));
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    debug_assert_eq!(out.len(), n);
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, p)| p).collect()
 }
 
 /// Standard sweep columns (shared across rpc_sim-backed figures so CSV
@@ -624,7 +678,9 @@ pub fn artifact_dir(args: &Args) -> PathBuf {
 /// experiment end-to-end, print its table, write its artifacts.
 ///
 /// Flags (after `--` under `cargo bench`): `--fast` (1/8 duration),
-/// `--out-dir DIR`, `--no-artifacts`.
+/// `--seed N` (reseed every simulation), `--duration-us N` (override
+/// the simulated duration; warmup becomes N/8), `--out-dir DIR`,
+/// `--no-artifacts`.
 pub fn bench_main(name: &str) -> ! {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
@@ -1091,6 +1147,30 @@ mod tests {
         let grid = Sweep::new(base.clone()).grid();
         assert_eq!(grid.len(), 1);
         assert_eq!(grid[0].offered_mrps, 3.0);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_run() {
+        // The thread-pooled path must produce byte-identical artifacts
+        // to the serial reference: same configs in the same order, same
+        // per-point results (each point seeds its own simulation).
+        let sweep = Sweep::new(SimConfig {
+            duration_us: 1_200,
+            warmup_us: 150,
+            ..Default::default()
+        })
+        .ifaces(&[Iface::Doorbell, Iface::Upi(4)])
+        .loads(&[0.5, 2.0, 4.0]);
+        let par = sweep.run();
+        let ser = sweep.run_serial();
+        assert_eq!(par.len(), ser.len());
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.cfg.iface, s.cfg.iface);
+            assert_eq!(p.cfg.offered_mrps, s.cfg.offered_mrps);
+            assert_eq!(p.result.completed, s.result.completed);
+            assert_eq!(p.result.p99_us, s.result.p99_us);
+            assert_eq!(sweep_row(&p.cfg, &p.result), sweep_row(&s.cfg, &s.result));
+        }
     }
 
     #[test]

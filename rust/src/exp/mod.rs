@@ -6,7 +6,8 @@
 //! * [`EXPERIMENTS`] — the registry: canonical name, title, paper
 //!   cross-reference, and owning `cargo bench` target per experiment.
 //! * [`run_figure`] — dispatch by name (aliases included), honoring the
-//!   shared `--fast` flag (1/8 simulated duration).
+//!   shared flags ([`RunOpts`]): `--fast` (1/8 simulated duration),
+//!   `--seed N`, `--duration-us N`.
 //! * [`run_named`] — text-only convenience used by `dagger sim`.
 //!
 //! REPRODUCING.md documents, per figure, the exact command, the artifact
@@ -15,6 +16,7 @@
 pub mod harness;
 pub mod microsim;
 pub mod rpc_sim;
+pub mod vnic;
 
 use crate::apps::{flightreg, socialnet};
 use crate::cli::Args;
@@ -35,12 +37,84 @@ pub struct ExpSpec {
     pub bench: &'static str,
     /// Accepted alternative names.
     pub aliases: &'static [&'static str],
-    /// The driver: `fast` -> regenerated figure. Keeping it in the
+    /// The driver: run options -> regenerated figure. Keeping it in the
     /// registry means dispatch cannot drift from the entry list.
-    pub run: fn(bool) -> Figure,
+    pub run: fn(&RunOpts) -> Figure,
 }
 
-/// All 12 figure/table reproductions, in paper order.
+/// Per-invocation options threaded from the CLI into every driver.
+///
+/// `--fast` runs 1/8 simulated durations; `--seed N` reseeds every
+/// simulation (artifacts stay deterministic per seed); `--duration-us N`
+/// overrides the simulated duration outright (warmup becomes N/8).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOpts {
+    pub fast: bool,
+    pub seed: Option<u64>,
+    pub duration_us: Option<u64>,
+}
+
+impl RunOpts {
+    /// Parse the shared flags; a present-but-invalid value is an error,
+    /// not a silent fallback (a bench that quietly ignores
+    /// `--duration-us` would run minutes instead of seconds).
+    pub fn from_args(args: &Args) -> anyhow::Result<RunOpts> {
+        let parse_u64 = |key: &str| -> anyhow::Result<Option<u64>> {
+            match args.get(key) {
+                None => Ok(None),
+                Some(v) => v.parse().map(Some).map_err(|_| {
+                    anyhow::anyhow!("--{key}: invalid value '{v}' (want a non-negative integer)")
+                }),
+            }
+        };
+        let duration_us = parse_u64("duration-us")?;
+        if let Some(d) = duration_us {
+            // Warmup takes duration/8; below 8 µs the measurement window
+            // collapses to zero and every rate becomes NaN.
+            anyhow::ensure!(d >= 8, "--duration-us: {d} too small (minimum 8 µs)");
+        }
+        Ok(RunOpts { fast: args.get_flag("fast"), seed: parse_u64("seed")?, duration_us })
+    }
+
+    /// Simulated duration for a driver whose full run is `full_us`.
+    pub fn dur(&self, full_us: u64) -> u64 {
+        if let Some(d) = self.duration_us {
+            return d.max(1);
+        }
+        if self.fast {
+            (full_us / 8).max(1)
+        } else {
+            full_us
+        }
+    }
+
+    /// Warmup companion to [`RunOpts::dur`]: an explicit duration
+    /// override replaces the driver's warmup with duration/8.
+    pub fn warmup(&self, full_us: u64) -> u64 {
+        if let Some(d) = self.duration_us {
+            return (d / 8).max(1);
+        }
+        if self.fast {
+            (full_us / 8).max(1)
+        } else {
+            full_us
+        }
+    }
+
+    /// The effective seed (default: `SimConfig::default().seed`).
+    pub fn seed_or_default(&self) -> u64 {
+        self.seed.unwrap_or_else(|| SimConfig::default().seed)
+    }
+
+    /// Base [`SimConfig`] carrying the seed override — drivers build
+    /// their configs with `..opts.base()` so `--seed` reaches every
+    /// simulation.
+    pub fn base(&self) -> SimConfig {
+        SimConfig { seed: self.seed_or_default(), ..Default::default() }
+    }
+}
+
+/// All 14 figure/table reproductions, in paper order.
 pub const EXPERIMENTS: &[ExpSpec] = &[
     ExpSpec {
         name: "fig3",
@@ -99,6 +173,22 @@ pub const EXPERIMENTS: &[ExpSpec] = &[
         run: fig12,
     },
     ExpSpec {
+        name: "fig13",
+        title: "Fig. 13 — virtualized NIC throughput scaling (N vNICs, shared CCI-P bus)",
+        paper_ref: "§4.8/§5.7, Figure 13",
+        bench: "fig13_vnic_scaling",
+        aliases: &["fig13_vnic_scaling", "vnic-scaling"],
+        run: fig13,
+    },
+    ExpSpec {
+        name: "fig14",
+        title: "Fig. 14 — per-tenant tail latency under asymmetric multi-tenant load",
+        paper_ref: "§4.8/§5.7, Figure 14",
+        bench: "fig14_vnic_latency",
+        aliases: &["fig14_vnic_latency", "vnic-latency"],
+        run: fig14,
+    },
+    ExpSpec {
         name: "table1",
         title: "Table 1 — Dagger NIC implementation specifications",
         paper_ref: "§4.6, Table 1",
@@ -147,38 +237,31 @@ pub fn spec(name: &str) -> Option<&'static ExpSpec> {
         .find(|s| s.name == name || s.aliases.contains(&name))
 }
 
-/// Dispatch by experiment name; `--fast` runs 1/8 durations.
+/// Dispatch by experiment name, honoring the shared `--fast`, `--seed`
+/// and `--duration-us` flags.
 pub fn run_figure(name: &str, args: &Args) -> anyhow::Result<Figure> {
-    let fast = args.get_flag("fast");
+    let opts = RunOpts::from_args(args)?;
     let Some(spec) = spec(name) else {
         let names: Vec<&str> = EXPERIMENTS.iter().map(|s| s.name).collect();
         anyhow::bail!("unknown experiment '{name}' (try one of: {})", names.join("|"));
     };
-    Ok((spec.run)(fast))
+    Ok((spec.run)(&opts))
 }
 
-/// `fast`-signature adapters for the drivers that are already fast.
-fn fig4_driver(_fast: bool) -> Figure {
+/// Adapters for the analytic drivers (no DES — options don't apply).
+fn fig4_driver(_opts: &RunOpts) -> Figure {
     fig4()
 }
-fn table1_driver(_fast: bool) -> Figure {
+fn table1_driver(_opts: &RunOpts) -> Figure {
     table1()
 }
-fn ablation_conn_cache_driver(_fast: bool) -> Figure {
+fn ablation_conn_cache_driver(_opts: &RunOpts) -> Figure {
     ablation_conn_cache()
 }
 
 /// Text-only rendering of an experiment (the `dagger sim` path).
 pub fn run_named(name: &str, args: &Args) -> anyhow::Result<String> {
     Ok(run_figure(name, args)?.render_text())
-}
-
-fn dur(fast: bool, full_us: u64) -> u64 {
-    if fast {
-        full_us / 8
-    } else {
-        full_us
-    }
 }
 
 fn fig_for(name: &str) -> Figure {
@@ -190,13 +273,16 @@ fn fig_for(name: &str) -> Figure {
 
 /// Networking as a fraction of per-tier latency, three load levels
 /// (Social Network over kernel TCP/IP + Thrift-style RPC).
-pub fn fig3(fast: bool) -> Figure {
+pub fn fig3(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig3");
     let loads = [0.5, 6.0, 12.0]; // Krps — low/mid/near-saturation
-    let d = dur(fast, 300_000);
+    let d = opts.dur(300_000);
+    let seed = opts.seed_or_default();
     let runs: Vec<_> = loads
         .iter()
-        .map(|&l| microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, 1), l, d, d / 10))
+        .map(|&l| {
+            microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, seed), l, d, d / 10)
+        })
         .collect();
 
     let s = fig.series("networking-fraction", &["tier", "load_krps", "net_frac_pct"]);
@@ -259,19 +345,21 @@ pub fn fig4() -> Figure {
 // ---------------------------------------------------------------- Fig. 5
 
 /// CPU interference between networking and application logic.
-pub fn fig5(fast: bool) -> Figure {
+pub fn fig5(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig5");
-    let d = dur(fast, 300_000);
+    let d = opts.dur(300_000);
+    let seed = opts.seed_or_default();
     let loads = [0.5f64, 6.0, 11.0];
 
     let mut sep_rows = Vec::new();
     let mut shared_rows = Vec::new();
     for (i, &load) in loads.iter().enumerate() {
-        let sep = microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, 1), load, d, d / 10);
+        let sep =
+            microsim::run(socialnet::app(socialnet::Stack::KernelTcp, 1, seed), load, d, d / 10);
         // Shared cores: network interrupt handling steals cycles from the
         // application — model as load-dependent service-time inflation
         // (cache + scheduler contention grow with utilization).
-        let mut shared_app = socialnet::app(socialnet::Stack::KernelTcp, 1, 1);
+        let mut shared_app = socialnet::app(socialnet::Stack::KernelTcp, 1, seed);
         let inflate = 1.25 + 0.25 * i as f64;
         for t in &mut shared_app.tiers {
             t.rpc_overhead_ns = (t.rpc_overhead_ns as f64 * inflate) as u64;
@@ -302,12 +390,12 @@ pub fn fig5(fast: bool) -> Figure {
 
 /// Single-core throughput + latency per CPU-NIC interface, plus the
 /// payload-size sweep and the best-effort peak.
-pub fn fig10(fast: bool) -> Figure {
+pub fn fig10(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig10");
     let base = SimConfig {
-        duration_us: dur(fast, 20_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
+        duration_us: opts.dur(20_000),
+        warmup_us: opts.warmup(2_000),
+        ..opts.base()
     };
     let cases: Vec<Iface> = vec![
         Iface::WqeByMmio,
@@ -363,12 +451,12 @@ pub fn fig10(fast: bool) -> Figure {
 // --------------------------------------------------------------- Fig. 11
 
 /// Latency-vs-load curves (left panel): B=1, B=4, adaptive batching.
-pub fn fig11_latency_throughput(fast: bool) -> Figure {
+pub fn fig11_latency_throughput(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig11");
     let base = SimConfig {
-        duration_us: dur(fast, 16_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
+        duration_us: opts.dur(16_000),
+        warmup_us: opts.warmup(2_000),
+        ..opts.base()
     };
     let loads = [0.5, 2.0, 4.0, 6.0, 7.0, 9.0, 11.0, 12.0, 12.4];
     for (label, iface, adaptive) in [
@@ -385,7 +473,7 @@ pub fn fig11_latency_throughput(fast: bool) -> Figure {
 }
 
 /// Thread scalability (right panel) + the raw-UPI-read ceiling.
-pub fn fig11_threads(fast: bool) -> Figure {
+pub fn fig11_threads(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig11-threads");
     let s = fig.series(
         "thread-scaling",
@@ -397,9 +485,9 @@ pub fn fig11_threads(fast: bool) -> Figure {
             n_threads: n,
             offered_mrps: 14.0 * n as f64, // drive past per-thread capacity
             server_ring_entries: 4096,
-            duration_us: dur(fast, 16_000),
-            warmup_us: dur(fast, 2_000),
-            ..Default::default()
+            duration_us: opts.dur(16_000),
+            warmup_us: opts.warmup(2_000),
+            ..opts.base()
         });
         // Raw idle UPI reads (red line): per-thread issue rate bounded by
         // the endpoint occupancy; ceiling ~83 M lines/s.
@@ -419,7 +507,7 @@ pub fn fig11_threads(fast: bool) -> Figure {
 // --------------------------------------------------------------- Fig. 12
 
 /// memcached + MICA over Dagger: latency + peak single-core throughput.
-pub fn fig12(fast: bool) -> Figure {
+pub fn fig12(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("fig12");
     let s = fig.series(
         "kvs",
@@ -442,9 +530,9 @@ pub fn fig12(fast: bool) -> Figure {
                 offered_mrps: 0.0,
                 closed_window: 64,
                 handler: handler.clone(),
-                duration_us: dur(fast, 16_000),
-                warmup_us: dur(fast, 2_000),
-                ..Default::default()
+                duration_us: opts.dur(16_000),
+                warmup_us: opts.warmup(2_000),
+                ..opts.base()
             });
             // Latency at ~70% of peak (the paper's "under a 0.6 Mrps
             // load" operating point for memcached); adaptive batching
@@ -454,9 +542,9 @@ pub fn fig12(fast: bool) -> Figure {
                 offered_mrps: peak.achieved_mrps * 0.70,
                 handler,
                 adaptive_batch: true,
-                duration_us: dur(fast, 16_000),
-                warmup_us: dur(fast, 2_000),
-                ..Default::default()
+                duration_us: opts.dur(16_000),
+                warmup_us: opts.warmup(2_000),
+                ..opts.base()
             });
             s.push(vec![
                 store.into(),
@@ -474,9 +562,9 @@ pub fn fig12(fast: bool) -> Figure {
         offered_mrps: 0.0,
         closed_window: 64,
         handler: HandlerCost::Kvs { set_ns: 110, get_ns: 55, set_fraction: 0.05 },
-        duration_us: dur(fast, 16_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
+        duration_us: opts.dur(16_000),
+        warmup_us: opts.warmup(2_000),
+        ..opts.base()
     });
     s.push(vec![
         "mica".into(),
@@ -487,6 +575,212 @@ pub fn fig12(fast: bool) -> Figure {
         Value::Null,
     ]);
     fig.note("paper: memcached ~2.8-3.2us median, MICA 4.8-7.8 Mrps single-core; the stores, not the 12.4 Mrps RPC fabric, are the bottleneck");
+    fig
+}
+
+// ---------------------------------------------------------- Fig. 13 / 14
+
+/// Fig. 13 — virtualized NIC throughput scaling: 1→8 vNIC instances
+/// sharing the CCI-P bus, each tenant driven near its single-core
+/// capacity, plus the solo-vs-shared interference breakdown and the
+/// multi-core server-dispatch comparison.
+pub fn fig13(opts: &RunOpts) -> Figure {
+    let mut fig = fig_for("fig13");
+    let tenant = SimConfig {
+        iface: Iface::Upi(4),
+        offered_mrps: 12.0,
+        duration_us: opts.dur(8_000),
+        warmup_us: opts.warmup(1_000),
+        ..opts.base()
+    };
+
+    // Solo baseline: one tenant alone on the bus (identical for every N
+    // in the symmetric sweep).
+    let solo = vnic::run_solo(&vnic::VnicConfig::symmetric(1, tenant.clone()), 0);
+
+    let s = fig.series(
+        "vnic-scaling",
+        &[
+            "n_vnics",
+            "offered_per_vnic_mrps",
+            "aggregate_mrps",
+            "mean_tenant_mrps",
+            "min_tenant_mrps",
+            "worst_p99_us",
+            "bus_util",
+            "mean_bus_wait_ns",
+        ],
+    );
+    let mut shared_t0 = Vec::new();
+    for n in 1..=8usize {
+        let r = vnic::run(vnic::VnicConfig::symmetric(n, tenant.clone()));
+        let wait = r.mean_bus_wait_ns.iter().sum::<f64>() / n as f64;
+        s.push(vec![
+            n.into(),
+            tenant.offered_mrps.into(),
+            r.aggregate_mrps().into(),
+            r.mean_tenant_mrps().into(),
+            r.min_tenant_mrps().into(),
+            r.worst_p99_us().into(),
+            r.bus_util.into(),
+            wait.into(),
+        ]);
+        shared_t0.push((n, r.per_tenant[0].clone()));
+    }
+
+    // Interference breakdown (Fig. 5 methodology on the shared bus):
+    // tenant 0's solo run vs its share of the N-tenant run.
+    let s = fig.series(
+        "interference-breakdown",
+        &[
+            "n_vnics",
+            "solo_mrps",
+            "shared_mrps",
+            "thr_loss_pct",
+            "solo_p99_us",
+            "shared_p99_us",
+            "p99_inflation_x",
+        ],
+    );
+    for (n, shared) in shared_t0 {
+        let i = vnic::Interference { tenant: 0, solo: solo.clone(), shared };
+        s.push(vec![
+            n.into(),
+            i.solo.achieved_mrps.into(),
+            i.shared.achieved_mrps.into(),
+            i.throughput_loss_pct().into(),
+            i.solo.p99_us.into(),
+            i.shared.p99_us.into(),
+            i.p99_inflation_x().into(),
+        ]);
+    }
+
+    // Multi-core server dispatch at 8 vNICs: dedicated per-tenant cores
+    // vs shared worker pools.
+    let s = fig.series("dispatch-8vnics", &["dispatch", "aggregate_mrps", "worst_p99_us"]);
+    for (name, dispatch) in [
+        ("per-tenant-core", vnic::Dispatch::PerTenant),
+        ("shared-pool-8", vnic::Dispatch::SharedPool { workers: 8 }),
+        ("shared-pool-4", vnic::Dispatch::SharedPool { workers: 4 }),
+    ] {
+        let r = vnic::run(vnic::VnicConfig {
+            dispatch,
+            ..vnic::VnicConfig::symmetric(8, tenant.clone())
+        });
+        s.push(vec![name.into(), r.aggregate_mrps().into(), r.worst_p99_us().into()]);
+    }
+    fig.note(
+        "aggregate throughput grows with vNIC count until the shared UPI endpoint \
+         (~42 Mrps e2e) binds; round-robin arbitration degrades tenants evenly",
+    );
+    fig
+}
+
+/// Fig. 14 — per-tenant tail latency under asymmetric load: one light
+/// "victim" tenant against background tenants swept toward bus
+/// saturation, vs its solo baseline.
+pub fn fig14(opts: &RunOpts) -> Figure {
+    let mut fig = fig_for("fig14");
+    let mk = |offered: f64| SimConfig {
+        iface: Iface::Upi(4),
+        offered_mrps: offered,
+        duration_us: opts.dur(8_000),
+        warmup_us: opts.warmup(1_000),
+        ..opts.base()
+    };
+    let victim_load = 2.0;
+    let n_bg = 5usize;
+    let solo = vnic::run_solo(&vnic::VnicConfig::symmetric(1, mk(victim_load)), 0);
+
+    let s = fig.series(
+        "victim-tail-latency",
+        &[
+            "bg_load_per_vnic_mrps",
+            "victim_p50_us",
+            "victim_p99_us",
+            "solo_p50_us",
+            "solo_p99_us",
+            "p99_inflation_x",
+            "victim_achieved_mrps",
+            "bus_util",
+        ],
+    );
+    let mut heaviest: Option<vnic::VnicResult> = None;
+    for &bg in &[0.5, 2.0, 4.0, 6.0, 8.0, 10.0, 12.0] {
+        let mut tenants = vec![mk(victim_load)];
+        tenants.extend(std::iter::repeat(mk(bg)).take(n_bg));
+        let r = vnic::run(vnic::VnicConfig { tenants, ..Default::default() });
+        let i = vnic::Interference {
+            tenant: 0,
+            solo: solo.clone(),
+            shared: r.per_tenant[0].clone(),
+        };
+        s.push(vec![
+            bg.into(),
+            i.shared.p50_us.into(),
+            i.shared.p99_us.into(),
+            i.solo.p50_us.into(),
+            i.solo.p99_us.into(),
+            i.p99_inflation_x().into(),
+            i.shared.achieved_mrps.into(),
+            r.bus_util.into(),
+        ]);
+        heaviest = Some(r);
+    }
+
+    // Per-tenant accounting at the heaviest operating point.
+    let hres = heaviest.expect("sweep is non-empty");
+    let s = fig.series(
+        "per-tenant-at-saturation",
+        &[
+            "tenant",
+            "offered_mrps",
+            "achieved_mrps",
+            "p50_us",
+            "p99_us",
+            "mean_bus_wait_ns",
+            "lines_granted",
+        ],
+    );
+    for (t, p) in hres.per_tenant.iter().enumerate() {
+        let label = if t == 0 { "victim".to_string() } else { format!("bg{t}") };
+        s.push(vec![
+            label.into(),
+            p.offered_mrps.into(),
+            p.achieved_mrps.into(),
+            p.p50_us.into(),
+            p.p99_us.into(),
+            hres.mean_bus_wait_ns[t].into(),
+            hres.lines_granted[t].into(),
+        ]);
+    }
+
+    // Multi-core dispatch under a CPU-heavy handler: a shared pool lets
+    // loaded tenants borrow the light tenant's idle core.
+    let s = fig.series(
+        "dispatch-under-asymmetry",
+        &["dispatch", "victim_p99_us", "aggregate_mrps"],
+    );
+    let kvs = HandlerCost::Kvs { set_ns: 700, get_ns: 400, set_fraction: 0.5 };
+    for (name, dispatch) in [
+        ("per-tenant-core", vnic::Dispatch::PerTenant),
+        ("shared-pool-6", vnic::Dispatch::SharedPool { workers: 6 }),
+    ] {
+        let mut tenants = vec![SimConfig { handler: kvs.clone(), ..mk(0.5) }];
+        tenants.extend(
+            std::iter::repeat(SimConfig { handler: kvs.clone(), ..mk(2.0) }).take(n_bg),
+        );
+        let r = vnic::run(vnic::VnicConfig { tenants, dispatch, ..Default::default() });
+        s.push(vec![
+            name.into(),
+            r.per_tenant[0].p99_us.into(),
+            r.aggregate_mrps().into(),
+        ]);
+    }
+    fig.note(
+        "the round-robin bus arbiter bounds inter-tenant interference: the victim keeps \
+         its throughput and its p99 inflates modestly even with 5 saturating neighbors",
+    );
     fig
 }
 
@@ -528,7 +822,7 @@ pub fn table1() -> Figure {
 
 // --------------------------------------------------------------- Table 3
 
-pub fn table3(fast: bool) -> Figure {
+pub fn table3(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("table3");
     let s = fig.series(
         "platforms",
@@ -549,16 +843,16 @@ pub fn table3(fast: bool) -> Figure {
     let lat = rpc_sim::run(SimConfig {
         iface: Iface::Upi(1),
         offered_mrps: 0.5,
-        duration_us: dur(fast, 16_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
+        duration_us: opts.dur(16_000),
+        warmup_us: opts.warmup(2_000),
+        ..opts.base()
     });
     let sat = rpc_sim::run(SimConfig {
         iface: Iface::Upi(4),
         offered_mrps: 14.0,
-        duration_us: dur(fast, 16_000),
-        warmup_us: dur(fast, 2_000),
-        ..Default::default()
+        duration_us: opts.dur(16_000),
+        warmup_us: opts.warmup(2_000),
+        ..opts.base()
     });
     s.push(vec![
         "Dagger".into(),
@@ -580,10 +874,11 @@ pub fn table3(fast: bool) -> Figure {
 
 // ------------------------------------------------------- Table 4 / Fig 15
 
-pub fn table4_fig15(fast: bool) -> Figure {
+pub fn table4_fig15(opts: &RunOpts) -> Figure {
     use flightreg::ThreadingModel;
     let mut fig = fig_for("table4-fig15");
-    let d = dur(fast, 400_000);
+    let d = opts.dur(400_000);
+    let seed = opts.seed_or_default();
     let s = fig.series(
         "table4-threading-models",
         &["model", "max_load_krps", "p50_us", "p90_us", "p99_us"],
@@ -595,14 +890,14 @@ pub fn table4_fig15(fast: bool) -> Figure {
         // Max load where drops stay < 1 % (the Table 4 criterion).
         let mut max_ok = 0f64;
         for &l in &loads {
-            let r = microsim::run(flightreg::app(model, 1_000, 1), l, d, d / 10);
+            let r = microsim::run(flightreg::app(model, 1_000, seed), l, d, d / 10);
             let drop_rate = r.dropped as f64 / r.sent.max(1) as f64;
             if drop_rate < 0.01 {
                 max_ok = max_ok.max(r.achieved_krps);
             }
         }
         // Lowest latency: light load.
-        let lo = microsim::run(flightreg::app(model, 1_000, 1), 0.5, d, d / 10);
+        let lo = microsim::run(flightreg::app(model, 1_000, seed), 0.5, d, d / 10);
         s.push(vec![
             name.into(),
             max_ok.into(),
@@ -617,7 +912,8 @@ pub fn table4_fig15(fast: bool) -> Figure {
         &["load_krps", "achieved_krps", "p50_us", "p99_us"],
     );
     for &l in &[2.0, 5.0, 10.0, 15.0, 20.0, 25.0, 30.0, 40.0, 48.0, 52.0, 56.0, 60.0] {
-        let r = microsim::run(flightreg::app(ThreadingModel::Optimized, 1_000, 1), l, d, d / 10);
+        let r =
+            microsim::run(flightreg::app(ThreadingModel::Optimized, 1_000, seed), l, d, d / 10);
         s.push(vec![l.into(), r.achieved_krps.into(), r.p50_us.into(), r.p99_us.into()]);
     }
     fig.note("paper: the Optimized threading model sustains ~15x the Simple model's load at lower median latency");
@@ -628,7 +924,7 @@ pub fn table4_fig15(fast: bool) -> Figure {
 
 /// §5.2's "~14 % from the memory-interconnect messaging model" claim:
 /// doorbell batching vs UPI at each batch width, stack held fixed.
-pub fn ablation_batching(fast: bool) -> Figure {
+pub fn ablation_batching(opts: &RunOpts) -> Figure {
     let mut fig = fig_for("ablation-batching");
     let s = fig.series("batch-width", &["batch", "doorbell_mrps", "upi_mrps", "gain_pct"]);
     for b in [1u32, 2, 4, 8, 11, 14] {
@@ -636,9 +932,9 @@ pub fn ablation_batching(fast: bool) -> Figure {
             rpc_sim::run(SimConfig {
                 iface,
                 offered_mrps: 16.0,
-                duration_us: dur(fast, 12_000),
-                warmup_us: dur(fast, 1_500),
-                ..Default::default()
+                duration_us: opts.dur(12_000),
+                warmup_us: opts.warmup(1_500),
+                ..opts.base()
             })
             .achieved_mrps
         };
@@ -707,8 +1003,46 @@ mod tests {
                 assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
             }
         }
-        assert_eq!(EXPERIMENTS.len(), 12);
+        assert_eq!(EXPERIMENTS.len(), 14);
         assert_eq!(spec("table4").unwrap().name, "table4-fig15");
+        assert_eq!(spec("fig13_vnic_scaling").unwrap().name, "fig13");
+        assert_eq!(spec("fig14_vnic_latency").unwrap().name, "fig14");
+    }
+
+    #[test]
+    fn run_opts_parse_and_override() {
+        let a = Args::parse(&[
+            "--seed".to_string(),
+            "9".to_string(),
+            "--duration-us".to_string(),
+            "1000".to_string(),
+        ]);
+        let o = RunOpts::from_args(&a).unwrap();
+        assert_eq!(o.seed_or_default(), 9);
+        assert_eq!(o.base().seed, 9);
+        assert_eq!(o.dur(16_000), 1_000);
+        assert_eq!(o.warmup(2_000), 125);
+
+        let fast = RunOpts::from_args(&args()).unwrap();
+        assert!(fast.fast);
+        assert_eq!(fast.dur(16_000), 2_000);
+        assert_eq!(fast.warmup(2_000), 250);
+        assert_eq!(fast.seed_or_default(), SimConfig::default().seed);
+
+        let none = RunOpts::from_args(&Args::parse(&[])).unwrap();
+        assert_eq!(none.dur(16_000), 16_000);
+        assert_eq!(none.warmup(2_000), 2_000);
+
+        // Present-but-invalid values error instead of silently running
+        // the full default duration.
+        let bad = Args::parse(&["--duration-us".to_string(), "1,000".to_string()]);
+        assert!(RunOpts::from_args(&bad).is_err());
+        assert!(run_figure("fig4", &bad).is_err());
+
+        // Durations under 8 µs would collapse the measurement window
+        // (warmup = duration/8) to zero; reject them up front.
+        let tiny = Args::parse(&["--duration-us".to_string(), "4".to_string()]);
+        assert!(RunOpts::from_args(&tiny).is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub enum HandlerCost {
 }
 
 impl HandlerCost {
-    fn sample(&self, rng: &mut Rng) -> u64 {
+    pub(crate) fn sample(&self, rng: &mut Rng) -> u64 {
         match self {
             HandlerCost::Echo => 0,
             HandlerCost::Fixed(ns) => *ns,
@@ -86,6 +86,26 @@ impl SimConfig {
     pub fn lines_per_rpc(&self) -> u32 {
         ((self.payload_bytes.max(1) as u64 + CACHE_LINE_BYTES - 1) / CACHE_LINE_BYTES) as u32
     }
+
+    /// Effective batch width: the soft-config adaptive controller picks
+    /// by per-thread offered load (Fig. 11's green dashed line);
+    /// otherwise the interface's configured batch.
+    pub fn effective_batch(&self) -> u32 {
+        if self.adaptive_batch {
+            let per_thread = self.offered_mrps / self.n_threads.max(1) as f64;
+            if per_thread < 3.5 {
+                1
+            } else if per_thread < 6.5 {
+                2
+            } else if per_thread < 9.5 {
+                3
+            } else {
+                4
+            }
+        } else {
+            self.iface.batch()
+        }
+    }
 }
 
 impl Default for SimConfig {
@@ -133,7 +153,7 @@ impl SimResult {
 }
 
 /// Per-Iface CPU cost split: per-RPC core time + per-batch core time.
-fn cpu_costs(iface: &Iface) -> (u64, u64) {
+pub(crate) fn cpu_costs(iface: &Iface) -> (u64, u64) {
     let ring = SW_RING_WRITE_NS + SW_BOOKKEEPING_NS;
     match iface {
         Iface::WqeByMmio => (MMIO_WQE_CPU_NS + ring, 0),
@@ -150,13 +170,29 @@ struct RpcRec {
     thread: u32,
 }
 
-/// Batch accumulation state for one sender (client thread or server flow).
-struct Sender {
-    cpu_free: Ns,
-    batch: Vec<u32>,
-    batch_epoch: u64,
+/// Batch accumulation state for one sender (client thread or server
+/// flow). Shared with the virtualized multi-NIC DES (`exp::vnic`).
+pub(crate) struct Sender {
+    pub(crate) cpu_free: Ns,
+    pub(crate) batch: Vec<u32>,
+    pub(crate) batch_epoch: u64,
     /// Effective batch size for this sender right now.
-    batch_b: u32,
+    pub(crate) batch_b: u32,
+}
+
+impl Sender {
+    pub(crate) fn new() -> Sender {
+        Sender { cpu_free: 0, batch: Vec::new(), batch_epoch: 0, batch_b: 1 }
+    }
+}
+
+/// RPCs per CCI-P transfer for a given lines-per-RPC: a transfer can
+/// never exceed the outstanding window (§4.4) or it would stall
+/// forever (`can_issue` is monotone in `lines`), so multi-line batches
+/// split into window-sized transfers — like the FPGA's read engine
+/// streaming a large batch in window-bounded bursts.
+pub(crate) fn rpcs_per_xfer(lines_per_rpc: u32) -> usize {
+    (CCIP_MAX_OUTSTANDING / lines_per_rpc.max(1)).max(1) as usize
 }
 
 enum Ev {
@@ -261,27 +297,14 @@ struct World {
 
 impl World {
     fn effective_batch(&self) -> u32 {
-        if self.cfg.adaptive_batch {
-            // Soft-config controller: batch by offered load (per thread).
-            let per_thread = self.cfg.offered_mrps / self.cfg.n_threads as f64;
-            if per_thread < 3.5 {
-                1
-            } else if per_thread < 6.5 {
-                2
-            } else if per_thread < 9.5 {
-                3
-            } else {
-                4
-            }
-        } else {
-            self.cfg.iface.batch()
-        }
+        self.cfg.effective_batch()
     }
 }
 
 /// Transit time of one batch from sender handoff to the remote ring,
 /// excluding CCI-P endpoint queueing (added by the caller via the grant).
-fn transit_ns(cfg: &SimConfig, lines: u32) -> u64 {
+/// Shared with the virtualized multi-NIC simulation (`exp::vnic`).
+pub(crate) fn transit_ns(cfg: &SimConfig, lines: u32) -> u64 {
     let iface = &cfg.iface;
     iface.delivery_latency_ns(lines)
         + NIC_CYCLE_NS * NIC_PIPELINE_STAGES          // source NIC pipeline
@@ -308,13 +331,8 @@ fn launch_batch(
     let at = launch_at.max(sender.cpu_free);
     sender.cpu_free = at + w.per_batch_cpu;
     let handoff = sender.cpu_free;
-    // A transfer can never exceed the CCI-P outstanding window or it
-    // would stall forever (can_issue is monotone in `lines`): split
-    // multi-line batches into window-sized transfers, like the FPGA's
-    // read engine streaming a large batch in window-bounded bursts.
     let lpr = w.lines_per_rpc.max(1);
-    let rpcs_per_xfer = (CCIP_MAX_OUTSTANDING / lpr).max(1) as usize;
-    for chunk in rpcs.chunks(rpcs_per_xfer) {
+    for chunk in rpcs.chunks(rpcs_per_xfer(lpr)) {
         let lines = (chunk.len() as u32 * lpr).min(CCIP_MAX_OUTSTANDING);
         submit_xfer(
             eng,
@@ -368,11 +386,7 @@ pub fn run(cfg: SimConfig) -> SimResult {
     let horizon: Ns = cfg.duration_us * 1000;
     let warmup_end: Ns = cfg.warmup_us * 1000;
 
-    let mk_senders = |n: u32| {
-        (0..n)
-            .map(|_| Sender { cpu_free: 0, batch: Vec::new(), batch_epoch: 0, batch_b: 1 })
-            .collect::<Vec<_>>()
-    };
+    let mk_senders = |n: u32| (0..n).map(|_| Sender::new()).collect::<Vec<_>>();
 
     let mut w = World {
         rng: Rng::new(cfg.seed),

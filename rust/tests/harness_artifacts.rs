@@ -99,12 +99,69 @@ fn fig10_fast_sweep_hits_paper_anchors() {
 
 #[test]
 fn every_registered_experiment_names_a_bench_target() {
-    assert_eq!(EXPERIMENTS.len(), 12);
+    assert_eq!(EXPERIMENTS.len(), 14);
     for s in EXPERIMENTS {
         assert!(spec(s.name).is_some());
         assert!(!s.bench.is_empty());
         assert!(s.paper_ref.contains('§'), "{} missing paper ref", s.name);
     }
+    // The vnic experiments follow the registry convention exactly.
+    assert_eq!(spec("fig13").unwrap().bench, "fig13_vnic_scaling");
+    assert_eq!(spec("fig14").unwrap().bench, "fig14_vnic_latency");
+}
+
+#[test]
+fn seed_and_duration_overrides_reach_the_simulation() {
+    // --duration-us shrinks the run; --seed changes the arrival
+    // processes, so the artifact differs; the same seed reproduces it
+    // byte-for-byte (the determinism contract behind BENCH_* diffing).
+    let run_with = |seed: &str| {
+        let args = Args::parse(&[
+            "--duration-us".to_string(),
+            "1500".to_string(),
+            "--seed".to_string(),
+            seed.to_string(),
+        ]);
+        run_figure("fig10", &args).unwrap().to_json()
+    };
+    let a = run_with("1");
+    let b = run_with("2");
+    let a2 = run_with("1");
+    assert_eq!(a, a2, "same seed must reproduce the artifact exactly");
+    assert_ne!(a, b, "different seeds must perturb the measured series");
+}
+
+#[test]
+fn fig13_fast_run_writes_schema_valid_artifact() {
+    // The vnic scaling experiment end-to-end on a tiny window: valid
+    // schema, the full 1..=8 scaling series, and an aggregate that
+    // grows from N=1 to N=8.
+    let args = Args::parse(&["--duration-us".to_string(), "600".to_string()]);
+    let fig = run_figure("fig13", &args).expect("fig13 runs");
+    assert_eq!(fig.name, "fig13");
+    let scaling = fig
+        .series
+        .iter()
+        .find(|s| s.label == "vnic-scaling")
+        .expect("scaling series");
+    assert_eq!(scaling.rows.len(), 8);
+    let col = |name: &str| scaling.columns.iter().position(|c| c == name).unwrap();
+    let agg = |row: &[Value]| match row[col("aggregate_mrps")] {
+        Value::F64(f) => f,
+        Value::U64(u) => u as f64,
+        _ => panic!("non-numeric aggregate"),
+    };
+    let first = agg(&scaling.rows[0]);
+    let last = agg(&scaling.rows[7]);
+    assert!(last > first * 1.5, "aggregate must scale: n=1 {first} n=8 {last}");
+
+    let dir = tmp_dir("fig13");
+    let paths = fig.write_artifacts(&dir).expect("artifacts written");
+    let text = std::fs::read_to_string(&paths[0]).unwrap();
+    let j = Json::parse(&text).expect("valid JSON");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("dagger-bench/v1"));
+    assert_eq!(Figure::from_json(&text).unwrap(), fig);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -3,6 +3,7 @@
 //! reproduce" tests — every one corresponds to a sentence in the paper.
 
 use dagger::exp::rpc_sim::{run, HandlerCost, SimConfig};
+use dagger::exp::vnic::{self, VnicConfig};
 use dagger::interconnect::Iface;
 
 fn cfg(iface: Iface, offered: f64) -> SimConfig {
@@ -126,6 +127,66 @@ fn kvs_anchors() {
         "mica peak {}",
         mica.achieved_mrps
     );
+}
+
+/// Fig. 13: virtualized NIC scaling — aggregate throughput grows with
+/// the number of vNIC instances sharing the CCI-P bus, while per-tenant
+/// throughput degrades gracefully (round-robin keeps shares even) once
+/// the shared endpoint saturates.
+#[test]
+fn fig13_vnic_throughput_scaling() {
+    let run_n = |n: usize| vnic::run(VnicConfig::symmetric(n, cfg(Iface::Upi(4), 12.0)));
+    let a1 = run_n(1);
+    let a2 = run_n(2);
+    let a4 = run_n(4);
+    let a8 = run_n(8);
+    // Aggregate grows with vNIC count...
+    assert!(a1.aggregate_mrps() > 11.0, "a1 {}", a1.aggregate_mrps());
+    assert!(a2.aggregate_mrps() > a1.aggregate_mrps() * 1.7, "a2 {}", a2.aggregate_mrps());
+    assert!(a4.aggregate_mrps() > a2.aggregate_mrps() * 1.3, "a4 {}", a4.aggregate_mrps());
+    // ...until the shared UPI endpoint binds (§5.5's ~42 Mrps e2e).
+    assert!(
+        (36.0..46.0).contains(&a4.aggregate_mrps()),
+        "a4 {}",
+        a4.aggregate_mrps()
+    );
+    assert!(
+        (a8.aggregate_mrps() - a4.aggregate_mrps()).abs() < 5.0,
+        "flat past saturation: a4 {} a8 {}",
+        a4.aggregate_mrps(),
+        a8.aggregate_mrps()
+    );
+    // Per-tenant degradation is graceful: every tenant keeps at least
+    // ~60% of its fair share of the saturated bus, nobody is starved.
+    let fair = a8.aggregate_mrps() / 8.0;
+    assert!(
+        a8.min_tenant_mrps() > 0.6 * fair,
+        "min {} vs fair {fair}",
+        a8.min_tenant_mrps()
+    );
+    assert!(a8.per_tenant[0].achieved_mrps < a1.per_tenant[0].achieved_mrps);
+}
+
+/// Fig. 14: with one lightly loaded tenant among saturating neighbors,
+/// the round-robin arbiter bounds interference — the loaded tenant's
+/// shared-bus p99 is at least its solo p99 (contention is visible) but
+/// its throughput survives.
+#[test]
+fn fig14_vnic_tail_latency_bounded() {
+    let mut tenants = vec![cfg(Iface::Upi(4), 2.0)];
+    tenants.extend(std::iter::repeat(cfg(Iface::Upi(4), 12.0)).take(5));
+    let vcfg = VnicConfig { tenants, ..Default::default() };
+    let shared = vnic::run(vcfg.clone());
+    let solo = vnic::run_solo(&vcfg, 0);
+    let victim = &shared.per_tenant[0];
+    assert!(
+        victim.p99_us >= solo.p99_us,
+        "shared-bus p99 {} must be >= solo p99 {}",
+        victim.p99_us,
+        solo.p99_us
+    );
+    assert!(victim.achieved_mrps > 1.8, "victim throughput {} collapsed", victim.achieved_mrps);
+    assert!(shared.bus_util > 0.8, "bus util {}", shared.bus_util);
 }
 
 /// Fig. 11: batching trades latency for throughput; adaptive batching
