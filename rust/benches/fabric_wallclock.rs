@@ -1,0 +1,24 @@
+//! `cargo bench --bench fabric_wallclock` — the wall-clock fabric
+//! benchmark (measured counterpart of §5.2-§5.5): drives real
+//! `RpcClient`/`RpcThreadedServer` threads over the lock-free SPSC rings
+//! and the `coordinator::fabric` loop-back NIC thread, measures
+//! throughput and latency quantiles from timestamps embedded in the
+//! frames, and runs the matching `rpc_sim` configuration per grid point
+//! to report the model-vs-measured ratio.
+//!
+//! Grid: closed-loop thread scaling (1/2/4 driver threads), connection-
+//! scale stress up to the paper's 512 NIC flows plus an SRQ point with
+//! 1024 connections over 128 flows, and an open-loop latency ladder.
+//!
+//! Flags (after `--`): `--fast` (1/8 wall duration), `--duration-us N`
+//! (pin the per-point measurement window), `--out-dir DIR`.
+//! Writes `BENCH_fabric-wallclock.json` / `.csv` (default `./bench_out`).
+//!
+//! NOTE: unlike every other bench target this one measures *real time on
+//! this host* — numbers depend on core count and scheduler, so compare
+//! trends and the model-vs-measured ratio, not absolute Mrps against the
+//! paper's FPGA. See REPRODUCING.md §Wall-clock fabric benchmark.
+
+fn main() {
+    dagger::exp::harness::bench_main("fabric-wallclock");
+}

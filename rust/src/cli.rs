@@ -62,6 +62,9 @@ COMMANDS:
                                  [--fast] [--seed N] [--duration-us N]
                                  [--out-dir DIR writes
                                  BENCH_<name>.json/.csv artifacts]
+                                 (`sim fabric-wallclock` measures the real
+                                 ring/fabric threads in wall-clock time —
+                                 host-dependent, unlike the simulators)
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back

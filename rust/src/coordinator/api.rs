@@ -94,17 +94,43 @@ impl RpcClient {
     /// byte, `payload` must fit one cache line (§4.7: larger RPCs require
     /// software reassembly — see `send_multi`).
     pub fn call_async(&self, method: u8, payload: &[u8]) -> Result<u32, ()> {
+        self.call_async_on(self.c_id, method, payload)
+    }
+
+    /// SRQ-mode variant of [`RpcClient::call_async`]: issue the call on
+    /// an explicit connection id. In shared-receive-queue mode (§4.2)
+    /// many connections multiplex one flow's ring pair; the flow is still
+    /// owned by a single thread (wrap the producer in
+    /// [`crate::coordinator::rings::LockedProducer`] when sharing it
+    /// across threads), but each call names its own `c_id` so the NIC's
+    /// connection manager routes the response back here regardless of
+    /// which connection carried it.
+    pub fn call_async_on(&self, c_id: u32, method: u8, payload: &[u8]) -> Result<u32, ()> {
         assert!(payload.len() <= MAX_PAYLOAD_BYTES);
         let rpc_id = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
-        let frame = Frame::new(RpcType::Request, method, self.c_id, rpc_id, payload);
+        let frame = Frame::new(RpcType::Request, method, c_id, rpc_id, payload);
+        self.send_frame(frame).map(|()| rpc_id).map_err(|_| ())
+    }
+
+    /// Reserve the next rpc id without sending (callers that build their
+    /// own frames — e.g. the wall-clock benchmark stamping timestamps and
+    /// slot tags — pair this with [`RpcClient::send_frame`]).
+    pub fn next_rpc_id(&self) -> u32 {
+        self.rpc_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Push a fully-formed frame onto this flow's TX ring, maintaining
+    /// the client's send counters. On backpressure the frame comes back
+    /// to the caller (`Err`), mirroring [`crate::coordinator::rings::Ring::push`].
+    pub fn send_frame(&self, frame: Frame) -> Result<(), Frame> {
         match self.rings.tx.push(frame) {
             Ok(()) => {
                 self.sent.fetch_add(1, Ordering::Relaxed);
-                Ok(rpc_id)
+                Ok(())
             }
-            Err(_) => {
+            Err(back) => {
                 self.send_failures.fetch_add(1, Ordering::Relaxed);
-                Err(())
+                Err(back)
             }
         }
     }
@@ -147,6 +173,23 @@ impl RpcClient {
         let mut n = 0;
         while let Some(frame) = self.rings.rx.pop() {
             self.cq.push(Completion { rpc_id: frame.rpc_id(), payload: frame.payload() });
+            n += 1;
+        }
+        n
+    }
+
+    /// Zero-copy completion harvest: drain the RX ring, handing each raw
+    /// response frame to `f` without touching the [`CompletionQueue`] or
+    /// allocating payload buffers. This is the measurement fast path
+    /// (`exp::fabric_bench` reads the embedded timestamp and slot tag
+    /// straight out of the frame at Mrps rates, where a per-completion
+    /// `Vec` would dominate the cost being measured). Returns the number
+    /// of frames harvested. Frames consumed here never reach
+    /// [`RpcClient::poll_completions`]; pick one harvest style per flow.
+    pub fn poll_completions_with<F: FnMut(&Frame)>(&self, mut f: F) -> usize {
+        let mut n = 0;
+        while let Some(frame) = self.rings.rx.pop() {
+            f(&frame);
             n += 1;
         }
         n
@@ -467,6 +510,43 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn srq_calls_carry_their_own_connection_ids() {
+        // SRQ mode: one flow (ring pair), many connections. Each call
+        // names its c_id; the zero-copy harvest sees the raw frames.
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(1, rings.clone());
+        client.call_async_on(11, 5, b"a").unwrap();
+        client.call_async_on(22, 5, b"b").unwrap();
+        let f1 = rings.tx.pop().unwrap();
+        let f2 = rings.tx.pop().unwrap();
+        assert_eq!((f1.c_id(), f2.c_id()), (11, 22));
+        assert_eq!(client.sent.load(Ordering::Relaxed), 2);
+
+        // Echo them back and harvest without allocation.
+        rings.rx.push(Frame::new(RpcType::Response, 5, 11, f1.rpc_id(), b"a")).unwrap();
+        rings.rx.push(Frame::new(RpcType::Response, 5, 22, f2.rpc_id(), b"b")).unwrap();
+        let mut seen = Vec::new();
+        let n = client.poll_completions_with(|fr| seen.push((fr.c_id(), fr.rpc_id())));
+        assert_eq!(n, 2);
+        assert_eq!(seen, vec![(11, f1.rpc_id()), (22, f2.rpc_id())]);
+        // The harvest bypassed the completion queue entirely.
+        assert!(client.cq.is_empty());
+        assert_eq!(client.cq.completed_count.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn send_frame_returns_frame_on_backpressure() {
+        let rings = Arc::new(RingPair::new(2, 2));
+        let client = RpcClient::new(1, rings);
+        let mk = |id| Frame::new(RpcType::Request, 0, 1, id, b"");
+        client.send_frame(mk(0)).unwrap();
+        client.send_frame(mk(1)).unwrap();
+        let back = client.send_frame(mk(2)).unwrap_err();
+        assert_eq!(back.rpc_id(), 2, "backpressure hands the frame back");
+        assert_eq!(client.send_failures.load(Ordering::Relaxed), 1);
     }
 
     #[test]

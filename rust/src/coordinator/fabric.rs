@@ -26,14 +26,32 @@ pub struct Endpoint {
     pub flows: Vec<Arc<RingPair>>,
 }
 
-/// Counters published by the fabric thread.
+/// Counters published by the fabric thread. All counters are cumulative
+/// over the fabric's lifetime and safe to read concurrently (relaxed
+/// loads — the benchmark reads them after joining the fabric thread,
+/// where they are exact).
 #[derive(Default)]
 pub struct FabricStats {
+    /// Frames delivered into a destination RX ring.
     pub forwarded: AtomicU64,
+    /// Frames dropped because the destination RX ring was full — the
+    /// paper's best-effort server drop (§5.3); a lossless configuration
+    /// sizes its rings so this stays zero.
     pub dropped_rx_full: AtomicU64,
+    /// Frames whose connection lookup failed at egress or ingress.
     pub dropped_no_route: AtomicU64,
+    /// Frames failing header validation ([`Frame::is_valid`]).
     pub dropped_invalid: AtomicU64,
+    /// Batches pushed through the XLA datapath engine (0 with the
+    /// native engine).
     pub datapath_batches: AtomicU64,
+    /// Frames picked up from TX rings during the post-stop drain (see
+    /// [`Fabric::start`]: the stop flag triggers a graceful drain, not
+    /// an immediate exit, so in-flight frames are not stranded in TX
+    /// rings at shutdown). Counted at pickup: each such frame then
+    /// lands in `forwarded` or one of the drop counters, like any
+    /// other frame.
+    pub drained_on_stop: AtomicU64,
 }
 
 /// Builder + runtime handle for the loop-back fabric.
@@ -119,6 +137,11 @@ impl Fabric {
     /// Start the FPGA thread. Consumes the builder; returns a handle that
     /// stops the thread when dropped (or via the stop flag). The engine
     /// is constructed on the FPGA thread (PJRT handles are not `Send`).
+    ///
+    /// Stopping is graceful: after the stop flag is observed, the thread
+    /// keeps draining TX rings until they stay empty for several passes
+    /// (bounded), so frames accepted before the stop still reach their
+    /// destination — see [`FabricStats::drained_on_stop`].
     pub fn start(self, spec: EngineSpec) -> FabricHandle {
         let stop = self.stop.clone();
         let stats = self.stats.clone();
@@ -164,30 +187,15 @@ impl Drop for FabricHandle {
 }
 
 /// The FPGA thread body: move frames endpoint->endpoint through the NIC
-/// datapath until stopped.
+/// datapath until stopped, then drain gracefully.
 fn run_fabric(mut fabric: Fabric, mut engine: Engine) {
     let stop = fabric.stop.clone();
     let stats = fabric.stats.clone();
-    let n_endpoints = fabric.endpoints.len();
     let mut batch_buf: Vec<Frame> = Vec::with_capacity(64);
     let mut idle_spins = 0u32;
 
     while !stop.load(Ordering::Relaxed) {
-        let mut moved = false;
-        for src in 0..n_endpoints {
-            // Drain each TX ring of this endpoint into a batch.
-            for flow in 0..fabric.endpoints[src].flows.len() {
-                batch_buf.clear();
-                let rings = fabric.endpoints[src].flows[flow].clone();
-                rings.tx.pop_batch(&mut batch_buf, 32);
-                if batch_buf.is_empty() {
-                    continue;
-                }
-                moved = true;
-                deliver_batch(&mut fabric, &mut engine, src, &batch_buf, &stats);
-            }
-        }
-        if moved {
+        if forward_pass(&mut fabric, &mut engine, &stats, &mut batch_buf, false) {
             idle_spins = 0;
         } else {
             idle_spins += 1;
@@ -199,6 +207,59 @@ fn run_fabric(mut fabric: Fabric, mut engine: Engine) {
             }
         }
     }
+
+    // Graceful stop: frames already accepted into a TX ring must not be
+    // stranded (a benchmark that stops sending still expects every
+    // in-flight RPC to complete, and a server may still be emitting
+    // responses for requests it already dequeued). Keep forwarding until
+    // a few consecutive passes move nothing; bound the passes so a
+    // producer that ignores the stop signal cannot wedge shutdown.
+    let mut quiet = 0u32;
+    let mut passes = 0u32;
+    while quiet < 4 && passes < 65_536 {
+        passes += 1;
+        if forward_pass(&mut fabric, &mut engine, &stats, &mut batch_buf, true) {
+            quiet = 0;
+        } else {
+            quiet += 1;
+            // Give a co-located server thread a chance to flush its last
+            // responses before concluding the fabric is quiescent.
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// One sweep over every endpoint's TX rings: drain each ring in
+/// ≤32-frame batches through the NIC datapath. Returns whether any
+/// frame moved. Both the live loop and the graceful-stop drain run
+/// exactly this pass; `count_drained` additionally accounts post-stop
+/// pickups in [`FabricStats::drained_on_stop`].
+fn forward_pass(
+    fabric: &mut Fabric,
+    engine: &mut Engine,
+    stats: &FabricStats,
+    batch_buf: &mut Vec<Frame>,
+    count_drained: bool,
+) -> bool {
+    let mut moved = false;
+    for src in 0..fabric.endpoints.len() {
+        for flow in 0..fabric.endpoints[src].flows.len() {
+            batch_buf.clear();
+            let rings = fabric.endpoints[src].flows[flow].clone();
+            rings.tx.pop_batch(batch_buf, 32);
+            if batch_buf.is_empty() {
+                continue;
+            }
+            moved = true;
+            if count_drained {
+                stats
+                    .drained_on_stop
+                    .fetch_add(batch_buf.len() as u64, Ordering::Relaxed);
+            }
+            deliver_batch(fabric, engine, src, batch_buf, stats);
+        }
+    }
+    moved
 }
 
 fn deliver_batch(
@@ -319,6 +380,34 @@ mod tests {
         for j in server_joins {
             j.join().unwrap();
         }
+    }
+
+    #[test]
+    fn stop_drains_in_flight_frames() {
+        // Frames already sitting in a TX ring when the stop flag lands
+        // must still be forwarded (graceful drain), not stranded.
+        let mut fabric = Fabric::new();
+        let client_addr = fabric.add_endpoint(1, 64);
+        let server_addr = fabric.add_endpoint(1, 64);
+        let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::RoundRobin);
+        let client_rings = fabric.rings(client_addr, 0);
+        let server_rings = fabric.rings(server_addr, 0);
+        let stop = fabric.stop_flag();
+        let stats = fabric.stats.clone();
+
+        // Queue requests and raise the stop flag before starting the
+        // thread: its main loop exits immediately and only the drain
+        // phase can move these frames.
+        for i in 0..16 {
+            client_rings.tx.push(Frame::new(RpcType::Request, 0, c_id, i, b"x")).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let handle = fabric.start(EngineSpec::Native);
+        handle.shutdown();
+
+        assert_eq!(server_rings.rx.len(), 16, "drain must deliver all queued frames");
+        assert_eq!(stats.forwarded.load(Ordering::Relaxed), 16);
+        assert_eq!(stats.drained_on_stop.load(Ordering::Relaxed), 16);
     }
 
     #[test]

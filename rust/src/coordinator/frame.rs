@@ -138,6 +138,59 @@ impl Frame {
         out
     }
 
+    // ------------------------------------------------- bench stamping
+    //
+    // Wall-clock measurement convention (`exp::fabric_bench`, the
+    // measured counterpart of §5.2-§5.5): the first 12 payload bytes of
+    // a benchmark frame carry instrumentation that rides the symmetric
+    // request/response path (§4.4) for free — the echo handler returns
+    // the payload unchanged, so both fields come back to the sender:
+    //
+    // * words 4-5 — a little-endian u64 *send timestamp* in nanoseconds
+    //   since the benchmark epoch; the client computes RTT as
+    //   `now - ts_ns()` when it harvests the response.
+    // * word 6 — a u32 *slot tag*: the [`crate::coordinator::rings::SlotPool`]
+    //   slot id this in-flight RPC occupies, freed when the response
+    //   arrives (the software mirror of Fig. 8's ④/⑥ free-slot
+    //   bookkeeping, where the ack carries the buffer id).
+
+    /// Payload bytes reserved by the benchmark stamping convention
+    /// (8-byte timestamp + 4-byte slot tag).
+    pub const BENCH_STAMP_BYTES: usize = 12;
+
+    /// Write the benchmark send timestamp (payload bytes 0..8).
+    ///
+    /// The frame's payload must already span the stamp region — build it
+    /// with `payload.len() >= BENCH_STAMP_BYTES`.
+    #[inline]
+    pub fn set_ts_ns(&mut self, ns: u64) {
+        debug_assert!(self.payload_len() >= 8, "payload too short for a timestamp");
+        self.words[4] = ns as u32;
+        self.words[5] = (ns >> 32) as u32;
+    }
+
+    /// Read back the benchmark send timestamp (payload bytes 0..8).
+    #[inline]
+    pub fn ts_ns(&self) -> u64 {
+        (self.words[4] as u64) | ((self.words[5] as u64) << 32)
+    }
+
+    /// Write the benchmark slot tag (payload bytes 8..12).
+    #[inline]
+    pub fn set_tag(&mut self, tag: u32) {
+        debug_assert!(
+            self.payload_len() >= Self::BENCH_STAMP_BYTES,
+            "payload too short for a slot tag"
+        );
+        self.words[6] = tag;
+    }
+
+    /// Read back the benchmark slot tag (payload bytes 8..12).
+    #[inline]
+    pub fn tag(&self) -> u32 {
+        self.words[6]
+    }
+
     /// FNV-1a over the 8 key words + fmix32 finisher — identical to the
     /// Pallas kernel. (The finisher restores low-bit avalanche that
     /// word-wise FNV lacks; `hash % n_flows` partitioning depends on it.)
@@ -257,5 +310,22 @@ mod tests {
     fn rpc_type_raw_bounds() {
         assert_eq!(RpcType::from_u8(4), None);
         assert_eq!(RpcType::from_u8(1), Some(RpcType::Response));
+    }
+
+    #[test]
+    fn bench_stamp_round_trips_and_survives_echo() {
+        let stamp = [0u8; Frame::BENCH_STAMP_BYTES];
+        let mut f = Frame::new(RpcType::Request, 1, 7, 42, &stamp);
+        f.set_ts_ns(0x1234_5678_9ABC_DEF0);
+        f.set_tag(0xBEEF);
+        assert_eq!(f.ts_ns(), 0x1234_5678_9ABC_DEF0);
+        assert_eq!(f.tag(), 0xBEEF);
+        // The stamp lives in the payload, so an echo handler returns it
+        // verbatim: rebuild the response from the request's payload the
+        // way RpcThreadedServer::handle_one does.
+        let echoed = Frame::new(RpcType::Response, 1, 7, 42, &f.payload());
+        assert_eq!(echoed.ts_ns(), f.ts_ns());
+        assert_eq!(echoed.tag(), f.tag());
+        assert!(echoed.is_valid());
     }
 }

@@ -1,12 +1,24 @@
 //! L3 coordinator: the Dagger RPC software stack (§4.3 "RPC
 //! processing flow", the grey CPU-side region of Fig. 2).
 //!
-//! * [`frame`] — the 64-byte wire format shared with the Pallas kernels.
-//! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O).
+//! * [`frame`] — the 64-byte wire format shared with the Pallas kernels,
+//!   including the benchmark stamping convention (embedded send
+//!   timestamp + slot tag) used by the wall-clock fabric benchmark.
+//! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O)
+//!   and [`rings::SlotPool`], the Fig. 8 ④/⑥ free-slot bookkeeping.
 //! * [`api`] — RpcClient / RpcClientPool / RpcThreadedServer /
-//!   CompletionQueue and the dispatch/worker threading models.
+//!   CompletionQueue and the dispatch/worker threading models, with
+//!   SRQ-mode explicit-connection calls (§4.2) and a zero-copy
+//!   completion harvest for measurement loops.
 //! * [`fabric`] — the real-thread loop-back fabric standing in for the
-//!   FPGA, optionally executing the AOT XLA datapath artifact.
+//!   FPGA (graceful-drain shutdown, per-drop-cause counters), optionally
+//!   executing the AOT XLA datapath artifact.
+//!
+//! This real execution path is measured end-to-end by
+//! `exp::fabric_bench` (`cargo bench --bench fabric_wallclock`), the
+//! wall-clock counterpart of the paper's §5.2-§5.5 evaluation;
+//! docs/ARCHITECTURE.md maps Fig. 8's ①-⑥ ring protocol onto this
+//! module's code.
 
 pub mod api;
 pub mod backoff;
@@ -19,6 +31,6 @@ pub use api::{
     Completion, CompletionQueue, DispatchMode, Handler, RpcClient, RpcClientPool,
     RpcThreadedServer,
 };
-pub use fabric::{Fabric, FabricHandle};
+pub use fabric::{Fabric, FabricHandle, FabricStats};
 pub use frame::{Frame, RpcType};
-pub use rings::{Ring, RingPair};
+pub use rings::{Ring, RingPair, SlotPool};

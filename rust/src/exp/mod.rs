@@ -13,6 +13,7 @@
 //! REPRODUCING.md documents, per figure, the exact command, the artifact
 //! written, and the paper's reference numbers.
 
+pub mod fabric_bench;
 pub mod harness;
 pub mod microsim;
 pub mod rpc_sim;
@@ -101,6 +102,24 @@ impl RunOpts {
         }
     }
 
+    /// Wall-clock measurement window in **milliseconds** for drivers
+    /// that measure real time instead of simulating it
+    /// ([`fabric_bench`]). Same override semantics as [`RunOpts::dur`]:
+    /// `--duration-us N` pins the window to N µs of wall time (floored
+    /// at 5 ms — below that a scheduler quantum eats the whole window),
+    /// `--fast` runs 1/8 of the driver's full duration (floored at
+    /// 20 ms). Warmup is measure/4, derived by the driver.
+    pub fn wall_measure_ms(&self, full_ms: u64) -> u64 {
+        if let Some(d) = self.duration_us {
+            return (d / 1000).max(5);
+        }
+        if self.fast {
+            (full_ms / 8).max(20)
+        } else {
+            full_ms.max(1)
+        }
+    }
+
     /// The effective seed (default: `SimConfig::default().seed`).
     pub fn seed_or_default(&self) -> u64 {
         self.seed.unwrap_or_else(|| SimConfig::default().seed)
@@ -114,7 +133,9 @@ impl RunOpts {
     }
 }
 
-/// All 14 figure/table reproductions, in paper order.
+/// All 15 registered experiments: the 14 figure/table reproductions in
+/// paper order, plus the wall-clock fabric benchmark (the measured
+/// counterpart of §5.2-§5.5).
 pub const EXPERIMENTS: &[ExpSpec] = &[
     ExpSpec {
         name: "fig3",
@@ -227,6 +248,14 @@ pub const EXPERIMENTS: &[ExpSpec] = &[
         bench: "ablation_conn_cache",
         aliases: &["ablation_conn_cache"],
         run: ablation_conn_cache_driver,
+    },
+    ExpSpec {
+        name: "fabric-wallclock",
+        title: "Wall-clock fabric benchmark — measured ring/fabric path vs the timing model",
+        paper_ref: "§4.4/§5.2-§5.5 (measured counterpart)",
+        bench: "fabric_wallclock",
+        aliases: &["fabric_wallclock", "wallclock", "fabric-bench"],
+        run: fabric_bench::figure,
     },
 ];
 
@@ -1003,10 +1032,12 @@ mod tests {
                 assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
             }
         }
-        assert_eq!(EXPERIMENTS.len(), 14);
+        assert_eq!(EXPERIMENTS.len(), 15);
         assert_eq!(spec("table4").unwrap().name, "table4-fig15");
         assert_eq!(spec("fig13_vnic_scaling").unwrap().name, "fig13");
         assert_eq!(spec("fig14_vnic_latency").unwrap().name, "fig14");
+        assert_eq!(spec("fabric_wallclock").unwrap().name, "fabric-wallclock");
+        assert_eq!(spec("wallclock").unwrap().bench, "fabric_wallclock");
     }
 
     #[test]
@@ -1043,6 +1074,27 @@ mod tests {
         // (warmup = duration/8) to zero; reject them up front.
         let tiny = Args::parse(&["--duration-us".to_string(), "4".to_string()]);
         assert!(RunOpts::from_args(&tiny).is_err());
+    }
+
+    #[test]
+    fn wall_clock_window_follows_the_same_overrides() {
+        let full = RunOpts::from_args(&Args::parse(&[])).unwrap();
+        assert_eq!(full.wall_measure_ms(600), 600);
+        let fast = RunOpts::from_args(&args()).unwrap();
+        assert_eq!(fast.wall_measure_ms(600), 75);
+        assert_eq!(fast.wall_measure_ms(80), 20, "fast floor is 20 ms");
+        let pinned = RunOpts::from_args(&Args::parse(&[
+            "--duration-us".to_string(),
+            "30000".to_string(),
+        ]))
+        .unwrap();
+        assert_eq!(pinned.wall_measure_ms(600), 30);
+        let floor = RunOpts::from_args(&Args::parse(&[
+            "--duration-us".to_string(),
+            "1000".to_string(),
+        ]))
+        .unwrap();
+        assert_eq!(floor.wall_measure_ms(600), 5, "wall floor is 5 ms");
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Integration smoke for the wall-clock fabric benchmark: a `--fast`
+//! end-to-end run must produce a schema-valid `dagger-bench/v1` artifact
+//! holding both the measured and the simulated series over the
+//! threads×flows grid — including the ≥512-flow connection-scale point —
+//! with sane (timing-noisy, so loosely bounded) numbers.
+//!
+//! This test measures real time on whatever box runs it, so it asserts
+//! structure and sanity envelopes, never exact throughputs.
+
+use dagger::cli::Args;
+use dagger::exp::harness::{json::Json, Figure, Value};
+use dagger::exp::run_figure;
+
+fn num(v: &Value) -> f64 {
+    match v {
+        Value::F64(f) => *f,
+        Value::U64(u) => *u as f64,
+        other => panic!("expected a number, got {other:?}"),
+    }
+}
+
+#[test]
+fn fast_run_emits_measured_and_simulated_series() {
+    let fig = run_figure("fabric-wallclock", &Args::parse(&["--fast".to_string()]))
+        .expect("fabric-wallclock runs");
+    assert_eq!(fig.name, "fabric-wallclock");
+
+    // ------------------------------------------------ measured series
+    let measured = fig
+        .series
+        .iter()
+        .find(|s| s.label == "measured")
+        .expect("measured series");
+    let col = |name: &str| {
+        measured
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("column {name}"))
+    };
+    let (flows_c, thr_c, threads_c, p50_c, p99_c, leak_c) = (
+        col("flows"),
+        col("achieved_mrps"),
+        col("threads"),
+        col("p50_us"),
+        col("p99_us"),
+        col("leaked_slots"),
+    );
+    assert!(measured.rows.len() >= 7, "grid too small: {}", measured.rows.len());
+
+    // Every grid point really ran: positive throughput, ordered
+    // quantiles, no leaked (lost) in-flight slots.
+    for row in &measured.rows {
+        assert!(num(&row[thr_c]) > 0.0, "a grid point measured nothing: {row:?}");
+        assert!(num(&row[p99_c]) >= num(&row[p50_c]));
+        assert_eq!(num(&row[leak_c]), 0.0, "lost frames at {row:?}");
+    }
+
+    // The connection-scale stress axis reaches the paper's 512 NIC
+    // flows, and the SRQ point multiplexes more connections than flows.
+    assert!(
+        measured.rows.iter().any(|r| num(&r[flows_c]) >= 512.0),
+        "no >=512-flow stress point"
+    );
+    let conns_c = col("conns");
+    assert!(
+        measured
+            .rows
+            .iter()
+            .any(|r| num(&r[conns_c]) > num(&r[flows_c])),
+        "no SRQ point (conns > flows)"
+    );
+
+    // Throughput-vs-threads anchor: adding driver threads must not
+    // collapse the fabric. Wall-clock runs on arbitrary (possibly
+    // single-core CI) hosts are noisy, so this is a floor, not a
+    // monotonicity proof; on >=8-core machines the trend is monotone.
+    let thr_at_threads = |n: f64| -> f64 {
+        measured
+            .rows
+            .iter()
+            .filter(|r| num(&r[threads_c]) == n && num(&r[conns_c]) == n)
+            .map(|r| num(&r[thr_c]))
+            .next()
+            .unwrap_or_else(|| panic!("no closed-loop point with {n} threads"))
+    };
+    let t1 = thr_at_threads(1.0);
+    let t4 = thr_at_threads(4.0);
+    assert!(
+        t4 > t1 * 0.25,
+        "throughput collapsed with threads: t1={t1} t4={t4}"
+    );
+
+    // ----------------------------------------- simulated + ratio series
+    let simulated = fig
+        .series
+        .iter()
+        .find(|s| s.label == "simulated")
+        .expect("simulated series");
+    assert_eq!(simulated.rows.len(), measured.rows.len(), "one sim twin per point");
+    let sim_thr = simulated.columns.iter().position(|c| c == "achieved_mrps").unwrap();
+    for row in &simulated.rows {
+        assert!(num(&row[sim_thr]) > 0.0);
+    }
+
+    let ratio = fig
+        .series
+        .iter()
+        .find(|s| s.label == "model-vs-measured")
+        .expect("ratio series");
+    let rc = ratio.columns.iter().position(|c| c == "mrps_ratio").unwrap();
+    for row in &ratio.rows {
+        let r = num(&row[rc]);
+        // The software loop-back can't beat the modeled FPGA by an order
+        // of magnitude, and a zero ratio would mean a dead series.
+        assert!(r > 0.0 && r < 10.0, "implausible model-vs-measured ratio {r}");
+    }
+
+    // ------------------------------------------------- artifact schema
+    let dir = std::env::temp_dir().join(format!("dagger_wallclock_{}", std::process::id()));
+    let paths = fig.write_artifacts(&dir).expect("artifacts written");
+    assert!(paths[0].ends_with("BENCH_fabric-wallclock.json"));
+    let text = std::fs::read_to_string(&paths[0]).unwrap();
+    let j = Json::parse(&text).expect("valid JSON");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("dagger-bench/v1"));
+    assert_eq!(Figure::from_json(&text).expect("round-trip"), fig);
+    let _ = std::fs::remove_dir_all(&dir);
+}
