@@ -1,0 +1,22 @@
+//! `cargo bench --bench app_wallclock` — the application wall-clock
+//! benchmark (measured counterpart of §5.6/§5.7): memcached and MICA
+//! served through `coordinator::service` dispatch flows over the real
+//! rings/fabric (Zipf GET/SET mixes, every response verified against
+//! the key-derived canonical value), plus a 2- and 3-tier flightreg
+//! chain (Check-in ─▶ Passport ─▶ Citizens) where each measured RPC
+//! proves it traversed every tier. MICA runs under object-level
+//! steering (misrouted = 0 required) and once under round-robin as the
+//! §5.7 contrast case.
+//!
+//! Flags (after `--`): `--fast` (1/8 wall duration), `--duration-us N`
+//! (pin the per-point measurement window), `--out-dir DIR`.
+//! Writes `BENCH_app-wallclock.json` / `.csv` (default `./bench_out`).
+//!
+//! Like `fabric_wallclock`, this target measures *real time on this
+//! host* — compare trends and the integrity columns (`bad_responses`,
+//! `misrouted`, `leaked_slots`), not absolute µs against the paper's
+//! FPGA numbers. See REPRODUCING.md §Application wall-clock benchmark.
+
+fn main() {
+    dagger::exp::harness::bench_main("app-wallclock");
+}

@@ -13,7 +13,11 @@
 //! The Airport and Citizens tiers are MICA-backed (object-level load
 //! balancer on their NICs); the rest are stateless (round-robin).
 
+use crate::coordinator::api::RpcClient;
+use crate::coordinator::service::{Request, RpcService};
 use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Tier indices.
 pub const PASSENGER_FE: usize = 0;
@@ -169,6 +173,79 @@ pub fn app(model: ThreadingModel, hop_ns: u64, seed: u64) -> AppCfg {
 /// Mean Flight handler time implied by the bimodal calibration, in ns.
 pub fn flight_mean_ns() -> f64 {
     0.95 * 4_000.0 + 0.05 * 7_000_000.0
+}
+
+// ===================================================================
+// Real-path tier service (the wall-clock chain, exp::app_bench)
+// ===================================================================
+
+/// Method id the chain tiers serve and forward on.
+pub const CHAIN_METHOD: u8 = 7;
+
+/// One flightreg tier ported onto the Dagger service layer: real local
+/// CPU work (a busy-spin of `local_ns` on the dispatch thread — the
+/// §5.7 "Simple" threading model, where the handler runs inline and a
+/// nested dependency blocks the flow), then at most one blocking
+/// sub-RPC to the next tier over the tier's own outbound client flow.
+///
+/// The response's first byte counts the tiers traversed below and
+/// including this one (leaf = 1, its caller = 2, ...), so the entry
+/// client can verify every measured RPC really crossed the whole chain.
+pub struct TierService {
+    pub tier: &'static str,
+    /// Local handler cost, ns of real busy-spun CPU time (0 = none).
+    pub local_ns: u64,
+    /// Downstream dependency (None = leaf tier).
+    pub next: Option<Arc<RpcClient>>,
+    /// Sub-RPCs that failed or timed out (0 in a healthy chain);
+    /// shared out so the benchmark can report it after the service
+    /// moved into its dispatch thread.
+    pub failures: Arc<AtomicU64>,
+}
+
+impl TierService {
+    pub fn new(tier: &'static str, local_ns: u64, next: Option<Arc<RpcClient>>) -> TierService {
+        TierService { tier, local_ns, next, failures: Arc::new(AtomicU64::new(0)) }
+    }
+}
+
+impl RpcService for TierService {
+    fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
+        if self.local_ns > 0 {
+            let t0 = std::time::Instant::now();
+            while (t0.elapsed().as_nanos() as u64) < self.local_ns {
+                std::hint::spin_loop();
+            }
+        }
+        let hops_below = match &self.next {
+            None => 0,
+            Some(client) => match client.call_blocking(CHAIN_METHOD, b"") {
+                Some(resp) => resp.first().copied().unwrap_or(0),
+                None => {
+                    self.failures.fetch_add(1, Ordering::Relaxed);
+                    return vec![0];
+                }
+            },
+        };
+        vec![1 + hops_below]
+    }
+
+    fn name(&self) -> &'static str {
+        self.tier
+    }
+}
+
+/// The tier names + local handler costs of an `n`-deep slice of the
+/// topology's longest chain (Check-in ─▶ Passport ─▶ Citizens), deepest
+/// last. Costs are the tiers' fixed handler times from [`app`].
+pub fn chain_tiers(n: usize) -> Vec<(&'static str, u64)> {
+    let full = [
+        (TIER_NAMES[CHECKIN], 800),
+        (TIER_NAMES[PASSPORT], 600),
+        (TIER_NAMES[CITIZENS], 400),
+    ];
+    assert!((1..=full.len()).contains(&n), "chain depth 1..=3");
+    full[full.len() - n..].to_vec()
 }
 
 #[cfg(test)]

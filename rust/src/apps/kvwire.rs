@@ -1,0 +1,150 @@
+//! Fixed-offset KV wire format for the wall-clock application benchmark
+//! (`exp::app_bench`): how GET/SET requests and responses are laid out
+//! inside the frame's *app region* (payload bytes `0..36`; the last 12
+//! bytes carry the driver's tail stamp — see
+//! [`crate::coordinator::frame::Frame::TAIL_STAMP_OFFSET`]).
+//!
+//! The layout exists to keep the NIC's **object-level load balancer**
+//! correct (§5.7: "MICA does not work correctly with round-robin/random
+//! load balancers"): the steering hash covers payload bytes 0..32
+//! (KEY_WORDS), so within that region *only the key may vary* —
+//! otherwise the same key would steer to different partitions on
+//! different requests.
+//!
+//! ```text
+//! request  (app region, 36 B):
+//!   0..8    key, u64 LE            — hashed; the only varying hashed bytes
+//!   8..32   zero                   — hashed; MUST stay zero
+//!   32..36  value, u32 LE          — word 12, NOT hashed (SET; zero on GET)
+//! response (app region):
+//!   0       status: 1 = ok/hit, 0 = miss/reject
+//!   1..9    key echo, u64 LE       — lets the verifier match stateless-ly
+//!   9..13   value, u32 LE          — stored (GET) / written (SET) value
+//! ```
+//!
+//! `serve.rs` keeps its own length-prefixed `encode_kv` format for the
+//! interactive `dagger serve` path; this module is the measured-path
+//! format, where hash-stability and fixed offsets matter more than
+//! variable-length keys.
+
+use crate::coordinator::frame::Frame;
+
+/// Method ids for the measured KVS service.
+pub const METHOD_GET: u8 = 2;
+pub const METHOD_SET: u8 = 3;
+
+/// Byte offset of the (unhashed) value word in a request.
+pub const REQ_VALUE_OFFSET: usize = 32;
+
+/// Canonical value for a key — both the SET writer and the GET verifier
+/// derive it, so any retrieved value can be checked without tracking
+/// outstanding requests: a mismatch is a real data-integrity failure in
+/// the store/fabric path.
+#[inline]
+pub fn value_of(key: u64) -> u32 {
+    (key as u32) ^ 0xDA66_F00D
+}
+
+/// Fill `payload` with a request for `key`; `value` present on SET.
+/// The buffer is cleared and sized to the full app region so the value
+/// lands at its fixed, unhashed offset and the hashed filler is zero
+/// regardless of what the buffer held before.
+pub fn fill_req(payload: &mut Vec<u8>, key: u64, value: Option<u32>) {
+    payload.clear();
+    payload.resize(Frame::TAIL_STAMP_OFFSET, 0);
+    payload[..8].copy_from_slice(&key.to_le_bytes());
+    if let Some(v) = value {
+        payload[REQ_VALUE_OFFSET..REQ_VALUE_OFFSET + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Key of a request (None if the payload is too short).
+pub fn req_key(payload: &[u8]) -> Option<u64> {
+    Some(u64::from_le_bytes(payload.get(..8)?.try_into().ok()?))
+}
+
+/// Value carried by a SET request.
+pub fn req_value(payload: &[u8]) -> Option<u32> {
+    Some(u32::from_le_bytes(
+        payload.get(REQ_VALUE_OFFSET..REQ_VALUE_OFFSET + 4)?.try_into().ok()?,
+    ))
+}
+
+/// Successful response: status 1 + key echo + value.
+pub fn resp_ok(key: u64, value: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13);
+    out.push(1);
+    out.extend_from_slice(&key.to_le_bytes());
+    out.extend_from_slice(&value.to_le_bytes());
+    out
+}
+
+/// Miss/reject response: status 0 + key echo.
+pub fn resp_miss(key: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
+    out.push(0);
+    out.extend_from_slice(&key.to_le_bytes());
+    out
+}
+
+/// Parse a response: `(ok, key, value)`; value is 0 on a miss.
+pub fn parse_resp(payload: &[u8]) -> Option<(bool, u64, u32)> {
+    let status = *payload.first()?;
+    let key = u64::from_le_bytes(payload.get(1..9)?.try_into().ok()?);
+    let value = if status == 1 {
+        u32::from_le_bytes(payload.get(9..13)?.try_into().ok()?)
+    } else {
+        0
+    };
+    Some((status == 1, key, value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::mica;
+    use crate::coordinator::frame::{RpcType, MAX_PAYLOAD_BYTES};
+
+    #[test]
+    fn request_round_trip() {
+        let mut p = Vec::new();
+        fill_req(&mut p, 0xAB_CDEF, Some(77));
+        assert_eq!(p.len(), Frame::TAIL_STAMP_OFFSET);
+        assert_eq!(req_key(&p), Some(0xAB_CDEF));
+        assert_eq!(req_value(&p), Some(77));
+        assert!(p[8..REQ_VALUE_OFFSET].iter().all(|&b| b == 0), "hashed filler must stay zero");
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let (ok, k, v) = parse_resp(&resp_ok(42, value_of(42))).unwrap();
+        assert!(ok);
+        assert_eq!(k, 42);
+        assert_eq!(v, value_of(42));
+        let (ok, k, _) = parse_resp(&resp_miss(9)).unwrap();
+        assert!(!ok);
+        assert_eq!(k, 9);
+        assert!(parse_resp(&[]).is_none());
+    }
+
+    /// The property the whole layout exists for: the frame's steering
+    /// hash depends on the key alone — not on the SET value, not on the
+    /// tail stamp — and agrees with MICA's partition hash.
+    #[test]
+    fn steering_hash_is_a_pure_function_of_the_key() {
+        let frame_for = |key: u64, value: Option<u32>, ts: u64| {
+            let mut p = Vec::new();
+            fill_req(&mut p, key, value);
+            p.resize(MAX_PAYLOAD_BYTES, 0);
+            let mut f = Frame::new(RpcType::Request, METHOD_SET, 1, 1, &p);
+            f.set_ts_ns_tail(ts);
+            f
+        };
+        let get = frame_for(123, None, 5);
+        let set = frame_for(123, Some(value_of(123)), 999_999);
+        assert_eq!(get.key_hash(), set.key_hash(), "GET and SET of one key must co-steer");
+        // And the NIC-side hash equals the store-side partition hash.
+        assert_eq!(get.key_hash(), mica::key_hash(&123u64.to_le_bytes()));
+        assert_ne!(frame_for(124, None, 5).key_hash(), get.key_hash());
+    }
+}

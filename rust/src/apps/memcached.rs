@@ -9,8 +9,10 @@
 //! RPC stack. memcached is comparatively slow (~12× slower than Dagger's
 //! stack, §5.6) — reflected in `op_cost_ns`.
 
-use super::KvStore;
+use super::{kvwire, KvStore};
+use crate::coordinator::service::{Request, RpcService};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Slab size classes (bytes), like memcached's growth-factor chunks.
 const SLAB_CLASSES: &[usize] = &[64, 96, 144, 216, 324, 486, 730, 1096];
@@ -138,10 +140,90 @@ impl KvStore for Memcached {
     }
 }
 
+/// memcached ported onto the Dagger service layer (§5.6: "replacing the
+/// TCP/IP transport, ~50 LoC"): one shared store behind a lock — the
+/// real memcached's hash-table lock, not a simulation artifact — served
+/// by every dispatch flow, speaking the fixed-offset
+/// [`kvwire`] format. Keeps a per-connection op counter as real
+/// per-connection service state (the paper's connection-scoped
+/// bookkeeping lives in exactly this spot).
+pub struct MemcachedService {
+    store: Arc<Mutex<Memcached>>,
+    /// Ops served per wire connection (per-connection service state).
+    pub per_conn_ops: HashMap<u32, u64>,
+}
+
+impl MemcachedService {
+    pub fn new(store: Arc<Mutex<Memcached>>) -> MemcachedService {
+        MemcachedService { store, per_conn_ops: HashMap::new() }
+    }
+}
+
+impl RpcService for MemcachedService {
+    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+        *self.per_conn_ops.entry(req.c_id).or_insert(0) += 1;
+        let Some(key) = kvwire::req_key(req.payload) else {
+            return kvwire::resp_miss(0);
+        };
+        let kb = key.to_le_bytes();
+        match req.method {
+            kvwire::METHOD_SET => {
+                let value = kvwire::req_value(req.payload).unwrap_or(0);
+                let ok = self.store.lock().unwrap().set(&kb, &value.to_le_bytes());
+                if ok {
+                    kvwire::resp_ok(key, value)
+                } else {
+                    kvwire::resp_miss(key)
+                }
+            }
+            _ => match self.store.lock().unwrap().get(&kb) {
+                Some(v) if v.len() >= 4 => {
+                    kvwire::resp_ok(key, u32::from_le_bytes(v[..4].try_into().unwrap()))
+                }
+                _ => kvwire::resp_miss(key),
+            },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "memcached"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::prop;
+
+    fn svc_req(method: u8, c_id: u32, payload: &[u8]) -> Request<'_> {
+        Request { method, c_id, rpc_id: 0, flow: 0, payload }
+    }
+
+    #[test]
+    fn service_set_get_over_the_wire_format() {
+        let store = Arc::new(Mutex::new(Memcached::new(1 << 20)));
+        let mut svc = MemcachedService::new(store.clone());
+        let mut p = Vec::new();
+        kvwire::fill_req(&mut p, 5, Some(kvwire::value_of(5)));
+        let resp = svc.call(svc_req(kvwire::METHOD_SET, 1, &p));
+        assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
+
+        let mut g = Vec::new();
+        kvwire::fill_req(&mut g, 5, None);
+        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g));
+        assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
+
+        kvwire::fill_req(&mut g, 6, None);
+        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g));
+        assert_eq!(kvwire::parse_resp(&resp).map(|r| r.0), Some(false), "unset key misses");
+
+        // Per-connection state: two ops on c_id 2, one on c_id 1.
+        assert_eq!(svc.per_conn_ops[&1], 1);
+        assert_eq!(svc.per_conn_ops[&2], 2);
+        // The real store underneath saw the traffic.
+        assert_eq!(store.lock().unwrap().get_hits, 1);
+        assert_eq!(store.lock().unwrap().get_misses, 1);
+    }
 
     #[test]
     fn set_get_roundtrip() {

@@ -1,7 +1,16 @@
 //! Applications ported onto Dagger (§5.6, §5.7) plus the
 //! characterization model (§3).
+//!
+//! Each application is "ported" twice, mirroring the repo's two
+//! execution modes: as a *cost model* feeding the discrete-event
+//! simulators (`op_cost_ns`, the microsim tier configs), and as a real
+//! [`crate::coordinator::service::RpcService`] implementation served
+//! over the actual rings/fabric — `memcached::MemcachedService`,
+//! `mica::MicaService`, `flightreg::TierService` (measured by
+//! `exp::app_bench`, wire format in [`kvwire`]).
 
 pub mod flightreg;
+pub mod kvwire;
 pub mod memcached;
 pub mod mica;
 pub mod serve;

@@ -60,11 +60,13 @@ COMMANDS:
     list                         list the reproducible paper experiments
     sim <experiment>             run one paper experiment (see `dagger list`)
                                  [--fast] [--seed N] [--duration-us N]
+                                 [--replicates N multi-seed mean ± sd]
                                  [--out-dir DIR writes
                                  BENCH_<name>.json/.csv artifacts]
-                                 (`sim fabric-wallclock` measures the real
-                                 ring/fabric threads in wall-clock time —
-                                 host-dependent, unlike the simulators)
+                                 (`sim fabric-wallclock` / `sim app-wallclock`
+                                 measure the real ring/fabric threads in
+                                 wall-clock time — host-dependent, unlike
+                                 the simulators)
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back

@@ -5,11 +5,16 @@
 //!
 //! The API mirrors the paper's Thrift/Protobuf-inspired surface: stubs
 //! generated from the IDL (see `crate::idl`) wrap these primitives into
-//! typed service calls.
+//! typed service calls. Each server flow dispatches to a boxed
+//! [`RpcService`] (`coordinator::service`); the method-table
+//! [`RpcThreadedServer::register`] API is an adapter
+//! ([`crate::coordinator::service::HandlerService`]) over the same
+//! layer.
 
 use crate::coordinator::backoff::Backoff;
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
 use crate::coordinator::rings::RingPair;
+use crate::coordinator::service::{HandlerService, Request, RpcService};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -242,19 +247,31 @@ pub enum DispatchMode {
     Worker,
 }
 
-/// One server dispatch thread's state: its flow's rings + handler table.
+/// One server dispatch thread's state: its flow's rings + the service
+/// it runs (`None` until `start`, which defaults it to the shared
+/// method table via [`HandlerService`]).
 pub struct RpcServerThread {
     pub flow: u32,
     pub rings: Arc<RingPair>,
+    service: Option<Box<dyn RpcService>>,
 }
 
-/// Threaded RPC server (§4.2): one dispatch thread per NIC flow.
+/// Threaded RPC server (§4.2): one dispatch thread per NIC flow, each
+/// dispatching to a boxed [`RpcService`]. Flows attached with
+/// [`RpcThreadedServer::add_flow`] run the shared method table
+/// (`register`); flows attached with
+/// [`RpcThreadedServer::add_service_flow`] run their own service
+/// instance — per-flow state (e.g. a MICA partition) without locks.
 pub struct RpcThreadedServer {
     pub threads: Vec<RpcServerThread>,
     pub handlers: Arc<Mutex<HashMap<u8, Handler>>>,
     pub mode: DispatchMode,
     stop: Arc<AtomicBool>,
     pub handled: Arc<AtomicU64>,
+    /// Service responses longer than [`MAX_PAYLOAD_BYTES`] that were
+    /// truncated at dispatch (a service bug surfaced as a counter, not
+    /// a wedged flow).
+    pub oversize_responses: Arc<AtomicU64>,
 }
 
 impl RpcThreadedServer {
@@ -265,40 +282,56 @@ impl RpcThreadedServer {
             mode,
             stop: Arc::new(AtomicBool::new(false)),
             handled: Arc::new(AtomicU64::new(0)),
+            oversize_responses: Arc::new(AtomicU64::new(0)),
         }
     }
 
-    /// Register a remote procedure under a method id.
+    /// Register a remote procedure under a method id (the
+    /// [`HandlerService`] path shared by every `add_flow` flow).
     pub fn register(&self, method: u8, handler: Handler) {
         self.handlers.lock().unwrap().insert(method, handler);
     }
 
-    /// Attach a flow (ring pair) served by one dispatch thread.
+    /// Attach a flow (ring pair) served by one dispatch thread running
+    /// the shared method table.
     pub fn add_flow(&mut self, flow: u32, rings: Arc<RingPair>) {
-        self.threads.push(RpcServerThread { flow, rings });
+        self.threads.push(RpcServerThread { flow, rings, service: None });
+    }
+
+    /// Attach a flow served by its own boxed service instance. The
+    /// service moves into the flow's dispatch (or worker) thread at
+    /// [`RpcThreadedServer::start`].
+    pub fn add_service_flow(&mut self, flow: u32, rings: Arc<RingPair>, service: Box<dyn RpcService>) {
+        self.threads.push(RpcServerThread { flow, rings, service: Some(service) });
     }
 
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
         self.stop.clone()
     }
 
-    /// Spawn the dispatch (and, in `Worker` mode, worker) threads.
-    /// Returns join handles; signal `stop_flag` to wind down.
-    pub fn start(&self) -> Vec<std::thread::JoinHandle<()>> {
+    /// Spawn the dispatch (and, in `Worker` mode, worker) threads,
+    /// moving each flow's service into its thread. Returns join
+    /// handles; signal `stop_flag` to wind down.
+    pub fn start(&mut self) -> Vec<std::thread::JoinHandle<()>> {
         let mut joins = Vec::new();
-        for t in &self.threads {
+        for t in &mut self.threads {
             let rings = t.rings.clone();
-            let handlers = self.handlers.clone();
+            let service = t
+                .service
+                .take()
+                .unwrap_or_else(|| Box::new(HandlerService::new(self.handlers.clone())));
             let stop = self.stop.clone();
             let handled = self.handled.clone();
+            let oversize = self.oversize_responses.clone();
             let mode = self.mode;
+            let flow = t.flow;
             joins.push(std::thread::spawn(move || {
                 match mode {
                     DispatchMode::Dispatch => {
-                        Self::dispatch_loop(rings, handlers, stop, handled)
+                        Self::dispatch_loop(flow, rings, service, stop, handled, oversize)
                     }
                     DispatchMode::Worker => {
-                        Self::worker_loop(rings, handlers, stop, handled)
+                        Self::worker_loop(flow, rings, service, stop, handled, oversize)
                     }
                 };
             }));
@@ -306,34 +339,47 @@ impl RpcThreadedServer {
         joins
     }
 
+    /// Dispatch one request frame through a service: decode, call,
+    /// truncate an oversize response, build the response frame.
     fn handle_one(
         frame: Frame,
-        handlers: &Mutex<HashMap<u8, Handler>>,
+        flow: u32,
+        service: &mut dyn RpcService,
         handled: &AtomicU64,
+        oversize: &AtomicU64,
     ) -> Frame {
         let method = frame.flags();
-        let handler = handlers.lock().unwrap().get(&method).cloned();
-        let resp_payload = match handler {
-            Some(h) => h(method, &frame.payload()),
-            None => Vec::new(),
-        };
+        let payload = frame.payload();
+        let resp_payload = service.call(Request {
+            method,
+            c_id: frame.c_id(),
+            rpc_id: frame.rpc_id(),
+            flow,
+            payload: &payload,
+        });
         handled.fetch_add(1, Ordering::Relaxed);
         let take = resp_payload.len().min(MAX_PAYLOAD_BYTES);
+        if take < resp_payload.len() {
+            oversize.fetch_add(1, Ordering::Relaxed);
+        }
         Frame::new(RpcType::Response, method, frame.c_id(), frame.rpc_id(), &resp_payload[..take])
     }
 
     fn dispatch_loop(
+        flow: u32,
         rings: Arc<RingPair>,
-        handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+        mut service: Box<dyn RpcService>,
         stop: Arc<AtomicBool>,
         handled: Arc<AtomicU64>,
+        oversize: Arc<AtomicU64>,
     ) {
         let mut backoff = Backoff::new();
         while !stop.load(Ordering::Relaxed) {
             match rings.rx.pop() {
                 Some(frame) => {
                     backoff.reset();
-                    let resp = Self::handle_one(frame, &handlers, &handled);
+                    let resp =
+                        Self::handle_one(frame, flow, service.as_mut(), &handled, &oversize);
                     // Wait out TX backpressure (bounded ring).
                     let mut r = resp;
                     let mut tx_backoff = Backoff::new();
@@ -351,21 +397,24 @@ impl RpcThreadedServer {
     }
 
     fn worker_loop(
+        flow: u32,
         rings: Arc<RingPair>,
-        handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+        mut service: Box<dyn RpcService>,
         stop: Arc<AtomicBool>,
         handled: Arc<AtomicU64>,
+        oversize: Arc<AtomicU64>,
     ) {
-        // Dispatch thread forwards to a worker over a channel; worker
-        // pushes responses back through a locked producer.
+        // Dispatch thread forwards to a worker over a channel; the
+        // worker owns the service and pushes responses back through the
+        // flow's TX ring.
         let (tx_work, rx_work) = std::sync::mpsc::channel::<Frame>();
         let worker = {
             let rings = rings.clone();
-            let handlers = handlers.clone();
             let stop = stop.clone();
             std::thread::spawn(move || {
                 while let Ok(frame) = rx_work.recv() {
-                    let resp = Self::handle_one(frame, &handlers, &handled);
+                    let resp =
+                        Self::handle_one(frame, flow, service.as_mut(), &handled, &oversize);
                     let mut r = resp;
                     let mut tx_backoff = Backoff::new();
                     while let Err(back) = rings.tx.push(r) {
@@ -551,11 +600,112 @@ mod tests {
 
     #[test]
     fn unknown_method_returns_empty() {
-        let handlers: Mutex<HashMap<u8, Handler>> = Mutex::new(HashMap::new());
+        let mut svc = HandlerService::new(Arc::new(Mutex::new(HashMap::new())));
         let handled = AtomicU64::new(0);
+        let oversize = AtomicU64::new(0);
         let req = Frame::new(RpcType::Request, 42, 1, 1, b"zz");
-        let resp = RpcThreadedServer::handle_one(req, &handlers, &handled);
+        let resp = RpcThreadedServer::handle_one(req, 0, &mut svc, &handled, &oversize);
         assert_eq!(resp.payload_len(), 0);
         assert_eq!(resp.rpc_type(), Some(RpcType::Response));
+        assert_eq!(handled.load(Ordering::Relaxed), 1);
+        assert_eq!(oversize.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn oversize_service_response_truncated_and_counted() {
+        struct Big;
+        impl crate::coordinator::service::RpcService for Big {
+            fn call(&mut self, _req: crate::coordinator::service::Request<'_>) -> Vec<u8> {
+                vec![7u8; 300]
+            }
+        }
+        let mut svc = Big;
+        let handled = AtomicU64::new(0);
+        let oversize = AtomicU64::new(0);
+        let req = Frame::new(RpcType::Request, 1, 1, 1, b"x");
+        let resp = RpcThreadedServer::handle_one(req, 0, &mut svc, &handled, &oversize);
+        assert_eq!(resp.payload_len(), MAX_PAYLOAD_BYTES, "truncated to one cache line");
+        assert!(resp.is_valid());
+        assert_eq!(oversize.load(Ordering::Relaxed), 1);
+    }
+
+    /// A per-flow service instance sees its own flow id and keeps its
+    /// own state — the partitioned-store dispatch model.
+    #[test]
+    fn service_flows_run_their_own_instances() {
+        use crate::coordinator::service::{Request, RpcService};
+        struct FlowTagger;
+        impl RpcService for FlowTagger {
+            fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+                vec![req.flow as u8]
+            }
+        }
+        let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+        let rings: Vec<Arc<RingPair>> =
+            (0..2).map(|_| Arc::new(RingPair::new(16, 16))).collect();
+        for (f, r) in rings.iter().enumerate() {
+            server.add_service_flow(f as u32, r.clone(), Box::new(FlowTagger));
+        }
+        let joins = server.start();
+        for (f, r) in rings.iter().enumerate() {
+            r.rx.push(Frame::new(RpcType::Request, 0, 1, f as u32, b"")).unwrap();
+        }
+        for (f, r) in rings.iter().enumerate() {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            let resp = loop {
+                if let Some(x) = r.tx.pop() {
+                    break x;
+                }
+                assert!(std::time::Instant::now() < deadline, "timed out");
+                std::thread::yield_now();
+            };
+            assert_eq!(resp.payload(), vec![f as u8], "flow identity reached the service");
+        }
+        server.stop_flag().store(true, Ordering::Relaxed);
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    /// The boxed-service dispatch path produces byte-identical responses
+    /// to the pre-refactor handler-table path (echo parity).
+    #[test]
+    fn echo_service_matches_handler_table_echo() {
+        use crate::coordinator::service::EchoService;
+        let run = |use_service: bool| -> Vec<Vec<u8>> {
+            let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+            let rings = Arc::new(RingPair::new(64, 64));
+            if use_service {
+                server.add_service_flow(0, rings.clone(), Box::new(EchoService));
+            } else {
+                server.add_flow(0, rings.clone());
+                server.register(3, Arc::new(|_, req| req.to_vec()));
+            }
+            let joins = server.start();
+            for i in 0..16u32 {
+                let payload = [i as u8; 20];
+                let f = Frame::new(RpcType::Request, 3, 1, i, &payload);
+                while rings.rx.push(f).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            let mut got = Vec::new();
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while got.len() < 16 {
+                if let Some(r) = rings.tx.pop() {
+                    assert_eq!(r.rpc_type(), Some(RpcType::Response));
+                    got.push(r.payload());
+                } else {
+                    assert!(std::time::Instant::now() < deadline, "timed out");
+                    std::thread::yield_now();
+                }
+            }
+            server.stop_flag().store(true, Ordering::Relaxed);
+            for j in joins {
+                j.join().unwrap();
+            }
+            got
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -410,6 +410,62 @@ mod tests {
         assert_eq!(stats.drained_on_stop.load(Ordering::Relaxed), 16);
     }
 
+    /// Multi-tier routing: three endpoints on one fabric, the middle
+    /// one both serving requests from A and issuing its own sub-RPCs to
+    /// C from inside its dispatch thread — the topology the flightreg
+    /// chain (exp::app_bench) measures. Exercises per-endpoint
+    /// active-flow steering (B's flow 0 serves, flow 1 is its outbound
+    /// client ring) and response routing back across two hops.
+    #[test]
+    fn three_endpoint_chain_routes_end_to_end() {
+        use crate::coordinator::service::{Request, RpcService};
+
+        let mut fabric = Fabric::new();
+        let a = fabric.add_endpoint(1, 64);
+        let b = fabric.add_endpoint(2, 64); // flow 0 server, flow 1 client->C
+        let c = fabric.add_endpoint(1, 64);
+        fabric.set_active_flows(b, 1); // requests at B steer only to flow 0
+        let ab = fabric.connect(a, 0, b, LbMode::RoundRobin);
+        let bc = fabric.connect(b, 1, c, LbMode::RoundRobin);
+
+        // Tier C: leaf, returns [1].
+        let mut srv_c = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv_c.add_flow(0, fabric.rings(c, 0));
+        srv_c.register(9, Arc::new(|_, _| vec![1u8]));
+        let joins_c = srv_c.start();
+
+        // Tier B: forwards to C, returns 1 + C's hop count.
+        struct Proxy {
+            next: Arc<RpcClient>,
+        }
+        impl RpcService for Proxy {
+            fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
+                match self.next.call_blocking(9, b"down") {
+                    Some(resp) => vec![1 + resp.first().copied().unwrap_or(0)],
+                    None => vec![0xEE],
+                }
+            }
+        }
+        let next = RpcClient::new(bc, fabric.rings(b, 1));
+        let mut srv_b = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv_b.add_service_flow(0, fabric.rings(b, 0), Box::new(Proxy { next }));
+        let joins_b = srv_b.start();
+
+        let client = RpcClient::new(ab, fabric.rings(a, 0));
+        let handle = fabric.start(EngineSpec::Native);
+        for _ in 0..8 {
+            let resp = client.call_blocking(5, b"req").expect("chain response");
+            assert_eq!(resp, vec![2], "response must have crossed both tiers");
+        }
+
+        srv_b.stop_flag().store(true, Ordering::Relaxed);
+        srv_c.stop_flag().store(true, Ordering::Relaxed);
+        handle.shutdown();
+        for j in joins_b.into_iter().chain(joins_c) {
+            j.join().unwrap();
+        }
+    }
+
     #[test]
     fn unknown_destination_counted() {
         let mut fabric = Fabric::new();

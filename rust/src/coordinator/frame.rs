@@ -191,6 +191,53 @@ impl Frame {
         self.words[6]
     }
 
+    // ------------------------------------------------ tail stamping
+    //
+    // The head stamp above occupies payload words 4-6 — inside the
+    // KEY_WORDS region the object-level load balancer hashes, so a
+    // head-stamped frame steers differently on every send (the
+    // timestamp changes). That is fine for the echo benchmark but
+    // breaks object-level steering, where the NIC's flow choice must
+    // depend on the key alone (§5.7: MICA requires it). The *tail*
+    // stamp instead lives in payload bytes 36..48 (words 13-15),
+    // outside the hashed words 4..12 — so a tail-stamped frame's
+    // `key_hash` is a pure function of its first 32 payload bytes.
+    // Tail-stamped frames carry a full 48-byte payload: the app region
+    // is bytes 0..TAIL_STAMP_OFFSET (0..36; only 0..32 is hashed), the
+    // stamp is the last 12. `coordinator::service::StampedService`
+    // echoes the stamp back on the response for the wall-clock driver.
+
+    /// Byte offset of the tail stamp region within the payload.
+    pub const TAIL_STAMP_OFFSET: usize = MAX_PAYLOAD_BYTES - Self::BENCH_STAMP_BYTES;
+
+    /// Write the send timestamp into the tail stamp (payload bytes
+    /// 36..44). The payload must span the full cache line.
+    #[inline]
+    pub fn set_ts_ns_tail(&mut self, ns: u64) {
+        debug_assert_eq!(self.payload_len(), MAX_PAYLOAD_BYTES, "tail stamp needs a full payload");
+        self.words[13] = ns as u32;
+        self.words[14] = (ns >> 32) as u32;
+    }
+
+    /// Read back the tail-stamped send timestamp (payload bytes 36..44).
+    #[inline]
+    pub fn ts_ns_tail(&self) -> u64 {
+        (self.words[13] as u64) | ((self.words[14] as u64) << 32)
+    }
+
+    /// Write the slot tag into the tail stamp (payload bytes 44..48).
+    #[inline]
+    pub fn set_tag_tail(&mut self, tag: u32) {
+        debug_assert_eq!(self.payload_len(), MAX_PAYLOAD_BYTES, "tail stamp needs a full payload");
+        self.words[15] = tag;
+    }
+
+    /// Read back the tail-stamped slot tag (payload bytes 44..48).
+    #[inline]
+    pub fn tag_tail(&self) -> u32 {
+        self.words[15]
+    }
+
     /// FNV-1a over the 8 key words + fmix32 finisher — identical to the
     /// Pallas kernel. (The finisher restores low-bit avalanche that
     /// word-wise FNV lacks; `hash % n_flows` partitioning depends on it.)
@@ -310,6 +357,33 @@ mod tests {
     fn rpc_type_raw_bounds() {
         assert_eq!(RpcType::from_u8(4), None);
         assert_eq!(RpcType::from_u8(1), Some(RpcType::Response));
+    }
+
+    #[test]
+    fn tail_stamp_is_outside_the_key_hash() {
+        // Two frames with the same app payload but different tail stamps
+        // must hash identically (object-level steering must not see the
+        // stamp), while head stamps do perturb the hash.
+        let mut payload = [0u8; MAX_PAYLOAD_BYTES];
+        payload[..8].copy_from_slice(&0xFEED_u64.to_le_bytes());
+        let mut a = Frame::new(RpcType::Request, 0, 1, 1, &payload);
+        let mut b = Frame::new(RpcType::Request, 0, 1, 2, &payload);
+        a.set_ts_ns_tail(111);
+        a.set_tag_tail(7);
+        b.set_ts_ns_tail(999_999);
+        b.set_tag_tail(42);
+        assert_eq!(a.key_hash(), b.key_hash(), "tail stamp leaked into the key hash");
+        assert_eq!(a.ts_ns_tail(), 111);
+        assert_eq!(a.tag_tail(), 7);
+        // Head stamps live in the hashed words: same payload, different
+        // timestamps -> (almost surely) different hashes.
+        let mut c = Frame::new(RpcType::Request, 0, 1, 3, &payload);
+        let mut d = Frame::new(RpcType::Request, 0, 1, 4, &payload);
+        c.set_ts_ns(111);
+        d.set_ts_ns(999_999);
+        assert_ne!(c.key_hash(), d.key_hash());
+        // Offset bookkeeping: app region + stamp = one cache line.
+        assert_eq!(Frame::TAIL_STAMP_OFFSET + Frame::BENCH_STAMP_BYTES, MAX_PAYLOAD_BYTES);
     }
 
     #[test]

@@ -10,9 +10,14 @@
 //!   CompletionQueue and the dispatch/worker threading models, with
 //!   SRQ-mode explicit-connection calls (§4.2) and a zero-copy
 //!   completion harvest for measurement loops.
+//! * [`service`] — the pluggable [`service::RpcService`] layer every
+//!   server flow dispatches to: the "easy porting API" of §5.6/§5.7
+//!   (memcached, MICA, flightreg adapters live in `crate::apps`), plus
+//!   the echo/handler-table/tail-stamp building blocks.
 //! * [`fabric`] — the real-thread loop-back fabric standing in for the
 //!   FPGA (graceful-drain shutdown, per-drop-cause counters), optionally
-//!   executing the AOT XLA datapath artifact.
+//!   executing the AOT XLA datapath artifact; routes frames between any
+//!   number of client/server endpoint pairs (multi-tier chains).
 //!
 //! This real execution path is measured end-to-end by
 //! `exp::fabric_bench` (`cargo bench --bench fabric_wallclock`), the
@@ -26,11 +31,13 @@ pub mod fabric;
 pub mod reassembly;
 pub mod frame;
 pub mod rings;
+pub mod service;
 
 pub use api::{
     Completion, CompletionQueue, DispatchMode, Handler, RpcClient, RpcClientPool,
     RpcThreadedServer,
 };
+pub use service::{EchoService, RpcService};
 pub use fabric::{Fabric, FabricHandle, FabricStats};
 pub use frame::{Frame, RpcType};
 pub use rings::{Ring, RingPair, SlotPool};

@@ -1,0 +1,262 @@
+//! The pluggable RPC service layer (§4.2/§5.6-§5.7): what a server
+//! endpoint *runs* once the NIC has steered a request frame to one of
+//! its dispatch flows.
+//!
+//! The paper's headline application claim is that large third-party
+//! applications — memcached, MICA, the 8-tier Flight Registration
+//! service — port onto Dagger "with minimal changes": the application
+//! supplies request-in/response-out logic and the Dagger stack supplies
+//! transport, steering, and threading. [`RpcService`] is that porting
+//! surface in this codebase. A service is owned by exactly one dispatch
+//! (or worker) thread — `&mut self`, no interior locking imposed — and
+//! sees the decoded request frame, including the connection id, so it
+//! may keep per-connection state (sessions, per-tenant counters) in
+//! plain data structures.
+//!
+//! Implementations in this repo:
+//! * [`EchoService`] — the loop-back echo the wall-clock fabric
+//!   benchmark measures (`exp::fabric_bench`);
+//! * [`HandlerService`] — adapts the method-table `Handler` API
+//!   ([`crate::coordinator::api::RpcThreadedServer::register`]) onto the
+//!   trait, so the IDL-generated stubs and existing examples keep
+//!   working unchanged;
+//! * [`StampedService`] — a combinator that carries the wall-clock
+//!   benchmark's tail stamp (send timestamp + slot tag, payload bytes
+//!   36..48) across any inner service, so measured latency rides the
+//!   symmetric request/response path for free even when the service
+//!   rewrites the payload (a KVS GET returns the value, not the
+//!   request);
+//! * `apps::memcached::MemcachedService`, `apps::mica::MicaService`,
+//!   `apps::flightreg::TierService` — the ported applications
+//!   (`exp::app_bench` measures them over the real rings).
+
+use crate::coordinator::api::Handler;
+use crate::coordinator::frame::{Frame, MAX_PAYLOAD_BYTES};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One request as the dispatch layer hands it to a service: the decoded
+/// frame fields plus the flow identity of the dispatch thread serving
+/// it (partitioned stores like MICA treat the flow as the partition the
+/// NIC's object-level load balancer chose).
+#[derive(Clone, Copy, Debug)]
+pub struct Request<'a> {
+    /// Method id from the frame's flags byte.
+    pub method: u8,
+    /// Wire connection id — the key for per-connection service state.
+    pub c_id: u32,
+    pub rpc_id: u32,
+    /// The server flow (= dispatch thread) this request was steered to.
+    pub flow: u32,
+    pub payload: &'a [u8],
+}
+
+/// A server-side RPC service: request frame in, response payload out.
+///
+/// The dispatch layer builds the response frame (same c_id/rpc_id/method,
+/// type flipped to Response) and truncates oversize payloads to
+/// [`MAX_PAYLOAD_BYTES`], counting the truncation in
+/// `RpcThreadedServer::oversize_responses` — a service bug is reported,
+/// never a wedged flow.
+pub trait RpcService: Send {
+    /// Handle one request; the returned bytes become the response
+    /// payload. Runs on the flow's dispatch thread (`DispatchMode::
+    /// Dispatch`) or its worker thread (`DispatchMode::Worker`).
+    fn call(&mut self, req: Request<'_>) -> Vec<u8>;
+
+    /// Human-readable service name (artifacts, diagnostics).
+    fn name(&self) -> &'static str {
+        "service"
+    }
+}
+
+/// Loop-back echo: the response payload is the request payload. This is
+/// the service the wall-clock fabric benchmark measures — the head
+/// stamp (payload words 4-6) rides back to the client for free.
+#[derive(Default)]
+pub struct EchoService;
+
+impl RpcService for EchoService {
+    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+        req.payload.to_vec()
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+/// Adapter from the method-table `Handler` API to [`RpcService`]: looks
+/// the method up in the shared table and runs the registered closure
+/// (unknown methods return an empty payload, as before the service
+/// layer existed). This is what every flow of an
+/// [`crate::coordinator::api::RpcThreadedServer`] runs unless the flow
+/// was attached with an explicit service.
+pub struct HandlerService {
+    handlers: Arc<Mutex<HashMap<u8, Handler>>>,
+}
+
+impl HandlerService {
+    pub fn new(handlers: Arc<Mutex<HashMap<u8, Handler>>>) -> HandlerService {
+        HandlerService { handlers }
+    }
+}
+
+impl RpcService for HandlerService {
+    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+        let handler = self.handlers.lock().unwrap().get(&req.method).cloned();
+        match handler {
+            Some(h) => h(req.method, req.payload),
+            None => Vec::new(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "handler-table"
+    }
+}
+
+/// Tail-stamp carrier: presents the inner service with the *app region*
+/// of the payload (bytes `0..TAIL_STAMP_OFFSET`) and re-attaches the
+/// request's tail stamp (send timestamp + slot tag, bytes 36..48, see
+/// [`Frame::set_ts_ns_tail`]) to whatever the inner service returns —
+/// padded so the stamp stays at its fixed offset. This is how the
+/// wall-clock driver measures RTT through services that do not echo
+/// their input, without the stamp perturbing the object-level steering
+/// hash (the tail region is outside the frame's KEY_WORDS).
+pub struct StampedService<S> {
+    pub inner: S,
+}
+
+impl<S: RpcService> StampedService<S> {
+    pub fn new(inner: S) -> StampedService<S> {
+        StampedService { inner }
+    }
+}
+
+impl<S: RpcService> RpcService for StampedService<S> {
+    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+        let split = req.payload.len().min(Frame::TAIL_STAMP_OFFSET);
+        let (app, stamp) = req.payload.split_at(split);
+        let inner_resp = self.inner.call(Request { payload: app, ..req });
+        let mut out = inner_resp;
+        // Keep the stamp at its fixed offset: pin the app region to
+        // exactly TAIL_STAMP_OFFSET bytes (resize both truncates an
+        // oversize response and pads a short one).
+        out.resize(Frame::TAIL_STAMP_OFFSET, 0);
+        out.extend_from_slice(stamp);
+        debug_assert!(out.len() <= MAX_PAYLOAD_BYTES);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::RpcType;
+
+    fn req(payload: &[u8]) -> Request<'_> {
+        Request { method: 1, c_id: 9, rpc_id: 3, flow: 0, payload }
+    }
+
+    #[test]
+    fn echo_returns_payload_verbatim() {
+        let mut s = EchoService;
+        assert_eq!(s.call(req(b"hello")), b"hello");
+        assert_eq!(s.name(), "echo");
+    }
+
+    #[test]
+    fn handler_service_dispatches_by_method_and_defaults_empty() {
+        let table: Arc<Mutex<HashMap<u8, Handler>>> = Arc::new(Mutex::new(HashMap::new()));
+        table.lock().unwrap().insert(
+            1,
+            Arc::new(|_, p| {
+                let mut v = p.to_vec();
+                v.reverse();
+                v
+            }),
+        );
+        let mut s = HandlerService::new(table);
+        assert_eq!(s.call(req(b"abc")), b"cba");
+        assert_eq!(s.call(Request { method: 99, ..req(b"abc") }), Vec::<u8>::new());
+    }
+
+    /// A service keeping per-connection state: the trait's `&mut self`
+    /// plus the request's `c_id` are all that is needed.
+    struct PerConnCounter {
+        seen: HashMap<u32, u64>,
+    }
+
+    impl RpcService for PerConnCounter {
+        fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+            let n = self.seen.entry(req.c_id).or_insert(0);
+            *n += 1;
+            n.to_le_bytes().to_vec()
+        }
+    }
+
+    #[test]
+    fn per_connection_state_persists_across_calls() {
+        let mut s = PerConnCounter { seen: HashMap::new() };
+        let count = |s: &mut PerConnCounter, c_id| {
+            let out = s.call(Request { c_id, ..req(b"") });
+            u64::from_le_bytes(out.try_into().unwrap())
+        };
+        assert_eq!(count(&mut s, 7), 1);
+        assert_eq!(count(&mut s, 7), 2);
+        assert_eq!(count(&mut s, 8), 1, "connections are independent");
+        assert_eq!(count(&mut s, 7), 3);
+    }
+
+    /// The inner service sees only the app region; the tail stamp comes
+    /// back attached to the (padded) response.
+    struct UpperCaser;
+    impl RpcService for UpperCaser {
+        fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+            req.payload.iter().map(|b| b.to_ascii_uppercase()).take_while(|&b| b != 0).collect()
+        }
+    }
+
+    #[test]
+    fn stamped_service_strips_and_reattaches_the_tail_stamp() {
+        let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
+        payload[..3].copy_from_slice(b"abc");
+        let mut f = Frame::new(RpcType::Request, 1, 5, 11, &payload);
+        f.set_ts_ns_tail(0xDEAD_BEEF_0BAD_F00D);
+        f.set_tag_tail(77);
+        let frame_payload = f.payload();
+
+        let mut s = StampedService::new(UpperCaser);
+        let resp = s.call(req(&frame_payload));
+        assert_eq!(resp.len(), MAX_PAYLOAD_BYTES, "stamp stays at its fixed offset");
+        assert_eq!(&resp[..3], b"ABC", "inner service saw (only) the app region");
+        let rf = Frame::new(RpcType::Response, 1, 5, 11, &resp);
+        assert_eq!(rf.ts_ns_tail(), 0xDEAD_BEEF_0BAD_F00D);
+        assert_eq!(rf.tag_tail(), 77);
+    }
+
+    /// An oversize inner response is truncated to the app region rather
+    /// than displacing the stamp.
+    struct Flooder;
+    impl RpcService for Flooder {
+        fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
+            vec![0xAA; 400]
+        }
+    }
+
+    #[test]
+    fn stamped_service_truncates_oversize_app_responses() {
+        let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
+        payload[Frame::TAIL_STAMP_OFFSET..].fill(0x55);
+        let mut s = StampedService::new(Flooder);
+        let resp = s.call(req(&payload));
+        assert_eq!(resp.len(), MAX_PAYLOAD_BYTES);
+        assert!(resp[..Frame::TAIL_STAMP_OFFSET].iter().all(|&b| b == 0xAA));
+        assert!(resp[Frame::TAIL_STAMP_OFFSET..].iter().all(|&b| b == 0x55), "stamp intact");
+    }
+}

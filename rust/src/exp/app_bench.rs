@@ -1,0 +1,470 @@
+//! Application wall-clock benchmark (registry `app-wallclock`, bench
+//! target `app_wallclock`): the ported applications — memcached, MICA,
+//! and a flightreg tier chain — served over the **real** rings/fabric
+//! path and measured end-to-end, the measured counterpart of §5.6's KVS
+//! evaluation (2.8–3.5 µs median KVS access on the FPGA) and §5.7's
+//! multi-tier Flight Registration service.
+//!
+//! Everything measurement-related is the shared wall-clock driver core
+//! ([`super::wall_driver`], also behind `fabric_wallclock`); this module
+//! contributes the application topologies:
+//!
+//! * **KVS pair** — clients speak the fixed-offset [`kvwire`] GET/SET
+//!   format (tail-stamped frames, so the NIC's object-level steering
+//!   hash is a pure function of the key) against
+//!   `MemcachedService`/`MicaService` dispatch flows. Every response is
+//!   verified against the key-derived canonical value —
+//!   `bad_responses` is a real data-integrity check of the store +
+//!   fabric path, not a formality. MICA runs under object-level
+//!   steering (misrouted must stay 0, the §5.7 correctness claim) and
+//!   once under round-robin as the contrast case (misrouted > 0, still
+//!   served by re-hashing).
+//! * **flightreg chain** — 2 and 3 tiers of the Check-in ─▶ Passport ─▶
+//!   Citizens chain as separate fabric endpoints, each running a
+//!   [`TierService`] that busy-spins its real handler cost and issues a
+//!   blocking sub-RPC downstream; the response carries the traversed
+//!   tier count back, so the verifier proves each measured RPC crossed
+//!   the whole chain.
+//!
+//! Like `fabric_wallclock`, numbers are host-specific (threads +
+//! cache-coherence, not an FPGA): compare trends and integrity
+//! invariants, not absolute µs against the paper. See REPRODUCING.md
+//! §Application wall-clock benchmark.
+
+use crate::apps::flightreg::{self, TierService, CHAIN_METHOD};
+use crate::apps::kvwire;
+use crate::apps::memcached::{Memcached, MemcachedService};
+use crate::apps::mica::{Mica, MicaService};
+use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
+use crate::coordinator::fabric::Fabric;
+use crate::coordinator::frame::Frame;
+use crate::coordinator::service::{RpcService, StampedService};
+use crate::exp::harness::{Figure, Value};
+use crate::exp::wall_driver::{self, Stamp, WallConfig, WallResult, WallWorkload};
+use crate::exp::RunOpts;
+use crate::nic::load_balancer::LbMode;
+use crate::sim::{Rng, Zipf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Keys in the pre-populated working set (every key holds
+/// [`kvwire::value_of`] before measurement starts, so a GET miss or a
+/// wrong value is a real failure).
+const N_KEYS: u64 = 2048;
+
+/// Zipfian skew of the key popularity (MICA's standard workload skew).
+const SKEW: f64 = 0.99;
+
+// ===================================================================
+// KVS workload
+// ===================================================================
+
+/// Zipf-keyed GET/SET mix speaking [`kvwire`]; verifies every response
+/// against the key-derived canonical value.
+struct KvWorkload {
+    rng: Rng,
+    zipf: Zipf,
+    set_fraction: f64,
+}
+
+impl KvWorkload {
+    fn new(seed: u64, set_fraction: f64) -> KvWorkload {
+        KvWorkload { rng: Rng::new(seed), zipf: Zipf::new(N_KEYS, SKEW), set_fraction }
+    }
+}
+
+impl WallWorkload for KvWorkload {
+    fn fill(&mut self, payload: &mut Vec<u8>) -> u8 {
+        let key = self.zipf.sample(&mut self.rng) % N_KEYS;
+        if self.rng.chance(self.set_fraction) {
+            kvwire::fill_req(payload, key, Some(kvwire::value_of(key)));
+            kvwire::METHOD_SET
+        } else {
+            kvwire::fill_req(payload, key, None);
+            kvwire::METHOD_GET
+        }
+    }
+
+    fn observe(&mut self, resp: &Frame) -> bool {
+        match kvwire::parse_resp(&resp.payload()) {
+            // The store is pre-populated and SETs only ever write the
+            // canonical value, so every op must succeed with it.
+            Some((ok, key, value)) => ok && value == kvwire::value_of(key),
+            None => false,
+        }
+    }
+}
+
+/// One measured KVS point + the store-side diagnostics read back after
+/// the run.
+struct KvsOutcome {
+    r: WallResult,
+    /// Wrong-partition arrivals (MICA only; None for memcached).
+    misrouted: Option<u64>,
+}
+
+// ===================================================================
+// flightreg chain
+// ===================================================================
+
+/// Client workload for the chain: empty requests on the chain method;
+/// the verifier checks the response's traversed-tier count.
+struct ChainWorkload {
+    expect_tiers: u8,
+}
+
+impl WallWorkload for ChainWorkload {
+    fn fill(&mut self, _payload: &mut Vec<u8>) -> u8 {
+        CHAIN_METHOD
+    }
+
+    fn observe(&mut self, resp: &Frame) -> bool {
+        resp.payload().first() == Some(&self.expect_tiers)
+    }
+}
+
+/// Outcome of one chain point.
+struct ChainOutcome {
+    r: WallResult,
+    downstream_failures: u64,
+}
+
+/// Stand up an `n_tiers`-deep chain — client endpoint, then one fabric
+/// endpoint per tier (flow 0 serves, flow 1 is the tier's outbound
+/// client ring) — and measure it through the shared driver core.
+fn run_chain(cfg: &WallConfig, n_tiers: usize) -> ChainOutcome {
+    let tiers = flightreg::chain_tiers(n_tiers);
+    assert!(!cfg.srq, "chain points use plain per-flow connections");
+
+    let mut fabric = Fabric::new();
+    let client_addr =
+        fabric.add_endpoint(cfg.client_flows(), wall_driver::client_ring_entries(cfg));
+    // Every tier serves the full client load, so each gets the shared
+    // server-ring sizing policy.
+    let tier_ring = wall_driver::server_ring_entries(cfg);
+    let tier_addrs: Vec<u32> = (0..n_tiers)
+        .map(|i| {
+            let leaf = i + 1 == n_tiers;
+            fabric.add_endpoint(if leaf { 1 } else { 2 }, tier_ring)
+        })
+        .collect();
+    for (i, &addr) in tier_addrs.iter().enumerate() {
+        if i + 1 < n_tiers {
+            // Requests steer only to the serving flow; flow 1 is the
+            // tier's outbound client ring.
+            fabric.set_active_flows(addr, 1);
+        }
+    }
+
+    // Tier i -> tier i+1, over tier i's flow 1.
+    let next_cids: Vec<u32> = (0..n_tiers.saturating_sub(1))
+        .map(|i| fabric.connect(tier_addrs[i], 1, tier_addrs[i + 1], LbMode::RoundRobin))
+        .collect();
+
+    let mut servers = Vec::new();
+    let mut failure_counters: Vec<Arc<AtomicU64>> = Vec::new();
+    for (i, &(name, local_ns)) in tiers.iter().enumerate() {
+        let next = if i + 1 < n_tiers {
+            Some(RpcClient::new(next_cids[i], fabric.rings(tier_addrs[i], 1)))
+        } else {
+            None
+        };
+        let svc = TierService::new(name, local_ns, next);
+        failure_counters.push(svc.failures.clone());
+        let boxed: Box<dyn RpcService> = if i == 0 {
+            // Only the entry tier carries the measurement stamp; inner
+            // hops are plain RPCs.
+            Box::new(StampedService::new(svc))
+        } else {
+            Box::new(svc)
+        };
+        let mut srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv.add_service_flow(0, fabric.rings(tier_addrs[i], 0), boxed);
+        servers.push(srv);
+    }
+
+    // Client -> entry tier wiring + per-flow drivers: the same helper
+    // the pair topology uses.
+    let drivers = wall_driver::build_client_drivers(
+        cfg,
+        &mut fabric,
+        client_addr,
+        tier_addrs[0],
+        &mut |_flow| Box::new(ChainWorkload { expect_tiers: n_tiers as u8 }),
+    );
+
+    let r = wall_driver::run_measurement(cfg, Stamp::Tail, fabric, servers, drivers);
+    ChainOutcome {
+        r,
+        downstream_failures: failure_counters
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum(),
+    }
+}
+
+// ===================================================================
+// Figure driver
+// ===================================================================
+
+fn base_cfg(opts: &RunOpts) -> WallConfig {
+    let measure = Duration::from_millis(opts.wall_measure_ms(500));
+    WallConfig {
+        warmup: measure / 4,
+        measure,
+        ..WallConfig::closed(2, 4, 8)
+    }
+}
+
+/// Run the application grid and emit the `dagger-bench/v1` figure.
+pub fn figure(opts: &RunOpts) -> Figure {
+    let mut fig = super::fig_for("app-wallclock");
+    let base = base_cfg(opts);
+
+    // ------------------------------------------------------ KVS series
+    let s = fig.series(
+        "kvs-wallclock",
+        &[
+            "store",
+            "mix",
+            "lb",
+            "server_flows",
+            "conns",
+            "window",
+            "achieved_mrps",
+            "p50_us",
+            "p90_us",
+            "p99_us",
+            "mean_us",
+            "completed",
+            "bad_responses",
+            "misrouted",
+            "backpressure",
+            "leaked_slots",
+            "fabric_rx_drops",
+        ],
+    );
+    let mixes: [(&str, f64); 2] = [("50/50", 0.5), ("5/95", 0.05)];
+    let mut points: Vec<(&str, LbMode, u32, f64, &str)> = Vec::new();
+    for (mix, frac) in mixes {
+        points.push(("memcached", LbMode::RoundRobin, 2, frac, mix));
+    }
+    for (mix, frac) in mixes {
+        points.push(("mica", LbMode::ObjectLevel, 4, frac, mix));
+    }
+    // Contrast case: round-robin steering against the partitioned store
+    // (§5.7 — served correctly by re-hashing, but every wrong-partition
+    // arrival is counted).
+    points.push(("mica", LbMode::RoundRobin, 4, 0.05, "5/95"));
+
+    for (store_name, lb, server_flows, set_fraction, mix) in points {
+        let cfg = WallConfig { lb, server_flows, ..base.clone() };
+        let out = run_kvs(&cfg, store_name, set_fraction);
+        s.push(vec![
+            store_name.into(),
+            mix.into(),
+            lb.name().into(),
+            server_flows.into(),
+            cfg.n_conns.into(),
+            cfg.window.into(),
+            out.r.achieved_mrps.into(),
+            out.r.p50_us.into(),
+            out.r.p90_us.into(),
+            out.r.p99_us.into(),
+            out.r.mean_us.into(),
+            out.r.completed.into(),
+            out.r.bad_responses.into(),
+            out.misrouted.map(Value::U64).unwrap_or(Value::Null),
+            out.r.backpressure.into(),
+            out.r.leaked_slots.into(),
+            out.r.fabric_rx_drops.into(),
+        ]);
+    }
+
+    // ---------------------------------------------------- chain series
+    let s = fig.series(
+        "flightreg-chain",
+        &[
+            "chain",
+            "tiers",
+            "conns",
+            "window",
+            "achieved_krps",
+            "p50_us",
+            "p90_us",
+            "p99_us",
+            "mean_us",
+            "completed",
+            "bad_responses",
+            "downstream_failures",
+            "leaked_slots",
+        ],
+    );
+    for n_tiers in [2usize, 3] {
+        let names: Vec<&str> =
+            flightreg::chain_tiers(n_tiers).iter().map(|&(n, _)| n).collect();
+        let cfg = WallConfig {
+            n_threads: 1,
+            n_conns: 2,
+            window: 4,
+            server_flows: 1,
+            ..base.clone()
+        };
+        let out = run_chain(&cfg, n_tiers);
+        s.push(vec![
+            names.join("->").into(),
+            n_tiers.into(),
+            cfg.n_conns.into(),
+            cfg.window.into(),
+            (out.r.achieved_mrps * 1000.0).into(),
+            out.r.p50_us.into(),
+            out.r.p90_us.into(),
+            out.r.p99_us.into(),
+            out.r.mean_us.into(),
+            out.r.completed.into(),
+            out.r.bad_responses.into(),
+            out.downstream_failures.into(),
+            out.r.leaked_slots.into(),
+        ]);
+    }
+
+    fig.note(
+        "measured on this host's threads/rings (no FPGA): compare against the paper's 2.8-3.5us \
+         KVS access qualitatively, not absolutely. bad_responses verifies data integrity \
+         (key-derived values) and chain traversal; mica under object-level steering must show \
+         misrouted=0, the round-robin contrast row shows why \u{a7}5.7 requires it.",
+    );
+    fig
+}
+
+/// Build the store, pre-populate the working set, measure one point,
+/// and read back the store-side diagnostics.
+fn run_kvs(cfg: &WallConfig, store_name: &str, set_fraction: f64) -> KvsOutcome {
+    use crate::apps::KvStore;
+    if store_name == "memcached" {
+        let store = Arc::new(Mutex::new(Memcached::new(64 << 20)));
+        {
+            let mut s = store.lock().unwrap();
+            for k in 0..N_KEYS {
+                s.set(&k.to_le_bytes(), &kvwire::value_of(k).to_le_bytes());
+            }
+        }
+        let r = wall_driver::run_pair(
+            cfg,
+            Stamp::Tail,
+            &mut |_flow| {
+                Box::new(StampedService::new(MemcachedService::new(store.clone())))
+                    as Box<dyn RpcService>
+            },
+            &mut |flow| {
+                Box::new(KvWorkload::new(0xA99_5EED ^ flow as u64, set_fraction))
+                    as Box<dyn WallWorkload>
+            },
+        );
+        KvsOutcome { r, misrouted: None }
+    } else {
+        // Lossless (chaining) index: pre-populated keys can never be
+        // evicted, so every GET must hit.
+        let store = Arc::new(Mutex::new(Mica::new(cfg.server_flows as usize, 1 << 12, false)));
+        {
+            let mut s = store.lock().unwrap();
+            for k in 0..N_KEYS {
+                s.set(&k.to_le_bytes(), &kvwire::value_of(k).to_le_bytes());
+            }
+        }
+        let r = wall_driver::run_pair(
+            cfg,
+            Stamp::Tail,
+            &mut |_flow| {
+                Box::new(StampedService::new(MicaService::new(store.clone())))
+                    as Box<dyn RpcService>
+            },
+            &mut |flow| {
+                Box::new(KvWorkload::new(0xA99_5EED ^ flow as u64, set_fraction))
+                    as Box<dyn WallWorkload>
+            },
+        );
+        let misrouted = store.lock().unwrap().misrouted;
+        KvsOutcome { r, misrouted: Some(misrouted) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(mut cfg: WallConfig) -> WallConfig {
+        cfg.warmup = Duration::from_millis(5);
+        cfg.measure = Duration::from_millis(40);
+        cfg
+    }
+
+    #[test]
+    fn memcached_point_serves_and_verifies() {
+        let cfg = tiny(WallConfig::closed(1, 2, 4));
+        let out = run_kvs(&cfg, "memcached", 0.5);
+        assert!(out.r.completed > 0, "no KVS ops measured");
+        assert_eq!(out.r.bad_responses, 0, "data-integrity failure");
+        assert_eq!(out.r.leaked_slots, 0);
+        assert!(out.misrouted.is_none());
+    }
+
+    #[test]
+    fn mica_object_steering_never_misroutes() {
+        let cfg = tiny(WallConfig {
+            lb: LbMode::ObjectLevel,
+            server_flows: 4,
+            ..WallConfig::closed(1, 2, 4)
+        });
+        let out = run_kvs(&cfg, "mica", 0.05);
+        assert!(out.r.completed > 0);
+        assert_eq!(out.r.bad_responses, 0);
+        assert_eq!(out.misrouted, Some(0), "object-level steering must hit the owning partition");
+    }
+
+    #[test]
+    fn mica_round_robin_misroutes_but_still_serves() {
+        let cfg = tiny(WallConfig {
+            lb: LbMode::RoundRobin,
+            server_flows: 4,
+            ..WallConfig::closed(1, 2, 4)
+        });
+        let out = run_kvs(&cfg, "mica", 0.05);
+        assert!(out.r.completed > 0);
+        assert_eq!(out.r.bad_responses, 0, "re-hashing keeps round-robin correct");
+        assert!(
+            out.misrouted.unwrap() > 0,
+            "round-robin against a partitioned store must misroute (\u{a7}5.7)"
+        );
+    }
+
+    #[test]
+    fn chain_traverses_every_tier() {
+        let cfg = tiny(WallConfig {
+            n_threads: 1,
+            n_conns: 2,
+            window: 2,
+            server_flows: 1,
+            ..WallConfig::closed(1, 2, 2)
+        });
+        for n_tiers in [2usize, 3] {
+            let out = run_chain(&cfg, n_tiers);
+            assert!(out.r.completed > 0, "{n_tiers}-tier chain measured nothing");
+            assert_eq!(
+                out.r.bad_responses, 0,
+                "{n_tiers}-tier: some responses did not traverse the whole chain"
+            );
+            assert_eq!(out.downstream_failures, 0);
+            assert_eq!(out.r.leaked_slots, 0);
+        }
+    }
+
+    #[test]
+    fn chain_tiers_slices_deepest_last() {
+        assert_eq!(flightreg::chain_tiers(3).len(), 3);
+        assert_eq!(flightreg::chain_tiers(2)[0].0, "passport");
+        assert_eq!(flightreg::chain_tiers(1)[0].0, "citizens");
+        assert_eq!(flightreg::chain_tiers(3)[0].0, "checkin");
+    }
+}

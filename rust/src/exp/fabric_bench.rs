@@ -8,493 +8,57 @@
 //! simulator ([`super::rpc_sim`]), which models the FPGA's timing
 //! constants. Here nothing is simulated — frames really cross thread
 //! boundaries, latency comes from timestamps embedded in the frames
-//! ([`Frame::set_ts_ns`]), and throughput is completions per wall-clock
+//! ([`crate::coordinator::frame::Frame::set_ts_ns`]), and throughput is
+//! completions per wall-clock
 //! second. Each grid point also runs the *matching* `rpc_sim`
 //! configuration and reports the measured/model ratio, which is what
 //! makes the simulated figures credible (and bounds what a software
 //! loop-back can say about FPGA absolute numbers — see REPRODUCING.md
 //! §Wall-clock fabric benchmark for how to read the ratio).
 //!
+//! The benchmark itself is an [`EchoService`] over the shared wall-clock
+//! driver core ([`super::wall_driver`]): this module only picks the grid
+//! and emits the figure; the warmup/measure/quantile loop — and the
+//! three load shapes below — live in the driver, shared with the
+//! application benchmark (`super::app_bench`).
+//!
 //! Three load shapes:
 //!
 //! * **closed-loop** — each connection keeps `window` RPCs in flight,
-//!   limited by a per-flow [`SlotPool`] (the Fig. 8 ④/⑥ free-slot
-//!   bookkeeping: the response carries the slot tag back, acks may
-//!   reorder across connections);
+//!   limited by a per-flow [`crate::coordinator::rings::SlotPool`] (the
+//!   Fig. 8 ④/⑥ free-slot bookkeeping: the response carries the slot tag
+//!   back, acks may reorder across connections);
 //! * **open-loop** — paced arrivals at a target rate, send-or-overrun
 //!   (no coordinated omission: a missed slot is counted, not deferred);
 //! * **connection-scale stress** — up to the paper's 512 NIC flows with
 //!   one connection each, plus an SRQ mode (§4.2) multiplexing 1024
-//!   connections over 128 flows through [`RpcClient::call_async_on`]-style
-//!   explicit connection ids.
+//!   connections over 128 flows through explicit connection ids.
 
-use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
-use crate::coordinator::backoff::Backoff;
-use crate::coordinator::fabric::Fabric;
-use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
-use crate::coordinator::rings::SlotPool;
+use crate::coordinator::service::EchoService;
 use crate::exp::harness::Figure;
 use crate::exp::rpc_sim::{self, SimConfig, SimResult};
+use crate::exp::wall_driver::{self, EchoWorkload, Stamp};
 use crate::exp::RunOpts;
 use crate::interconnect::Iface;
-use crate::nic::load_balancer::LbMode;
-use crate::runtime::EngineSpec;
-use crate::sim::Histogram;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Method id the benchmark registers its echo handler under.
+pub use crate::exp::wall_driver::{WallConfig, WallResult};
+
+/// Method id the benchmark's echo workload uses.
 pub const ECHO_METHOD: u8 = 1;
 
-/// One wall-clock grid point: topology + load shape + durations.
-#[derive(Clone, Debug)]
-pub struct WallConfig {
-    /// Real client driver threads (each owns a disjoint set of flows).
-    pub n_threads: u32,
-    /// Connections. Without SRQ there is one flow per connection; with
-    /// SRQ, `srq_flows` flows multiplex all of them.
-    pub n_conns: u32,
-    /// Shared-receive-queue mode (§4.2): many connections per flow.
-    pub srq: bool,
-    /// Client flow count in SRQ mode (ignored otherwise).
-    pub srq_flows: u32,
-    /// Server dispatch flows = server dispatch threads.
-    pub server_flows: u32,
-    /// Outstanding RPCs per connection (closed loop) / in-flight cap
-    /// per connection (open loop).
-    pub window: u32,
-    /// Total offered load in Mrps; 0 selects closed-loop mode.
-    pub open_rate_mrps: f64,
-    /// RPC payload bytes (≥ the 12-byte benchmark stamp, ≤ 48).
-    pub payload_bytes: usize,
-    /// Server-side request load balancer.
-    pub lb: LbMode,
-    pub warmup: Duration,
-    pub measure: Duration,
-}
-
-impl WallConfig {
-    /// Closed-loop default: `conns` connections, one flow each.
-    pub fn closed(n_threads: u32, n_conns: u32, window: u32) -> WallConfig {
-        WallConfig {
-            n_threads,
-            n_conns,
-            srq: false,
-            srq_flows: 0,
-            server_flows: 2,
-            window,
-            open_rate_mrps: 0.0,
-            payload_bytes: 16,
-            lb: LbMode::RoundRobin,
-            warmup: Duration::from_millis(150),
-            measure: Duration::from_millis(600),
-        }
-    }
-
-    /// Client-side flow count implied by the mode.
-    pub fn client_flows(&self) -> u32 {
-        if self.srq {
-            self.srq_flows.max(1)
-        } else {
-            self.n_conns.max(1)
-        }
-    }
-
-    /// Total in-flight bound across all connections.
-    pub fn total_outstanding(&self) -> u64 {
-        self.n_conns as u64 * self.window.max(1) as u64
-    }
-}
-
-/// Measured outcome of one wall-clock run. Throughputs are computed
-/// over the measurement window only (warmup excluded); quantiles come
-/// from the per-frame embedded timestamps.
-#[derive(Clone, Debug, Default)]
-pub struct WallResult {
-    /// Actual measurement window length, seconds.
-    pub elapsed_s: f64,
-    pub sent: u64,
-    pub completed: u64,
-    /// TX-ring backpressure events observed while measuring.
-    pub backpressure: u64,
-    /// Open-loop schedule slots skipped because the in-flight window was
-    /// exhausted (reported, not silently absorbed).
-    pub overruns: u64,
-    /// Slots still unacknowledged when the drain deadline expired
-    /// (non-zero only if frames were lost, e.g. RX-full drops).
-    pub leaked_slots: u64,
-    pub achieved_mrps: f64,
-    /// Throughput per client driver thread (the paper's "per-core"
-    /// axis counts request-issuing cores; the fabric and server threads
-    /// are accounted separately, like the paper's dedicated FPGA).
-    pub per_core_mrps: f64,
-    pub p50_us: f64,
-    pub p90_us: f64,
-    pub p99_us: f64,
-    pub mean_us: f64,
-    /// Fabric counters over the whole run (warmup + measure + drain).
-    pub fabric_forwarded: u64,
-    pub fabric_rx_drops: u64,
-}
-
-/// Per-flow client state owned by exactly one driver thread.
-struct FlowDriver {
-    client: Arc<RpcClient>,
-    /// Wire connection ids multiplexed over this flow (1 without SRQ).
-    conns: Vec<u32>,
-    pool: SlotPool,
-    /// Round-robin cursor over `conns`.
-    rr: usize,
-}
-
-/// What one driver thread brings home.
-struct Tally {
-    hist: Histogram,
-    sent: u64,
-    completed: u64,
-    backpressure: u64,
-    overruns: u64,
-    leaked_slots: u64,
-}
-
-/// Open-loop pacing state for one driver thread.
-struct Pace {
-    interval_ns: u64,
-    next_at_ns: u64,
-}
-
-/// Shared run controls (one allocation, cloned into every thread).
-struct Controls {
-    epoch: Instant,
-    measuring: AtomicBool,
-    stop_send: AtomicBool,
-}
-
-/// Stand up the fabric, drive it, and measure. Blocking; spawns
-/// `n_threads` client threads + `server_flows` dispatch threads + the
-/// fabric thread, and joins them all before returning.
+/// Stand up the fabric, drive it with the loop-back echo, and measure.
+/// Blocking; spawns `n_threads` client threads + `server_flows` dispatch
+/// threads + the fabric thread, and joins them all before returning.
+/// (Thin wrapper: [`EchoService`] + [`EchoWorkload`] over
+/// [`wall_driver::run_pair`] with the head-stamp convention.)
 pub fn run(cfg: &WallConfig) -> WallResult {
-    let flows = cfg.client_flows();
-    assert!(cfg.n_conns >= flows, "need at least one connection per flow");
-    assert!(cfg.n_threads >= 1 && cfg.n_threads <= flows);
-    assert!(
-        cfg.payload_bytes >= Frame::BENCH_STAMP_BYTES && cfg.payload_bytes <= MAX_PAYLOAD_BYTES,
-        "payload must hold the 12-byte stamp and fit one cache line"
-    );
-
-    // Ring sizing keeps the configured windows lossless: per-flow client
-    // rings hold the flow's whole window; server rings hold the total
-    // outstanding load with margin (residual drops are reported, not
-    // hidden — see `fabric_rx_drops`).
-    let per_flow_cap: Vec<usize> = {
-        let mut conns_per_flow = vec![0usize; flows as usize];
-        for c in 0..cfg.n_conns {
-            conns_per_flow[(c % flows) as usize] += 1;
-        }
-        conns_per_flow
-            .iter()
-            .map(|&n| (n.max(1) * cfg.window.max(1) as usize))
-            .collect()
-    };
-    let client_ring = per_flow_cap
-        .iter()
-        .copied()
-        .max()
-        .unwrap_or(1)
-        .saturating_mul(2)
-        .next_power_of_two()
-        .max(64);
-    let server_ring = ((cfg.total_outstanding() as usize / cfg.server_flows.max(1) as usize)
-        .max(1)
-        .saturating_mul(4))
-    .next_power_of_two()
-    .clamp(256, 16_384);
-
-    let mut fabric = Fabric::new();
-    let client_addr = fabric.add_endpoint(flows, client_ring);
-    let server_addr = fabric.add_endpoint(cfg.server_flows, server_ring);
-    fabric.set_lb(server_addr, cfg.lb);
-
-    // Connections: conn c rides client flow c % flows.
-    let mut conns_of: Vec<Vec<u32>> = vec![Vec::new(); flows as usize];
-    for c in 0..cfg.n_conns {
-        let flow = c % flows;
-        let c_id = fabric.connect(client_addr, flow, server_addr, cfg.lb);
-        conns_of[flow as usize].push(c_id);
-    }
-
-    let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
-    for f in 0..cfg.server_flows {
-        server.add_flow(f, fabric.rings(server_addr, f));
-    }
-    server.register(ECHO_METHOD, Arc::new(|_, req| req.to_vec()));
-
-    // Per-flow drivers, partitioned contiguously across client threads.
-    let mut drivers: Vec<FlowDriver> = (0..flows)
-        .map(|f| FlowDriver {
-            client: RpcClient::new(conns_of[f as usize][0], fabric.rings(client_addr, f)),
-            conns: std::mem::take(&mut conns_of[f as usize]),
-            pool: SlotPool::new(per_flow_cap[f as usize]),
-            rr: 0,
-        })
-        .collect();
-
-    let controls = Arc::new(Controls {
-        epoch: Instant::now(),
-        measuring: AtomicBool::new(false),
-        stop_send: AtomicBool::new(false),
-    });
-    let stats = fabric.stats.clone();
-    let server_joins = server.start();
-    let fabric_handle = fabric.start(EngineSpec::Native);
-
-    // Partition flows round-robin so exactly `n_threads` driver threads
-    // run even when `flows % n_threads != 0` — `per_core_mrps` divides
-    // by `n_threads`, and each open-loop thread paces 1/n_threads of
-    // the total rate, so a missing thread would skew both.
-    let mut per_thread_flows: Vec<Vec<FlowDriver>> =
-        (0..cfg.n_threads).map(|_| Vec::new()).collect();
-    for (i, d) in drivers.drain(..).enumerate() {
-        per_thread_flows[i % cfg.n_threads as usize].push(d);
-    }
-    let mut client_joins = Vec::new();
-    for (t, mine) in per_thread_flows.into_iter().enumerate() {
-        debug_assert!(!mine.is_empty(), "n_threads <= flows guarantees work per thread");
-        let ctl = controls.clone();
-        let payload = vec![0u8; cfg.payload_bytes];
-        let pace = if cfg.open_rate_mrps > 0.0 {
-            // Each thread paces its share of the total rate.
-            let per_thread_mrps = cfg.open_rate_mrps / cfg.n_threads as f64;
-            Some(Pace {
-                interval_ns: (1_000.0 / per_thread_mrps).max(1.0) as u64,
-                next_at_ns: 0,
-            })
-        } else {
-            None
-        };
-        client_joins.push(
-            std::thread::Builder::new()
-                .name(format!("dagger-bench-{t}"))
-                .spawn(move || drive(mine, payload, pace, &ctl))
-                .expect("spawn bench client"),
-        );
-    }
-
-    // Warmup -> measurement window -> drain.
-    std::thread::sleep(cfg.warmup);
-    controls.measuring.store(true, Ordering::SeqCst);
-    let t0 = Instant::now();
-    std::thread::sleep(cfg.measure);
-    controls.measuring.store(false, Ordering::SeqCst);
-    let elapsed_s = t0.elapsed().as_secs_f64();
-    controls.stop_send.store(true, Ordering::SeqCst);
-
-    let mut hist = Histogram::new();
-    let mut out = WallResult { elapsed_s, ..Default::default() };
-    for j in client_joins {
-        let tally = j.join().expect("bench client thread panicked");
-        hist.merge(&tally.hist);
-        out.sent += tally.sent;
-        out.completed += tally.completed;
-        out.backpressure += tally.backpressure;
-        out.overruns += tally.overruns;
-        out.leaked_slots += tally.leaked_slots;
-    }
-    server.stop_flag().store(true, Ordering::SeqCst);
-    fabric_handle.shutdown();
-    for j in server_joins {
-        let _ = j.join();
-    }
-
-    out.achieved_mrps = out.completed as f64 / elapsed_s / 1e6;
-    out.per_core_mrps = out.achieved_mrps / cfg.n_threads as f64;
-    if hist.count() > 0 {
-        let q = hist.quantiles_ns(&[0.50, 0.90, 0.99]);
-        out.p50_us = q[0] as f64 / 1000.0;
-        out.p90_us = q[1] as f64 / 1000.0;
-        out.p99_us = q[2] as f64 / 1000.0;
-        out.mean_us = hist.mean_ns() / 1000.0;
-    }
-    out.fabric_forwarded = stats.forwarded.load(Ordering::Relaxed);
-    out.fabric_rx_drops = stats.dropped_rx_full.load(Ordering::Relaxed);
-    out
-}
-
-/// One client driver thread: harvest completions, top up the send
-/// window (closed loop) or follow the pacing schedule (open loop),
-/// then drain until every slot is acked or the deadline expires.
-fn drive(
-    mut flows: Vec<FlowDriver>,
-    payload: Vec<u8>,
-    mut pace: Option<Pace>,
-    ctl: &Controls,
-) -> Tally {
-    let mut tally = Tally {
-        hist: Histogram::new(),
-        sent: 0,
-        completed: 0,
-        backpressure: 0,
-        overruns: 0,
-        leaked_slots: 0,
-    };
-    let mut backoff = Backoff::new();
-    let mut open_rr = 0usize; // open-loop round-robin over this thread's flows
-    let mut drain_deadline: Option<Instant> = None;
-    loop {
-        let stopping = ctl.stop_send.load(Ordering::Relaxed);
-        let in_measure = !stopping && ctl.measuring.load(Ordering::Relaxed);
-        let mut progressed = false;
-
-        // Harvest completions on every flow: free the slot the response
-        // carries in its tag word, record RTT from the embedded
-        // timestamp. The clock is re-read per flow (not once per pass):
-        // with hundreds of flows a single stale reading would stamp
-        // late-swept responses tens of µs early and skew the quantiles
-        // low exactly at the connection-scale points.
-        for d in flows.iter_mut() {
-            let FlowDriver { client, pool, .. } = d;
-            let now_ns = ctl.epoch.elapsed().as_nanos() as u64;
-            let n = client.poll_completions_with(|fr| {
-                pool.free(fr.tag());
-                if in_measure {
-                    tally.completed += 1;
-                    tally.hist.record(now_ns.saturating_sub(fr.ts_ns()).max(1));
-                }
-            });
-            if n > 0 {
-                progressed = true;
-            }
-        }
-
-        if !stopping {
-            match &mut pace {
-                // Closed loop: keep every connection's window full.
-                None => {
-                    for d in flows.iter_mut() {
-                        if send_one_per_free_slot(d, &payload, ctl, in_measure, &mut tally) {
-                            progressed = true;
-                        }
-                    }
-                }
-                // Open loop: send on schedule; a window miss is an
-                // overrun, a TX-ring miss is already counted as
-                // backpressure by `send_once` (the two causes stay
-                // distinguishable in the artifact).
-                Some(p) => {
-                    let now = ctl.epoch.elapsed().as_nanos() as u64;
-                    if p.next_at_ns == 0 {
-                        p.next_at_ns = now;
-                    }
-                    while p.next_at_ns <= now {
-                        let d = &mut flows[open_rr % flows.len()];
-                        open_rr += 1;
-                        match send_once(d, &payload, ctl, in_measure, &mut tally) {
-                            SendOutcome::Sent => progressed = true,
-                            SendOutcome::WindowFull => {
-                                tally.overruns += u64::from(in_measure);
-                            }
-                            SendOutcome::RingFull => {}
-                        }
-                        p.next_at_ns += p.interval_ns;
-                        // After a long stall (descheduled thread), resync
-                        // rather than burst-replaying the whole backlog —
-                        // but count the abandoned schedule slots as
-                        // overruns ("a missed slot is counted, not
-                        // deferred" must hold through resyncs too).
-                        if now > p.next_at_ns + 64 * p.interval_ns {
-                            let skipped = (now - p.next_at_ns) / p.interval_ns.max(1);
-                            if in_measure {
-                                tally.overruns += skipped;
-                            }
-                            p.next_at_ns = now;
-                        }
-                    }
-                }
-            }
-        } else {
-            // Stop requested: wait for outstanding acks, bounded.
-            let outstanding: usize = flows.iter().map(|d| d.pool.in_flight()).sum();
-            if outstanding == 0 {
-                break;
-            }
-            let deadline =
-                *drain_deadline.get_or_insert_with(|| Instant::now() + Duration::from_secs(2));
-            if Instant::now() > deadline {
-                tally.leaked_slots = outstanding as u64;
-                break;
-            }
-        }
-
-        if progressed {
-            backoff.reset();
-        } else {
-            backoff.snooze();
-        }
-    }
-    tally
-}
-
-/// Why a send attempt did not happen (or did).
-enum SendOutcome {
-    Sent,
-    /// Every slot is awaiting an ack — the connection window is full.
-    WindowFull,
-    /// The TX ring rejected the frame (counted as `backpressure`).
-    RingFull,
-}
-
-/// Closed-loop top-up: one send per free slot, round-robin over the
-/// flow's connections. Returns whether anything was sent.
-fn send_one_per_free_slot(
-    d: &mut FlowDriver,
-    payload: &[u8],
-    ctl: &Controls,
-    in_measure: bool,
-    tally: &mut Tally,
-) -> bool {
-    let mut any = false;
-    while matches!(send_once(d, payload, ctl, in_measure, tally), SendOutcome::Sent) {
-        any = true;
-    }
-    any
-}
-
-/// Allocate a slot, stamp a frame (timestamp + slot tag), send it.
-/// On `RingFull` the slot is returned to the pool and `backpressure`
-/// is incremented; `WindowFull` touches no counters.
-fn send_once(
-    d: &mut FlowDriver,
-    payload: &[u8],
-    ctl: &Controls,
-    in_measure: bool,
-    tally: &mut Tally,
-) -> SendOutcome {
-    let Some(slot) = d.pool.alloc() else {
-        return SendOutcome::WindowFull;
-    };
-    let c_id = d.conns[d.rr % d.conns.len()];
-    d.rr = d.rr.wrapping_add(1);
-    let mut frame = Frame::new(
-        RpcType::Request,
-        ECHO_METHOD,
-        c_id,
-        d.client.next_rpc_id(),
-        payload,
-    );
-    frame.set_ts_ns(ctl.epoch.elapsed().as_nanos() as u64);
-    frame.set_tag(slot);
-    match d.client.send_frame(frame) {
-        Ok(()) => {
-            tally.sent += u64::from(in_measure);
-            SendOutcome::Sent
-        }
-        Err(_) => {
-            d.pool.free(slot);
-            tally.backpressure += u64::from(in_measure);
-            SendOutcome::RingFull
-        }
-    }
+    wall_driver::run_pair(
+        cfg,
+        Stamp::Head,
+        &mut |_flow| Box::new(EchoService),
+        &mut |_flow| Box::new(EchoWorkload { method: ECHO_METHOD, payload_bytes: cfg.payload_bytes }),
+    )
 }
 
 // ===================================================================
@@ -684,6 +248,7 @@ pub fn figure(opts: &RunOpts) -> Figure {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn tiny(mut cfg: WallConfig) -> WallConfig {
         cfg.warmup = Duration::from_millis(5);
@@ -699,6 +264,7 @@ mod tests {
         assert!(r.p50_us > 0.0 && r.p99_us >= r.p50_us);
         assert_eq!(r.leaked_slots, 0, "lossless config must ack every slot");
         assert_eq!(r.fabric_rx_drops, 0);
+        assert_eq!(r.bad_responses, 0);
     }
 
     #[test]

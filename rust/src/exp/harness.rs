@@ -609,6 +609,135 @@ pub fn run_grid(configs: Vec<SimConfig>) -> Vec<SweepPoint> {
     out.into_iter().map(|(_, p)| p).collect()
 }
 
+// ===================================================================
+// Multi-seed replicates (confidence intervals per grid point)
+// ===================================================================
+
+/// One sweep grid point executed under several distinct seeds
+/// (`--replicates N`): replicate `r` runs `SimConfig { seed: base + r }`,
+/// so a replicated artifact is deterministic per (base seed, N).
+pub struct ReplicatedPoint {
+    /// The grid point's config (replicate 0's seed).
+    pub cfg: SimConfig,
+    /// One result per replicate, in seed order.
+    pub runs: Vec<SimResult>,
+}
+
+/// Mean and sample standard deviation (n−1 denominator; 0 when n < 2).
+pub fn mean_sd(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+impl ReplicatedPoint {
+    /// Mean ± sd of one metric across the replicates.
+    pub fn stat(&self, f: impl Fn(&SimResult) -> f64) -> (f64, f64) {
+        let xs: Vec<f64> = self.runs.iter().map(f).collect();
+        mean_sd(&xs)
+    }
+
+    /// Per-field mean result (u64 counters rounded) — what the mean row
+    /// of a replicated series renders through [`sweep_row`].
+    pub fn mean_result(&self) -> SimResult {
+        let n = self.runs.len().max(1) as f64;
+        let mf = |f: fn(&SimResult) -> f64| self.runs.iter().map(f).sum::<f64>() / n;
+        let mu = |f: fn(&SimResult) -> u64| {
+            (self.runs.iter().map(|r| f(r) as f64).sum::<f64>() / n).round() as u64
+        };
+        SimResult {
+            offered_mrps: mf(|r| r.offered_mrps),
+            achieved_mrps: mf(|r| r.achieved_mrps),
+            p50_us: mf(|r| r.p50_us),
+            p90_us: mf(|r| r.p90_us),
+            p99_us: mf(|r| r.p99_us),
+            mean_us: mf(|r| r.mean_us),
+            sent: mu(|r| r.sent),
+            completed: mu(|r| r.completed),
+            dropped: mu(|r| r.dropped),
+            ccip_util: mf(|r| r.ccip_util),
+        }
+    }
+}
+
+/// Spread columns a replicated series appends to [`SWEEP_COLUMNS`]
+/// (the `dagger-bench/v1` schema is column-driven per series, so these
+/// are optional fields — consumers keying on `SWEEP_COLUMNS` names are
+/// unaffected).
+pub const SPREAD_COLUMNS: &[&str] =
+    &["replicates", "achieved_mrps_sd", "p50_us_sd", "p99_us_sd"];
+
+impl Sweep {
+    /// Run every grid point `replicates` times under distinct seeds
+    /// (base seed + replicate index), on the same thread pool as
+    /// [`Sweep::run`]; results come back grouped per grid point in
+    /// deterministic grid order.
+    pub fn run_replicated(&self, replicates: u32) -> Vec<ReplicatedPoint> {
+        let reps = replicates.max(1) as usize;
+        let grid = self.grid();
+        let mut expanded = Vec::with_capacity(grid.len() * reps);
+        for cfg in &grid {
+            for r in 0..reps {
+                expanded.push(SimConfig {
+                    seed: cfg.seed.wrapping_add(r as u64),
+                    ..cfg.clone()
+                });
+            }
+        }
+        let mut results = run_grid(expanded).into_iter();
+        grid.into_iter()
+            .map(|cfg| ReplicatedPoint {
+                cfg,
+                runs: results.by_ref().take(reps).map(|p| p.result).collect(),
+            })
+            .collect()
+    }
+}
+
+/// Render replicated sweep points as a [`Series`]: the [`SWEEP_COLUMNS`]
+/// carry per-field means, followed by [`SPREAD_COLUMNS`].
+pub fn sweep_series_replicated(
+    label: impl Into<String>,
+    points: &[ReplicatedPoint],
+) -> Series {
+    let columns: Vec<&str> = SWEEP_COLUMNS
+        .iter()
+        .chain(SPREAD_COLUMNS.iter())
+        .copied()
+        .collect();
+    let mut s = Series::new(label, &columns);
+    for p in points {
+        let mut row = sweep_row(&p.cfg, &p.mean_result());
+        let (_, thr_sd) = p.stat(|r| r.achieved_mrps);
+        let (_, p50_sd) = p.stat(|r| r.p50_us);
+        let (_, p99_sd) = p.stat(|r| r.p99_us);
+        row.push(Value::from(p.runs.len()));
+        row.push(Value::from(thr_sd));
+        row.push(Value::from(p50_sd));
+        row.push(Value::from(p99_sd));
+        s.push(row);
+    }
+    s
+}
+
+/// Render a sweep honoring the `--replicates` count: 1 replicate emits
+/// the plain [`SWEEP_COLUMNS`] series (byte-identical artifacts to the
+/// pre-replicate drivers), more emit mean ± sd rows.
+pub fn sweep_series_auto(label: impl Into<String>, sweep: &Sweep, replicates: u32) -> Series {
+    if replicates > 1 {
+        sweep_series_replicated(label, &sweep.run_replicated(replicates))
+    } else {
+        sweep_series(label, &sweep.run())
+    }
+}
+
 /// Standard sweep columns (shared across rpc_sim-backed figures so CSV
 /// artifacts concatenate cleanly).
 pub const SWEEP_COLUMNS: &[&str] = &[
@@ -679,7 +808,8 @@ pub fn artifact_dir(args: &Args) -> PathBuf {
 ///
 /// Flags (after `--` under `cargo bench`): `--fast` (1/8 duration),
 /// `--seed N` (reseed every simulation), `--duration-us N` (override
-/// the simulated duration; warmup becomes N/8), `--out-dir DIR`,
+/// the simulated duration; warmup becomes N/8), `--replicates N`
+/// (multi-seed mean ± sd per sweep grid point), `--out-dir DIR`,
 /// `--no-artifacts`.
 pub fn bench_main(name: &str) -> ! {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -1171,6 +1301,83 @@ mod tests {
             assert_eq!(p.result.p99_us, s.result.p99_us);
             assert_eq!(sweep_row(&p.cfg, &p.result), sweep_row(&s.cfg, &s.result));
         }
+    }
+
+    #[test]
+    fn replicated_sweep_reports_mean_and_spread() {
+        let sweep = Sweep::new(SimConfig {
+            duration_us: 1_200,
+            warmup_us: 150,
+            ..Default::default()
+        })
+        .loads(&[2.0, 6.0]);
+        let points = sweep.run_replicated(3);
+        assert_eq!(points.len(), 2, "one group per grid point");
+        for p in &points {
+            assert_eq!(p.runs.len(), 3);
+            // Distinct seeds produce distinct (but close) runs; the mean
+            // sits inside the replicate envelope.
+            let (mean, sd) = p.stat(|r| r.achieved_mrps);
+            let lo = p.runs.iter().map(|r| r.achieved_mrps).fold(f64::INFINITY, f64::min);
+            let hi = p.runs.iter().map(|r| r.achieved_mrps).fold(0.0, f64::max);
+            assert!(lo <= mean && mean <= hi, "mean {mean} outside [{lo}, {hi}]");
+            assert!(sd >= 0.0 && sd < hi.max(1.0), "implausible sd {sd}");
+            assert_eq!(p.mean_result().offered_mrps, p.cfg.offered_mrps);
+        }
+        // Deterministic: same base seed + reps => identical groups.
+        let again = sweep.run_replicated(3);
+        for (a, b) in points.iter().zip(&again) {
+            for (x, y) in a.runs.iter().zip(&b.runs) {
+                assert_eq!(x.completed, y.completed);
+                assert_eq!(x.p99_us, y.p99_us);
+            }
+        }
+        // Replicate 0 is the plain single-run result (seed unchanged).
+        let single = sweep.run();
+        for (p, s) in points.iter().zip(&single) {
+            assert_eq!(p.runs[0].completed, s.result.completed);
+        }
+    }
+
+    #[test]
+    fn replicated_series_round_trips_with_spread_columns() {
+        let sweep = Sweep::new(SimConfig {
+            duration_us: 1_000,
+            warmup_us: 125,
+            ..Default::default()
+        })
+        .loads(&[3.0]);
+        let s = sweep_series_replicated("replicated", &sweep.run_replicated(2));
+        assert_eq!(s.columns.len(), SWEEP_COLUMNS.len() + SPREAD_COLUMNS.len());
+        for c in SPREAD_COLUMNS {
+            assert!(s.columns.iter().any(|x| x == c), "missing spread column {c}");
+        }
+        let mut fig = Figure::new("figR", "replicated sweep", "§5.x");
+        fig.series.push(s);
+        // The artifact schema carries the optional spread fields
+        // through emit + parse unchanged.
+        let back = Figure::from_json(&fig.to_json()).expect("parse back");
+        assert_eq!(back, fig);
+        let rep_col = back.series[0].columns.iter().position(|c| c == "replicates").unwrap();
+        assert_eq!(back.series[0].rows[0][rep_col], Value::U64(2));
+        // And the auto helper picks the right shape for each count.
+        assert_eq!(
+            sweep_series_auto("x", &sweep, 1).columns.len(),
+            SWEEP_COLUMNS.len()
+        );
+        assert_eq!(
+            sweep_series_auto("x", &sweep, 2).columns.len(),
+            SWEEP_COLUMNS.len() + SPREAD_COLUMNS.len()
+        );
+    }
+
+    #[test]
+    fn mean_sd_math() {
+        assert_eq!(mean_sd(&[]), (0.0, 0.0));
+        assert_eq!(mean_sd(&[5.0]), (5.0, 0.0));
+        let (m, sd) = mean_sd(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((sd - 1.0).abs() < 1e-12, "sample sd of 1,2,3 is 1: {sd}");
     }
 
     #[test]

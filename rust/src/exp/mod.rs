@@ -7,24 +7,27 @@
 //!   cross-reference, and owning `cargo bench` target per experiment.
 //! * [`run_figure`] — dispatch by name (aliases included), honoring the
 //!   shared flags ([`RunOpts`]): `--fast` (1/8 simulated duration),
-//!   `--seed N`, `--duration-us N`.
+//!   `--seed N`, `--duration-us N`, `--replicates N` (multi-seed
+//!   mean ± stddev per sweep grid point).
 //! * [`run_named`] — text-only convenience used by `dagger sim`.
 //!
 //! REPRODUCING.md documents, per figure, the exact command, the artifact
 //! written, and the paper's reference numbers.
 
+pub mod app_bench;
 pub mod fabric_bench;
 pub mod harness;
 pub mod microsim;
 pub mod rpc_sim;
 pub mod vnic;
+pub mod wall_driver;
 
 use crate::apps::{flightreg, socialnet};
 use crate::cli::Args;
 use crate::interconnect::Iface;
 use crate::sim::Rng;
 use crate::workload::rpc_sizes::{RpcSizeDist, TierSizeProfile};
-use harness::{sweep_row, sweep_series, Figure, Sweep, Value, SWEEP_COLUMNS};
+use harness::{sweep_row, sweep_series_auto, Figure, Sweep, Value, SWEEP_COLUMNS};
 use rpc_sim::{HandlerCost, SimConfig};
 
 /// Registry entry for one reproducible figure/table.
@@ -47,12 +50,16 @@ pub struct ExpSpec {
 ///
 /// `--fast` runs 1/8 simulated durations; `--seed N` reseeds every
 /// simulation (artifacts stay deterministic per seed); `--duration-us N`
-/// overrides the simulated duration outright (warmup becomes N/8).
+/// overrides the simulated duration outright (warmup becomes N/8);
+/// `--replicates N` re-runs every sweep grid point under N distinct
+/// seeds and emits mean ± sample-stddev per point (simulated sweeps
+/// only — the wall-clock benches are inherently non-deterministic).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RunOpts {
     pub fast: bool,
     pub seed: Option<u64>,
     pub duration_us: Option<u64>,
+    pub replicates: Option<u32>,
 }
 
 impl RunOpts {
@@ -74,7 +81,25 @@ impl RunOpts {
             // collapses to zero and every rate becomes NaN.
             anyhow::ensure!(d >= 8, "--duration-us: {d} too small (minimum 8 µs)");
         }
-        Ok(RunOpts { fast: args.get_flag("fast"), seed: parse_u64("seed")?, duration_us })
+        let replicates = match parse_u64("replicates")? {
+            None => None,
+            Some(0) => anyhow::bail!("--replicates: 0 replicates would run nothing (minimum 1)"),
+            Some(r) => {
+                anyhow::ensure!(r <= 1024, "--replicates: {r} is absurd (maximum 1024)");
+                Some(r as u32)
+            }
+        };
+        Ok(RunOpts {
+            fast: args.get_flag("fast"),
+            seed: parse_u64("seed")?,
+            duration_us,
+            replicates,
+        })
+    }
+
+    /// Effective replicate count per sweep grid point (≥ 1).
+    pub fn replicates(&self) -> u32 {
+        self.replicates.unwrap_or(1).max(1)
     }
 
     /// Simulated duration for a driver whose full run is `full_us`.
@@ -133,9 +158,10 @@ impl RunOpts {
     }
 }
 
-/// All 15 registered experiments: the 14 figure/table reproductions in
-/// paper order, plus the wall-clock fabric benchmark (the measured
-/// counterpart of §5.2-§5.5).
+/// All 16 registered experiments: the 14 figure/table reproductions in
+/// paper order, plus the two wall-clock benchmarks — the fabric echo
+/// (measured counterpart of §5.2-§5.5) and the applications served over
+/// the real rings (measured counterpart of §5.6/§5.7).
 pub const EXPERIMENTS: &[ExpSpec] = &[
     ExpSpec {
         name: "fig3",
@@ -256,6 +282,14 @@ pub const EXPERIMENTS: &[ExpSpec] = &[
         bench: "fabric_wallclock",
         aliases: &["fabric_wallclock", "wallclock", "fabric-bench"],
         run: fabric_bench::figure,
+    },
+    ExpSpec {
+        name: "app-wallclock",
+        title: "Application wall-clock — memcached/MICA/flightreg served over the real fabric",
+        paper_ref: "§5.6/§5.7 (measured counterpart)",
+        bench: "app_wallclock",
+        aliases: &["app_wallclock", "apps-wallclock", "kvs-wallclock"],
+        run: app_bench::figure,
     },
 ];
 
@@ -453,10 +487,11 @@ pub fn fig10(opts: &RunOpts) -> Figure {
     }
 
     // RPC-size sweep on the UPI interface (multi-line RPCs, §4.7): the
-    // harness grid exercises the payload axis.
+    // harness grid exercises the payload axis. Honors `--replicates N`
+    // (mean ± sd per point).
     let sweep = Sweep::new(SimConfig { iface: Iface::Upi(4), offered_mrps: 14.0, ..base.clone() })
         .payloads(&[64, 128, 256, 512, 1024]);
-    fig.series.push(sweep_series("upi-payload-sweep", &sweep.run()));
+    fig.series.push(sweep_series_auto("upi-payload-sweep", &sweep, opts.replicates()));
 
     // Best-effort peak (paper: 16.5 Mrps with arbitrary server drops).
     let be_cfg = SimConfig {
@@ -495,7 +530,8 @@ pub fn fig11_latency_throughput(opts: &RunOpts) -> Figure {
     ] {
         let sweep = Sweep::new(SimConfig { iface, adaptive_batch: adaptive, ..base.clone() })
             .loads(&loads);
-        fig.series.push(sweep_series(label, &sweep.run()));
+        // Honors `--replicates N` (mean ± sd per load point).
+        fig.series.push(sweep_series_auto(label, &sweep, opts.replicates()));
     }
     fig.note("batching trades latency for throughput; the soft-config adaptive mode gets B=1 latency at low load and B=4 throughput at saturation");
     fig
@@ -681,6 +717,25 @@ pub fn fig13(opts: &RunOpts) -> Figure {
             i.solo.p99_us.into(),
             i.shared.p99_us.into(),
             i.p99_inflation_x().into(),
+        ]);
+    }
+
+    // Multi-flow tenant: one vNIC driven by 1/2/4 client flows
+    // (per-tenant `n_threads`), the Fig. 11-right thread-scaling shape
+    // inside a single virtualized instance — past the ~12.4 Mrps
+    // single-flow issue cap toward the shared-endpoint ceiling.
+    let s = fig.series(
+        "multiflow-tenant",
+        &["client_flows", "offered_mrps", "achieved_mrps", "p99_us"],
+    );
+    for threads in [1u32, 2, 4] {
+        let t = SimConfig { n_threads: threads, offered_mrps: 12.0 * threads as f64, ..tenant.clone() };
+        let r = vnic::run(vnic::VnicConfig::symmetric(1, t.clone()));
+        s.push(vec![
+            threads.into(),
+            t.offered_mrps.into(),
+            r.per_tenant[0].achieved_mrps.into(),
+            r.per_tenant[0].p99_us.into(),
         ]);
     }
 
@@ -1032,12 +1087,14 @@ mod tests {
                 assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
             }
         }
-        assert_eq!(EXPERIMENTS.len(), 15);
+        assert_eq!(EXPERIMENTS.len(), 16);
         assert_eq!(spec("table4").unwrap().name, "table4-fig15");
         assert_eq!(spec("fig13_vnic_scaling").unwrap().name, "fig13");
         assert_eq!(spec("fig14_vnic_latency").unwrap().name, "fig14");
         assert_eq!(spec("fabric_wallclock").unwrap().name, "fabric-wallclock");
         assert_eq!(spec("wallclock").unwrap().bench, "fabric_wallclock");
+        assert_eq!(spec("app_wallclock").unwrap().name, "app-wallclock");
+        assert_eq!(spec("kvs-wallclock").unwrap().bench, "app_wallclock");
     }
 
     #[test]
@@ -1074,6 +1131,44 @@ mod tests {
         // (warmup = duration/8) to zero; reject them up front.
         let tiny = Args::parse(&["--duration-us".to_string(), "4".to_string()]);
         assert!(RunOpts::from_args(&tiny).is_err());
+    }
+
+    #[test]
+    fn replicates_flag_parses_and_bounds() {
+        let r = RunOpts::from_args(&Args::parse(&[
+            "--replicates".to_string(),
+            "3".to_string(),
+        ]))
+        .unwrap();
+        assert_eq!(r.replicates(), 3);
+        // Default: a single replicate (plain sweeps, unchanged artifacts).
+        assert_eq!(RunOpts::from_args(&Args::parse(&[])).unwrap().replicates(), 1);
+        // 0 would run nothing; absurd counts are rejected up front.
+        assert!(RunOpts::from_args(&Args::parse(&[
+            "--replicates".to_string(),
+            "0".to_string()
+        ]))
+        .is_err());
+        assert!(RunOpts::from_args(&Args::parse(&[
+            "--replicates".to_string(),
+            "9999".to_string()
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn replicated_fig11_emits_spread_columns() {
+        let args = Args::parse(&[
+            "--duration-us".to_string(),
+            "1200".to_string(),
+            "--replicates".to_string(),
+            "2".to_string(),
+        ]);
+        let fig = run_figure("fig11", &args).unwrap();
+        let s = &fig.series[0];
+        assert!(s.columns.iter().any(|c| c == "achieved_mrps_sd"));
+        let rep_c = s.columns.iter().position(|c| c == "replicates").unwrap();
+        assert!(s.rows.iter().all(|r| r[rep_c] == harness::Value::U64(2)));
     }
 
     #[test]

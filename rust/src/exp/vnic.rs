@@ -4,12 +4,16 @@
 //! fair round-robin bus arbiter modeled by [`MultiNic`].
 //!
 //! Topology: every tenant owns one vNIC instance with its own flow
-//! table, ring pair, offered load, and handler cost model (a per-tenant
-//! [`SimConfig`]). Client requests and server responses of all tenants
-//! contend for the single CCI-P endpoint; the arbiter grants it
-//! round-robin per vNIC, charging `bus_occupancy_ns` per granted cache
-//! line, so a heavily loaded tenant cannot starve a light one — the
-//! property Fig. 14 demonstrates.
+//! table, ring pairs, offered load, and handler cost model (a per-tenant
+//! [`SimConfig`]). A tenant drives its vNIC with `n_threads` client
+//! flows — each flow has its own core (issue CPU), arrival stream, and
+//! batch state, while all of a tenant's flows share the vNIC's single
+//! arbitration slot on the bus (the paper's per-instance CCI-P MUX
+//! port). Client requests and server responses of all tenants contend
+//! for the single CCI-P endpoint; the arbiter grants it round-robin per
+//! vNIC, charging `bus_occupancy_ns` per granted cache line, so a
+//! heavily loaded tenant cannot starve a light one — the property
+//! Fig. 14 demonstrates.
 //!
 //! Server-side dispatch is configurable ([`Dispatch`]): either each
 //! tenant has a dedicated server core (the paper's evaluation setup),
@@ -32,8 +36,10 @@ use std::collections::VecDeque;
 /// Server-side dispatch model for the virtualized setup.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dispatch {
-    /// One dedicated server core per tenant (paper §5.1 topology,
-    /// virtualized per tenant).
+    /// One dedicated server core per tenant client flow (paper §5.1
+    /// topology, virtualized per tenant: server flows mirror client
+    /// flows 1-to-1, exactly like `rpc_sim`'s provisioning — a
+    /// single-flow tenant gets one core, a 4-flow tenant four).
     PerTenant,
     /// Requests from any vNIC go to a shared pool of `workers` cores
     /// (earliest-free wins; deterministic tie-break by index).
@@ -43,9 +49,10 @@ pub enum Dispatch {
 /// One multi-tenant experiment point: N vNICs sharing the CCI-P bus.
 #[derive(Clone, Debug)]
 pub struct VnicConfig {
-    /// One per tenant/vNIC. Each tenant is a single client flow (its
-    /// `n_threads` is ignored); `duration_us`/`warmup_us` must agree
-    /// across tenants — they define the shared measurement window.
+    /// One per tenant/vNIC. A tenant drives `n_threads` client flows
+    /// (open-loop load and closed windows split per flow, like
+    /// `rpc_sim`); `duration_us`/`warmup_us` must agree across tenants
+    /// — they define the shared measurement window.
     pub tenants: Vec<SimConfig>,
     /// Explicit override of the per-granted-cache-line occupancy of the
     /// shared CCI-P endpoint. `None` (the default) derives it from the
@@ -179,6 +186,8 @@ pub fn run_solo(cfg: &VnicConfig, t: usize) -> SimResult {
 struct RpcRec {
     conceived: Ns,
     tenant: u32,
+    /// The tenant's client flow (thread) that issued this RPC.
+    thread: u32,
 }
 
 /// One direction of one tenant accumulates batches in the same
@@ -203,11 +212,11 @@ struct PendingXfer {
 }
 
 enum Ev {
-    /// Lazily generate the next open-loop arrival for a tenant.
-    NextArrival { t: u32 },
-    /// A request enters the tenant's client core.
+    /// Lazily generate the next open-loop arrival for one tenant flow.
+    NextArrival { t: u32, th: u32 },
+    /// A request enters its issuing flow's client core.
     Conceive { t: u32, rpc: u32 },
-    ClientBatchTimeout { t: u32, epoch: u64 },
+    ClientBatchTimeout { t: u32, th: u32, epoch: u64 },
     /// A request batch lands in tenant `t`'s server RX ring.
     ServerArrive { t: u32, rpcs: Vec<u32> },
     /// A worker finished handler + response write for one request.
@@ -226,7 +235,12 @@ struct World {
     /// Head-of-line queues, one per vNIC, round-robin drained.
     queues: Vec<VecDeque<PendingXfer>>,
     rpcs: Vec<RpcRec>,
+    /// Client-side senders, one per (tenant, flow), flattened; tenant
+    /// `t`'s flows live at `client_base[t] .. client_base[t] +
+    /// client_threads[t]`.
     clients: Vec<rpc_sim::Sender>,
+    client_base: Vec<usize>,
+    client_threads: Vec<u32>,
     responders: Vec<rpc_sim::Sender>,
     /// Worker-core busy horizons (len = tenants for PerTenant, else the
     /// pool size).
@@ -251,9 +265,11 @@ struct World {
 }
 
 impl World {
-    fn pick_worker(&self, t: usize) -> usize {
+    /// The server core handling a request from tenant `t`'s flow `th`.
+    fn pick_worker(&self, t: usize, th: u32) -> usize {
         match self.cfg.dispatch {
-            Dispatch::PerTenant => t,
+            // Server flows mirror client flows 1-to-1.
+            Dispatch::PerTenant => self.client_base[t] + th as usize,
             Dispatch::SharedPool { .. } => {
                 let mut best = 0;
                 for i in 1..self.workers.len() {
@@ -267,13 +283,31 @@ impl World {
     }
 }
 
+/// Which batch-accumulation state a launch drains: one of the tenant's
+/// client flows (requests) or the tenant's responder (responses).
+#[derive(Clone, Copy, Debug)]
+enum Src {
+    Client { th: u32 },
+    Responder,
+}
+
+impl Src {
+    fn dir(self) -> Dir {
+        match self {
+            Src::Client { .. } => Dir::Request,
+            Src::Responder => Dir::Response,
+        }
+    }
+}
+
 /// Move a full (or timed-out) batch from a sender to the shared bus,
 /// splitting transfers that exceed the CCI-P outstanding window.
-fn launch_batch(eng: &mut Engine<Ev>, w: &mut World, t: u32, dir: Dir, launch_at: Ns) {
+fn launch_batch(eng: &mut Engine<Ev>, w: &mut World, t: u32, src: Src, launch_at: Ns) {
     let ti = t as usize;
-    let sender = match dir {
-        Dir::Request => &mut w.clients[ti],
-        Dir::Response => &mut w.responders[ti],
+    let dir = src.dir();
+    let sender = match src {
+        Src::Client { th } => &mut w.clients[w.client_base[ti] + th as usize],
+        Src::Responder => &mut w.responders[ti],
     };
     if sender.batch.is_empty() {
         return;
@@ -358,8 +392,21 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
         batch_b.push(tc.effective_batch());
     }
 
+    // Flatten the per-tenant client flows: tenant t's `n_threads` flows
+    // (≥ 1) occupy a contiguous slice of `clients`.
+    let client_threads: Vec<u32> = cfg.tenants.iter().map(|t| t.n_threads.max(1)).collect();
+    let client_base: Vec<usize> = client_threads
+        .iter()
+        .scan(0usize, |acc, &k| {
+            let b = *acc;
+            *acc += k as usize;
+            Some(b)
+        })
+        .collect();
+    let total_client_flows: usize = client_threads.iter().map(|&k| k as usize).sum();
+
     let n_workers = match cfg.dispatch {
-        Dispatch::PerTenant => n,
+        Dispatch::PerTenant => total_client_flows,
         Dispatch::SharedPool { workers } => workers.max(1) as usize,
     };
 
@@ -367,7 +414,9 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
         multi,
         queues: (0..n).map(|_| VecDeque::new()).collect(),
         rpcs: Vec::with_capacity(1 << 16),
-        clients: mk_senders(n),
+        clients: mk_senders(total_client_flows),
+        client_base,
+        client_threads,
         responders: mk_senders(n),
         workers: vec![0; n_workers],
         in_server: vec![0; n],
@@ -396,57 +445,66 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
 
     let mut eng: Engine<Ev> = Engine::new();
 
-    // Seed per-tenant arrivals: open loop (Poisson) or closed loop.
+    // Seed per-flow arrivals: open loop (Poisson, each flow offers its
+    // 1/n_threads share, like rpc_sim) or closed loop (each flow keeps
+    // its own `closed_window` outstanding).
     for t in 0..n as u32 {
         let tc = &w.cfg.tenants[t as usize];
-        if tc.offered_mrps > 0.0 {
-            let gap = 1e9 / (tc.offered_mrps * 1e6);
-            w.arrival_gen.push((Rng::new(tc.seed ^ (0xA5A5_0000 + t as u64)), gap));
-            eng.at(0, Ev::NextArrival { t });
-        } else {
-            w.arrival_gen.push((Rng::new(tc.seed), f64::INFINITY));
-            for _ in 0..tc.closed_window {
-                let rpc = w.rpcs.len() as u32;
-                w.rpcs.push(RpcRec { conceived: 0, tenant: t });
-                eng.at(0, Ev::Conceive { t, rpc });
+        let threads = w.client_threads[t as usize];
+        for th in 0..threads {
+            let seed = tc.seed ^ (0xA5A5_0000 + t as u64 + ((th as u64) << 20));
+            if tc.offered_mrps > 0.0 {
+                let per_flow = tc.offered_mrps / threads as f64;
+                let gap = 1e9 / (per_flow * 1e6);
+                w.arrival_gen.push((Rng::new(seed), gap));
+                eng.at(0, Ev::NextArrival { t, th });
+            } else {
+                w.arrival_gen.push((Rng::new(seed), f64::INFINITY));
+                for _ in 0..tc.closed_window {
+                    let rpc = w.rpcs.len() as u32;
+                    w.rpcs.push(RpcRec { conceived: 0, tenant: t, thread: th });
+                    eng.at(0, Ev::Conceive { t, rpc });
+                }
             }
         }
     }
 
     let step = |eng: &mut Engine<Ev>, w: &mut World, now: Ns, ev: Ev| match ev {
-        Ev::NextArrival { t } => {
-            let (rng, gap) = &mut w.arrival_gen[t as usize];
+        Ev::NextArrival { t, th } => {
+            let slot = w.client_base[t as usize] + th as usize;
+            let (rng, gap) = &mut w.arrival_gen[slot];
             let at = now + rng.exp(*gap) as Ns;
             if at < w.horizon {
                 let rpc = w.rpcs.len() as u32;
-                w.rpcs.push(RpcRec { conceived: at, tenant: t });
+                w.rpcs.push(RpcRec { conceived: at, tenant: t, thread: th });
                 eng.at(at, Ev::Conceive { t, rpc });
-                eng.at(at, Ev::NextArrival { t });
+                eng.at(at, Ev::NextArrival { t, th });
             }
         }
         Ev::Conceive { t, rpc } => {
             let ti = t as usize;
+            let th = w.rpcs[rpc as usize].thread;
             w.sent[ti] += 1;
             let b = w.batch_b[ti];
-            let c = &mut w.clients[ti];
+            let c = &mut w.clients[w.client_base[ti] + th as usize];
             let start = now.max(c.cpu_free);
             c.cpu_free = start + w.per_rpc_cpu[ti];
             c.batch.push(rpc);
             if c.batch.len() as u32 >= b {
                 let at = c.cpu_free;
-                launch_batch(eng, w, t, Dir::Request, at);
+                launch_batch(eng, w, t, Src::Client { th }, at);
             } else if c.batch.len() == 1 && w.cfg.tenants[ti].batch_timeout_ns > 0 {
                 let epoch = c.batch_epoch;
                 eng.at(
                     c.cpu_free + w.cfg.tenants[ti].batch_timeout_ns,
-                    Ev::ClientBatchTimeout { t, epoch },
+                    Ev::ClientBatchTimeout { t, th, epoch },
                 );
             }
         }
-        Ev::ClientBatchTimeout { t, epoch } => {
-            let ti = t as usize;
-            if w.clients[ti].batch_epoch == epoch && !w.clients[ti].batch.is_empty() {
-                launch_batch(eng, w, t, Dir::Request, now);
+        Ev::ClientBatchTimeout { t, th, epoch } => {
+            let slot = w.client_base[t as usize] + th as usize;
+            if w.clients[slot].batch_epoch == epoch && !w.clients[slot].batch.is_empty() {
+                launch_batch(eng, w, t, Src::Client { th }, now);
             }
         }
         Ev::ServerArrive { t, rpcs } => {
@@ -454,17 +512,20 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
             for rpc in rpcs {
                 if w.in_server[ti] >= w.cfg.tenants[ti].server_ring_entries as u32 {
                     w.dropped[ti] += 1;
-                    // Closed loop would deadlock on drops; reissue.
+                    // Closed loop would deadlock on drops; reissue on
+                    // the dropped RPC's own flow.
                     if w.cfg.tenants[ti].offered_mrps == 0.0 {
+                        let th = w.rpcs[rpc as usize].thread;
                         let new = w.rpcs.len() as u32;
-                        w.rpcs.push(RpcRec { conceived: now, tenant: t });
+                        w.rpcs.push(RpcRec { conceived: now, tenant: t, thread: th });
                         eng.at(now, Ev::Conceive { t, rpc: new });
                     }
                     continue;
                 }
                 w.in_server[ti] += 1;
-                // Dispatch: dedicated core or earliest-free pool worker.
-                let wk = w.pick_worker(ti);
+                // Dispatch: dedicated per-flow core or earliest-free
+                // pool worker.
+                let wk = w.pick_worker(ti, w.rpcs[rpc as usize].thread);
                 let start = now.max(w.workers[wk]);
                 let cost =
                     w.cfg.tenants[ti].handler.sample(&mut w.rngs[ti]) + w.per_rpc_cpu[ti];
@@ -480,7 +541,7 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
             s.cpu_free = s.cpu_free.max(now);
             s.batch.push(rpc);
             if s.batch.len() as u32 >= b {
-                launch_batch(eng, w, t, Dir::Response, now);
+                launch_batch(eng, w, t, Src::Responder, now);
             } else if s.batch.len() == 1 && w.cfg.tenants[ti].batch_timeout_ns > 0 {
                 let epoch = s.batch_epoch;
                 eng.at(
@@ -492,7 +553,7 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
         Ev::RespBatchTimeout { t, epoch } => {
             let ti = t as usize;
             if w.responders[ti].batch_epoch == epoch && !w.responders[ti].batch.is_empty() {
-                launch_batch(eng, w, t, Dir::Response, now);
+                launch_batch(eng, w, t, Src::Responder, now);
             }
         }
         Ev::ClientComplete { t, rpcs } => {
@@ -508,8 +569,9 @@ pub fn run(cfg: VnicConfig) -> VnicResult {
                     w.hists[ti].record(now - rec.conceived);
                 }
                 if w.cfg.tenants[ti].offered_mrps == 0.0 {
+                    // Closed loop: reissue on the same client flow.
                     let new = w.rpcs.len() as u32;
-                    w.rpcs.push(RpcRec { conceived: now, tenant: t });
+                    w.rpcs.push(RpcRec { conceived: now, tenant: t, thread: rec.thread });
                     eng.at(now, Ev::Conceive { t, rpc: new });
                 }
             }
@@ -711,5 +773,70 @@ mod tests {
         let t = SimConfig { offered_mrps: 0.0, closed_window: 16, ..tenant(0.0) };
         let r = run(VnicConfig::symmetric(2, t));
         assert!(r.per_tenant.iter().all(|p| p.completed > 500), "{:?}", r.per_tenant);
+    }
+
+    #[test]
+    fn multiflow_tenant_scales_past_the_single_flow_ceiling() {
+        // A tenant's n_threads is honored: one vNIC driven by 4 client
+        // flows pushes well past the ~12.4 Mrps single-flow issue-rate
+        // cap, up toward the shared-endpoint ceiling (Fig. 11-right
+        // behavior inside one tenant).
+        let one = run(VnicConfig::symmetric(
+            1,
+            SimConfig { n_threads: 1, ..tenant(40.0) },
+        ));
+        let four = run(VnicConfig::symmetric(
+            1,
+            SimConfig { n_threads: 4, ..tenant(40.0) },
+        ));
+        let a1 = one.per_tenant[0].achieved_mrps;
+        let a4 = four.per_tenant[0].achieved_mrps;
+        assert!(a1 < 15.0, "single flow should cap near 12.4: {a1}");
+        assert!(a4 > a1 * 1.8, "4 flows must scale: {a1} -> {a4}");
+        assert!((20.0..46.0).contains(&a4), "a4 {a4}");
+    }
+
+    #[test]
+    fn multiflow_closed_loop_windows_are_per_flow() {
+        // closed_window applies per flow: doubling the flows doubles
+        // the outstanding RPCs, so completions grow substantially.
+        let mk = |threads: u32| {
+            run(VnicConfig::symmetric(
+                1,
+                SimConfig {
+                    offered_mrps: 0.0,
+                    closed_window: 4,
+                    n_threads: threads,
+                    ..tenant(0.0)
+                },
+            ))
+            .per_tenant[0]
+                .completed
+        };
+        let c1 = mk(1);
+        let c2 = mk(2);
+        assert!(c2 > c1 + c1 / 4, "2 flows should complete more: {c1} -> {c2}");
+    }
+
+    #[test]
+    fn multiflow_tenants_stay_deterministic_and_fair() {
+        let mk = || {
+            run(VnicConfig::symmetric(
+                3,
+                SimConfig { n_threads: 2, ..tenant(8.0) },
+            ))
+        };
+        let a = mk();
+        let b = mk();
+        for (x, y) in a.per_tenant.iter().zip(&b.per_tenant) {
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.p99_us, y.p99_us);
+        }
+        assert_eq!(a.lines_granted, b.lines_granted);
+        // Round-robin fairness still holds with multi-flow tenants.
+        let mean = a.mean_tenant_mrps();
+        for p in &a.per_tenant {
+            assert!((p.achieved_mrps - mean).abs() < mean * 0.15);
+        }
     }
 }

@@ -1,0 +1,146 @@
+//! Integration smoke for the application wall-clock benchmark: a
+//! `--fast` end-to-end run must produce a schema-valid `dagger-bench/v1`
+//! artifact with (a) memcached and MICA GET/SET points measured over the
+//! real rings with zero data-integrity failures, (b) the MICA
+//! object-level-steering point with zero misroutes next to a round-robin
+//! contrast point with misroutes, and (c) multi-tier flightreg chain
+//! points whose every measured RPC proved it traversed the whole chain.
+//!
+//! Wall-clock numbers are host-specific; this test asserts structure and
+//! integrity invariants, never absolute throughputs.
+
+use dagger::cli::Args;
+use dagger::exp::harness::{json::Json, Figure, Value};
+use dagger::exp::run_figure;
+
+fn num(v: &Value) -> f64 {
+    match v {
+        Value::F64(f) => *f,
+        Value::U64(u) => *u as f64,
+        other => panic!("expected a number, got {other:?}"),
+    }
+}
+
+fn text(v: &Value) -> &str {
+    match v {
+        Value::Str(s) => s,
+        other => panic!("expected a string, got {other:?}"),
+    }
+}
+
+#[test]
+fn fast_run_emits_kvs_and_chain_series() {
+    let fig = run_figure("app-wallclock", &Args::parse(&["--fast".to_string()]))
+        .expect("app-wallclock runs");
+    assert_eq!(fig.name, "app-wallclock");
+
+    // ----------------------------------------------------- KVS series
+    let kvs = fig
+        .series
+        .iter()
+        .find(|s| s.label == "kvs-wallclock")
+        .expect("kvs series");
+    let col = |name: &str| {
+        kvs.columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("column {name}"))
+    };
+    let (store_c, mix_c, lb_c, thr_c, p50_c, p99_c, bad_c, mis_c, leak_c) = (
+        col("store"),
+        col("mix"),
+        col("lb"),
+        col("achieved_mrps"),
+        col("p50_us"),
+        col("p99_us"),
+        col("bad_responses"),
+        col("misrouted"),
+        col("leaked_slots"),
+    );
+    assert!(kvs.rows.len() >= 5, "KVS grid too small: {}", kvs.rows.len());
+
+    for row in &kvs.rows {
+        assert!(num(&row[thr_c]) > 0.0, "a KVS point measured nothing: {row:?}");
+        assert!(num(&row[p99_c]) >= num(&row[p50_c]));
+        assert_eq!(num(&row[bad_c]), 0.0, "data-integrity failure at {row:?}");
+        assert_eq!(num(&row[leak_c]), 0.0, "lost frames at {row:?}");
+    }
+
+    // Both stores, both mixes, and both steering modes are present.
+    let has = |store: &str, mix: &str| {
+        kvs.rows
+            .iter()
+            .any(|r| text(&r[store_c]) == store && text(&r[mix_c]) == mix)
+    };
+    assert!(has("memcached", "50/50") && has("memcached", "5/95"), "memcached GET/SET points");
+    assert!(has("mica", "50/50") && has("mica", "5/95"), "mica GET/SET points");
+
+    // §5.7: object-level steering never misroutes a partitioned store;
+    // the round-robin contrast row demonstrates why MICA requires it.
+    let mica_obj: Vec<_> = kvs
+        .rows
+        .iter()
+        .filter(|r| text(&r[store_c]) == "mica" && text(&r[lb_c]) == "object-level")
+        .collect();
+    assert!(!mica_obj.is_empty(), "no object-level mica point");
+    for row in &mica_obj {
+        assert_eq!(num(&row[mis_c]), 0.0, "object-level steering misrouted: {row:?}");
+    }
+    let mica_rr = kvs
+        .rows
+        .iter()
+        .find(|r| text(&r[store_c]) == "mica" && text(&r[lb_c]) == "round-robin")
+        .expect("round-robin mica contrast point");
+    assert!(num(&mica_rr[mis_c]) > 0.0, "round-robin steering should misroute");
+    // memcached is unpartitioned: misrouted is not applicable there.
+    assert!(kvs
+        .rows
+        .iter()
+        .filter(|r| text(&r[store_c]) == "memcached")
+        .all(|r| r[mis_c] == Value::Null));
+
+    // --------------------------------------------------- chain series
+    let chain = fig
+        .series
+        .iter()
+        .find(|s| s.label == "flightreg-chain")
+        .expect("chain series");
+    let ccol = |name: &str| {
+        chain
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("column {name}"))
+    };
+    let (tiers_c, krps_c, cp50_c, cbad_c, fail_c) = (
+        ccol("tiers"),
+        ccol("achieved_krps"),
+        ccol("p50_us"),
+        ccol("bad_responses"),
+        ccol("downstream_failures"),
+    );
+    assert!(
+        chain.rows.iter().any(|r| num(&r[tiers_c]) >= 2.0),
+        "no >=2-tier chain point"
+    );
+    assert!(
+        chain.rows.iter().any(|r| num(&r[tiers_c]) >= 3.0),
+        "no 3-tier chain point"
+    );
+    for row in &chain.rows {
+        assert!(num(&row[krps_c]) > 0.0, "a chain point measured nothing: {row:?}");
+        assert!(num(&row[cp50_c]) > 0.0);
+        assert_eq!(num(&row[cbad_c]), 0.0, "an RPC skipped part of the chain: {row:?}");
+        assert_eq!(num(&row[fail_c]), 0.0, "downstream sub-RPC failures: {row:?}");
+    }
+
+    // ------------------------------------------------- artifact schema
+    let dir = std::env::temp_dir().join(format!("dagger_appwall_{}", std::process::id()));
+    let paths = fig.write_artifacts(&dir).expect("artifacts written");
+    assert!(paths[0].ends_with("BENCH_app-wallclock.json"));
+    let text = std::fs::read_to_string(&paths[0]).unwrap();
+    let j = Json::parse(&text).expect("valid JSON");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("dagger-bench/v1"));
+    assert_eq!(Figure::from_json(&text).expect("round-trip"), fig);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -99,7 +99,7 @@ fn fig10_fast_sweep_hits_paper_anchors() {
 
 #[test]
 fn every_registered_experiment_names_a_bench_target() {
-    assert_eq!(EXPERIMENTS.len(), 15);
+    assert_eq!(EXPERIMENTS.len(), 16);
     for s in EXPERIMENTS {
         assert!(spec(s.name).is_some());
         assert!(!s.bench.is_empty());
@@ -108,8 +108,9 @@ fn every_registered_experiment_names_a_bench_target() {
     // The vnic experiments follow the registry convention exactly.
     assert_eq!(spec("fig13").unwrap().bench, "fig13_vnic_scaling");
     assert_eq!(spec("fig14").unwrap().bench, "fig14_vnic_latency");
-    // ... as does the wall-clock fabric benchmark.
+    // ... as do the wall-clock benchmarks.
     assert_eq!(spec("fabric-wallclock").unwrap().bench, "fabric_wallclock");
+    assert_eq!(spec("app-wallclock").unwrap().bench, "app_wallclock");
 }
 
 #[test]

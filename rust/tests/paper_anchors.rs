@@ -167,6 +167,30 @@ fn fig13_vnic_throughput_scaling() {
     assert!(a8.per_tenant[0].achieved_mrps < a1.per_tenant[0].achieved_mrps);
 }
 
+/// Fig. 13 follow-up (multi-flow tenants): a single vNIC instance
+/// driven by several client flows (per-tenant `n_threads`, the Fig.
+/// 11-right thread-scaling shape inside one virtualized instance)
+/// pushes past the ~12.4 Mrps single-flow issue cap and uses the
+/// shared-endpoint headroom a lone single-flow tenant leaves idle.
+#[test]
+fn fig13_multiflow_tenant_uses_bus_headroom() {
+    let run_t = |threads: u32| {
+        vnic::run(VnicConfig::symmetric(
+            1,
+            SimConfig { n_threads: threads, ..cfg(Iface::Upi(4), 12.0 * threads as f64) },
+        ))
+        .per_tenant[0]
+            .achieved_mrps
+    };
+    let a1 = run_t(1);
+    let a2 = run_t(2);
+    let a4 = run_t(4);
+    assert!((10.0..15.0).contains(&a1), "single flow caps near 12.4: {a1}");
+    assert!(a2 > a1 * 1.6, "2 flows must scale: {a1} -> {a2}");
+    assert!(a4 > a1 * 1.8, "4 flows must scale: {a1} -> {a4}");
+    assert!(a4 < 46.0, "the shared endpoint still binds: {a4}");
+}
+
 /// Fig. 14: with one lightly loaded tenant among saturating neighbors,
 /// the round-robin arbiter bounds interference — the loaded tenant's
 /// shared-bus p99 is at least its solo p99 (contention is visible) but
