@@ -178,25 +178,20 @@ fn real_threads_part(duration_ms: u64) {
             M_CHECKIN,
             Arc::new(move |_, req| {
                 // Non-blocking fan-out (the paper's Check-in pattern):
+                // issue Flight + Baggage concurrently via CallHandles.
                 let k = &req[..req.len().min(24)];
-                let f0 = fc.cq.completed_count.load(Ordering::Relaxed);
-                let b0 = bc.cq.completed_count.load(Ordering::Relaxed);
                 let f = fc.call_async(M_FLIGHT, k);
                 let b = bc.call_async(M_BAGGAGE, k);
                 // Passport is a blocking nested chain.
                 let p = pc.call_blocking(M_PASSPORT, k);
-                // Block until both fan-out responses have returned.
-                let deadline = Instant::now() + std::time::Duration::from_secs(5);
-                while (fc.cq.completed_count.load(Ordering::Relaxed) < f0 + f.is_ok() as u64
-                    || bc.cq.completed_count.load(Ordering::Relaxed) < b0 + b.is_ok() as u64)
-                    && Instant::now() < deadline
-                {
-                    fc.poll_completions();
-                    bc.poll_completions();
-                    std::thread::yield_now();
+                // Join the fan-out on its handles.
+                let wait = std::time::Duration::from_secs(5);
+                if let Ok(h) = f {
+                    let _ = fc.wait_handle(&h, wait);
                 }
-                fc.cq.drain();
-                bc.cq.drain();
+                if let Ok(h) = b {
+                    let _ = bc.wait_handle(&h, wait);
+                }
                 // Register in the Airport DB (blocking).
                 let mut rec = k.to_vec();
                 rec.extend_from_slice(b":reg");

@@ -32,6 +32,7 @@ fn main() {
     println!("latency p50      : {:.1} us", r.p50_us);
     println!("latency p99      : {:.1} us", r.p99_us);
     println!("hit responses    : {}", r.hits);
+    println!("misrouted        : {} (0 under object-level steering)", r.misrouted);
     println!("\n(paper context: Fig. 12 reports simulated single-core Dagger KVS latency of");
     println!(" 2.8-3.5 us p50 — regenerate with `cargo bench --bench fig12_kvs`)");
 }

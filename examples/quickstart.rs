@@ -54,23 +54,26 @@ fn main() {
     println!("reverse(\"dagger\") = {:?}", String::from_utf8_lossy(&resp));
     assert_eq!(resp, b"reggad");
 
-    // 6. Async calls with a completion callback.
-    client.cq.set_callback(Box::new(|c| {
+    // 6. Async calls: a completion sink runs as the continuation, and
+    //    the returned CallHandles let us wait on specific calls.
+    client.set_sink(Box::new(|c: &dagger::coordinator::api::Completion| {
         println!(
             "  async completion rpc_id={} -> {:?}",
             c.rpc_id,
             String::from_utf8_lossy(&c.payload)
         );
     }));
-    for word in ["fpga", "rpc", "nic"] {
-        client.call_async(METHOD_UPPER, word.as_bytes()).expect("send");
+    let handles: Vec<_> = ["fpga", "rpc", "nic"]
+        .iter()
+        .map(|word| client.call_async(METHOD_UPPER, word.as_bytes()).expect("send"))
+        .collect();
+    for h in &handles {
+        let resp = client
+            .wait_handle(h, std::time::Duration::from_secs(10))
+            .expect("async completion");
+        assert!(resp.iter().all(|b| b.is_ascii_uppercase()));
     }
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-    while client.cq.completed_count.load(Ordering::Relaxed) < 4 {
-        client.poll_completions();
-        assert!(std::time::Instant::now() < deadline, "timed out");
-        std::thread::yield_now();
-    }
+    assert_eq!(client.completed_count.load(Ordering::Relaxed), 4);
 
     println!(
         "fabric stats: forwarded={} drops(rx_full)={}",

@@ -13,11 +13,14 @@
 //! The Airport and Citizens tiers are MICA-backed (object-level load
 //! balancer on their NICs); the rest are stateless (round-robin).
 
-use crate::coordinator::api::RpcClient;
-use crate::coordinator::service::{Request, RpcService};
+use crate::coordinator::api::{CallHandle, RpcClient};
+use crate::coordinator::backoff::Backoff;
+use crate::coordinator::service::{CallToken, PendingCall, Request, Response, RpcService};
 use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Tier indices.
 pub const PASSENGER_FE: usize = 0;
@@ -182,19 +185,56 @@ pub fn flight_mean_ns() -> f64 {
 /// Method id the chain tiers serve and forward on.
 pub const CHAIN_METHOD: u8 = 7;
 
+/// What a tier's local handler costs, and how it spends the time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierCost {
+    /// Real busy-spun CPU time (compute-bound handler).
+    Spin(u64),
+    /// `thread::sleep` for the duration (models an I/O-bound backend —
+    /// a DB lookup, a disk hit). A sleeping handler occupies its
+    /// dispatch thread without burning a core, so N sleeping leaves
+    /// overlap even on a small host — which is what lets the fan-out
+    /// benchmark prove branch concurrency independently of the
+    /// machine's core count.
+    Sleep(u64),
+}
+
+impl TierCost {
+    /// Burn/occupy the configured duration on the calling thread.
+    pub fn run(self) {
+        match self {
+            TierCost::Spin(0) | TierCost::Sleep(0) => {}
+            TierCost::Spin(ns) => {
+                let t0 = Instant::now();
+                while (t0.elapsed().as_nanos() as u64) < ns {
+                    std::hint::spin_loop();
+                }
+            }
+            TierCost::Sleep(ns) => std::thread::sleep(Duration::from_nanos(ns)),
+        }
+    }
+
+    pub fn ns(self) -> u64 {
+        match self {
+            TierCost::Spin(ns) | TierCost::Sleep(ns) => ns,
+        }
+    }
+}
+
 /// One flightreg tier ported onto the Dagger service layer: real local
-/// CPU work (a busy-spin of `local_ns` on the dispatch thread — the
-/// §5.7 "Simple" threading model, where the handler runs inline and a
-/// nested dependency blocks the flow), then at most one blocking
-/// sub-RPC to the next tier over the tier's own outbound client flow.
+/// handler cost on the dispatch thread (the §5.7 "Simple" threading
+/// model, where the handler runs inline and a nested dependency blocks
+/// the flow), then at most one blocking sub-RPC to the next tier over
+/// the tier's own outbound client flow. The non-blocking counterpart —
+/// Check-in's real fan-out — is [`FanoutService`].
 ///
 /// The response's first byte counts the tiers traversed below and
 /// including this one (leaf = 1, its caller = 2, ...), so the entry
 /// client can verify every measured RPC really crossed the whole chain.
 pub struct TierService {
     pub tier: &'static str,
-    /// Local handler cost, ns of real busy-spun CPU time (0 = none).
-    pub local_ns: u64,
+    /// Local handler cost (0 = none).
+    pub cost: TierCost,
     /// Downstream dependency (None = leaf tier).
     pub next: Option<Arc<RpcClient>>,
     /// Sub-RPCs that failed or timed out (0 in a healthy chain);
@@ -204,34 +244,431 @@ pub struct TierService {
 }
 
 impl TierService {
+    /// Busy-spinning tier (compute-bound handler; the original
+    /// chain-benchmark calibration).
     pub fn new(tier: &'static str, local_ns: u64, next: Option<Arc<RpcClient>>) -> TierService {
-        TierService { tier, local_ns, next, failures: Arc::new(AtomicU64::new(0)) }
+        TierService {
+            tier,
+            cost: TierCost::Spin(local_ns),
+            next,
+            failures: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Sleeping tier (I/O-bound handler; used by the fan-out plan).
+    pub fn sleeping(tier: &'static str, local_ns: u64, next: Option<Arc<RpcClient>>) -> TierService {
+        TierService {
+            tier,
+            cost: TierCost::Sleep(local_ns),
+            next,
+            failures: Arc::new(AtomicU64::new(0)),
+        }
     }
 }
 
 impl RpcService for TierService {
-    fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
-        if self.local_ns > 0 {
-            let t0 = std::time::Instant::now();
-            while (t0.elapsed().as_nanos() as u64) < self.local_ns {
-                std::hint::spin_loop();
-            }
-        }
+    fn call(&mut self, _req: Request<'_>) -> Response {
+        self.cost.run();
         let hops_below = match &self.next {
             None => 0,
             Some(client) => match client.call_blocking(CHAIN_METHOD, b"") {
                 Some(resp) => resp.first().copied().unwrap_or(0),
                 None => {
                     self.failures.fetch_add(1, Ordering::Relaxed);
-                    return vec![0];
+                    return vec![0].into();
                 }
             },
         };
-        vec![1 + hops_below]
+        vec![1 + hops_below].into()
     }
 
     fn name(&self) -> &'static str {
         self.tier
+    }
+}
+
+// ===================================================================
+// Check-in fan-out (the real non-blocking sub-RPC path, §4.2/§5.7)
+// ===================================================================
+
+/// Max branches the fan-out response wire format carries.
+pub const MAX_FANOUT_BRANCHES: usize = 3;
+
+/// Parsed fan-out response (see [`encode_fanout_resp`] for the layout).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FanoutResp {
+    /// Distinct tiers traversed, entry tier included.
+    pub total_tiers: u8,
+    pub n_branches: u8,
+    /// Wall time from issuing the branch sub-RPCs to the last branch
+    /// completion — the *concurrent* fan-out window.
+    pub fanout_ns: u32,
+    /// RTT of the post-join sub-RPC (0 when the plan has no join tier).
+    pub join_ns: u32,
+    /// Per-branch RTTs, measured at the entry tier (0 = unused lane).
+    pub branch_ns: [u32; MAX_FANOUT_BRANCHES],
+}
+
+impl FanoutResp {
+    /// Serial cost of the branches: what the fan-out would have taken
+    /// had the sub-RPCs been issued back-to-back blocking. The §5.7
+    /// concurrency proof is `fanout_ns < sum_branch_ns` (overlap).
+    pub fn sum_branch_ns(&self) -> u64 {
+        self.branch_ns.iter().map(|&b| b as u64).sum()
+    }
+}
+
+/// Fan-out response layout (fits the 36-byte app region with room for
+/// the tail stamp):
+///
+/// ```text
+/// 0       total_tiers (0 = a sub-RPC failed — the verifier flags it)
+/// 1       n_branches
+/// 2..6    fanout_ns  u32 LE
+/// 6..10   join_ns    u32 LE
+/// 10..22  branch_ns  3 × u32 LE
+/// ```
+pub fn encode_fanout_resp(r: &FanoutResp) -> Vec<u8> {
+    let mut out = vec![0u8; 22];
+    out[0] = r.total_tiers;
+    out[1] = r.n_branches;
+    out[2..6].copy_from_slice(&r.fanout_ns.to_le_bytes());
+    out[6..10].copy_from_slice(&r.join_ns.to_le_bytes());
+    for (i, b) in r.branch_ns.iter().enumerate() {
+        out[10 + i * 4..14 + i * 4].copy_from_slice(&b.to_le_bytes());
+    }
+    out
+}
+
+pub fn parse_fanout_resp(payload: &[u8]) -> Option<FanoutResp> {
+    if payload.len() < 22 {
+        return None;
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
+    let mut branch_ns = [0u32; MAX_FANOUT_BRANCHES];
+    for (i, b) in branch_ns.iter_mut().enumerate() {
+        *b = u32_at(10 + i * 4);
+    }
+    Some(FanoutResp {
+        total_tiers: payload[0],
+        n_branches: payload[1],
+        fanout_ns: u32_at(2),
+        join_ns: u32_at(6),
+        branch_ns,
+    })
+}
+
+/// One downstream dependency of the fan-out tier, riding its own
+/// outbound client flow (1-to-1 flow ↔ RpcClient, §4.2). The branch's
+/// responses carry their own traversed-tier count in byte 0 (a leaf
+/// reports 1; Passport reports 2 because it chains to Citizens).
+pub struct FanoutBranch {
+    pub name: &'static str,
+    pub client: Arc<RpcClient>,
+}
+
+/// Per-request fan-out state while its sub-RPCs are in flight.
+struct InFlightFanout {
+    /// When the branch sub-RPCs went out (after the local handler).
+    issued: Instant,
+    branch_tiers: Vec<u8>,
+    branch_ns: Vec<u32>,
+    outstanding: usize,
+    fanout_ns: u32,
+    join_issued: Option<Instant>,
+    join_ns: u32,
+    join_tiers: u8,
+    failed: bool,
+}
+
+/// Check-in ported onto the **non-blocking** service API (§4.2's
+/// continuation interface, §5.7's fan-out tier): run the local handler,
+/// issue one sub-RPC per branch *concurrently* via [`CallHandle`]s, and
+/// park the request ([`Response::Pending`]). The dispatch loop's
+/// `poll_parked` drives the joins: when every branch has answered, the
+/// optional join tier (Airport — the many-to-one dependency shared with
+/// Staff-FE) gets its sub-RPC; when that answers too, the response is
+/// produced with per-branch RTTs so the client can verify the branches
+/// actually overlapped ([`FanoutResp`]).
+///
+/// Everything runs on ONE dispatch (or worker) thread — many requests
+/// mid-fan-out at once is the whole point (Table 4's "Optimized" tiers
+/// exist because the blocking version cannot do this).
+pub struct FanoutService {
+    pub tier: &'static str,
+    /// Local handler cost before the fan-out.
+    pub cost: TierCost,
+    branches: Vec<FanoutBranch>,
+    /// Many-to-one join issued after all branches complete.
+    join: Option<FanoutBranch>,
+    /// Per-branch rpc_id → token (rpc_ids are per-client, so each
+    /// branch keeps its own map).
+    awaiting: Vec<HashMap<u32, CallToken>>,
+    join_awaiting: HashMap<u32, CallToken>,
+    inflight: HashMap<CallToken, InFlightFanout>,
+    /// Sub-RPCs that could not be issued or answered garbage.
+    pub failures: Arc<AtomicU64>,
+}
+
+impl FanoutService {
+    pub fn new(
+        tier: &'static str,
+        cost: TierCost,
+        branches: Vec<FanoutBranch>,
+        join: Option<FanoutBranch>,
+    ) -> FanoutService {
+        assert!(
+            (1..=MAX_FANOUT_BRANCHES).contains(&branches.len()),
+            "fan-out wire format carries 1..=3 branches"
+        );
+        let awaiting = branches.iter().map(|_| HashMap::new()).collect();
+        FanoutService {
+            tier,
+            cost,
+            branches,
+            join,
+            awaiting,
+            join_awaiting: HashMap::new(),
+            inflight: HashMap::new(),
+            failures: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Requests currently parked mid-fan-out (diagnostics/tests).
+    pub fn parked(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Issue one sub-RPC, riding out transient TX backpressure.
+    fn issue(client: &RpcClient, failures: &AtomicU64) -> Option<CallHandle> {
+        let mut backoff = Backoff::new();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            match client.call_async(CHAIN_METHOD, b"") {
+                Ok(h) => return Some(h),
+                Err(()) => {
+                    if Instant::now() > deadline {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
+    /// Build the final response for a finished token.
+    fn finalize(&mut self, token: CallToken, done: &mut Vec<(CallToken, Vec<u8>)>) {
+        let Some(fl) = self.inflight.remove(&token) else {
+            return;
+        };
+        if fl.failed {
+            done.push((token, vec![0]));
+            return;
+        }
+        let mut resp = FanoutResp {
+            total_tiers: 1 + fl.branch_tiers.iter().sum::<u8>() + fl.join_tiers,
+            n_branches: self.branches.len() as u8,
+            fanout_ns: fl.fanout_ns,
+            join_ns: fl.join_ns,
+            branch_ns: [0; MAX_FANOUT_BRANCHES],
+        };
+        resp.branch_ns[..fl.branch_ns.len()].copy_from_slice(&fl.branch_ns);
+        done.push((token, encode_fanout_resp(&resp)));
+    }
+
+    /// A token's branch set just completed: issue the join sub-RPC, or
+    /// finalize right away when the plan has none.
+    fn on_branches_done(&mut self, token: CallToken, done: &mut Vec<(CallToken, Vec<u8>)>) {
+        let Some(join) = &self.join else {
+            self.finalize(token, done);
+            return;
+        };
+        match Self::issue(&join.client, &self.failures) {
+            Some(h) => {
+                self.join_awaiting.insert(h.rpc_id(), token);
+                if let Some(fl) = self.inflight.get_mut(&token) {
+                    fl.join_issued = Some(Instant::now());
+                }
+            }
+            None => {
+                if let Some(fl) = self.inflight.get_mut(&token) {
+                    fl.failed = true;
+                }
+                self.finalize(token, done);
+            }
+        }
+    }
+}
+
+impl RpcService for FanoutService {
+    fn call(&mut self, req: Request<'_>) -> Response {
+        self.cost.run();
+        let n = self.branches.len();
+        let issued_at = Instant::now();
+        let mut handles: Vec<CallHandle> = Vec::with_capacity(n);
+        for b in &self.branches {
+            match Self::issue(&b.client, &self.failures) {
+                Some(h) => handles.push(h),
+                None => {
+                    // Partial fan-out: forget what was issued (their
+                    // completions become counted strays at the branch
+                    // clients) and fail the request visibly.
+                    for (i, h) in handles.iter().enumerate() {
+                        self.branches[i].client.pending().cancel(h.rpc_id());
+                    }
+                    return Response::Ready(vec![0]);
+                }
+            }
+        }
+        for (i, h) in handles.iter().enumerate() {
+            self.awaiting[i].insert(h.rpc_id(), req.token);
+        }
+        self.inflight.insert(
+            req.token,
+            InFlightFanout {
+                issued: issued_at,
+                branch_tiers: vec![0; n],
+                branch_ns: vec![0; n],
+                outstanding: n,
+                fanout_ns: 0,
+                join_issued: None,
+                join_ns: 0,
+                join_tiers: 0,
+                failed: false,
+            },
+        );
+        Response::Pending(PendingCall { sub_calls: n as u32 })
+    }
+
+    fn poll_parked(&mut self, done: &mut Vec<(CallToken, Vec<u8>)>) {
+        // Harvest each branch's completions; collect tokens whose last
+        // branch just answered.
+        let mut branches_done: Vec<CallToken> = Vec::new();
+        for b in 0..self.branches.len() {
+            self.branches[b].client.poll_completions();
+            while let Some(c) = self.branches[b].client.take_completion() {
+                let Some(token) = self.awaiting[b].remove(&c.rpc_id) else {
+                    continue; // stray (e.g. from a cancelled partial fan-out)
+                };
+                let Some(fl) = self.inflight.get_mut(&token) else {
+                    continue;
+                };
+                let tiers = c.payload.first().copied().unwrap_or(0);
+                if tiers == 0 {
+                    self.failures.fetch_add(1, Ordering::Relaxed);
+                    fl.failed = true;
+                }
+                fl.branch_tiers[b] = tiers;
+                fl.branch_ns[b] = fl.issued.elapsed().as_nanos().min(u32::MAX as u128) as u32;
+                fl.outstanding -= 1;
+                if fl.outstanding == 0 {
+                    fl.fanout_ns = fl.issued.elapsed().as_nanos().min(u32::MAX as u128) as u32;
+                    branches_done.push(token);
+                }
+            }
+        }
+        for token in branches_done {
+            if self.inflight.get(&token).map(|fl| fl.failed).unwrap_or(false) {
+                self.finalize(token, done);
+            } else {
+                self.on_branches_done(token, done);
+            }
+        }
+
+        // Harvest the join tier.
+        if let Some(join) = &self.join {
+            join.client.poll_completions();
+            let mut joined: Vec<CallToken> = Vec::new();
+            while let Some(c) = join.client.take_completion() {
+                let Some(token) = self.join_awaiting.remove(&c.rpc_id) else {
+                    continue;
+                };
+                if let Some(fl) = self.inflight.get_mut(&token) {
+                    fl.join_tiers = c.payload.first().copied().unwrap_or(0);
+                    if fl.join_tiers == 0 {
+                        self.failures.fetch_add(1, Ordering::Relaxed);
+                        fl.failed = true;
+                    }
+                    fl.join_ns = fl
+                        .join_issued
+                        .map(|t| t.elapsed().as_nanos().min(u32::MAX as u128) as u32)
+                        .unwrap_or(0);
+                    joined.push(token);
+                }
+            }
+            for token in joined {
+                self.finalize(token, done);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.tier
+    }
+}
+
+// ===================================================================
+// Measured fan-out plan (exp::app_bench)
+// ===================================================================
+
+/// One branch of the measured Check-in fan-out: the tier, its handler
+/// cost, and an optional nested blocking dependency (Passport chains to
+/// Citizens).
+pub struct FanoutBranchPlan {
+    pub name: &'static str,
+    pub cost_ns: u64,
+    pub nested: Option<(&'static str, u64)>,
+}
+
+impl FanoutBranchPlan {
+    /// Tiers a healthy response from this branch reports.
+    pub fn expect_tiers(&self) -> u8 {
+        1 + self.nested.is_some() as u8
+    }
+}
+
+/// The measured Check-in topology: entry tier (busy-spun local work),
+/// three concurrent branches (Flight ∥ Baggage ∥ Passport→Citizens),
+/// and the many-to-one Airport join.
+pub struct FanoutPlan {
+    pub entry: &'static str,
+    /// Entry-tier local cost (busy-spun: the dispatch-occupancy knob
+    /// behind the Table 4 Simple-vs-Optimized contrast).
+    pub entry_spin_ns: u64,
+    pub branches: Vec<FanoutBranchPlan>,
+    pub join: (&'static str, u64),
+    pub seconds_scale_note: &'static str,
+}
+
+impl FanoutPlan {
+    /// Tiers a healthy end-to-end response reports (entry + branches +
+    /// nested deps + join).
+    pub fn expect_total_tiers(&self) -> u8 {
+        1 + self.branches.iter().map(|b| b.expect_tiers()).sum::<u8>() + 1
+    }
+}
+
+/// The measured plan. Branch handler costs are `thread::sleep`-based
+/// (I/O-bound backends) and scaled to hundreds of µs so the overlap
+/// proof dominates scheduler noise and survives small hosts (see
+/// [`TierCost::Sleep`]); relative weights follow §5.7 — Flight is the
+/// heaviest dependency, the Passport branch pays a nested hop.
+pub fn fanout_plan() -> FanoutPlan {
+    FanoutPlan {
+        entry: TIER_NAMES[CHECKIN],
+        entry_spin_ns: 10_000,
+        branches: vec![
+            FanoutBranchPlan { name: TIER_NAMES[FLIGHT], cost_ns: 300_000, nested: None },
+            FanoutBranchPlan { name: TIER_NAMES[BAGGAGE], cost_ns: 200_000, nested: None },
+            FanoutBranchPlan {
+                name: TIER_NAMES[PASSPORT],
+                cost_ns: 100_000,
+                nested: Some((TIER_NAMES[CITIZENS], 150_000)),
+            },
+        ],
+        join: (TIER_NAMES[AIRPORT], 50_000),
+        seconds_scale_note: "sleep-based branch costs, scaled to 100s of us for measurability",
     }
 }
 
@@ -251,7 +688,118 @@ pub fn chain_tiers(n: usize) -> Vec<(&'static str, u64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::frame::{Frame, RpcType};
+    use crate::coordinator::rings::RingPair;
     use crate::exp::microsim;
+
+    #[test]
+    fn fanout_resp_round_trips() {
+        let r = FanoutResp {
+            total_tiers: 6,
+            n_branches: 3,
+            fanout_ns: 123_456,
+            join_ns: 7_890,
+            branch_ns: [111, 222, 333],
+        };
+        let bytes = encode_fanout_resp(&r);
+        assert!(bytes.len() <= Frame::TAIL_STAMP_OFFSET, "must fit the app region");
+        assert_eq!(parse_fanout_resp(&bytes), Some(r));
+        assert_eq!(r.sum_branch_ns(), 666);
+        assert!(parse_fanout_resp(&bytes[..10]).is_none(), "truncated payload rejected");
+    }
+
+    #[test]
+    fn fanout_plan_counts_every_tier() {
+        let plan = fanout_plan();
+        assert_eq!(plan.branches.len(), 3, "check-in's 3-way fan-out");
+        // checkin + flight + baggage + (passport + citizens) + airport.
+        assert_eq!(plan.expect_total_tiers(), 6);
+        assert_eq!(plan.branches[2].expect_tiers(), 2, "passport chains to citizens");
+        // Flight is the heaviest branch (§5.7's resource-demanding tier).
+        assert!(plan.branches[0].cost_ns > plan.branches[1].cost_ns);
+    }
+
+    /// Drive the fan-out state machine by hand (no fabric): park, echo
+    /// the branch responses out of order, watch the join go out, answer
+    /// it, and check the final response's accounting.
+    #[test]
+    fn fanout_service_parks_joins_and_finalizes() {
+        let mk_client = || {
+            let rings = Arc::new(RingPair::new(16, 16));
+            (RpcClient::new(1, rings.clone()), rings)
+        };
+        let (c0, r0) = mk_client();
+        let (c1, r1) = mk_client();
+        let (cj, rj) = mk_client();
+        let mut svc = FanoutService::new(
+            "checkin",
+            TierCost::Spin(0),
+            vec![
+                FanoutBranch { name: "flight", client: c0 },
+                FanoutBranch { name: "baggage", client: c1 },
+            ],
+            Some(FanoutBranch { name: "airport", client: cj }),
+        );
+
+        let req = Request { method: CHAIN_METHOD, c_id: 5, rpc_id: 40, flow: 0, token: 9, payload: b"" };
+        match svc.call(req) {
+            Response::Pending(pc) => assert_eq!(pc.sub_calls, 2),
+            Response::Ready(_) => panic!("fan-out must park"),
+        }
+        assert_eq!(svc.parked(), 1);
+        let q0 = r0.tx.pop().expect("branch 0 sub-RPC issued");
+        let q1 = r1.tx.pop().expect("branch 1 sub-RPC issued");
+        assert!(rj.tx.pop().is_none(), "join waits for the branches");
+
+        // Branch responses arrive in reverse order; nothing finishes
+        // until both are in.
+        let mut done = Vec::new();
+        r1.rx.push(Frame::new(RpcType::Response, CHAIN_METHOD, 1, q1.rpc_id(), &[1])).unwrap();
+        svc.poll_parked(&mut done);
+        assert!(done.is_empty());
+        assert!(rj.tx.pop().is_none());
+        r0.rx.push(Frame::new(RpcType::Response, CHAIN_METHOD, 1, q0.rpc_id(), &[1])).unwrap();
+        svc.poll_parked(&mut done);
+        assert!(done.is_empty(), "join still outstanding");
+        let jq = rj.tx.pop().expect("join issued after the last branch");
+
+        rj.rx.push(Frame::new(RpcType::Response, CHAIN_METHOD, 1, jq.rpc_id(), &[1])).unwrap();
+        svc.poll_parked(&mut done);
+        assert_eq!(done.len(), 1);
+        let (token, payload) = &done[0];
+        assert_eq!(*token, 9);
+        let resp = parse_fanout_resp(payload).expect("well-formed fan-out response");
+        assert_eq!(resp.total_tiers, 4, "entry + 2 branches + join");
+        assert_eq!(resp.n_branches, 2);
+        assert!(resp.branch_ns[0] > 0 && resp.branch_ns[1] > 0);
+        assert!(resp.fanout_ns >= resp.branch_ns[0].max(resp.branch_ns[1]));
+        assert!(resp.join_ns > 0);
+        assert_eq!(svc.parked(), 0, "token forgotten");
+        assert_eq!(svc.failures.load(Ordering::Relaxed), 0);
+    }
+
+    /// A branch answering with tier count 0 (its own downstream died)
+    /// fails the whole request visibly instead of fabricating a count.
+    #[test]
+    fn fanout_service_propagates_branch_failure() {
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(1, rings.clone());
+        let mut svc = FanoutService::new(
+            "checkin",
+            TierCost::Spin(0),
+            vec![FanoutBranch { name: "flight", client }],
+            None,
+        );
+        let req = Request { method: CHAIN_METHOD, c_id: 5, rpc_id: 1, flow: 0, token: 3, payload: b"" };
+        assert!(matches!(svc.call(req), Response::Pending(_)));
+        let q = rings.tx.pop().unwrap();
+        rings.rx.push(Frame::new(RpcType::Response, CHAIN_METHOD, 1, q.rpc_id(), &[0])).unwrap();
+        let mut done = Vec::new();
+        svc.poll_parked(&mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1, vec![0], "failure surfaces as tier count 0");
+        assert_eq!(svc.failures.load(Ordering::Relaxed), 1);
+    }
 
     #[test]
     fn simple_low_load_latency_matches_table4() {

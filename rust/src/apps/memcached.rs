@@ -10,7 +10,7 @@
 //! stack, §5.6) — reflected in `op_cost_ns`.
 
 use super::{kvwire, KvStore};
-use crate::coordinator::service::{Request, RpcService};
+use crate::coordinator::service::{Request, Response, RpcService};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -160,13 +160,13 @@ impl MemcachedService {
 }
 
 impl RpcService for MemcachedService {
-    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+    fn call(&mut self, req: Request<'_>) -> Response {
         *self.per_conn_ops.entry(req.c_id).or_insert(0) += 1;
         let Some(key) = kvwire::req_key(req.payload) else {
-            return kvwire::resp_miss(0);
+            return kvwire::resp_miss(0).into();
         };
         let kb = key.to_le_bytes();
-        match req.method {
+        let out = match req.method {
             kvwire::METHOD_SET => {
                 let value = kvwire::req_value(req.payload).unwrap_or(0);
                 let ok = self.store.lock().unwrap().set(&kb, &value.to_le_bytes());
@@ -182,7 +182,8 @@ impl RpcService for MemcachedService {
                 }
                 _ => kvwire::resp_miss(key),
             },
-        }
+        };
+        out.into()
     }
 
     fn name(&self) -> &'static str {
@@ -196,7 +197,7 @@ mod tests {
     use crate::sim::prop;
 
     fn svc_req(method: u8, c_id: u32, payload: &[u8]) -> Request<'_> {
-        Request { method, c_id, rpc_id: 0, flow: 0, payload }
+        Request { method, c_id, rpc_id: 0, flow: 0, token: 0, payload }
     }
 
     #[test]
@@ -205,16 +206,16 @@ mod tests {
         let mut svc = MemcachedService::new(store.clone());
         let mut p = Vec::new();
         kvwire::fill_req(&mut p, 5, Some(kvwire::value_of(5)));
-        let resp = svc.call(svc_req(kvwire::METHOD_SET, 1, &p));
+        let resp = svc.call(svc_req(kvwire::METHOD_SET, 1, &p)).ready().unwrap();
         assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
 
         let mut g = Vec::new();
         kvwire::fill_req(&mut g, 5, None);
-        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g));
+        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g)).ready().unwrap();
         assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
 
         kvwire::fill_req(&mut g, 6, None);
-        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g));
+        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g)).ready().unwrap();
         assert_eq!(kvwire::parse_resp(&resp).map(|r| r.0), Some(false), "unset key misses");
 
         // Per-connection state: two ops on c_id 2, one on c_id 1.

@@ -12,7 +12,8 @@
 
 use super::{kvwire, KvStore};
 use crate::coordinator::frame::{fmix32, FNV_OFFSET, FNV_PRIME};
-use crate::coordinator::service::{Request, RpcService};
+use crate::coordinator::service::{Request, Response, RpcService};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Hash used for partitioning — same FNV-1a + fmix32 the NIC's
@@ -42,15 +43,19 @@ struct Entry {
     tag: u32,
 }
 
-/// One partition: bucketized lossy (or chained lossless) index.
-struct Partition {
+/// One partition: bucketized lossy (or chained lossless) index. Pub so
+/// a dispatch flow can **own** its partition outright
+/// ([`MicaService`]) — the paper's per-core partitioning, where
+/// partition parallelism needs no lock because the NIC's object-level
+/// load balancer is the serialization point.
+pub struct Partition {
     buckets: Vec<Vec<Entry>>,
     lossy: bool,
     pub evictions: u64,
 }
 
 impl Partition {
-    fn new(n_buckets: usize, lossy: bool) -> Self {
+    pub fn new(n_buckets: usize, lossy: bool) -> Self {
         Partition { buckets: vec![Vec::new(); n_buckets], lossy, evictions: 0 }
     }
 
@@ -58,7 +63,7 @@ impl Partition {
         (h as usize >> 8) % self.buckets.len()
     }
 
-    fn set(&mut self, key: &[u8], value: &[u8], h: u32) -> bool {
+    pub fn set(&mut self, key: &[u8], value: &[u8], h: u32) -> bool {
         let b = self.bucket_of(h);
         let bucket = &mut self.buckets[b];
         if let Some(e) = bucket.iter_mut().find(|e| e.tag == h && e.key == key) {
@@ -77,7 +82,7 @@ impl Partition {
         true
     }
 
-    fn get(&self, key: &[u8], h: u32) -> Option<Vec<u8>> {
+    pub fn get(&self, key: &[u8], h: u32) -> Option<Vec<u8>> {
         let b = self.bucket_of(h);
         self.buckets[b]
             .iter()
@@ -85,8 +90,12 @@ impl Partition {
             .map(|e| e.value.clone())
     }
 
-    fn len(&self) -> usize {
+    pub fn len(&self) -> usize {
         self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -184,33 +193,139 @@ impl KvStore for Mica {
     }
 }
 
-/// MICA ported onto the Dagger service layer (§5.6/§5.7). One service
-/// instance per dispatch flow; the dispatch flow *is* the partition the
-/// NIC's object-level load balancer chose, so `call` hands the flow id
-/// to [`Mica::get_at`]/[`Mica::set_at`] as the arrival partition. Under
-/// `LbMode::ObjectLevel` with the [`kvwire`] layout (key is the only
-/// varying hashed content), `misrouted` stays 0 — the §5.7 correctness
-/// requirement; under round-robin steering the store still serves
-/// correctly by re-hashing but counts every wrong-partition arrival.
+/// MICA ported onto the Dagger service layer (§5.6/§5.7) the way the
+/// paper means it: **one dispatch flow owns one partition outright** —
+/// no store-wide lock, no sharing. The NIC's object-level load balancer
+/// is what makes this correct: with the [`kvwire`] layout the steering
+/// hash is a pure function of the key, so the owning partition's
+/// dispatch thread always receives the request (`misrouted` stays 0 and
+/// partition parallelism is real — N flows, N concurrent stores).
+///
+/// A request whose key this partition does **not** own (only possible
+/// under a non-object-level balancer) is counted in the shared
+/// `misrouted` counter and answered with a miss — exactly the paper's
+/// "MICA does not work correctly with round-robin/random load
+/// balancers" (§5.7): an owned partition cannot serve another
+/// partition's keys. The re-hashing contrast case lives in
+/// [`SharedMicaService`].
 pub struct MicaService {
-    store: Arc<Mutex<Mica>>,
+    partition: Partition,
+    /// Partition index this service owns (== its dispatch flow).
+    own: usize,
+    n_partitions: usize,
+    pub get_hits: u64,
+    pub get_misses: u64,
+    /// Wrong-partition arrivals, shared across the per-flow services so
+    /// the benchmark reads one aggregate after the run.
+    misrouted: Arc<AtomicU64>,
 }
 
 impl MicaService {
-    pub fn new(store: Arc<Mutex<Mica>>) -> MicaService {
-        MicaService { store }
+    pub fn new(
+        own: usize,
+        n_partitions: usize,
+        buckets_per_partition: usize,
+        lossy: bool,
+        misrouted: Arc<AtomicU64>,
+    ) -> MicaService {
+        assert!(own < n_partitions);
+        MicaService {
+            partition: Partition::new(buckets_per_partition, lossy),
+            own,
+            n_partitions,
+            get_hits: 0,
+            get_misses: 0,
+            misrouted,
+        }
+    }
+
+    /// Does this partition own `key`? (Same hash the NIC steers by.)
+    pub fn owns(&self, key: &[u8]) -> bool {
+        key_hash(key) as usize % self.n_partitions == self.own
+    }
+
+    /// Pre-populate: stores the pair iff this partition owns the key
+    /// (callers loop all keys over all per-flow services). Returns
+    /// whether the key was owned.
+    pub fn populate(&mut self, key: &[u8], value: &[u8]) -> bool {
+        if !self.owns(key) {
+            return false;
+        }
+        self.partition.set(key, value, key_hash(key));
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.partition.len()
     }
 }
 
 impl RpcService for MicaService {
-    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+    fn call(&mut self, req: Request<'_>) -> Response {
         let Some(key) = kvwire::req_key(req.payload) else {
-            return kvwire::resp_miss(0);
+            return kvwire::resp_miss(0).into();
+        };
+        let kb = key.to_le_bytes();
+        let h = key_hash(&kb);
+        if h as usize % self.n_partitions != self.own {
+            // Another flow's partition: the data is not here.
+            self.misrouted.fetch_add(1, Ordering::Relaxed);
+            return kvwire::resp_miss(key).into();
+        }
+        let out = match req.method {
+            kvwire::METHOD_SET => {
+                let value = kvwire::req_value(req.payload).unwrap_or(0);
+                if self.partition.set(&kb, &value.to_le_bytes(), h) {
+                    kvwire::resp_ok(key, value)
+                } else {
+                    kvwire::resp_miss(key)
+                }
+            }
+            _ => match self.partition.get(&kb, h) {
+                Some(v) if v.len() >= 4 => {
+                    self.get_hits += 1;
+                    kvwire::resp_ok(key, u32::from_le_bytes(v[..4].try_into().unwrap()))
+                }
+                _ => {
+                    self.get_misses += 1;
+                    kvwire::resp_miss(key)
+                }
+            },
+        };
+        out.into()
+    }
+
+    fn name(&self) -> &'static str {
+        "mica"
+    }
+}
+
+/// The pre-partition-ownership adapter: one [`Mica`] store behind a
+/// lock, shared by every dispatch flow, serving *any* key by re-hashing
+/// to the owning partition while counting wrong-partition arrivals in
+/// [`Mica::misrouted`]. Kept as the **round-robin contrast case** for
+/// §5.7's steering requirement: correctness survives (at the price of
+/// the lock and the re-hash), and `misrouted > 0` shows why real MICA
+/// needs the object-level balancer that [`MicaService`] relies on.
+pub struct SharedMicaService {
+    store: Arc<Mutex<Mica>>,
+}
+
+impl SharedMicaService {
+    pub fn new(store: Arc<Mutex<Mica>>) -> SharedMicaService {
+        SharedMicaService { store }
+    }
+}
+
+impl RpcService for SharedMicaService {
+    fn call(&mut self, req: Request<'_>) -> Response {
+        let Some(key) = kvwire::req_key(req.payload) else {
+            return kvwire::resp_miss(0).into();
         };
         let kb = key.to_le_bytes();
         let mut store = self.store.lock().unwrap();
         let arrived_at = req.flow as usize % store.n_partitions();
-        match req.method {
+        let out = match req.method {
             kvwire::METHOD_SET => {
                 let value = kvwire::req_value(req.payload).unwrap_or(0);
                 if store.set_at(arrived_at, &kb, &value.to_le_bytes()) {
@@ -225,11 +340,12 @@ impl RpcService for MicaService {
                 }
                 _ => kvwire::resp_miss(key),
             },
-        }
+        };
+        out.into()
     }
 
     fn name(&self) -> &'static str {
-        "mica"
+        "mica-shared"
     }
 }
 
@@ -238,17 +354,95 @@ mod tests {
     use super::*;
     use crate::sim::prop;
 
+    /// Per-flow owned partitions: the owning service serves its keys
+    /// lock-free; a foreign key is a counted misroute answered with a
+    /// miss (an owned partition cannot serve another partition's data —
+    /// the §5.7 reason MICA *requires* object-level steering).
     #[test]
-    fn service_routes_by_flow_partition() {
+    fn owned_partition_serves_own_keys_and_rejects_foreign() {
+        let misrouted = Arc::new(AtomicU64::new(0));
+        let n = 4usize;
+        let mut services: Vec<MicaService> = (0..n)
+            .map(|f| MicaService::new(f, n, 64, false, misrouted.clone()))
+            .collect();
+        let key = 77u64;
+        let kb = key.to_le_bytes();
+        let own = key_hash(&kb) as usize % n;
+
+        let mut p = Vec::new();
+        kvwire::fill_req(&mut p, key, Some(kvwire::value_of(key)));
+        let set = Request {
+            method: kvwire::METHOD_SET,
+            c_id: 1,
+            rpc_id: 0,
+            flow: own as u32,
+            token: 0,
+            payload: &p,
+        };
+        let resp = services[own].call(set).ready().unwrap();
+        assert_eq!(kvwire::parse_resp(&resp).map(|r| r.0), Some(true));
+        assert_eq!(misrouted.load(Ordering::Relaxed), 0, "right partition, no misroute");
+
+        // The owning partition hits; a wrong partition misses + counts.
+        let mut g = Vec::new();
+        kvwire::fill_req(&mut g, key, None);
+        let get = |flow: usize| Request {
+            method: kvwire::METHOD_GET,
+            c_id: 1,
+            rpc_id: 1,
+            flow: flow as u32,
+            token: 0,
+            payload: &g,
+        };
+        let hit = services[own].call(get(own)).ready().unwrap();
+        assert_eq!(kvwire::parse_resp(&hit), Some((true, key, kvwire::value_of(key))));
+        let wrong = (own + 1) % n;
+        let miss = services[wrong].call(get(wrong)).ready().unwrap();
+        assert_eq!(kvwire::parse_resp(&miss).map(|r| r.0), Some(false));
+        assert_eq!(misrouted.load(Ordering::Relaxed), 1);
+    }
+
+    /// Population loops every key over every per-flow service; each key
+    /// lands in exactly one partition, and the partition sets agree
+    /// with the NIC's steering hash.
+    #[test]
+    fn populate_partitions_keys_once() {
+        let misrouted = Arc::new(AtomicU64::new(0));
+        let n = 4usize;
+        let mut services: Vec<MicaService> = (0..n)
+            .map(|f| MicaService::new(f, n, 64, false, misrouted.clone()))
+            .collect();
+        for k in 0..200u64 {
+            let owned: usize = services
+                .iter_mut()
+                .map(|s| s.populate(&k.to_le_bytes(), b"vvvv") as usize)
+                .sum();
+            assert_eq!(owned, 1, "key {k} owned by exactly one partition");
+        }
+        assert_eq!(services.iter().map(|s| s.len()).sum::<usize>(), 200);
+        assert!(services.iter().all(|s| s.len() > 0), "zipf-free spread across 4 partitions");
+    }
+
+    /// The shared-store adapter (round-robin contrast case) still
+    /// serves foreign keys by re-hashing, counting each misroute.
+    #[test]
+    fn shared_service_rehashes_and_counts_misroutes() {
         let store = Arc::new(Mutex::new(Mica::new(4, 64, false)));
-        let mut svc = MicaService::new(store.clone());
+        let mut svc = SharedMicaService::new(store.clone());
         let key = 77u64;
         let own = store.lock().unwrap().partition_of(&key.to_le_bytes()) as u32;
 
         let mut p = Vec::new();
         kvwire::fill_req(&mut p, key, Some(kvwire::value_of(key)));
-        let set = Request { method: kvwire::METHOD_SET, c_id: 1, rpc_id: 0, flow: own, payload: &p };
-        assert_eq!(kvwire::parse_resp(&svc.call(set)).map(|r| r.0), Some(true));
+        let set = Request {
+            method: kvwire::METHOD_SET,
+            c_id: 1,
+            rpc_id: 0,
+            flow: own,
+            token: 0,
+            payload: &p,
+        };
+        assert_eq!(kvwire::parse_resp(&svc.call(set).ready().unwrap()).map(|r| r.0), Some(true));
         assert_eq!(store.lock().unwrap().misrouted, 0, "right partition, no misroute");
 
         // Same key arriving at the wrong flow (round-robin steering):
@@ -260,10 +454,11 @@ mod tests {
             c_id: 1,
             rpc_id: 1,
             flow: (own + 1) % 4,
+            token: 0,
             payload: &g,
         };
         assert_eq!(
-            kvwire::parse_resp(&svc.call(get)),
+            kvwire::parse_resp(&svc.call(get).ready().unwrap()),
             Some((true, key, kvwire::value_of(key)))
         );
         assert_eq!(store.lock().unwrap().misrouted, 1);

@@ -6,8 +6,12 @@
 //! simulators (`op_cost_ns`, the microsim tier configs), and as a real
 //! [`crate::coordinator::service::RpcService`] implementation served
 //! over the actual rings/fabric — `memcached::MemcachedService`,
-//! `mica::MicaService`, `flightreg::TierService` (measured by
-//! `exp::app_bench`, wire format in [`kvwire`]).
+//! `mica::MicaService` (per-flow owned partitions; the shared-store
+//! round-robin contrast is `mica::SharedMicaService`),
+//! `flightreg::TierService` (blocking chain tiers), and
+//! `flightreg::FanoutService` (Check-in's concurrent 3-way fan-out over
+//! the non-blocking completion API) — measured by `exp::app_bench`,
+//! wire format in [`kvwire`].
 
 pub mod flightreg;
 pub mod kvwire;

@@ -4,16 +4,29 @@
 //! memcached/MICA-over-Dagger experiments. This is the "framework is
 //! real code" path; the paper-figure numbers come from the calibrated
 //! simulation in `exp/`.
+//!
+//! Since the service-layer port, the server side is the same stack the
+//! measured benchmark uses: each dispatch flow runs a boxed
+//! `RpcService` — `MemcachedService` (shared store) or per-flow
+//! **owned** `MicaService` partitions under object-level steering —
+//! speaking the fixed-offset [`kvwire`] format, so the steering hash is
+//! a pure function of the key. The length-prefixed `encode_kv` codec
+//! and `kvs_handler` closure below remain as the method-table
+//! (`register`) example path exercised by the `fabric_e2e` integration
+//! tests and the IDL stubs; `dagger serve` itself no longer dispatches
+//! through them.
 
-use crate::apps::{memcached::Memcached, mica::Mica, KvStore};
+use crate::apps::memcached::{Memcached, MemcachedService};
+use crate::apps::mica::MicaService;
+use crate::apps::{kvwire, KvStore};
 use crate::cli::Args;
 use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
 use crate::coordinator::fabric::Fabric;
 use crate::nic::load_balancer::LbMode;
 use crate::runtime::EngineSpec;
 use crate::sim::{Histogram, Rng, Zipf};
-use crate::workload::generator::{Dataset, Mix};
-use std::sync::atomic::Ordering;
+use crate::workload::generator::Mix;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -75,10 +88,19 @@ pub struct ServeReport {
     pub p50_us: f64,
     pub p99_us: f64,
     pub hits: u64,
+    /// Wrong-partition arrivals (0 under object-level steering; only
+    /// meaningful for the partitioned mica store).
+    pub misrouted: u64,
 }
 
+/// Number of dispatch flows (= mica partitions) `dagger serve` runs.
+const SERVE_FLOWS: u32 = 2;
+
 /// Run the benchmark; returns the measured report (also used by the
-/// kvs_server example and integration tests).
+/// kvs_server example and integration tests). The server side is the
+/// service layer: `MemcachedService` on a shared store, or per-flow
+/// owned `MicaService` partitions steered by the NIC's object-level
+/// load balancer (the §5.7 correctness requirement, live).
 pub fn run_kvs(
     store_kind: &str,
     requests: u64,
@@ -86,61 +108,81 @@ pub fn run_kvs(
     skew: f64,
     use_xla: bool,
 ) -> anyhow::Result<ServeReport> {
-    let store: Arc<Mutex<dyn KvStore>> = match store_kind {
-        "memcached" => Arc::new(Mutex::new(Memcached::new(64 << 20))),
-        _ => Arc::new(Mutex::new(Mica::new(4, 1 << 16, true))),
-    };
     let store_name: &'static str = if store_kind == "memcached" { "memcached" } else { "mica" };
+    let keys = n_keys.min(5_000).max(1);
 
     let mut fabric = Fabric::new();
     let client_addr = fabric.add_endpoint(1, 256);
-    let server_addr = fabric.add_endpoint(2, 256);
-    fabric.set_lb(
-        server_addr,
-        if store_name == "mica" { LbMode::ObjectLevel } else { LbMode::RoundRobin },
-    );
-    let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::ObjectLevel);
+    let server_addr = fabric.add_endpoint(SERVE_FLOWS, 256);
+    let lb = if store_name == "mica" { LbMode::ObjectLevel } else { LbMode::RoundRobin };
+    fabric.set_lb(server_addr, lb);
+    let c_id = fabric.connect(client_addr, 0, server_addr, lb);
     let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
 
+    // Server: one boxed service per dispatch flow, pre-populated so
+    // every GET of a working-set key must hit.
+    let misrouted = Arc::new(AtomicU64::new(0));
     let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
-    for flow in 0..2 {
-        server.add_flow(flow, fabric.rings(server_addr, flow));
+    if store_name == "memcached" {
+        let store = Arc::new(Mutex::new(Memcached::new(64 << 20)));
+        {
+            let mut s = store.lock().unwrap();
+            for k in 0..keys {
+                s.set(&k.to_le_bytes(), &kvwire::value_of(k).to_le_bytes());
+            }
+        }
+        for flow in 0..SERVE_FLOWS {
+            server.add_service_flow(
+                flow,
+                fabric.rings(server_addr, flow),
+                Box::new(MemcachedService::new(store.clone())),
+            );
+        }
+    } else {
+        for flow in 0..SERVE_FLOWS {
+            let mut svc = MicaService::new(
+                flow as usize,
+                SERVE_FLOWS as usize,
+                1 << 14,
+                false,
+                misrouted.clone(),
+            );
+            for k in 0..keys {
+                svc.populate(&k.to_le_bytes(), &kvwire::value_of(k).to_le_bytes());
+            }
+            server.add_service_flow(flow, fabric.rings(server_addr, flow), Box::new(svc));
+        }
     }
-    let h = kvs_handler(store);
-    server.register(METHOD_GET, h.clone());
-    server.register(METHOD_SET, h);
     let joins = server.start();
 
     let spec = if use_xla { EngineSpec::XlaAuto { batch: 4 } } else { EngineSpec::Native };
     let handle = fabric.start(spec);
 
-    // Populate then measure.
-    let zipf = Zipf::new(n_keys, skew);
+    let zipf = Zipf::new(keys, skew);
     let mut rng = Rng::new(42);
-    let dataset = Dataset::Tiny;
-    for k in 0..n_keys.min(5_000) {
-        let key = format!("{k:08}");
-        let val = vec![b'v'; dataset.value_bytes()];
-        client.call_blocking(METHOD_SET, &encode_kv(key.as_bytes(), &val));
-    }
-
     let mix = Mix::WriteIntense;
     let mut hist = Histogram::new();
     let mut hits = 0u64;
+    let mut payload = Vec::new();
     let t0 = Instant::now();
     for _ in 0..requests {
-        let k = zipf.sample(&mut rng) % n_keys.min(5_000).max(1);
-        let key = format!("{k:08}");
+        let k = zipf.sample(&mut rng) % keys;
         let is_set = rng.chance(mix.set_fraction());
-        let q0 = Instant::now();
-        let resp = if is_set {
-            let val = vec![b'v'; dataset.value_bytes()];
-            client.call_blocking(METHOD_SET, &encode_kv(key.as_bytes(), &val))
+        let method = if is_set {
+            kvwire::fill_req(&mut payload, k, Some(kvwire::value_of(k)));
+            kvwire::METHOD_SET
         } else {
-            client.call_blocking(METHOD_GET, &encode_kv(key.as_bytes(), b""))
+            kvwire::fill_req(&mut payload, k, None);
+            kvwire::METHOD_GET
         };
+        let q0 = Instant::now();
+        let resp = client.call_blocking(method, &payload);
         hist.record(q0.elapsed().as_nanos() as u64);
-        if resp.map(|r| r.first() == Some(&1)).unwrap_or(false) {
+        let ok = resp
+            .and_then(|r| kvwire::parse_resp(&r))
+            .map(|(ok, key, value)| ok && key == k && value == kvwire::value_of(k))
+            .unwrap_or(false);
+        if ok {
             hits += 1;
         }
     }
@@ -160,6 +202,7 @@ pub fn run_kvs(
         p50_us: hist.p50_us(),
         p99_us: hist.p99_us(),
         hits,
+        misrouted: misrouted.load(Ordering::Relaxed),
     })
 }
 
@@ -173,8 +216,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     println!("serving {store} over the loop-back fabric ({requests} requests)...");
     let r = run_kvs(&store, requests, n_keys, skew, use_xla)?;
     println!(
-        "store={} requests={} elapsed={:.2}s throughput={:.1} Krps p50={:.1}us p99={:.1}us hits={}",
-        r.store, r.requests, r.elapsed_s, r.krps, r.p50_us, r.p99_us, r.hits
+        "store={} requests={} elapsed={:.2}s throughput={:.1} Krps p50={:.1}us p99={:.1}us hits={} misrouted={}",
+        r.store, r.requests, r.elapsed_s, r.krps, r.p50_us, r.p99_us, r.hits, r.misrouted
     );
     Ok(())
 }
@@ -201,10 +244,19 @@ mod tests {
 
     #[test]
     fn serve_small_run_native() {
-        // End-to-end smoke: real threads, native datapath.
+        // End-to-end smoke: real threads, native datapath, per-flow
+        // owned mica partitions under object-level steering.
         let r = run_kvs("mica", 500, 1000, 0.99, false).unwrap();
         assert_eq!(r.requests, 500);
-        assert!(r.hits > 0, "zipfian gets should hit populated keys");
+        assert_eq!(r.hits, 500, "every op verifies against the canonical value");
+        assert_eq!(r.misrouted, 0, "object-level steering must hit the owning partition");
         assert!(r.krps > 0.0);
+    }
+
+    #[test]
+    fn serve_small_run_memcached() {
+        let r = run_kvs("memcached", 300, 1000, 0.99, false).unwrap();
+        assert_eq!(r.hits, 300, "shared store serves every key on any flow");
+        assert_eq!(r.misrouted, 0, "not applicable to the unpartitioned store");
     }
 }

@@ -2,6 +2,7 @@
 //! §Substitutions). Subcommand dispatch + a small flag parser.
 
 use std::collections::HashMap;
+use std::path::Path;
 
 /// Parsed arguments: positionals + `--key value` / `--flag` options.
 #[derive(Debug, Default)]
@@ -71,6 +72,12 @@ COMMANDS:
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back
                                  fabric [--store memcached|mica] [--requests N]
+    bench-diff <base> <cand>     compare two BENCH_* artifact directories and
+                                 flag regressions beyond noise
+                                 [--threshold PCT, default 10]
+                                 (wall-clock artifacts are envelope-only:
+                                 integrity columns enforced, timing informational;
+                                 exits 1 when regressions are found)
     selfprof                     microbenchmark the coordinator hot paths
     help                         this text
 
@@ -102,6 +109,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "list" => cmd_list(),
         "sim" => cmd_sim(args),
         "idl-gen" => cmd_idl_gen(args),
+        "bench-diff" => cmd_bench_diff(args),
         "serve" => crate::apps::serve::run(args),
         "selfprof" => crate::bench::selfprof::run(args),
         "help" | "--help" | "-h" => {
@@ -155,6 +163,23 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             println!("wrote {}", p.display());
         }
     }
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
+    use crate::exp::bench_diff::{diff_dirs, DiffOptions};
+    let (Some(base), Some(cand)) = (args.positional.first(), args.positional.get(1)) else {
+        anyhow::bail!("bench-diff: usage: dagger bench-diff <baseline_dir> <candidate_dir>");
+    };
+    let opts = DiffOptions { threshold_pct: args.get_f64("threshold", 10.0) };
+    let report = diff_dirs(Path::new(base), Path::new(cand), &opts)?;
+    print!("{}", report.render_text());
+    anyhow::ensure!(
+        report.regressions() == 0,
+        "{} regression(s)/violation(s)/missing beyond {}% threshold",
+        report.regressions(),
+        opts.threshold_pct
+    );
     Ok(())
 }
 

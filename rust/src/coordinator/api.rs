@@ -1,12 +1,40 @@
 //! Dagger RPC API (§4.2): `RpcClient` / `RpcClientPool` on the client
 //! side, `RpcThreadedServer` wrapping per-flow dispatch threads on the
-//! server side, and `CompletionQueue` for asynchronous completions with
-//! optional continuation callbacks.
+//! server side, and the asynchronous completion machinery —
+//! [`CallHandle`]s over a slot-indexed [`PendingTable`], with an
+//! optional [`CompletionSink`] continuation.
+//!
+//! ## The async completion path
+//!
+//! [`RpcClient::call_async`] returns a [`CallHandle`] backed by the
+//! client's [`PendingTable`]: a slot-indexed table of in-flight calls
+//! with an O(1) rpc_id index — completing, matching, or harvesting a
+//! call never scans a list (the previous `CompletionQueue` scanned a
+//! `Mutex<Vec>` per poll). Harvest styles, per flow:
+//!
+//! * **table harvest** — [`RpcClient::poll_completions`] moves RX-ring
+//!   responses into the pending table; match with
+//!   [`PendingTable::try_complete`] / [`RpcClient::wait_handle`] /
+//!   [`RpcClient::wait_any`], or attach a [`CompletionSink`] to run a
+//!   continuation on every completion (no separate callback lock — the
+//!   sink lives inside the table).
+//! * **zero-copy harvest** — [`RpcClient::poll_completions_with`] hands
+//!   raw response frames to a closure without touching the table or
+//!   allocating; the measurement fast path (`exp::wall_driver`) and
+//!   callers that own their own bookkeeping use this. Lock-free.
+//!
+//! Pick one style per flow. [`RpcClient::call_blocking`] is a thin
+//! adapter over the handles: issue + [`RpcClient::wait_handle`].
 //!
 //! The API mirrors the paper's Thrift/Protobuf-inspired surface: stubs
 //! generated from the IDL (see `crate::idl`) wrap these primitives into
 //! typed service calls. Each server flow dispatches to a boxed
-//! [`RpcService`] (`coordinator::service`); the method-table
+//! [`RpcService`] (`coordinator::service`); services may **park**
+//! requests behind non-blocking sub-RPCs
+//! ([`crate::coordinator::service::Response::Pending`]) — the dispatch
+//! loop keeps the reply context and resumes the response when the
+//! service finishes the token, so one dispatch thread holds many
+//! concurrent fan-outs (§5.7). The method-table
 //! [`RpcThreadedServer::register`] API is an adapter
 //! ([`crate::coordinator::service::HandlerService`]) over the same
 //! layer.
@@ -14,60 +42,297 @@
 use crate::coordinator::backoff::Backoff;
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
 use crate::coordinator::rings::RingPair;
-use crate::coordinator::service::{HandlerService, Request, RpcService};
-use std::collections::HashMap;
+use crate::coordinator::service::{CallToken, HandlerService, Request, Response, RpcService};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A completed RPC: id + response payload.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Completion {
     pub rpc_id: u32,
     pub payload: Vec<u8>,
 }
 
-type Callback = Box<dyn Fn(&Completion) + Send + 'static>;
-
-/// Accumulates completed requests for one `RpcClient` (§4.2). Optionally
-/// invokes a continuation callback on every completion.
-pub struct CompletionQueue {
-    done: Mutex<Vec<Completion>>,
-    callback: Mutex<Option<Callback>>,
-    pub completed_count: AtomicU64,
+/// Continuation invoked on every completion a [`PendingTable`] takes in
+/// (§4.2's non-blocking continuation interface). The sink is owned by
+/// the table, so firing it adds no lock to the harvest path — it
+/// replaces the old `CompletionQueue`'s separately-mutexed callback.
+pub trait CompletionSink: Send {
+    fn on_completion(&mut self, completion: &Completion);
 }
 
-impl CompletionQueue {
-    pub fn new() -> Arc<Self> {
-        Arc::new(CompletionQueue {
-            done: Mutex::new(Vec::new()),
-            callback: Mutex::new(None),
-            completed_count: AtomicU64::new(0),
-        })
+/// Any `FnMut(&Completion)` closure is a sink.
+impl<F: FnMut(&Completion) + Send> CompletionSink for F {
+    fn on_completion(&mut self, completion: &Completion) {
+        self(completion)
+    }
+}
+
+/// Handle to one in-flight asynchronous call: the wire rpc_id plus the
+/// [`PendingTable`] slot it occupies. Plain data — drop it freely; an
+/// abandoned call's completion is still accepted by the table (fetch it
+/// later via [`PendingTable::take_ready`] / [`RpcClient::wait_any`]) or
+/// discard it up front with [`PendingTable::cancel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CallHandle {
+    rpc_id: u32,
+    slot: u32,
+}
+
+impl CallHandle {
+    pub fn rpc_id(self) -> u32 {
+        self.rpc_id
     }
 
-    pub fn set_callback(&self, cb: Callback) {
-        *self.callback.lock().unwrap() = Some(cb);
+    /// The pending-table slot backing this call (diagnostics).
+    pub fn slot(self) -> u32 {
+        self.slot
+    }
+}
+
+/// One pending-table slot.
+enum Slot {
+    Free,
+    /// Awaiting its response.
+    Pending { rpc_id: u32 },
+    /// Response arrived, not yet claimed.
+    Ready { rpc_id: u32, payload: Vec<u8> },
+}
+
+/// Slot-indexed table of in-flight calls: the client-side mirror of the
+/// NIC's free-buffer bookkeeping (Fig. 8 ④/⑥) lifted to whole RPCs.
+/// Slots recycle LIFO; an O(1) `rpc_id → slot` index matches
+/// completions without scanning, and completions are accepted **in any
+/// order** — responses routinely reorder across connections and server
+/// flows. Duplicate or unknown rpc_ids never corrupt the table; they
+/// are counted in [`PendingTable::strays`] and dropped.
+///
+/// Owned by exactly one thread (callers that embed it, e.g.
+/// `flightreg::FanoutService`) or wrapped in the client's uncontended
+/// mutex for the convenience paths ([`RpcClient::call_blocking`]).
+pub struct PendingTable {
+    slots: Vec<Slot>,
+    /// LIFO free list of slot ids (hot slot reuse).
+    free: Vec<u32>,
+    /// rpc_id -> slot: the no-scan completion match.
+    by_rpc: HashMap<u32, u32>,
+    /// Completion arrival order, for [`PendingTable::take_ready`].
+    /// Entries taken early via `try_complete` become stale and are
+    /// skipped (the slot no longer holds that rpc_id).
+    ready: VecDeque<(u32, u32)>,
+    /// Stale `ready` entries (claimed via `try_complete`/`cancel`
+    /// before `take_ready` saw them). When they outnumber the live
+    /// ones the deque is compacted, so a client that only ever uses
+    /// the targeted claim path (`call_blocking`) stays O(in-flight),
+    /// not O(lifetime-completions).
+    stale_ready: usize,
+    sink: Option<Box<dyn CompletionSink>>,
+    pending_n: usize,
+    ready_n: usize,
+    /// Completions matched to a registered call.
+    pub completed: u64,
+    /// Completions with no (or no longer a) matching registration:
+    /// duplicates, cancelled calls, wire strays. Dropped, never stored.
+    pub strays: u64,
+}
+
+impl Default for PendingTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PendingTable {
+    pub fn new() -> PendingTable {
+        Self::with_capacity(0)
     }
 
-    pub fn push(&self, c: Completion) {
-        self.completed_count.fetch_add(1, Ordering::Relaxed);
-        if let Some(cb) = self.callback.lock().unwrap().as_ref() {
-            cb(&c);
+    /// Pre-size the slot array (it also grows on demand — the *window*
+    /// bound lives in [`crate::coordinator::rings::SlotPool`], not here).
+    pub fn with_capacity(cap: usize) -> PendingTable {
+        PendingTable {
+            slots: (0..cap).map(|_| Slot::Free).collect(),
+            free: (0..cap as u32).rev().collect(),
+            by_rpc: HashMap::new(),
+            ready: VecDeque::new(),
+            stale_ready: 0,
+            sink: None,
+            pending_n: 0,
+            ready_n: 0,
+            completed: 0,
+            strays: 0,
         }
-        self.done.lock().unwrap().push(c);
     }
 
-    /// Drain all pending completions.
-    pub fn drain(&self) -> Vec<Completion> {
-        std::mem::take(&mut *self.done.lock().unwrap())
+    /// Register an issued call. `None` on a duplicate rpc_id (the
+    /// original registration is untouched — a duplicate must not
+    /// alias two calls onto one slot).
+    pub fn register(&mut self, rpc_id: u32) -> Option<CallHandle> {
+        if self.by_rpc.contains_key(&rpc_id) {
+            return None;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot::Free);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.slots[slot as usize] = Slot::Pending { rpc_id };
+        self.by_rpc.insert(rpc_id, slot);
+        self.pending_n += 1;
+        Some(CallHandle { rpc_id, slot })
     }
 
-    pub fn len(&self) -> usize {
-        self.done.lock().unwrap().len()
+    /// Deliver a completion. Fires the sink, then marks the matching
+    /// slot ready. Returns whether it matched a pending call (a
+    /// duplicate/unknown rpc_id is a counted stray). For tables owned
+    /// outright (no lock around them) this is the whole story; the
+    /// client's mutexed wrapper instead uses
+    /// [`PendingTable::complete_without_sink`] and fires the sink
+    /// *outside* its lock, so a continuation may re-enter the client.
+    pub fn complete(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
+        let completion = Completion { rpc_id, payload };
+        if let Some(sink) = self.sink.as_mut() {
+            sink.on_completion(&completion);
+        }
+        let Completion { rpc_id, payload } = completion;
+        self.complete_without_sink(rpc_id, payload)
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+    /// [`PendingTable::complete`] minus the sink invocation (see there).
+    pub fn complete_without_sink(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
+        match self.by_rpc.get(&rpc_id).copied() {
+            Some(slot) if matches!(self.slots[slot as usize], Slot::Pending { .. }) => {
+                self.slots[slot as usize] = Slot::Ready { rpc_id, payload };
+                self.ready.push_back((slot, rpc_id));
+                self.pending_n -= 1;
+                self.ready_n += 1;
+                self.completed += 1;
+                true
+            }
+            _ => {
+                self.strays += 1;
+                false
+            }
+        }
+    }
+
+    /// Claim the response of one specific call if it has arrived; the
+    /// slot is recycled. Amortized O(1) (the arrival-order deque entry
+    /// it leaves behind is garbage-collected by [`Self::compact_ready`]).
+    pub fn try_complete(&mut self, rpc_id: u32) -> Option<Vec<u8>> {
+        let slot = self.by_rpc.get(&rpc_id).copied()?;
+        match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
+            Slot::Ready { rpc_id: r, payload } if r == rpc_id => {
+                self.by_rpc.remove(&rpc_id);
+                self.free.push(slot);
+                self.ready_n -= 1;
+                self.stale_ready += 1;
+                self.compact_ready();
+                Some(payload)
+            }
+            other => {
+                // Still pending (or foreign): put it back untouched.
+                self.slots[slot as usize] = other;
+                None
+            }
+        }
+    }
+
+    /// Drop stale arrival-order entries once they outnumber the live
+    /// ones (amortized O(1) per claim): keeps the deque O(in-flight)
+    /// for clients that only ever claim by handle and never call
+    /// `take_ready`.
+    fn compact_ready(&mut self) {
+        if self.stale_ready > 32 && self.stale_ready > self.ready_n {
+            let slots = &self.slots;
+            self.ready.retain(|&(slot, rpc_id)| {
+                matches!(&slots[slot as usize], Slot::Ready { rpc_id: r, .. } if *r == rpc_id)
+            });
+            self.stale_ready = 0;
+        }
+    }
+
+    /// Claim the oldest unclaimed completion, whichever call it belongs
+    /// to (the `wait_any` primitive).
+    pub fn take_ready(&mut self) -> Option<Completion> {
+        while let Some((slot, rpc_id)) = self.ready.pop_front() {
+            let live = matches!(
+                &self.slots[slot as usize],
+                Slot::Ready { rpc_id: r, .. } if *r == rpc_id
+            );
+            if !live {
+                self.stale_ready = self.stale_ready.saturating_sub(1);
+                continue; // stale: already claimed via try_complete
+            }
+            let payload = match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
+                Slot::Ready { payload, .. } => payload,
+                _ => unreachable!("checked Ready above"),
+            };
+            self.by_rpc.remove(&rpc_id);
+            self.free.push(slot);
+            self.ready_n -= 1;
+            return Some(Completion { rpc_id, payload });
+        }
+        None
+    }
+
+    /// Forget a call (handle dropped / timed out). Frees the slot; a
+    /// completion arriving later becomes a harmless counted stray. A
+    /// ready-but-unclaimed result is discarded. Returns whether the
+    /// rpc_id was known.
+    pub fn cancel(&mut self, rpc_id: u32) -> bool {
+        let Some(slot) = self.by_rpc.remove(&rpc_id) else {
+            return false;
+        };
+        match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
+            Slot::Pending { .. } => self.pending_n -= 1,
+            Slot::Ready { .. } => {
+                self.ready_n -= 1;
+                self.stale_ready += 1;
+                self.compact_ready();
+            }
+            Slot::Free => {}
+        }
+        self.free.push(slot);
+        true
+    }
+
+    /// Continuation to run on every completion this table takes in.
+    pub fn set_sink(&mut self, sink: Box<dyn CompletionSink>) {
+        self.sink = Some(sink);
+    }
+
+    pub fn has_sink(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Remove and return the sink (the client's lock-free-firing dance).
+    pub fn take_sink(&mut self) -> Option<Box<dyn CompletionSink>> {
+        self.sink.take()
+    }
+
+    /// Calls awaiting their response.
+    pub fn in_flight(&self) -> usize {
+        self.pending_n
+    }
+
+    /// Completions arrived but not yet claimed.
+    pub fn ready_len(&self) -> usize {
+        self.ready_n
+    }
+
+    /// No calls pending and nothing unclaimed.
+    pub fn is_idle(&self) -> bool {
+        self.pending_n == 0 && self.ready_n == 0
+    }
+
+    /// Allocated slots (high-water mark of concurrent in-flight calls).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
     }
 }
 
@@ -78,18 +343,30 @@ pub struct RpcClient {
     pub c_id: u32,
     rpc_seq: AtomicU32,
     pub rings: Arc<RingPair>,
-    pub cq: Arc<CompletionQueue>,
+    /// The client's pending-call table. The mutex serializes the
+    /// *convenience* paths (`call_async`, `poll_completions`,
+    /// `call_blocking`) — uncontended when, as throughout this repo, a
+    /// flow is driven by one thread. The measurement fast path
+    /// ([`RpcClient::poll_completions_with`]) never touches it.
+    pending: Mutex<PendingTable>,
+    /// Completions matched through the table over this client's
+    /// lifetime (zero-copy harvests bypass it by design).
+    pub completed_count: AtomicU64,
     pub sent: AtomicU64,
     pub send_failures: AtomicU64,
 }
 
 impl RpcClient {
+    /// Default `call_blocking` patience before a call is declared lost.
+    pub const BLOCKING_TIMEOUT: Duration = Duration::from_secs(10);
+
     pub fn new(c_id: u32, rings: Arc<RingPair>) -> Arc<Self> {
         Arc::new(RpcClient {
             c_id,
             rpc_seq: AtomicU32::new(0),
             rings,
-            cq: CompletionQueue::new(),
+            pending: Mutex::new(PendingTable::new()),
+            completed_count: AtomicU64::new(0),
             sent: AtomicU64::new(0),
             send_failures: AtomicU64::new(0),
         })
@@ -97,8 +374,10 @@ impl RpcClient {
 
     /// Issue a non-blocking call: `method` rides in the frame's flags
     /// byte, `payload` must fit one cache line (§4.7: larger RPCs require
-    /// software reassembly — see `send_multi`).
-    pub fn call_async(&self, method: u8, payload: &[u8]) -> Result<u32, ()> {
+    /// software reassembly — see `send_multi`). Returns the handle to
+    /// the in-flight call; `Err` on TX-ring backpressure (nothing is
+    /// left registered).
+    pub fn call_async(&self, method: u8, payload: &[u8]) -> Result<CallHandle, ()> {
         self.call_async_on(self.c_id, method, payload)
     }
 
@@ -110,11 +389,23 @@ impl RpcClient {
     /// across threads), but each call names its own `c_id` so the NIC's
     /// connection manager routes the response back here regardless of
     /// which connection carried it.
-    pub fn call_async_on(&self, c_id: u32, method: u8, payload: &[u8]) -> Result<u32, ()> {
+    pub fn call_async_on(&self, c_id: u32, method: u8, payload: &[u8]) -> Result<CallHandle, ()> {
         assert!(payload.len() <= MAX_PAYLOAD_BYTES);
         let rpc_id = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
+        // Register before sending: a response cannot overtake its
+        // request, but a registration racing its own completion could
+        // otherwise stray.
+        let Some(handle) = self.pending.lock().unwrap().register(rpc_id) else {
+            return Err(()); // rpc_id still in flight after a u32 wrap
+        };
         let frame = Frame::new(RpcType::Request, method, c_id, rpc_id, payload);
-        self.send_frame(frame).map(|()| rpc_id).map_err(|_| ())
+        match self.send_frame(frame) {
+            Ok(()) => Ok(handle),
+            Err(_) => {
+                self.pending.lock().unwrap().cancel(rpc_id);
+                Err(())
+            }
+        }
     }
 
     /// Reserve the next rpc id without sending (callers that build their
@@ -140,57 +431,148 @@ impl RpcClient {
         }
     }
 
-    /// Blocking call: spins on the completion queue until the response
-    /// with this rpc_id arrives (dispatch-thread model, no context
-    /// switch).
+    /// Blocking call: a thin adapter over the async handles — issue
+    /// ([`RpcClient::call_async`], spinning out TX backpressure) and
+    /// wait ([`RpcClient::wait_handle`]). Same dispatch-thread model as
+    /// before the handle API existed: no context switch, O(1) matching
+    /// per poll.
     pub fn call_blocking(&self, method: u8, payload: &[u8]) -> Option<Vec<u8>> {
+        self.call_blocking_timeout(method, payload, Self::BLOCKING_TIMEOUT)
+    }
+
+    /// [`RpcClient::call_blocking`] with an explicit patience bound.
+    pub fn call_blocking_timeout(
+        &self,
+        method: u8,
+        payload: &[u8],
+        timeout: Duration,
+    ) -> Option<Vec<u8>> {
         let mut backoff = Backoff::new();
-        let rpc_id = loop {
+        let handle = loop {
             match self.call_async(method, payload) {
-                Ok(id) => break id,
+                Ok(h) => break h,
                 Err(()) => backoff.snooze(),
             }
         };
-        backoff.reset();
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        self.wait_handle(&handle, timeout)
+    }
+
+    /// Spin until `handle`'s response arrives (harvesting the RX ring
+    /// into the pending table) or `timeout` expires. On timeout the
+    /// call is cancelled — a late response becomes a counted stray, and
+    /// the caller may treat the RPC as lost.
+    pub fn wait_handle(&self, handle: &CallHandle, timeout: Duration) -> Option<Vec<u8>> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Backoff::new();
         loop {
             self.poll_completions();
-            let mut found = None;
-            {
-                let mut done = self.cq.done.lock().unwrap();
-                if let Some(pos) = done.iter().position(|c| c.rpc_id == rpc_id) {
-                    found = Some(done.swap_remove(pos));
-                }
+            if let Some(payload) = self.pending.lock().unwrap().try_complete(handle.rpc_id()) {
+                return Some(payload);
             }
-            if let Some(c) = found {
-                return Some(c.payload);
-            }
-            if std::time::Instant::now() > deadline {
+            if Instant::now() > deadline {
+                self.pending.lock().unwrap().cancel(handle.rpc_id());
                 return None; // treat as lost
             }
             backoff.snooze();
         }
     }
 
-    /// Poll the RX ring, moving any responses into the completion queue.
-    /// Returns how many completions were harvested.
+    /// Spin until *any* in-flight call completes (oldest arrival first)
+    /// or `timeout` expires. The §4.2 "wait for the next completion"
+    /// primitive for callers juggling many handles.
+    pub fn wait_any(&self, timeout: Duration) -> Option<Completion> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Backoff::new();
+        loop {
+            self.poll_completions();
+            if let Some(c) = self.pending.lock().unwrap().take_ready() {
+                return Some(c);
+            }
+            if Instant::now() > deadline {
+                return None;
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Non-blocking: claim the oldest unclaimed completion, if any.
+    pub fn take_completion(&self) -> Option<Completion> {
+        self.pending.lock().unwrap().take_ready()
+    }
+
+    /// Continuation to run on every completion harvested into the
+    /// table (replaces the old `CompletionQueue::set_callback`).
+    pub fn set_sink(&self, sink: Box<dyn CompletionSink>) {
+        self.pending.lock().unwrap().set_sink(sink);
+    }
+
+    /// Calls issued through the table and still awaiting completion.
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().in_flight()
+    }
+
+    /// Direct access to the pending table (tests, advanced callers that
+    /// mix handle bookkeeping with their own logic).
+    pub fn pending(&self) -> std::sync::MutexGuard<'_, PendingTable> {
+        self.pending.lock().unwrap()
+    }
+
+    /// Poll the RX ring, delivering responses into the pending table
+    /// (sink fired per completion, unmatched responses counted as
+    /// strays). Returns how many frames were harvested.
+    ///
+    /// The sink runs with the table lock **released**, so a
+    /// continuation may re-enter this client (issue the follow-up RPC,
+    /// claim other handles — the §4.2 continuation pattern) without
+    /// deadlocking on the pending-table mutex.
     pub fn poll_completions(&self) -> usize {
+        let mut matched = 0u64;
         let mut n = 0;
-        while let Some(frame) = self.rings.rx.pop() {
-            self.cq.push(Completion { rpc_id: frame.rpc_id(), payload: frame.payload() });
-            n += 1;
+        let mut sink_batch: Vec<Completion> = Vec::new();
+        {
+            let mut table = self.pending.lock().unwrap();
+            let has_sink = table.has_sink();
+            while let Some(frame) = self.rings.rx.pop() {
+                let rpc_id = frame.rpc_id();
+                let payload = frame.payload();
+                if has_sink {
+                    sink_batch.push(Completion { rpc_id, payload: payload.clone() });
+                }
+                if table.complete_without_sink(rpc_id, payload) {
+                    matched += 1;
+                }
+                n += 1;
+            }
+        }
+        if matched > 0 {
+            self.completed_count.fetch_add(matched, Ordering::Relaxed);
+        }
+        if !sink_batch.is_empty() {
+            // Borrow the sink out of the table, fire it unlocked, put
+            // it back — unless the continuation installed its own
+            // replacement meanwhile.
+            if let Some(mut sink) = self.pending.lock().unwrap().take_sink() {
+                for c in &sink_batch {
+                    sink.on_completion(c);
+                }
+                let mut table = self.pending.lock().unwrap();
+                if !table.has_sink() {
+                    table.set_sink(sink);
+                }
+            }
         }
         n
     }
 
     /// Zero-copy completion harvest: drain the RX ring, handing each raw
-    /// response frame to `f` without touching the [`CompletionQueue`] or
-    /// allocating payload buffers. This is the measurement fast path
-    /// (`exp::fabric_bench` reads the embedded timestamp and slot tag
-    /// straight out of the frame at Mrps rates, where a per-completion
-    /// `Vec` would dominate the cost being measured). Returns the number
-    /// of frames harvested. Frames consumed here never reach
-    /// [`RpcClient::poll_completions`]; pick one harvest style per flow.
+    /// response frame to `f` without touching the [`PendingTable`] or
+    /// allocating payload buffers — no lock anywhere on this path. This
+    /// is the measurement fast path (`exp::wall_driver` reads the
+    /// embedded timestamp and slot tag straight out of the frame at Mrps
+    /// rates, where a per-completion `Vec` would dominate the cost being
+    /// measured). Returns the number of frames harvested. Frames
+    /// consumed here never reach [`RpcClient::poll_completions`]; pick
+    /// one harvest style per flow.
     pub fn poll_completions_with<F: FnMut(&Frame)>(&self, mut f: F) -> usize {
         let mut n = 0;
         while let Some(frame) = self.rings.rx.pop() {
@@ -226,7 +608,7 @@ impl RpcClientPool {
     pub fn total_completed(&self) -> u64 {
         self.clients
             .iter()
-            .map(|c| c.cq.completed_count.load(Ordering::Relaxed))
+            .map(|c| c.completed_count.load(Ordering::Relaxed))
             .sum()
     }
 }
@@ -262,6 +644,12 @@ pub struct RpcServerThread {
 /// (`register`); flows attached with
 /// [`RpcThreadedServer::add_service_flow`] run their own service
 /// instance — per-flow state (e.g. a MICA partition) without locks.
+///
+/// Services that return [`Response::Pending`] park their requests: the
+/// loop keeps the reply context per token and flushes the response when
+/// [`RpcService::poll_parked`] reports the token finished —
+/// [`RpcThreadedServer::parked_peak`] records how many requests one
+/// thread held concurrently.
 pub struct RpcThreadedServer {
     pub threads: Vec<RpcServerThread>,
     pub handlers: Arc<Mutex<HashMap<u8, Handler>>>,
@@ -272,6 +660,19 @@ pub struct RpcThreadedServer {
     /// truncated at dispatch (a service bug surfaced as a counter, not
     /// a wedged flow).
     pub oversize_responses: Arc<AtomicU64>,
+    /// Peak number of requests parked behind sub-RPCs on a single
+    /// dispatch/worker thread (max over threads).
+    pub parked_peak: Arc<AtomicU64>,
+    /// Downstream sub-RPCs declared by parking services
+    /// ([`crate::coordinator::service::PendingCall::sub_calls`] summed).
+    pub sub_rpcs_issued: Arc<AtomicU64>,
+}
+
+/// Reply context of a parked request, held until its token finishes.
+struct ReplyCtx {
+    method: u8,
+    c_id: u32,
+    rpc_id: u32,
 }
 
 impl RpcThreadedServer {
@@ -283,6 +684,8 @@ impl RpcThreadedServer {
             stop: Arc::new(AtomicBool::new(false)),
             handled: Arc::new(AtomicU64::new(0)),
             oversize_responses: Arc::new(AtomicU64::new(0)),
+            parked_peak: Arc::new(AtomicU64::new(0)),
+            sub_rpcs_issued: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -315,179 +718,499 @@ impl RpcThreadedServer {
     pub fn start(&mut self) -> Vec<std::thread::JoinHandle<()>> {
         let mut joins = Vec::new();
         for t in &mut self.threads {
-            let rings = t.rings.clone();
             let service = t
                 .service
                 .take()
                 .unwrap_or_else(|| Box::new(HandlerService::new(self.handlers.clone())));
-            let stop = self.stop.clone();
-            let handled = self.handled.clone();
-            let oversize = self.oversize_responses.clone();
             let mode = self.mode;
-            let flow = t.flow;
-            joins.push(std::thread::spawn(move || {
-                match mode {
-                    DispatchMode::Dispatch => {
-                        Self::dispatch_loop(flow, rings, service, stop, handled, oversize)
-                    }
-                    DispatchMode::Worker => {
-                        Self::worker_loop(flow, rings, service, stop, handled, oversize)
-                    }
-                };
+            let fl = FlowLoop {
+                flow: t.flow,
+                rings: t.rings.clone(),
+                service,
+                stop: self.stop.clone(),
+                handled: self.handled.clone(),
+                oversize: self.oversize_responses.clone(),
+                parked_peak: self.parked_peak.clone(),
+                sub_rpcs: self.sub_rpcs_issued.clone(),
+                parked: HashMap::new(),
+                next_token: 1,
+                done: Vec::new(),
+            };
+            joins.push(std::thread::spawn(move || match mode {
+                DispatchMode::Dispatch => dispatch_loop(fl),
+                DispatchMode::Worker => worker_loop(fl),
             }));
         }
         joins
     }
 
-    /// Dispatch one request frame through a service: decode, call,
-    /// truncate an oversize response, build the response frame.
+    /// Dispatch one request frame through a service: decode, call, and
+    /// either build the response frame (`Some`) or park the request
+    /// under `token` (`None`; the caller records the reply context).
+    /// `handled` counts *responses produced*, so it ticks here only on
+    /// the ready path — parked requests tick when they resume. The
+    /// live loops run the equivalent logic inside `FlowLoop::ingest`
+    /// (which also does the parked bookkeeping); this entry point is
+    /// the single-frame harness used by unit tests.
+    #[cfg_attr(not(test), allow(dead_code))]
     fn handle_one(
-        frame: Frame,
+        frame: &Frame,
         flow: u32,
+        token: CallToken,
         service: &mut dyn RpcService,
         handled: &AtomicU64,
         oversize: &AtomicU64,
-    ) -> Frame {
+    ) -> Option<Frame> {
         let method = frame.flags();
         let payload = frame.payload();
-        let resp_payload = service.call(Request {
+        let resp = service.call(Request {
             method,
             c_id: frame.c_id(),
             rpc_id: frame.rpc_id(),
             flow,
+            token,
             payload: &payload,
         });
-        handled.fetch_add(1, Ordering::Relaxed);
-        let take = resp_payload.len().min(MAX_PAYLOAD_BYTES);
-        if take < resp_payload.len() {
-            oversize.fetch_add(1, Ordering::Relaxed);
+        match resp {
+            Response::Ready(resp_payload) => {
+                handled.fetch_add(1, Ordering::Relaxed);
+                Some(response_frame(
+                    &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
+                    &resp_payload,
+                    oversize,
+                ))
+            }
+            Response::Pending(_) => None,
         }
-        Frame::new(RpcType::Response, method, frame.c_id(), frame.rpc_id(), &resp_payload[..take])
+    }
+}
+
+/// Build a response frame, truncating an oversize payload (counted).
+fn response_frame(ctx: &ReplyCtx, payload: &[u8], oversize: &AtomicU64) -> Frame {
+    let take = payload.len().min(MAX_PAYLOAD_BYTES);
+    if take < payload.len() {
+        oversize.fetch_add(1, Ordering::Relaxed);
+    }
+    Frame::new(RpcType::Response, ctx.method, ctx.c_id, ctx.rpc_id, &payload[..take])
+}
+
+/// Everything one dispatch (or worker) thread owns: the flow's rings,
+/// its boxed service, and the parked-request ledger.
+struct FlowLoop {
+    flow: u32,
+    rings: Arc<RingPair>,
+    service: Box<dyn RpcService>,
+    stop: Arc<AtomicBool>,
+    handled: Arc<AtomicU64>,
+    oversize: Arc<AtomicU64>,
+    parked_peak: Arc<AtomicU64>,
+    sub_rpcs: Arc<AtomicU64>,
+    parked: HashMap<CallToken, ReplyCtx>,
+    next_token: CallToken,
+    done: Vec<(CallToken, Vec<u8>)>,
+}
+
+impl FlowLoop {
+    /// Push a response, waiting out TX backpressure (bounded ring).
+    /// Returns `false` if the stop flag landed mid-wait.
+    fn respond(&self, mut frame: Frame) -> bool {
+        let mut tx_backoff = Backoff::new();
+        while let Err(back) = self.rings.tx.push(frame) {
+            if self.stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            frame = back;
+            tx_backoff.snooze();
+        }
+        true
     }
 
-    fn dispatch_loop(
-        flow: u32,
-        rings: Arc<RingPair>,
-        mut service: Box<dyn RpcService>,
-        stop: Arc<AtomicBool>,
-        handled: Arc<AtomicU64>,
-        oversize: Arc<AtomicU64>,
-    ) {
-        let mut backoff = Backoff::new();
-        while !stop.load(Ordering::Relaxed) {
-            match rings.rx.pop() {
-                Some(frame) => {
-                    backoff.reset();
-                    let resp =
-                        Self::handle_one(frame, flow, service.as_mut(), &handled, &oversize);
-                    // Wait out TX backpressure (bounded ring).
-                    let mut r = resp;
-                    let mut tx_backoff = Backoff::new();
-                    while let Err(back) = rings.tx.push(r) {
-                        if stop.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        r = back;
-                        tx_backoff.snooze();
-                    }
-                }
-                None => backoff.snooze(),
+    /// Run one request through the service; park or respond.
+    /// Returns `false` if stopped while pushing the response.
+    fn ingest(&mut self, frame: Frame) -> bool {
+        let token = self.next_token;
+        self.next_token += 1;
+        let method = frame.flags();
+        let payload = frame.payload();
+        let resp = self.service.call(Request {
+            method,
+            c_id: frame.c_id(),
+            rpc_id: frame.rpc_id(),
+            flow: self.flow,
+            token,
+            payload: &payload,
+        });
+        match resp {
+            Response::Ready(p) => {
+                self.handled.fetch_add(1, Ordering::Relaxed);
+                let f = response_frame(
+                    &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
+                    &p,
+                    &self.oversize,
+                );
+                self.respond(f)
+            }
+            Response::Pending(pc) => {
+                self.sub_rpcs.fetch_add(pc.sub_calls as u64, Ordering::Relaxed);
+                self.parked.insert(
+                    token,
+                    ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
+                );
+                self.parked_peak.fetch_max(self.parked.len() as u64, Ordering::Relaxed);
+                true
             }
         }
     }
 
-    fn worker_loop(
-        flow: u32,
-        rings: Arc<RingPair>,
-        mut service: Box<dyn RpcService>,
-        stop: Arc<AtomicBool>,
-        handled: Arc<AtomicU64>,
-        oversize: Arc<AtomicU64>,
-    ) {
-        // Dispatch thread forwards to a worker over a channel; the
-        // worker owns the service and pushes responses back through the
-        // flow's TX ring.
-        let (tx_work, rx_work) = std::sync::mpsc::channel::<Frame>();
-        let worker = {
-            let rings = rings.clone();
-            let stop = stop.clone();
-            std::thread::spawn(move || {
-                while let Ok(frame) = rx_work.recv() {
-                    let resp =
-                        Self::handle_one(frame, flow, service.as_mut(), &handled, &oversize);
-                    let mut r = resp;
-                    let mut tx_backoff = Backoff::new();
-                    while let Err(back) = rings.tx.push(r) {
-                        if stop.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        r = back;
-                        tx_backoff.snooze();
-                    }
-                }
-            })
-        };
-        let mut backoff = Backoff::new();
-        while !stop.load(Ordering::Relaxed) {
-            match rings.rx.pop() {
-                Some(frame) => {
-                    backoff.reset();
-                    if tx_work.send(frame).is_err() {
+    /// Give the service a chance to finish parked tokens; flush every
+    /// response it produced. Returns whether anything progressed (and
+    /// `false` in `.1` if stopped mid-push).
+    fn flush_parked(&mut self) -> (bool, bool) {
+        self.done.clear();
+        self.service.poll_parked(&mut self.done);
+        if self.done.is_empty() {
+            return (false, true);
+        }
+        let done = std::mem::take(&mut self.done);
+        let mut ok = true;
+        for (token, payload) in &done {
+            match self.parked.remove(token) {
+                Some(ctx) => {
+                    self.handled.fetch_add(1, Ordering::Relaxed);
+                    let f = response_frame(&ctx, payload, &self.oversize);
+                    if !self.respond(f) {
+                        ok = false;
                         break;
                     }
                 }
-                None => backoff.snooze(),
+                // A token the loop never parked is a service bug; drop
+                // it rather than fabricate a frame.
+                None => debug_assert!(false, "service finished unknown token {token}"),
             }
         }
-        drop(tx_work);
-        let _ = worker.join();
+        // Keep the buffer's allocation for the next poll.
+        self.done = done;
+        self.done.clear();
+        (true, ok)
     }
+}
+
+/// `DispatchMode::Dispatch`: the dispatch thread runs the service
+/// inline — pop a request, call, respond or park; drive parked tokens
+/// every iteration.
+fn dispatch_loop(mut fl: FlowLoop) {
+    let mut backoff = Backoff::new();
+    while !fl.stop.load(Ordering::Relaxed) {
+        let mut progressed = false;
+        if let Some(frame) = fl.rings.rx.pop() {
+            progressed = true;
+            if !fl.ingest(frame) {
+                return;
+            }
+        }
+        let (moved, ok) = fl.flush_parked();
+        if !ok {
+            return;
+        }
+        progressed |= moved;
+        if progressed {
+            backoff.reset();
+        } else {
+            backoff.snooze();
+        }
+    }
+}
+
+/// `DispatchMode::Worker`: the dispatch thread only moves frames; the
+/// worker owns the service (and its parked ledger) and pushes responses
+/// back through the flow's TX ring.
+fn worker_loop(mut fl: FlowLoop) {
+    let (tx_work, rx_work) = std::sync::mpsc::channel::<Frame>();
+    let stop = fl.stop.clone();
+    let rings = fl.rings.clone();
+    let worker = std::thread::spawn(move || {
+        let mut backoff = Backoff::new();
+        loop {
+            let mut progressed = false;
+            match rx_work.try_recv() {
+                Ok(frame) => {
+                    progressed = true;
+                    if !fl.ingest(frame) {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+            }
+            let (moved, ok) = fl.flush_parked();
+            if !ok {
+                return;
+            }
+            progressed |= moved;
+            if progressed {
+                backoff.reset();
+            } else {
+                backoff.snooze();
+            }
+        }
+    });
+    let mut backoff = Backoff::new();
+    while !stop.load(Ordering::Relaxed) {
+        match rings.rx.pop() {
+            Some(frame) => {
+                backoff.reset();
+                if tx_work.send(frame).is_err() {
+                    break;
+                }
+            }
+            None => backoff.snooze(),
+        }
+    }
+    drop(tx_work);
+    let _ = worker.join();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::{PendingCall, Response};
+
+    // ------------------------------------------------- pending table
 
     #[test]
-    fn completion_queue_callback_fires() {
-        let cq = CompletionQueue::new();
-        let hits = Arc::new(AtomicU64::new(0));
-        let h = hits.clone();
-        cq.set_callback(Box::new(move |_| {
-            h.fetch_add(1, Ordering::Relaxed);
-        }));
-        cq.push(Completion { rpc_id: 1, payload: vec![1] });
-        cq.push(Completion { rpc_id: 2, payload: vec![2] });
-        assert_eq!(hits.load(Ordering::Relaxed), 2);
-        assert_eq!(cq.drain().len(), 2);
-        assert!(cq.is_empty());
+    fn pending_table_completes_out_of_order() {
+        let mut t = PendingTable::new();
+        let a = t.register(10).unwrap();
+        let b = t.register(11).unwrap();
+        let c = t.register(12).unwrap();
+        assert_eq!(t.in_flight(), 3);
+        // Completions arrive in reverse order.
+        assert!(t.complete(12, b"c".to_vec()));
+        assert!(t.complete(10, b"a".to_vec()));
+        assert!(t.complete(11, b"b".to_vec()));
+        assert_eq!(t.in_flight(), 0);
+        assert_eq!(t.ready_len(), 3);
+        // Targeted claims work regardless of arrival order.
+        assert_eq!(t.try_complete(b.rpc_id()), Some(b"b".to_vec()));
+        assert_eq!(t.try_complete(a.rpc_id()), Some(b"a".to_vec()));
+        assert_eq!(t.try_complete(c.rpc_id()), Some(b"c".to_vec()));
+        assert!(t.is_idle());
+        assert_eq!(t.completed, 3);
+        assert_eq!(t.strays, 0);
+        // Slots recycled: capacity stayed at the high-water mark.
+        assert_eq!(t.capacity(), 3);
+        let _ = t.register(13).unwrap();
+        assert_eq!(t.capacity(), 3, "reuses freed slots");
     }
+
+    #[test]
+    fn pending_table_take_ready_in_arrival_order() {
+        let mut t = PendingTable::new();
+        for id in [5u32, 6, 7] {
+            t.register(id).unwrap();
+        }
+        t.complete(7, vec![7]);
+        t.complete(5, vec![5]);
+        assert_eq!(t.take_ready().unwrap().rpc_id, 7, "oldest arrival first");
+        // A targeted claim makes its deque entry stale; take_ready skips it.
+        t.complete(6, vec![6]);
+        assert_eq!(t.try_complete(5), Some(vec![5]));
+        assert_eq!(t.take_ready().unwrap().rpc_id, 6);
+        assert!(t.take_ready().is_none());
+        assert!(t.is_idle());
+    }
+
+    #[test]
+    fn pending_table_rejects_duplicate_rpc_ids() {
+        let mut t = PendingTable::new();
+        let h = t.register(42).unwrap();
+        assert!(t.register(42).is_none(), "duplicate registration refused");
+        // The original call is intact.
+        assert!(t.complete(42, b"ok".to_vec()));
+        assert_eq!(t.try_complete(h.rpc_id()), Some(b"ok".to_vec()));
+        // A duplicate *completion* is a stray, not a second result.
+        t.register(43).unwrap();
+        assert!(t.complete(43, vec![1]));
+        assert!(!t.complete(43, vec![2]), "dup completion rejected");
+        assert_eq!(t.strays, 1);
+        assert_eq!(t.try_complete(43), Some(vec![1]), "first result wins");
+    }
+
+    #[test]
+    fn pending_table_cancel_makes_late_completion_a_stray() {
+        // "Handle dropped before completion": cancel frees the slot;
+        // the late response must not poison a reused slot.
+        let mut t = PendingTable::new();
+        let h = t.register(1).unwrap();
+        assert!(t.cancel(h.rpc_id()));
+        assert!(t.is_idle());
+        let h2 = t.register(2).unwrap();
+        assert_eq!(h2.slot(), h.slot(), "slot recycled");
+        assert!(!t.complete(1, b"late".to_vec()), "late completion is a stray");
+        assert_eq!(t.strays, 1);
+        assert!(t.complete(2, b"live".to_vec()), "reused slot unaffected");
+        assert_eq!(t.try_complete(2), Some(b"live".to_vec()));
+        assert!(!t.cancel(99), "unknown rpc_id");
+        // Cancelling a ready-but-unclaimed call discards the result.
+        t.register(3).unwrap();
+        t.complete(3, vec![3]);
+        assert!(t.cancel(3));
+        assert!(t.take_ready().is_none());
+        assert!(t.is_idle());
+    }
+
+    /// The call_blocking usage pattern — register, complete, claim by
+    /// handle, never `take_ready` — must not grow the arrival-order
+    /// deque without bound (one stale entry per RPC would be a leak on
+    /// every long-lived blocking client).
+    #[test]
+    fn pending_table_targeted_claims_do_not_leak_ready_entries() {
+        let mut t = PendingTable::new();
+        for rpc_id in 0..10_000u32 {
+            let h = t.register(rpc_id).unwrap();
+            assert!(t.complete(rpc_id, vec![1]));
+            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![1]));
+        }
+        assert!(t.is_idle());
+        assert!(
+            t.ready.len() <= 64,
+            "stale arrival-order entries leaked: {}",
+            t.ready.len()
+        );
+        // Same bound when the claim path is cancel() on ready results.
+        for rpc_id in 10_000..20_000u32 {
+            t.register(rpc_id).unwrap();
+            t.complete(rpc_id, vec![2]);
+            assert!(t.cancel(rpc_id));
+        }
+        assert!(t.ready.len() <= 64, "cancel leaked: {}", t.ready.len());
+        // take_ready still works afterwards.
+        t.register(99_999).unwrap();
+        t.complete(99_999, vec![9]);
+        assert_eq!(t.take_ready().unwrap().rpc_id, 99_999);
+    }
+
+    #[test]
+    fn pending_table_sink_fires_on_every_completion() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut t = PendingTable::new();
+        let h = hits.clone();
+        t.set_sink(Box::new(move |c: &Completion| {
+            h.fetch_add(c.rpc_id as u64, Ordering::Relaxed);
+        }));
+        t.register(1).unwrap();
+        t.register(2).unwrap();
+        t.complete(1, vec![]);
+        t.complete(2, vec![]);
+        t.complete(99, vec![]); // stray: sink still observes it
+        assert_eq!(hits.load(Ordering::Relaxed), 1 + 2 + 99);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.strays, 1);
+    }
+
+    // -------------------------------------------------------- client
 
     #[test]
     fn client_round_trip_via_manual_echo() {
         // Emulate the NIC by echoing tx -> rx with type flipped.
         let rings = Arc::new(RingPair::new(16, 16));
         let client = RpcClient::new(9, rings.clone());
-        let id = client.call_async(3, b"ping").unwrap();
+        let handle = client.call_async(3, b"ping").unwrap();
         let req = rings.tx.pop().unwrap();
         assert_eq!(req.rpc_type(), Some(RpcType::Request));
         assert_eq!(req.flags(), 3);
+        assert_eq!(req.rpc_id(), handle.rpc_id());
+        assert_eq!(client.in_flight(), 1);
         let resp = Frame::new(RpcType::Response, 3, 9, req.rpc_id(), b"pong");
         rings.rx.push(resp).unwrap();
         assert_eq!(client.poll_completions(), 1);
-        let done = client.cq.drain();
-        assert_eq!(done[0].rpc_id, id);
-        assert_eq!(done[0].payload, b"pong");
+        let done = client.take_completion().unwrap();
+        assert_eq!(done.rpc_id, handle.rpc_id());
+        assert_eq!(done.payload, b"pong");
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 1);
+        assert_eq!(client.in_flight(), 0);
     }
 
     #[test]
-    fn client_backpressure_counted() {
+    fn client_backpressure_counted_and_nothing_leaks() {
         let rings = Arc::new(RingPair::new(2, 2));
         let client = RpcClient::new(1, rings);
         assert!(client.call_async(0, b"").is_ok());
         assert!(client.call_async(0, b"").is_ok());
         assert!(client.call_async(0, b"").is_err());
         assert_eq!(client.send_failures.load(Ordering::Relaxed), 1);
+        // The failed call was deregistered: only 2 in flight.
+        assert_eq!(client.in_flight(), 2);
+    }
+
+    #[test]
+    fn wait_handle_times_out_and_cancels() {
+        let rings = Arc::new(RingPair::new(4, 4));
+        let client = RpcClient::new(1, rings.clone());
+        let h = client.call_async(0, b"x").unwrap();
+        assert_eq!(client.wait_handle(&h, Duration::from_millis(10)), None);
+        assert_eq!(client.in_flight(), 0, "timed-out call cancelled");
+        // The response arriving later is a stray, not a corruption.
+        rings.rx.push(Frame::new(RpcType::Response, 0, 1, h.rpc_id(), b"late")).unwrap();
+        client.poll_completions();
+        assert_eq!(client.pending().strays, 1);
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn wait_any_returns_completions_across_handles() {
+        let rings = Arc::new(RingPair::new(8, 8));
+        let client = RpcClient::new(2, rings.clone());
+        let a = client.call_async(1, b"a").unwrap();
+        let b = client.call_async(1, b"b").unwrap();
+        // Echo b first, then a.
+        for h in [&b, &a] {
+            rings.rx.push(Frame::new(RpcType::Response, 1, 2, h.rpc_id(), b"r")).unwrap();
+        }
+        let first = client.wait_any(Duration::from_secs(1)).unwrap();
+        assert_eq!(first.rpc_id, b.rpc_id(), "arrival order, not issue order");
+        let second = client.wait_any(Duration::from_secs(1)).unwrap();
+        assert_eq!(second.rpc_id, a.rpc_id());
+        assert!(client.wait_any(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn sink_runs_as_continuation_on_poll() {
+        let rings = Arc::new(RingPair::new(8, 8));
+        let client = RpcClient::new(3, rings.clone());
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = seen.clone();
+        client.set_sink(Box::new(move |c: &Completion| {
+            s.lock().unwrap().push(c.payload.clone());
+        }));
+        let h = client.call_async(1, b"q").unwrap();
+        rings.rx.push(Frame::new(RpcType::Response, 1, 3, h.rpc_id(), b"cont")).unwrap();
+        client.poll_completions();
+        assert_eq!(seen.lock().unwrap().as_slice(), &[b"cont".to_vec()]);
+    }
+
+    /// The §4.2 continuation pattern: a sink that issues the follow-up
+    /// RPC on the SAME client. Must not deadlock on the pending-table
+    /// mutex (the sink fires with the lock released).
+    #[test]
+    fn sink_can_reenter_the_client_it_is_attached_to() {
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(4, rings.clone());
+        {
+            let client2 = client.clone();
+            client.set_sink(Box::new(move |c: &Completion| {
+                // Chain the next call off the completion.
+                let _ = client2.call_async(9, &c.payload);
+                let _ = client2.in_flight(); // and poke another locked path
+            }));
+        }
+        let h = client.call_async(9, b"first").unwrap();
+        let _ = rings.tx.pop().unwrap();
+        rings.rx.push(Frame::new(RpcType::Response, 9, 4, h.rpc_id(), b"resp")).unwrap();
+        client.poll_completions(); // would deadlock if the sink fired under the lock
+        let follow_up = rings.tx.pop().expect("continuation issued the follow-up RPC");
+        assert_eq!(follow_up.payload(), b"resp");
+        assert_eq!(client.pending().try_complete(h.rpc_id()), Some(b"resp".to_vec()));
     }
 
     #[test]
@@ -529,6 +1252,7 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(server.handled.load(Ordering::Relaxed), 32);
+        assert_eq!(server.parked_peak.load(Ordering::Relaxed), 0, "echo never parks");
     }
 
     #[test]
@@ -561,17 +1285,81 @@ mod tests {
         }
     }
 
+    /// A service that parks every request; both dispatch modes must
+    /// resume every token and answer with the right rpc ids.
+    #[test]
+    fn parked_requests_resume_in_both_dispatch_modes() {
+        use crate::coordinator::service::CallToken;
+        struct ParkAll {
+            parked: Vec<CallToken>,
+        }
+        impl RpcService for ParkAll {
+            fn call(&mut self, req: Request<'_>) -> Response {
+                self.parked.push(req.token);
+                Response::Pending(PendingCall { sub_calls: 2 })
+            }
+            fn poll_parked(&mut self, done: &mut Vec<(CallToken, Vec<u8>)>) {
+                // Finish tokens only once a batch of 4 has parked, so
+                // the ledger provably holds several at once.
+                if self.parked.len() >= 4 {
+                    for t in self.parked.drain(..) {
+                        done.push((t, vec![0xAB]));
+                    }
+                }
+            }
+        }
+        for mode in [DispatchMode::Dispatch, DispatchMode::Worker] {
+            let mut server = RpcThreadedServer::new(mode);
+            let rings = Arc::new(RingPair::new(64, 64));
+            server.add_service_flow(0, rings.clone(), Box::new(ParkAll { parked: Vec::new() }));
+            let joins = server.start();
+            for i in 0..8u32 {
+                let f = Frame::new(RpcType::Request, 5, 1, i, b"");
+                while rings.rx.push(f).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            let mut ids = Vec::new();
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while ids.len() < 8 {
+                if let Some(r) = rings.tx.pop() {
+                    assert_eq!(r.rpc_type(), Some(RpcType::Response));
+                    assert_eq!(r.flags(), 5, "reply context preserved");
+                    assert_eq!(r.payload(), vec![0xAB]);
+                    ids.push(r.rpc_id());
+                } else {
+                    assert!(std::time::Instant::now() < deadline, "timed out ({mode:?})");
+                    std::thread::yield_now();
+                }
+            }
+            ids.sort_unstable();
+            assert_eq!(ids, (0..8).collect::<Vec<u32>>(), "{mode:?}");
+            server.stop_flag().store(true, Ordering::Relaxed);
+            for j in joins {
+                j.join().unwrap();
+            }
+            assert_eq!(server.handled.load(Ordering::Relaxed), 8, "{mode:?}");
+            assert!(
+                server.parked_peak.load(Ordering::Relaxed) >= 4,
+                "{mode:?}: peak {} < 4",
+                server.parked_peak.load(Ordering::Relaxed)
+            );
+            assert_eq!(server.sub_rpcs_issued.load(Ordering::Relaxed), 16, "{mode:?}");
+        }
+    }
+
     #[test]
     fn srq_calls_carry_their_own_connection_ids() {
         // SRQ mode: one flow (ring pair), many connections. Each call
         // names its c_id; the zero-copy harvest sees the raw frames.
         let rings = Arc::new(RingPair::new(16, 16));
         let client = RpcClient::new(1, rings.clone());
-        client.call_async_on(11, 5, b"a").unwrap();
-        client.call_async_on(22, 5, b"b").unwrap();
+        let h1 = client.call_async_on(11, 5, b"a").unwrap();
+        let h2 = client.call_async_on(22, 5, b"b").unwrap();
         let f1 = rings.tx.pop().unwrap();
         let f2 = rings.tx.pop().unwrap();
         assert_eq!((f1.c_id(), f2.c_id()), (11, 22));
+        assert_eq!((f1.rpc_id(), f2.rpc_id()), (h1.rpc_id(), h2.rpc_id()));
         assert_eq!(client.sent.load(Ordering::Relaxed), 2);
 
         // Echo them back and harvest without allocation.
@@ -581,9 +1369,9 @@ mod tests {
         let n = client.poll_completions_with(|fr| seen.push((fr.c_id(), fr.rpc_id())));
         assert_eq!(n, 2);
         assert_eq!(seen, vec![(11, f1.rpc_id()), (22, f2.rpc_id())]);
-        // The harvest bypassed the completion queue entirely.
-        assert!(client.cq.is_empty());
-        assert_eq!(client.cq.completed_count.load(Ordering::Relaxed), 0);
+        // The zero-copy harvest bypassed the pending table entirely.
+        assert_eq!(client.pending().ready_len(), 0);
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -604,7 +1392,8 @@ mod tests {
         let handled = AtomicU64::new(0);
         let oversize = AtomicU64::new(0);
         let req = Frame::new(RpcType::Request, 42, 1, 1, b"zz");
-        let resp = RpcThreadedServer::handle_one(req, 0, &mut svc, &handled, &oversize);
+        let resp = RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &handled, &oversize)
+            .expect("handler-table services never park");
         assert_eq!(resp.payload_len(), 0);
         assert_eq!(resp.rpc_type(), Some(RpcType::Response));
         assert_eq!(handled.load(Ordering::Relaxed), 1);
@@ -615,15 +1404,16 @@ mod tests {
     fn oversize_service_response_truncated_and_counted() {
         struct Big;
         impl crate::coordinator::service::RpcService for Big {
-            fn call(&mut self, _req: crate::coordinator::service::Request<'_>) -> Vec<u8> {
-                vec![7u8; 300]
+            fn call(&mut self, _req: crate::coordinator::service::Request<'_>) -> Response {
+                vec![7u8; 300].into()
             }
         }
         let mut svc = Big;
         let handled = AtomicU64::new(0);
         let oversize = AtomicU64::new(0);
         let req = Frame::new(RpcType::Request, 1, 1, 1, b"x");
-        let resp = RpcThreadedServer::handle_one(req, 0, &mut svc, &handled, &oversize);
+        let resp = RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &handled, &oversize)
+            .expect("ready");
         assert_eq!(resp.payload_len(), MAX_PAYLOAD_BYTES, "truncated to one cache line");
         assert!(resp.is_valid());
         assert_eq!(oversize.load(Ordering::Relaxed), 1);
@@ -636,8 +1426,8 @@ mod tests {
         use crate::coordinator::service::{Request, RpcService};
         struct FlowTagger;
         impl RpcService for FlowTagger {
-            fn call(&mut self, req: Request<'_>) -> Vec<u8> {
-                vec![req.flow as u8]
+            fn call(&mut self, req: Request<'_>) -> Response {
+                vec![req.flow as u8].into()
             }
         }
         let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);

@@ -369,7 +369,7 @@ mod tests {
             }
         }
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-        while client.cq.completed_count.load(Ordering::Relaxed) < 65 {
+        while client.completed_count.load(Ordering::Relaxed) < 65 {
             client.poll_completions();
             assert!(std::time::Instant::now() < deadline, "timeout");
             std::thread::yield_now();
@@ -418,7 +418,7 @@ mod tests {
     /// client ring) and response routing back across two hops.
     #[test]
     fn three_endpoint_chain_routes_end_to_end() {
-        use crate::coordinator::service::{Request, RpcService};
+        use crate::coordinator::service::{Request, Response, RpcService};
 
         let mut fabric = Fabric::new();
         let a = fabric.add_endpoint(1, 64);
@@ -439,10 +439,10 @@ mod tests {
             next: Arc<RpcClient>,
         }
         impl RpcService for Proxy {
-            fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
+            fn call(&mut self, _req: Request<'_>) -> Response {
                 match self.next.call_blocking(9, b"down") {
-                    Some(resp) => vec![1 + resp.first().copied().unwrap_or(0)],
-                    None => vec![0xEE],
+                    Some(resp) => vec![1 + resp.first().copied().unwrap_or(0)].into(),
+                    None => vec![0xEE].into(),
                 }
             }
         }

@@ -6,14 +6,18 @@
 //!   timestamp + slot tag) used by the wall-clock fabric benchmark.
 //! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O)
 //!   and [`rings::SlotPool`], the Fig. 8 ④/⑥ free-slot bookkeeping.
-//! * [`api`] — RpcClient / RpcClientPool / RpcThreadedServer /
-//!   CompletionQueue and the dispatch/worker threading models, with
-//!   SRQ-mode explicit-connection calls (§4.2) and a zero-copy
+//! * [`api`] — RpcClient / RpcClientPool / RpcThreadedServer and the
+//!   dispatch/worker threading models, with the async completion
+//!   machinery ([`api::CallHandle`]s over a slot-indexed
+//!   [`api::PendingTable`], [`api::CompletionSink`] continuations),
+//!   SRQ-mode explicit-connection calls (§4.2), and a zero-copy
 //!   completion harvest for measurement loops.
 //! * [`service`] — the pluggable [`service::RpcService`] layer every
 //!   server flow dispatches to: the "easy porting API" of §5.6/§5.7
 //!   (memcached, MICA, flightreg adapters live in `crate::apps`), plus
-//!   the echo/handler-table/tail-stamp building blocks.
+//!   the echo/handler-table/tail-stamp building blocks and the
+//!   [`service::Response::Pending`] parked-request path for services
+//!   that issue non-blocking sub-RPCs.
 //! * [`fabric`] — the real-thread loop-back fabric standing in for the
 //!   FPGA (graceful-drain shutdown, per-drop-cause counters), optionally
 //!   executing the AOT XLA datapath artifact; routes frames between any
@@ -34,10 +38,10 @@ pub mod rings;
 pub mod service;
 
 pub use api::{
-    Completion, CompletionQueue, DispatchMode, Handler, RpcClient, RpcClientPool,
-    RpcThreadedServer,
+    CallHandle, Completion, CompletionSink, DispatchMode, Handler, PendingTable, RpcClient,
+    RpcClientPool, RpcThreadedServer,
 };
-pub use service::{EchoService, RpcService};
+pub use service::{EchoService, Response, RpcService};
 pub use fabric::{Fabric, FabricHandle, FabricStats};
 pub use frame::{Frame, RpcType};
 pub use rings::{Ring, RingPair, SlotPool};

@@ -13,6 +13,29 @@
 //! may keep per-connection state (sessions, per-tenant counters) in
 //! plain data structures.
 //!
+//! ## Ready vs Pending: the asynchronous return path
+//!
+//! [`RpcService::call`] returns a [`Response`]:
+//!
+//! * [`Response::Ready`] — the common case: the response payload is
+//!   available now and the dispatch loop sends it immediately.
+//! * [`Response::Pending`] — the service issued one or more
+//!   **non-blocking sub-RPCs** (§4.2's continuation-based interface)
+//!   and parked the request. The dispatch loop stores the request's
+//!   reply context (method/c_id/rpc_id) under the dispatch-assigned
+//!   [`Request::token`] and keeps calling [`RpcService::poll_parked`];
+//!   when the service's downstream completions arrive and a token
+//!   finishes, the loop builds and sends the response frame. This is
+//!   how a mid-tier service (Check-in in §5.7) holds N concurrent
+//!   fan-outs on **one** dispatch thread instead of blocking it per
+//!   nested call.
+//!
+//! Parked-request lifecycle: `call → Pending(token parked) →
+//! poll_parked reports (token, payload) → response frame sent → token
+//! forgotten`. A token the service never finishes stays parked until
+//! the server stops (the wall-clock driver drains all in-flight RPCs
+//! before stopping servers, so a healthy run never strands one).
+//!
 //! Implementations in this repo:
 //! * [`EchoService`] — the loop-back echo the wall-clock fabric
 //!   benchmark measures (`exp::fabric_bench`);
@@ -22,18 +45,60 @@
 //!   working unchanged;
 //! * [`StampedService`] — a combinator that carries the wall-clock
 //!   benchmark's tail stamp (send timestamp + slot tag, payload bytes
-//!   36..48) across any inner service, so measured latency rides the
-//!   symmetric request/response path for free even when the service
-//!   rewrites the payload (a KVS GET returns the value, not the
-//!   request);
+//!   36..48) across any inner service — including across a parked
+//!   request: the stamp is held per token and re-attached when the
+//!   inner service finishes it;
 //! * `apps::memcached::MemcachedService`, `apps::mica::MicaService`,
-//!   `apps::flightreg::TierService` — the ported applications
-//!   (`exp::app_bench` measures them over the real rings).
+//!   `apps::flightreg::{TierService, FanoutService}` — the ported
+//!   applications (`exp::app_bench` measures them over the real rings);
+//!   `FanoutService` is the `Response::Pending` flagship: Check-in's
+//!   3-way fan-out with a many-to-one join, all sub-RPCs concurrent on
+//!   one dispatch thread.
 
 use crate::coordinator::api::Handler;
 use crate::coordinator::frame::{Frame, MAX_PAYLOAD_BYTES};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Identifies one parked request within a dispatch (or worker) thread:
+/// assigned by the dispatch loop, unique per service instance for the
+/// thread's lifetime (a monotonic u64 never wraps in practice).
+pub type CallToken = u64;
+
+/// What a service reports when it parks a request (diagnostics the
+/// dispatch loop aggregates into
+/// [`crate::coordinator::api::RpcThreadedServer::sub_rpcs_issued`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PendingCall {
+    /// Downstream sub-RPCs issued for this request before parking.
+    pub sub_calls: u32,
+}
+
+/// Outcome of [`RpcService::call`].
+#[derive(Debug)]
+pub enum Response {
+    /// Response payload available now; sent immediately.
+    Ready(Vec<u8>),
+    /// Request parked behind in-flight sub-RPCs; the service will
+    /// finish the token through [`RpcService::poll_parked`].
+    Pending(PendingCall),
+}
+
+impl From<Vec<u8>> for Response {
+    fn from(payload: Vec<u8>) -> Response {
+        Response::Ready(payload)
+    }
+}
+
+impl Response {
+    /// The payload of a `Ready` response (tests/adapters).
+    pub fn ready(self) -> Option<Vec<u8>> {
+        match self {
+            Response::Ready(p) => Some(p),
+            Response::Pending(_) => None,
+        }
+    }
+}
 
 /// One request as the dispatch layer hands it to a service: the decoded
 /// frame fields plus the flow identity of the dispatch thread serving
@@ -48,21 +113,37 @@ pub struct Request<'a> {
     pub rpc_id: u32,
     /// The server flow (= dispatch thread) this request was steered to.
     pub flow: u32,
+    /// Dispatch-assigned parking token: the key under which a
+    /// [`Response::Pending`] request is resumed via
+    /// [`RpcService::poll_parked`].
+    pub token: CallToken,
     pub payload: &'a [u8],
 }
 
-/// A server-side RPC service: request frame in, response payload out.
+/// A server-side RPC service: request frame in, [`Response`] out.
 ///
 /// The dispatch layer builds the response frame (same c_id/rpc_id/method,
 /// type flipped to Response) and truncates oversize payloads to
 /// [`MAX_PAYLOAD_BYTES`], counting the truncation in
 /// `RpcThreadedServer::oversize_responses` — a service bug is reported,
-/// never a wedged flow.
+/// never a wedged flow. Parked responses get the same treatment when
+/// they resume.
 pub trait RpcService: Send {
-    /// Handle one request; the returned bytes become the response
-    /// payload. Runs on the flow's dispatch thread (`DispatchMode::
-    /// Dispatch`) or its worker thread (`DispatchMode::Worker`).
-    fn call(&mut self, req: Request<'_>) -> Vec<u8>;
+    /// Handle one request. Runs on the flow's dispatch thread
+    /// (`DispatchMode::Dispatch`) or its worker thread
+    /// (`DispatchMode::Worker`). Return `payload.into()` (or
+    /// `Response::Ready`) for a synchronous reply, or park the request
+    /// with [`Response::Pending`] after issuing non-blocking sub-RPCs.
+    fn call(&mut self, req: Request<'_>) -> Response;
+
+    /// Drive parked requests: harvest downstream completions and push
+    /// every token that finished, with its response payload, into
+    /// `done`. Called by the dispatch loop on every iteration — must be
+    /// cheap when nothing is parked. Ready-only services keep the
+    /// default no-op.
+    fn poll_parked(&mut self, done: &mut Vec<(CallToken, Vec<u8>)>) {
+        let _ = done;
+    }
 
     /// Human-readable service name (artifacts, diagnostics).
     fn name(&self) -> &'static str {
@@ -77,8 +158,8 @@ pub trait RpcService: Send {
 pub struct EchoService;
 
 impl RpcService for EchoService {
-    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
-        req.payload.to_vec()
+    fn call(&mut self, req: Request<'_>) -> Response {
+        req.payload.to_vec().into()
     }
 
     fn name(&self) -> &'static str {
@@ -91,7 +172,8 @@ impl RpcService for EchoService {
 /// (unknown methods return an empty payload, as before the service
 /// layer existed). This is what every flow of an
 /// [`crate::coordinator::api::RpcThreadedServer`] runs unless the flow
-/// was attached with an explicit service.
+/// was attached with an explicit service. Handlers are synchronous by
+/// construction, so this service never parks.
 pub struct HandlerService {
     handlers: Arc<Mutex<HashMap<u8, Handler>>>,
 }
@@ -103,11 +185,11 @@ impl HandlerService {
 }
 
 impl RpcService for HandlerService {
-    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+    fn call(&mut self, req: Request<'_>) -> Response {
         let handler = self.handlers.lock().unwrap().get(&req.method).cloned();
         match handler {
-            Some(h) => h(req.method, req.payload),
-            None => Vec::new(),
+            Some(h) => h(req.method, req.payload).into(),
+            None => Vec::new().into(),
         }
     }
 
@@ -124,29 +206,54 @@ impl RpcService for HandlerService {
 /// wall-clock driver measures RTT through services that do not echo
 /// their input, without the stamp perturbing the object-level steering
 /// hash (the tail region is outside the frame's KEY_WORDS).
+///
+/// Parked requests are stamped too: when the inner service returns
+/// [`Response::Pending`], the stamp is held per token and re-attached
+/// when [`RpcService::poll_parked`] reports the token done — so the
+/// measured fan-out chain (`exp::app_bench`) gets RTTs through the
+/// asynchronous return path for free.
 pub struct StampedService<S> {
     pub inner: S,
+    /// Tail stamps of parked requests, keyed by token.
+    parked_stamps: HashMap<CallToken, Vec<u8>>,
 }
 
 impl<S: RpcService> StampedService<S> {
     pub fn new(inner: S) -> StampedService<S> {
-        StampedService { inner }
+        StampedService { inner, parked_stamps: HashMap::new() }
+    }
+
+    /// Pin the app region to exactly `TAIL_STAMP_OFFSET` bytes (resize
+    /// both truncates an oversize response and pads a short one) and
+    /// re-attach the stamp at its fixed offset.
+    fn attach(mut payload: Vec<u8>, stamp: &[u8]) -> Vec<u8> {
+        payload.resize(Frame::TAIL_STAMP_OFFSET, 0);
+        payload.extend_from_slice(stamp);
+        debug_assert!(payload.len() <= MAX_PAYLOAD_BYTES);
+        payload
     }
 }
 
 impl<S: RpcService> RpcService for StampedService<S> {
-    fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+    fn call(&mut self, req: Request<'_>) -> Response {
         let split = req.payload.len().min(Frame::TAIL_STAMP_OFFSET);
         let (app, stamp) = req.payload.split_at(split);
-        let inner_resp = self.inner.call(Request { payload: app, ..req });
-        let mut out = inner_resp;
-        // Keep the stamp at its fixed offset: pin the app region to
-        // exactly TAIL_STAMP_OFFSET bytes (resize both truncates an
-        // oversize response and pads a short one).
-        out.resize(Frame::TAIL_STAMP_OFFSET, 0);
-        out.extend_from_slice(stamp);
-        debug_assert!(out.len() <= MAX_PAYLOAD_BYTES);
-        out
+        match self.inner.call(Request { payload: app, ..req }) {
+            Response::Ready(p) => Response::Ready(Self::attach(p, stamp)),
+            Response::Pending(pc) => {
+                self.parked_stamps.insert(req.token, stamp.to_vec());
+                Response::Pending(pc)
+            }
+        }
+    }
+
+    fn poll_parked(&mut self, done: &mut Vec<(CallToken, Vec<u8>)>) {
+        let mut inner_done = Vec::new();
+        self.inner.poll_parked(&mut inner_done);
+        for (token, payload) in inner_done {
+            let stamp = self.parked_stamps.remove(&token).unwrap_or_default();
+            done.push((token, Self::attach(payload, &stamp)));
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -160,13 +267,17 @@ mod tests {
     use crate::coordinator::frame::RpcType;
 
     fn req(payload: &[u8]) -> Request<'_> {
-        Request { method: 1, c_id: 9, rpc_id: 3, flow: 0, payload }
+        Request { method: 1, c_id: 9, rpc_id: 3, flow: 0, token: 1, payload }
+    }
+
+    fn ready(r: Response) -> Vec<u8> {
+        r.ready().expect("expected Response::Ready")
     }
 
     #[test]
     fn echo_returns_payload_verbatim() {
         let mut s = EchoService;
-        assert_eq!(s.call(req(b"hello")), b"hello");
+        assert_eq!(ready(s.call(req(b"hello"))), b"hello");
         assert_eq!(s.name(), "echo");
     }
 
@@ -182,8 +293,8 @@ mod tests {
             }),
         );
         let mut s = HandlerService::new(table);
-        assert_eq!(s.call(req(b"abc")), b"cba");
-        assert_eq!(s.call(Request { method: 99, ..req(b"abc") }), Vec::<u8>::new());
+        assert_eq!(ready(s.call(req(b"abc"))), b"cba");
+        assert_eq!(ready(s.call(Request { method: 99, ..req(b"abc") })), Vec::<u8>::new());
     }
 
     /// A service keeping per-connection state: the trait's `&mut self`
@@ -193,10 +304,10 @@ mod tests {
     }
 
     impl RpcService for PerConnCounter {
-        fn call(&mut self, req: Request<'_>) -> Vec<u8> {
+        fn call(&mut self, req: Request<'_>) -> Response {
             let n = self.seen.entry(req.c_id).or_insert(0);
             *n += 1;
-            n.to_le_bytes().to_vec()
+            n.to_le_bytes().to_vec().into()
         }
     }
 
@@ -204,7 +315,7 @@ mod tests {
     fn per_connection_state_persists_across_calls() {
         let mut s = PerConnCounter { seen: HashMap::new() };
         let count = |s: &mut PerConnCounter, c_id| {
-            let out = s.call(Request { c_id, ..req(b"") });
+            let out = s.call(Request { c_id, ..req(b"") }).ready().unwrap();
             u64::from_le_bytes(out.try_into().unwrap())
         };
         assert_eq!(count(&mut s, 7), 1);
@@ -217,8 +328,13 @@ mod tests {
     /// back attached to the (padded) response.
     struct UpperCaser;
     impl RpcService for UpperCaser {
-        fn call(&mut self, req: Request<'_>) -> Vec<u8> {
-            req.payload.iter().map(|b| b.to_ascii_uppercase()).take_while(|&b| b != 0).collect()
+        fn call(&mut self, req: Request<'_>) -> Response {
+            req.payload
+                .iter()
+                .map(|b| b.to_ascii_uppercase())
+                .take_while(|&b| b != 0)
+                .collect::<Vec<u8>>()
+                .into()
         }
     }
 
@@ -232,7 +348,7 @@ mod tests {
         let frame_payload = f.payload();
 
         let mut s = StampedService::new(UpperCaser);
-        let resp = s.call(req(&frame_payload));
+        let resp = ready(s.call(req(&frame_payload)));
         assert_eq!(resp.len(), MAX_PAYLOAD_BYTES, "stamp stays at its fixed offset");
         assert_eq!(&resp[..3], b"ABC", "inner service saw (only) the app region");
         let rf = Frame::new(RpcType::Response, 1, 5, 11, &resp);
@@ -244,8 +360,8 @@ mod tests {
     /// than displacing the stamp.
     struct Flooder;
     impl RpcService for Flooder {
-        fn call(&mut self, _req: Request<'_>) -> Vec<u8> {
-            vec![0xAA; 400]
+        fn call(&mut self, _req: Request<'_>) -> Response {
+            vec![0xAA; 400].into()
         }
     }
 
@@ -254,9 +370,86 @@ mod tests {
         let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
         payload[Frame::TAIL_STAMP_OFFSET..].fill(0x55);
         let mut s = StampedService::new(Flooder);
-        let resp = s.call(req(&payload));
+        let resp = ready(s.call(req(&payload)));
         assert_eq!(resp.len(), MAX_PAYLOAD_BYTES);
         assert!(resp[..Frame::TAIL_STAMP_OFFSET].iter().all(|&b| b == 0xAA));
         assert!(resp[Frame::TAIL_STAMP_OFFSET..].iter().all(|&b| b == 0x55), "stamp intact");
+    }
+
+    /// Parks every request; finishes all of them (payload = token byte)
+    /// on the Nth subsequent poll — the minimal Pending state machine.
+    pub(crate) struct ParkThenFinish {
+        pub polls_until_done: u32,
+        parked: Vec<CallToken>,
+        polls: u32,
+    }
+
+    impl ParkThenFinish {
+        pub(crate) fn new(polls_until_done: u32) -> ParkThenFinish {
+            ParkThenFinish { polls_until_done, parked: Vec::new(), polls: 0 }
+        }
+    }
+
+    impl RpcService for ParkThenFinish {
+        fn call(&mut self, req: Request<'_>) -> Response {
+            self.parked.push(req.token);
+            Response::Pending(PendingCall { sub_calls: 1 })
+        }
+
+        fn poll_parked(&mut self, done: &mut Vec<(CallToken, Vec<u8>)>) {
+            if self.parked.is_empty() {
+                return;
+            }
+            self.polls += 1;
+            if self.polls >= self.polls_until_done {
+                self.polls = 0;
+                for t in self.parked.drain(..) {
+                    done.push((t, vec![t as u8]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pending_parks_and_resumes_by_token() {
+        let mut s = ParkThenFinish::new(2);
+        for token in 10..13u64 {
+            match s.call(Request { token, ..req(b"") }) {
+                Response::Pending(pc) => assert_eq!(pc.sub_calls, 1),
+                Response::Ready(_) => panic!("must park"),
+            }
+        }
+        let mut done = Vec::new();
+        s.poll_parked(&mut done);
+        assert!(done.is_empty(), "not yet");
+        s.poll_parked(&mut done);
+        let got: Vec<CallToken> = done.iter().map(|(t, _)| *t).collect();
+        assert_eq!(got, vec![10, 11, 12]);
+        assert_eq!(done[0].1, vec![10u8], "payload produced per token");
+        // Nothing parked anymore: polls are cheap no-ops.
+        done.clear();
+        s.poll_parked(&mut done);
+        assert!(done.is_empty());
+    }
+
+    #[test]
+    fn stamped_service_carries_stamps_across_parked_requests() {
+        let mut s = StampedService::new(ParkThenFinish::new(1));
+        let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
+        payload[Frame::TAIL_STAMP_OFFSET..].fill(0x77);
+        match s.call(Request { token: 42, ..req(&payload) }) {
+            Response::Pending(_) => {}
+            Response::Ready(_) => panic!("inner parks"),
+        }
+        let mut done = Vec::new();
+        s.poll_parked(&mut done);
+        assert_eq!(done.len(), 1);
+        let (token, resp) = &done[0];
+        assert_eq!(*token, 42);
+        assert_eq!(resp.len(), MAX_PAYLOAD_BYTES);
+        assert_eq!(resp[0], 42, "inner payload survives");
+        assert!(resp[Frame::TAIL_STAMP_OFFSET..].iter().all(|&b| b == 0x77), "stamp re-attached");
+        // The held stamp was consumed.
+        assert!(s.parked_stamps.is_empty());
     }
 }

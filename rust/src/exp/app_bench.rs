@@ -25,16 +25,28 @@
 //!   blocking sub-RPC downstream; the response carries the traversed
 //!   tier count back, so the verifier proves each measured RPC crossed
 //!   the whole chain.
+//! * **flightreg fan-out** — Check-in's real 3-way fan-out
+//!   (Flight ∥ Baggage ∥ Passport→Citizens, many-to-one join at
+//!   Airport) over the **non-blocking** completion API: the entry tier
+//!   is a [`FanoutService`] that issues all branch sub-RPCs
+//!   concurrently and parks the request
+//!   (`coordinator::service::Response::Pending`), measured under both
+//!   Table 4 threading models (`simple` = `DispatchMode::Dispatch`,
+//!   `optimized` = `DispatchMode::Worker`). Responses carry per-branch
+//!   RTTs, so `overlap_x = mean_branch_sum / mean_fanout > 1` *proves*
+//!   the branches overlapped rather than serialized.
 //!
 //! Like `fabric_wallclock`, numbers are host-specific (threads +
 //! cache-coherence, not an FPGA): compare trends and integrity
 //! invariants, not absolute µs against the paper. See REPRODUCING.md
 //! §Application wall-clock benchmark.
 
-use crate::apps::flightreg::{self, TierService, CHAIN_METHOD};
+use crate::apps::flightreg::{
+    self, FanoutBranch, FanoutService, TierCost, TierService, CHAIN_METHOD,
+};
 use crate::apps::kvwire;
 use crate::apps::memcached::{Memcached, MemcachedService};
-use crate::apps::mica::{Mica, MicaService};
+use crate::apps::mica::{Mica, MicaService, SharedMicaService};
 use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
 use crate::coordinator::fabric::Fabric;
 use crate::coordinator::frame::Frame;
@@ -128,6 +140,177 @@ impl WallWorkload for ChainWorkload {
 struct ChainOutcome {
     r: WallResult,
     downstream_failures: u64,
+}
+
+// ===================================================================
+// Check-in fan-out (non-blocking sub-RPCs, Table 4 threading contrast)
+// ===================================================================
+
+/// Aggregated fan-out accounting read back after a run (sums over
+/// every verified response, warmup included — means only).
+#[derive(Default)]
+struct FanoutAgg {
+    count: AtomicU64,
+    branch_sum_ns: AtomicU64,
+    fanout_ns: AtomicU64,
+    join_ns: AtomicU64,
+}
+
+/// Client workload for the fan-out point: empty requests on the chain
+/// method; the verifier proves every response traversed all branches
+/// (tier count + per-branch RTTs all nonzero) and accumulates the
+/// overlap accounting.
+struct FanoutWorkload {
+    expect_tiers: u8,
+    n_branches: u8,
+    agg: Arc<FanoutAgg>,
+}
+
+impl WallWorkload for FanoutWorkload {
+    fn fill(&mut self, _payload: &mut Vec<u8>) -> u8 {
+        CHAIN_METHOD
+    }
+
+    fn observe(&mut self, resp: &Frame) -> bool {
+        let Some(r) = flightreg::parse_fanout_resp(&resp.payload()) else {
+            return false;
+        };
+        let ok = r.total_tiers == self.expect_tiers
+            && r.n_branches == self.n_branches
+            && r.fanout_ns > 0
+            && r.branch_ns[..self.n_branches as usize].iter().all(|&b| b > 0);
+        if ok {
+            self.agg.count.fetch_add(1, Ordering::Relaxed);
+            self.agg.branch_sum_ns.fetch_add(r.sum_branch_ns(), Ordering::Relaxed);
+            self.agg.fanout_ns.fetch_add(r.fanout_ns as u64, Ordering::Relaxed);
+            self.agg.join_ns.fetch_add(r.join_ns as u64, Ordering::Relaxed);
+        }
+        ok
+    }
+}
+
+/// Outcome of one fan-out point.
+struct FanoutOutcome {
+    r: WallResult,
+    downstream_failures: u64,
+    /// Peak requests parked mid-fan-out on the entry dispatch thread.
+    parked_peak: u64,
+    /// Sub-RPCs the entry tier declared when parking.
+    sub_rpcs: u64,
+    /// Mean serial cost of the branches (what blocking would pay).
+    mean_branch_sum_us: f64,
+    /// Mean concurrent fan-out window (what the async API pays).
+    mean_fanout_us: f64,
+    mean_join_us: f64,
+}
+
+/// Stand up the Check-in fan-out topology — client, entry tier running
+/// a [`FanoutService`] under `mode`, one endpoint per branch tier
+/// (Passport with its nested Citizens hop), and the Airport join — and
+/// measure it through the shared driver core.
+fn run_fanout(cfg: &WallConfig, mode: DispatchMode) -> FanoutOutcome {
+    let plan = flightreg::fanout_plan();
+    assert!(!cfg.srq, "fan-out points use plain per-flow connections");
+    let nb = plan.branches.len() as u32;
+
+    let mut fabric = Fabric::new();
+    let client_addr =
+        fabric.add_endpoint(cfg.client_flows(), wall_driver::client_ring_entries(cfg));
+    let ring = wall_driver::server_ring_entries(cfg);
+    // Entry tier: flow 0 serves; flows 1..=nb are branch clients; the
+    // last flow is the join client.
+    let entry_addr = fabric.add_endpoint(1 + nb + 1, ring);
+    fabric.set_active_flows(entry_addr, 1);
+    let mut branch_addrs = Vec::new();
+    let mut nested_addrs: Vec<Option<u32>> = Vec::new();
+    for bp in &plan.branches {
+        let flows = if bp.nested.is_some() { 2 } else { 1 };
+        let addr = fabric.add_endpoint(flows, ring);
+        if bp.nested.is_some() {
+            fabric.set_active_flows(addr, 1);
+        }
+        branch_addrs.push(addr);
+        nested_addrs.push(bp.nested.map(|_| fabric.add_endpoint(1, ring)));
+    }
+    let join_addr = fabric.add_endpoint(1, ring);
+
+    let mut servers = Vec::new();
+    let mut failure_counters: Vec<Arc<AtomicU64>> = Vec::new();
+    let mut branches = Vec::new();
+    for (i, bp) in plan.branches.iter().enumerate() {
+        let c = fabric.connect(entry_addr, 1 + i as u32, branch_addrs[i], LbMode::RoundRobin);
+        branches.push(FanoutBranch {
+            name: bp.name,
+            client: RpcClient::new(c, fabric.rings(entry_addr, 1 + i as u32)),
+        });
+        let next = nested_addrs[i].map(|na| {
+            let nc = fabric.connect(branch_addrs[i], 1, na, LbMode::RoundRobin);
+            RpcClient::new(nc, fabric.rings(branch_addrs[i], 1))
+        });
+        let svc = TierService::sleeping(bp.name, bp.cost_ns, next);
+        failure_counters.push(svc.failures.clone());
+        let mut srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv.add_service_flow(0, fabric.rings(branch_addrs[i], 0), Box::new(svc));
+        servers.push(srv);
+        if let (Some(na), Some((nested_name, nested_ns))) = (nested_addrs[i], bp.nested) {
+            let nsvc = TierService::sleeping(nested_name, nested_ns, None);
+            failure_counters.push(nsvc.failures.clone());
+            let mut nsrv = RpcThreadedServer::new(DispatchMode::Dispatch);
+            nsrv.add_service_flow(0, fabric.rings(na, 0), Box::new(nsvc));
+            servers.push(nsrv);
+        }
+    }
+    let jc = fabric.connect(entry_addr, 1 + nb, join_addr, LbMode::RoundRobin);
+    let join_branch = FanoutBranch {
+        name: plan.join.0,
+        client: RpcClient::new(jc, fabric.rings(entry_addr, 1 + nb)),
+    };
+    let jsvc = TierService::sleeping(plan.join.0, plan.join.1, None);
+    failure_counters.push(jsvc.failures.clone());
+    let mut jsrv = RpcThreadedServer::new(DispatchMode::Dispatch);
+    jsrv.add_service_flow(0, fabric.rings(join_addr, 0), Box::new(jsvc));
+    servers.push(jsrv);
+
+    // The entry tier runs the fan-out under the requested dispatch
+    // mode — the Table 4 Simple (Dispatch) vs Optimized (Worker) axis.
+    let fsvc = FanoutService::new(
+        plan.entry,
+        TierCost::Spin(plan.entry_spin_ns),
+        branches,
+        Some(join_branch),
+    );
+    failure_counters.push(fsvc.failures.clone());
+    let mut entry_srv = RpcThreadedServer::new(mode);
+    let parked_peak = entry_srv.parked_peak.clone();
+    let sub_rpcs = entry_srv.sub_rpcs_issued.clone();
+    entry_srv.add_service_flow(0, fabric.rings(entry_addr, 0), Box::new(StampedService::new(fsvc)));
+    servers.push(entry_srv);
+
+    let agg = Arc::new(FanoutAgg::default());
+    let expect_tiers = plan.expect_total_tiers();
+    let n_branches = plan.branches.len() as u8;
+    let drivers = wall_driver::build_client_drivers(
+        cfg,
+        &mut fabric,
+        client_addr,
+        entry_addr,
+        &mut |_flow| {
+            Box::new(FanoutWorkload { expect_tiers, n_branches, agg: agg.clone() })
+                as Box<dyn WallWorkload>
+        },
+    );
+
+    let r = wall_driver::run_measurement(cfg, Stamp::Tail, fabric, servers, drivers);
+    let n = agg.count.load(Ordering::Relaxed).max(1) as f64;
+    FanoutOutcome {
+        r,
+        downstream_failures: failure_counters.iter().map(|c| c.load(Ordering::Relaxed)).sum(),
+        parked_peak: parked_peak.load(Ordering::Relaxed),
+        sub_rpcs: sub_rpcs.load(Ordering::Relaxed),
+        mean_branch_sum_us: agg.branch_sum_ns.load(Ordering::Relaxed) as f64 / n / 1000.0,
+        mean_fanout_us: agg.fanout_ns.load(Ordering::Relaxed) as f64 / n / 1000.0,
+        mean_join_us: agg.join_ns.load(Ordering::Relaxed) as f64 / n / 1000.0,
+    }
 }
 
 /// Stand up an `n_tiers`-deep chain — client endpoint, then one fabric
@@ -329,11 +512,80 @@ pub fn figure(opts: &RunOpts) -> Figure {
         ]);
     }
 
+    // --------------------------------------------------- fan-out series
+    // Check-in's real 3-way fan-out (Flight ∥ Baggage ∥ Passport→
+    // Citizens, join at Airport) over the non-blocking completion API,
+    // measured under both Table 4 threading models. `overlap_x` is the
+    // concurrency proof: serial branch cost / concurrent fan-out window
+    // (> 1 iff the sub-RPCs actually overlapped).
+    let s = fig.series(
+        "flightreg-fanout",
+        &[
+            "mode",
+            "conns",
+            "window",
+            "achieved_krps",
+            "p50_us",
+            "p90_us",
+            "p99_us",
+            "mean_us",
+            "completed",
+            "bad_responses",
+            "downstream_failures",
+            "mean_branch_sum_us",
+            "mean_fanout_us",
+            "mean_join_us",
+            "overlap_x",
+            "parked_peak",
+            "sub_rpcs_issued",
+            "leaked_slots",
+        ],
+    );
+    let fan_base = WallConfig { n_threads: 1, n_conns: 2, server_flows: 1, ..base.clone() };
+    for (mode_name, mode, window) in [
+        ("simple", DispatchMode::Dispatch, 1u32),
+        ("optimized", DispatchMode::Worker, 1),
+        ("optimized", DispatchMode::Worker, 4),
+    ] {
+        let cfg = WallConfig { window, ..fan_base.clone() };
+        let out = run_fanout(&cfg, mode);
+        let overlap = if out.mean_fanout_us > 0.0 {
+            out.mean_branch_sum_us / out.mean_fanout_us
+        } else {
+            0.0
+        };
+        s.push(vec![
+            mode_name.into(),
+            cfg.n_conns.into(),
+            window.into(),
+            (out.r.achieved_mrps * 1000.0).into(),
+            out.r.p50_us.into(),
+            out.r.p90_us.into(),
+            out.r.p99_us.into(),
+            out.r.mean_us.into(),
+            out.r.completed.into(),
+            out.r.bad_responses.into(),
+            out.downstream_failures.into(),
+            out.mean_branch_sum_us.into(),
+            out.mean_fanout_us.into(),
+            out.mean_join_us.into(),
+            overlap.into(),
+            out.parked_peak.into(),
+            out.sub_rpcs.into(),
+            out.r.leaked_slots.into(),
+        ]);
+    }
+
     fig.note(
         "measured on this host's threads/rings (no FPGA): compare against the paper's 2.8-3.5us \
          KVS access qualitatively, not absolutely. bad_responses verifies data integrity \
-         (key-derived values) and chain traversal; mica under object-level steering must show \
-         misrouted=0, the round-robin contrast row shows why \u{a7}5.7 requires it.",
+         (key-derived values) and chain traversal; mica under object-level steering runs \
+         per-flow OWNED partitions (no lock) and must show misrouted=0, the round-robin \
+         contrast row (shared re-hashing store) shows why \u{a7}5.7 requires it. The \
+         flightreg-fanout series measures Check-in's 3 concurrent sub-RPCs on one dispatch \
+         thread: overlap_x > 1 proves the branches ran in parallel (sleep-based branch costs, \
+         scaled to 100s of us for measurability); simple=Dispatch vs optimized=Worker is the \
+         Table 4 threading contrast.",
     );
     fig
 }
@@ -363,9 +615,47 @@ fn run_kvs(cfg: &WallConfig, store_name: &str, set_fraction: f64) -> KvsOutcome 
             },
         );
         KvsOutcome { r, misrouted: None }
+    } else if cfg.lb == LbMode::ObjectLevel {
+        // The real MICA porting model: each dispatch flow OWNS its
+        // partition (no store lock — partition parallelism realized),
+        // pre-populated with exactly the keys it owns. Correctness now
+        // *depends* on object-level steering: a misrouted request would
+        // miss (bad_responses > 0), so `bad_responses == 0` proves no
+        // cross-partition key leakage. Lossless (chaining) index:
+        // pre-populated keys can never be evicted, so every GET must
+        // hit.
+        let misrouted = Arc::new(AtomicU64::new(0));
+        let n_partitions = cfg.server_flows as usize;
+        let r = {
+            let misrouted = misrouted.clone();
+            wall_driver::run_pair(
+                cfg,
+                Stamp::Tail,
+                &mut |flow| {
+                    let mut svc = MicaService::new(
+                        flow as usize,
+                        n_partitions,
+                        1 << 12,
+                        false,
+                        misrouted.clone(),
+                    );
+                    for k in 0..N_KEYS {
+                        svc.populate(&k.to_le_bytes(), &kvwire::value_of(k).to_le_bytes());
+                    }
+                    Box::new(StampedService::new(svc)) as Box<dyn RpcService>
+                },
+                &mut |flow| {
+                    Box::new(KvWorkload::new(0xA99_5EED ^ flow as u64, set_fraction))
+                        as Box<dyn WallWorkload>
+                },
+            )
+        };
+        KvsOutcome { r, misrouted: Some(misrouted.load(Ordering::Relaxed)) }
     } else {
-        // Lossless (chaining) index: pre-populated keys can never be
-        // evicted, so every GET must hit.
+        // Round-robin contrast case (§5.7): truly-owned partitions
+        // cannot serve foreign keys, so this row runs the shared-store
+        // adapter that re-hashes to the owning partition — correct, but
+        // locked, and every wrong-partition arrival is counted.
         let store = Arc::new(Mutex::new(Mica::new(cfg.server_flows as usize, 1 << 12, false)));
         {
             let mut s = store.lock().unwrap();
@@ -377,7 +667,7 @@ fn run_kvs(cfg: &WallConfig, store_name: &str, set_fraction: f64) -> KvsOutcome 
             cfg,
             Stamp::Tail,
             &mut |_flow| {
-                Box::new(StampedService::new(MicaService::new(store.clone())))
+                Box::new(StampedService::new(SharedMicaService::new(store.clone())))
                     as Box<dyn RpcService>
             },
             &mut |flow| {
@@ -457,6 +747,48 @@ mod tests {
             );
             assert_eq!(out.downstream_failures, 0);
             assert_eq!(out.r.leaked_slots, 0);
+        }
+    }
+
+    /// The §5.7 concurrency proof on the real rings: in both dispatch
+    /// modes the measured fan-out window must be smaller than the
+    /// serial branch cost, and the client-side chain RTT must beat the
+    /// sum of branch RTTs (the acceptance anchor for the async API).
+    #[test]
+    fn fanout_branches_overlap_in_both_dispatch_modes() {
+        let cfg = tiny(WallConfig {
+            n_threads: 1,
+            n_conns: 2,
+            window: 1,
+            server_flows: 1,
+            ..WallConfig::closed(1, 2, 1)
+        });
+        for (name, mode) in [
+            ("simple", DispatchMode::Dispatch),
+            ("optimized", DispatchMode::Worker),
+        ] {
+            let out = run_fanout(&cfg, mode);
+            assert!(out.r.completed > 0, "{name}: fan-out measured nothing");
+            assert_eq!(out.r.bad_responses, 0, "{name}: a branch was skipped or missized");
+            assert_eq!(out.downstream_failures, 0, "{name}");
+            assert_eq!(out.r.leaked_slots, 0, "{name}");
+            assert!(out.parked_peak >= 1, "{name}: nothing ever parked");
+            assert!(out.sub_rpcs >= 3, "{name}: fan-out under-declared sub-RPCs");
+            // Branch concurrency: the fan-out window is visibly smaller
+            // than the serial branch cost (sleep-based branch handlers
+            // make this core-count independent).
+            assert!(
+                out.mean_fanout_us < out.mean_branch_sum_us,
+                "{name}: branches serialized — fanout {} >= sum {}",
+                out.mean_fanout_us,
+                out.mean_branch_sum_us
+            );
+            assert!(
+                out.r.p50_us < out.mean_branch_sum_us,
+                "{name}: chain RTT {} not under serial branch cost {}",
+                out.r.p50_us,
+                out.mean_branch_sum_us
+            );
         }
     }
 

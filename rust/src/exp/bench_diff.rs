@@ -1,0 +1,583 @@
+//! `dagger bench-diff`: compare two `BENCH_*` artifact directories and
+//! flag regressions beyond noise — the harness follow-up that makes the
+//! committed JSON artifacts an actual performance *trajectory* instead
+//! of write-only output (ROADMAP "BENCH_* trajectory differ").
+//!
+//! Matching is structural: figures pair by artifact name, series by
+//! label, rows by their non-numeric cells (store/mix/mode/iface/...)
+//! **plus the numeric grid-configuration axes** (`window`, `conns`,
+//! `tiers`, `offered_mrps`, ... — see `KEY_COLUMNS`), with an
+//! occurrence index for residual duplicates — so a grid that gains,
+//! loses, or reorders points pairs the surviving rows correctly.
+//! Remaining numeric columns are then compared cell-by-cell and
+//! classified by name:
+//!
+//! * **lower-better** (`*_us`, `*_ns`, `drop_pct`, `backpressure`,
+//!   `overruns`, ...) — regression when the candidate grows beyond the
+//!   threshold;
+//! * **higher-better** (`*_mrps`, `*_krps`, `completed`, `hit_rate*`,
+//!   `overlap_x`, ...) — regression when it shrinks beyond the
+//!   threshold;
+//! * **integrity** (`bad_responses`, `leaked_slots`,
+//!   `downstream_failures`, `misrouted`) — a violation whenever a
+//!   baseline-zero cell becomes nonzero, at any magnitude (these
+//!   columns are correctness invariants, not performance);
+//! * everything else is informational.
+//!
+//! **Wall-clock artifacts are envelope-only**: figures whose name
+//! contains `wallclock` measure real threads on whatever host ran them,
+//! so their performance columns never regress a diff — only their
+//! integrity columns are enforced. (REPRODUCING.md §E/§F document why
+//! the absolute numbers are host property, not repo property.)
+
+use crate::exp::harness::{Figure, Value};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Diff tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct DiffOptions {
+    /// Relative change (percent) beyond which a performance column
+    /// counts as a regression/improvement.
+    pub threshold_pct: f64,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions { threshold_pct: 10.0 }
+    }
+}
+
+/// How a column's delta is judged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HigherBetter,
+    LowerBetter,
+    /// Correctness invariant: any 0 → nonzero transition is a violation.
+    Integrity,
+    /// Reported, never flagged.
+    Info,
+}
+
+/// Classify a column by name (see module docs). `wallclock` figures
+/// demote performance columns to `Info`.
+pub fn column_direction(figure_name: &str, column: &str) -> Direction {
+    const INTEGRITY: &[&str] =
+        &["bad_responses", "leaked_slots", "downstream_failures", "misrouted"];
+    if INTEGRITY.contains(&column) {
+        return Direction::Integrity;
+    }
+    let wallclock = figure_name.contains("wallclock");
+    let lower = column.ends_with("_us")
+        || column.ends_with("_ns")
+        || column.ends_with("_us_sd")
+        || column == "drop_pct"
+        || column == "backpressure"
+        || column == "overruns"
+        || column == "fabric_rx_drops"
+        || column == "evictions";
+    let higher = column.ends_with("_mrps")
+        || column.ends_with("_krps")
+        || column.ends_with("_rps")
+        || column == "completed"
+        || column == "overlap_x"
+        || column.starts_with("hit_rate");
+    if wallclock && (lower || higher) {
+        return Direction::Info;
+    }
+    if lower {
+        Direction::LowerBetter
+    } else if higher {
+        Direction::HigherBetter
+    } else {
+        Direction::Info
+    }
+}
+
+/// Severity of one finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Regression,
+    IntegrityViolation,
+    Improvement,
+    /// Structure changed between the runs (figure/series/row only on
+    /// one side). Counts as a failing finding ([`DiffReport::
+    /// regressions`]) so a renamed or dropped series can't hide a lost
+    /// one behind a green exit code.
+    Missing,
+}
+
+/// One diff finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub kind: Kind,
+    pub figure: String,
+    pub series: String,
+    pub row_key: String,
+    pub column: String,
+    pub baseline: f64,
+    pub candidate: f64,
+    pub delta_pct: f64,
+}
+
+/// Full diff outcome.
+#[derive(Default)]
+pub struct DiffReport {
+    pub findings: Vec<Finding>,
+    pub figures_compared: usize,
+    pub cells_compared: usize,
+}
+
+impl DiffReport {
+    /// Findings that must fail the diff: real regressions, integrity
+    /// violations, and **lost coverage** (`Kind::Missing`) — a
+    /// candidate that silently drops a figure/series/row must not pass
+    /// just because the surviving numbers look fine.
+    pub fn regressions(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| {
+                matches!(f.kind, Kind::Regression | Kind::IntegrityViolation | Kind::Missing)
+            })
+            .count()
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "bench-diff: {} figures, {} numeric cells compared",
+            self.figures_compared, self.cells_compared
+        )
+        .unwrap();
+        if self.findings.is_empty() {
+            writeln!(out, "no findings — candidate within threshold of baseline").unwrap();
+            return out;
+        }
+        for f in &self.findings {
+            let tag = match f.kind {
+                Kind::Regression => "REGRESSION",
+                Kind::IntegrityViolation => "INTEGRITY",
+                Kind::Improvement => "improvement",
+                Kind::Missing => "missing",
+            };
+            writeln!(
+                out,
+                "{tag:<12} {}/{} [{}] {}: {} -> {} ({:+.1}%)",
+                f.figure, f.series, f.row_key, f.column, f.baseline, f.candidate, f.delta_pct
+            )
+            .unwrap();
+        }
+        writeln!(
+            out,
+            "{} regression(s)/violation(s)/missing, {} improvement(s)",
+            self.regressions(),
+            self.findings.iter().filter(|f| f.kind == Kind::Improvement).count()
+        )
+        .unwrap();
+        out
+    }
+}
+
+fn as_num(v: &Value) -> Option<f64> {
+    match v {
+        Value::U64(u) => Some(*u as f64),
+        Value::F64(f) => Some(*f),
+        _ => None,
+    }
+}
+
+/// Numeric columns that are grid *configuration* axes rather than
+/// measured results: they join the row identity, so two rows that
+/// differ only in (say) `window` pair by window — not positionally —
+/// and a grid that gains or reorders points never mispairs rows.
+const KEY_COLUMNS: &[&str] = &[
+    "window",
+    "conns",
+    "n_conns",
+    "flows",
+    "server_flows",
+    "client_flows",
+    "tiers",
+    "threads",
+    "n_threads",
+    "sim_threads",
+    "payload_b",
+    "batch",
+    "n_vnics",
+    "cache_entries",
+    "open_conns",
+    "offered_mrps",
+    "offered_per_vnic_mrps",
+    "bg_load_per_vnic_mrps",
+    "load_krps",
+    "size_b",
+];
+
+/// Row identity: the non-numeric cells plus the [`KEY_COLUMNS`]
+/// config axes, joined; an occurrence index pairs residual duplicates
+/// positionally.
+fn row_keys(columns: &[String], rows: &[Vec<Value>]) -> Vec<String> {
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    rows.iter()
+        .map(|row| {
+            let mut key = String::new();
+            for (c, v) in columns.iter().zip(row) {
+                if as_num(v).is_none() || KEY_COLUMNS.contains(&c.as_str()) {
+                    if !key.is_empty() {
+                        key.push('/');
+                    }
+                    let _ = write!(key, "{c}={}", render_cell(v));
+                }
+            }
+            if key.is_empty() {
+                key = "row".to_string();
+            }
+            let n = seen.entry(key.clone()).or_insert(0);
+            *n += 1;
+            if *n > 1 {
+                let _ = write!(key, "#{n}");
+            }
+            key
+        })
+        .collect()
+}
+
+fn render_cell(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        Value::Bool(b) => b.to_string(),
+        Value::Null => "-".into(),
+        Value::U64(u) => u.to_string(),
+        Value::F64(f) => f.to_string(),
+    }
+}
+
+/// Diff two parsed figures (same artifact name assumed).
+pub fn diff_figures(base: &Figure, cand: &Figure, opts: &DiffOptions, report: &mut DiffReport) {
+    report.figures_compared += 1;
+    for bs in &base.series {
+        let Some(cs) = cand.series.iter().find(|s| s.label == bs.label) else {
+            report.findings.push(Finding {
+                kind: Kind::Missing,
+                figure: base.name.clone(),
+                series: bs.label.clone(),
+                row_key: "-".into(),
+                column: "-".into(),
+                baseline: bs.rows.len() as f64,
+                candidate: 0.0,
+                delta_pct: -100.0,
+            });
+            continue;
+        };
+        let bkeys = row_keys(&bs.columns, &bs.rows);
+        let ckeys = row_keys(&cs.columns, &cs.rows);
+        for (brow, bkey) in bs.rows.iter().zip(&bkeys) {
+            let Some(cpos) = ckeys.iter().position(|k| k == bkey) else {
+                report.findings.push(Finding {
+                    kind: Kind::Missing,
+                    figure: base.name.clone(),
+                    series: bs.label.clone(),
+                    row_key: bkey.clone(),
+                    column: "-".into(),
+                    baseline: 1.0,
+                    candidate: 0.0,
+                    delta_pct: -100.0,
+                });
+                continue;
+            };
+            let crow = &cs.rows[cpos];
+            for (ci, col) in bs.columns.iter().enumerate() {
+                let Some(cj) = cs.columns.iter().position(|c| c == col) else {
+                    continue;
+                };
+                let (Some(b), Some(c)) = (as_num(&brow[ci]), as_num(&crow[cj])) else {
+                    continue;
+                };
+                report.cells_compared += 1;
+                let dir = column_direction(&base.name, col);
+                let delta_pct = if b.abs() > f64::EPSILON {
+                    (c - b) / b.abs() * 100.0
+                } else if c.abs() > f64::EPSILON {
+                    100.0
+                } else {
+                    0.0
+                };
+                let kind = match dir {
+                    Direction::Info => continue,
+                    Direction::Integrity => {
+                        if b == 0.0 && c > 0.0 {
+                            Kind::IntegrityViolation
+                        } else {
+                            continue;
+                        }
+                    }
+                    Direction::LowerBetter => {
+                        if b == 0.0 && c > 0.0 {
+                            Kind::Regression
+                        } else if delta_pct > opts.threshold_pct {
+                            Kind::Regression
+                        } else if delta_pct < -opts.threshold_pct {
+                            Kind::Improvement
+                        } else {
+                            continue;
+                        }
+                    }
+                    Direction::HigherBetter => {
+                        if delta_pct < -opts.threshold_pct {
+                            Kind::Regression
+                        } else if delta_pct > opts.threshold_pct {
+                            Kind::Improvement
+                        } else {
+                            continue;
+                        }
+                    }
+                };
+                report.findings.push(Finding {
+                    kind,
+                    figure: base.name.clone(),
+                    series: bs.label.clone(),
+                    row_key: bkey.clone(),
+                    column: col.clone(),
+                    baseline: b,
+                    candidate: c,
+                    delta_pct,
+                });
+            }
+        }
+    }
+}
+
+/// List the `BENCH_*.json` artifacts in a directory, keyed by filename.
+fn artifacts(dir: &Path) -> anyhow::Result<BTreeMap<String, Figure>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", dir.display()))?
+    {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let fig = Figure::from_json(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        out.insert(name.to_string(), fig);
+    }
+    Ok(out)
+}
+
+/// Diff every artifact the two directories share; artifacts present in
+/// the baseline but absent from the candidate are `Missing` findings
+/// (candidate-only artifacts are new coverage, not findings).
+pub fn diff_dirs(base: &Path, cand: &Path, opts: &DiffOptions) -> anyhow::Result<DiffReport> {
+    let base_figs = artifacts(base)?;
+    let cand_figs = artifacts(cand)?;
+    anyhow::ensure!(
+        !base_figs.is_empty(),
+        "no BENCH_*.json artifacts in {}",
+        base.display()
+    );
+    let mut report = DiffReport::default();
+    for (name, bfig) in &base_figs {
+        match cand_figs.get(name) {
+            Some(cfig) => diff_figures(bfig, cfig, opts, &mut report),
+            None => report.findings.push(Finding {
+                kind: Kind::Missing,
+                figure: bfig.name.clone(),
+                series: "-".into(),
+                row_key: "-".into(),
+                column: "-".into(),
+                baseline: 1.0,
+                candidate: 0.0,
+                delta_pct: -100.0,
+            }),
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::harness::Figure;
+
+    fn fig(name: &str, label: &str, columns: &[&str], rows: Vec<Vec<Value>>) -> Figure {
+        let mut f = Figure::new(name, "t", "p");
+        let s = f.series(label, columns);
+        for r in rows {
+            s.push(r);
+        }
+        f
+    }
+
+    fn diff(base: &Figure, cand: &Figure) -> DiffReport {
+        let mut r = DiffReport::default();
+        diff_figures(base, cand, &DiffOptions::default(), &mut r);
+        r
+    }
+
+    #[test]
+    fn direction_classification() {
+        assert_eq!(column_direction("fig10", "p99_us"), Direction::LowerBetter);
+        assert_eq!(column_direction("fig10", "achieved_mrps"), Direction::HigherBetter);
+        assert_eq!(column_direction("fig10", "iface"), Direction::Info);
+        assert_eq!(column_direction("fig10", "bad_responses"), Direction::Integrity);
+        // Wall-clock artifacts: perf columns demoted, integrity kept.
+        assert_eq!(column_direction("app-wallclock", "p99_us"), Direction::Info);
+        assert_eq!(column_direction("app-wallclock", "achieved_krps"), Direction::Info);
+        assert_eq!(column_direction("app-wallclock", "leaked_slots"), Direction::Integrity);
+        assert_eq!(column_direction("fabric-wallclock", "misrouted"), Direction::Integrity);
+    }
+
+    #[test]
+    fn flags_latency_regression_beyond_threshold() {
+        let cols = ["store", "p99_us", "achieved_mrps"];
+        let base = fig("fig12", "kvs", &cols, vec![vec!["mica".into(), 10.0.into(), 5.0.into()]]);
+        let ok = fig("fig12", "kvs", &cols, vec![vec!["mica".into(), 10.5.into(), 5.1.into()]]);
+        assert_eq!(diff(&base, &ok).findings.len(), 0, "5% is within the 10% threshold");
+
+        let bad = fig("fig12", "kvs", &cols, vec![vec!["mica".into(), 14.0.into(), 5.0.into()]]);
+        let r = diff(&base, &bad);
+        assert_eq!(r.regressions(), 1);
+        assert_eq!(r.findings[0].column, "p99_us");
+        assert_eq!(r.findings[0].kind, Kind::Regression);
+
+        // Throughput loss is a regression; throughput gain an improvement.
+        let slow = fig("fig12", "kvs", &cols, vec![vec!["mica".into(), 10.0.into(), 4.0.into()]]);
+        assert_eq!(diff(&base, &slow).regressions(), 1);
+        let fast = fig("fig12", "kvs", &cols, vec![vec!["mica".into(), 8.0.into(), 6.0.into()]]);
+        let r = diff(&base, &fast);
+        assert_eq!(r.regressions(), 0);
+        assert_eq!(r.findings.iter().filter(|f| f.kind == Kind::Improvement).count(), 2);
+    }
+
+    #[test]
+    fn wallclock_is_envelope_only() {
+        let cols = ["store", "p99_us", "achieved_mrps", "bad_responses"];
+        let base = fig(
+            "app-wallclock",
+            "kvs-wallclock",
+            &cols,
+            vec![vec!["mica".into(), 10.0.into(), 5.0.into(), 0u64.into()]],
+        );
+        // Wild perf swings on a wall-clock artifact: not findings.
+        let noisy = fig(
+            "app-wallclock",
+            "kvs-wallclock",
+            &cols,
+            vec![vec!["mica".into(), 30.0.into(), 1.0.into(), 0u64.into()]],
+        );
+        assert_eq!(diff(&base, &noisy).findings.len(), 0, "host-dependent numbers never flag");
+        // ... but an integrity counter going nonzero always does.
+        let broken = fig(
+            "app-wallclock",
+            "kvs-wallclock",
+            &cols,
+            vec![vec!["mica".into(), 10.0.into(), 5.0.into(), 3u64.into()]],
+        );
+        let r = diff(&base, &broken);
+        assert_eq!(r.regressions(), 1);
+        assert_eq!(r.findings[0].kind, Kind::IntegrityViolation);
+    }
+
+    #[test]
+    fn missing_series_and_rows_fail_the_diff() {
+        let base = fig("figX", "s1", &["k", "p99_us"], vec![vec!["a".into(), 1.0.into()]]);
+        let cand = fig("figX", "other", &["k", "p99_us"], vec![vec!["a".into(), 1.0.into()]]);
+        let r = diff(&base, &cand);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].kind, Kind::Missing);
+        assert_eq!(r.regressions(), 1, "lost coverage must not exit 0");
+
+        let cand2 = fig("figX", "s1", &["k", "p99_us"], vec![vec!["b".into(), 1.0.into()]]);
+        let r2 = diff(&base, &cand2);
+        assert!(r2.findings.iter().any(|f| f.kind == Kind::Missing && f.row_key == "k=a"));
+        assert!(r2.regressions() >= 1, "a dropped row must fail the diff");
+    }
+
+    #[test]
+    fn self_diff_of_dirs_is_clean() {
+        let dir = std::env::temp_dir().join(format!("dagger_benchdiff_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let f = fig(
+            "fig10",
+            "saturation",
+            &["iface", "achieved_mrps", "p99_us"],
+            vec![
+                vec!["upi(B=4)".into(), 12.4.into(), 3.0.into()],
+                vec!["doorbell".into(), 4.3.into(), 5.0.into()],
+            ],
+        );
+        f.write_artifacts(&dir).unwrap();
+        let r = diff_dirs(&dir, &dir, &DiffOptions::default()).unwrap();
+        assert_eq!(r.figures_compared, 1);
+        assert!(r.cells_compared >= 4);
+        assert_eq!(r.findings.len(), 0);
+        assert!(r.render_text().contains("no findings"));
+        // Empty baseline dir is an error, not a silent pass.
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(diff_dirs(&empty, &dir, &DiffOptions::default()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Rows distinguished only by a numeric config axis (the fan-out
+    /// series' `window`) must pair by that axis even when the candidate
+    /// grid reorders or inserts points — never positionally.
+    #[test]
+    fn numeric_config_axes_join_the_row_key() {
+        let cols = ["mode", "window", "p99_us"];
+        let base = fig(
+            "figZ",
+            "fanout",
+            &cols,
+            vec![
+                vec!["optimized".into(), 1u64.into(), 10.0.into()],
+                vec!["optimized".into(), 4u64.into(), 40.0.into()],
+            ],
+        );
+        // Candidate reordered + a new intermediate point: window=4 must
+        // still compare against window=4.
+        let cand = fig(
+            "figZ",
+            "fanout",
+            &cols,
+            vec![
+                vec!["optimized".into(), 2u64.into(), 20.0.into()],
+                vec!["optimized".into(), 4u64.into(), 41.0.into()],
+                vec!["optimized".into(), 1u64.into(), 10.5.into()],
+            ],
+        );
+        let r = diff(&base, &cand);
+        assert_eq!(
+            r.findings.len(),
+            0,
+            "reordered/extended grid must pair by window, got {:?}",
+            r.findings
+        );
+    }
+
+    #[test]
+    fn duplicate_row_keys_pair_positionally() {
+        let cols = ["iface", "p99_us"];
+        let base = fig(
+            "figY",
+            "s",
+            &cols,
+            vec![vec!["upi".into(), 1.0.into()], vec!["upi".into(), 2.0.into()]],
+        );
+        let cand = fig(
+            "figY",
+            "s",
+            &cols,
+            vec![vec!["upi".into(), 1.0.into()], vec!["upi".into(), 10.0.into()]],
+        );
+        let r = diff(&base, &cand);
+        assert_eq!(r.regressions(), 1, "second occurrence pairs with second occurrence");
+        assert!(r.findings[0].row_key.ends_with("#2"));
+    }
+}

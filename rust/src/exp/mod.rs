@@ -15,6 +15,7 @@
 //! written, and the paper's reference numbers.
 
 pub mod app_bench;
+pub mod bench_diff;
 pub mod fabric_bench;
 pub mod harness;
 pub mod microsim;

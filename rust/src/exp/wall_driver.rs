@@ -703,8 +703,8 @@ mod tests {
     /// workload verifier sees the rewritten bytes.
     struct Doubler;
     impl crate::coordinator::service::RpcService for Doubler {
-        fn call(&mut self, req: Request<'_>) -> Vec<u8> {
-            vec![req.payload.first().copied().unwrap_or(0).wrapping_mul(2)]
+        fn call(&mut self, req: Request<'_>) -> crate::coordinator::service::Response {
+            vec![req.payload.first().copied().unwrap_or(0).wrapping_mul(2)].into()
         }
     }
 

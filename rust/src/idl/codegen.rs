@@ -104,7 +104,7 @@ fn gen_service(svc: &Service) -> String {
     ));
     for m in &svc.methods {
         s.push_str(&format!(
-            "    /// rpc {}({}) returns({}) — method id {}.\n    pub fn {}(&self, req: &{}) -> Option<{}> {{\n        let resp = self.inner.call_blocking({}, &req.to_bytes())?;\n        {}::from_bytes(&resp)\n    }}\n\n    pub fn {}_async(&self, req: &{}) -> Result<u32, ()> {{\n        self.inner.call_async({}, &req.to_bytes())\n    }}\n\n",
+            "    /// rpc {}({}) returns({}) — method id {}.\n    pub fn {}(&self, req: &{}) -> Option<{}> {{\n        let resp = self.inner.call_blocking({}, &req.to_bytes())?;\n        {}::from_bytes(&resp)\n    }}\n\n    /// Non-blocking variant: returns the in-flight call's handle\n    /// (wait on it with `RpcClient::wait_handle` / `wait_any`).\n    pub fn {}_async(&self, req: &{}) -> Result<dagger::coordinator::api::CallHandle, ()> {{\n        self.inner.call_async({}, &req.to_bytes())\n    }}\n\n",
             m.name, m.request, m.response, m.id,
             snake(&m.name), m.request, m.response, m.id, m.response,
             snake(&m.name), m.request, m.id
@@ -180,6 +180,10 @@ mod tests {
         assert!(code.contains("pub trait EchoHandler"));
         assert!(code.contains("pub fn register_echo"));
         assert!(code.contains("call_blocking(0,"));
+        assert!(
+            code.contains("-> Result<dagger::coordinator::api::CallHandle, ()>"),
+            "async stubs return the call handle"
+        );
     }
 
     #[test]

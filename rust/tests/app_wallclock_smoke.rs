@@ -2,9 +2,13 @@
 //! `--fast` end-to-end run must produce a schema-valid `dagger-bench/v1`
 //! artifact with (a) memcached and MICA GET/SET points measured over the
 //! real rings with zero data-integrity failures, (b) the MICA
-//! object-level-steering point with zero misroutes next to a round-robin
-//! contrast point with misroutes, and (c) multi-tier flightreg chain
-//! points whose every measured RPC proved it traversed the whole chain.
+//! object-level-steering point (per-flow OWNED partitions) with zero
+//! misroutes next to a round-robin contrast point with misroutes, (c)
+//! multi-tier flightreg chain points whose every measured RPC proved it
+//! traversed the whole chain, and (d) the Check-in fan-out points where
+//! the three sub-RPCs are demonstrably concurrent — measured chain RTT
+//! under the serial sum of branch RTTs — on both Table 4 threading
+//! models (Simple = Dispatch, Optimized = Worker).
 //!
 //! Wall-clock numbers are host-specific; this test asserts structure and
 //! integrity invariants, never absolute throughputs.
@@ -132,6 +136,57 @@ fn fast_run_emits_kvs_and_chain_series() {
         assert!(num(&row[cp50_c]) > 0.0);
         assert_eq!(num(&row[cbad_c]), 0.0, "an RPC skipped part of the chain: {row:?}");
         assert_eq!(num(&row[fail_c]), 0.0, "downstream sub-RPC failures: {row:?}");
+    }
+
+    // -------------------------------------------------- fan-out series
+    let fan = fig
+        .series
+        .iter()
+        .find(|s| s.label == "flightreg-fanout")
+        .expect("fan-out series");
+    let fcol = |name: &str| {
+        fan.columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("column {name}"))
+    };
+    let (mode_c, fkrps_c, fp50_c, fbad_c, ffail_c, fsum_c, ffan_c, fovl_c, fpark_c, fleak_c) = (
+        fcol("mode"),
+        fcol("achieved_krps"),
+        fcol("p50_us"),
+        fcol("bad_responses"),
+        fcol("downstream_failures"),
+        fcol("mean_branch_sum_us"),
+        fcol("mean_fanout_us"),
+        fcol("overlap_x"),
+        fcol("parked_peak"),
+        fcol("leaked_slots"),
+    );
+    // Both Table 4 threading models are measured grid rows.
+    for want in ["simple", "optimized"] {
+        assert!(
+            fan.rows.iter().any(|r| text(&r[mode_c]) == want),
+            "no {want} fan-out row"
+        );
+    }
+    for row in &fan.rows {
+        assert!(num(&row[fkrps_c]) > 0.0, "a fan-out point measured nothing: {row:?}");
+        assert_eq!(num(&row[fbad_c]), 0.0, "a branch was skipped: {row:?}");
+        assert_eq!(num(&row[ffail_c]), 0.0, "sub-RPC failures: {row:?}");
+        assert_eq!(num(&row[fleak_c]), 0.0, "lost frames: {row:?}");
+        assert!(num(&row[fpark_c]) >= 1.0, "nothing ever parked: {row:?}");
+        // The §5.7 concurrency anchor: the measured fan-out window and
+        // the client-side chain RTT both beat the serial branch cost.
+        let sum = num(&row[fsum_c]);
+        assert!(
+            num(&row[ffan_c]) < sum,
+            "branches serialized (fanout >= serial sum): {row:?}"
+        );
+        assert!(
+            num(&row[fp50_c]) < sum,
+            "chain RTT not under the serial branch cost: {row:?}"
+        );
+        assert!(num(&row[fovl_c]) > 1.0, "overlap_x must exceed 1: {row:?}");
     }
 
     // ------------------------------------------------- artifact schema

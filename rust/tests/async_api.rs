@@ -1,0 +1,208 @@
+//! Integration: the asynchronous completion API over the real fabric —
+//! CallHandles against live dispatch threads, `call_blocking`-over-
+//! handles parity on both dispatch modes, out-of-order completion
+//! matching, and the headline §4.2/§5.7 capability: ONE dispatch thread
+//! holding many requests parked mid-fan-out concurrently.
+
+use dagger::apps::flightreg::{
+    parse_fanout_resp, FanoutBranch, FanoutService, TierCost, TierService, CHAIN_METHOD,
+};
+use dagger::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
+use dagger::coordinator::fabric::Fabric;
+use dagger::nic::load_balancer::LbMode;
+use dagger::runtime::EngineSpec;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One dispatch thread must hold ≥8 requests parked mid-fan-out at
+/// once: the mid tier fans out to three slow (sleeping) leaves, the
+/// client issues 8 concurrent calls, and every response still proves
+/// full traversal. The blocking API could never do this on one thread —
+/// it is the §5.7 reason Check-in moves off the dispatch thread, made
+/// unnecessary by the async return path.
+#[test]
+fn one_dispatch_thread_holds_eight_parked_fanouts() {
+    let mut fabric = Fabric::new();
+    let client_addr = fabric.add_endpoint(1, 64);
+    // Mid tier: flow 0 serves, flows 1..=3 are its branch clients.
+    let mid_addr = fabric.add_endpoint(4, 64);
+    fabric.set_active_flows(mid_addr, 1);
+    let leaf_addrs: Vec<u32> = (0..3).map(|_| fabric.add_endpoint(1, 64)).collect();
+
+    let mut servers = Vec::new();
+    let mut branches = Vec::new();
+    for (i, &leaf) in leaf_addrs.iter().enumerate() {
+        let c = fabric.connect(mid_addr, 1 + i as u32, leaf, LbMode::RoundRobin);
+        branches.push(FanoutBranch {
+            name: "leaf",
+            client: RpcClient::new(c, fabric.rings(mid_addr, 1 + i as u32)),
+        });
+        // Slow I/O-bound leaves: each sub-RPC takes ~10 ms, so all 8
+        // fan-outs are provably parked at the mid tier simultaneously.
+        let mut srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+        srv.add_service_flow(
+            0,
+            fabric.rings(leaf, 0),
+            Box::new(TierService::sleeping("leaf", 10_000_000, None)),
+        );
+        servers.push(srv);
+    }
+    let fanout = FanoutService::new("mid", TierCost::Spin(0), branches, None);
+    let failures = fanout.failures.clone();
+    let mut mid_srv = RpcThreadedServer::new(DispatchMode::Dispatch);
+    mid_srv.add_service_flow(0, fabric.rings(mid_addr, 0), Box::new(fanout));
+    let parked_peak = mid_srv.parked_peak.clone();
+    let sub_rpcs = mid_srv.sub_rpcs_issued.clone();
+    servers.push(mid_srv);
+
+    let cc = fabric.connect(client_addr, 0, mid_addr, LbMode::RoundRobin);
+    let client = RpcClient::new(cc, fabric.rings(client_addr, 0));
+
+    let mut joins = Vec::new();
+    let mut stops = Vec::new();
+    for s in &mut servers {
+        stops.push(s.stop_flag());
+        joins.extend(s.start());
+    }
+    let handle = fabric.start(EngineSpec::Native);
+
+    // Issue all 8 before harvesting anything: they pile up parked
+    // behind the sleeping leaves.
+    let handles: Vec<_> = (0..8)
+        .map(|_| client.call_async(CHAIN_METHOD, b"").expect("issue"))
+        .collect();
+    for h in &handles {
+        let resp = client.wait_handle(h, Duration::from_secs(30)).expect("fan-out response");
+        let r = parse_fanout_resp(&resp).expect("well-formed fan-out response");
+        assert_eq!(r.total_tiers, 4, "mid + 3 leaves");
+        assert_eq!(r.n_branches, 3);
+        assert!(r.branch_ns.iter().all(|&b| b > 0), "every branch traversed");
+        // Concurrency inside one request: 3 × ~10 ms branches overlap.
+        assert!(
+            (r.fanout_ns as u64) < r.sum_branch_ns(),
+            "branches serialized: fanout {} >= sum {}",
+            r.fanout_ns,
+            r.sum_branch_ns()
+        );
+    }
+    assert_eq!(client.in_flight(), 0, "every handle claimed");
+    assert_eq!(failures.load(Ordering::Relaxed), 0);
+    assert_eq!(sub_rpcs.load(Ordering::Relaxed), 24, "8 requests × 3 declared sub-RPCs");
+    let peak = parked_peak.load(Ordering::Relaxed);
+    assert!(peak >= 8, "one dispatch thread must hold all 8 parked fan-outs, peak = {peak}");
+
+    for s in &stops {
+        s.store(true, Ordering::Relaxed);
+    }
+    handle.shutdown();
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+/// `call_blocking` is now a thin adapter over CallHandles: it must
+/// behave exactly like the pre-handle blocking API on both dispatch
+/// modes — same responses as issue+wait done by hand, and `None` (not a
+/// hang or a corruption) when no server will ever answer.
+#[test]
+fn call_blocking_over_handles_parity() {
+    for mode in [DispatchMode::Dispatch, DispatchMode::Worker] {
+        let mut fabric = Fabric::new();
+        let client_addr = fabric.add_endpoint(1, 64);
+        let server_addr = fabric.add_endpoint(1, 64);
+        let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::RoundRobin);
+        let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
+
+        let mut server = RpcThreadedServer::new(mode);
+        server.add_flow(0, fabric.rings(server_addr, 0));
+        server.register(
+            4,
+            Arc::new(|_, req| {
+                let mut v = req.to_vec();
+                v.push(b'!');
+                v
+            }),
+        );
+        let joins = server.start();
+        let handle = fabric.start(EngineSpec::Native);
+
+        for i in 0..32u32 {
+            let payload = i.to_le_bytes();
+            let blocking = client.call_blocking(4, &payload).expect("blocking rpc");
+            let h = client.call_async(4, &payload).expect("async rpc");
+            let by_hand = client.wait_handle(&h, Duration::from_secs(10)).expect("wait");
+            assert_eq!(blocking, by_hand, "{mode:?}: blocking != issue+wait");
+            let mut want = payload.to_vec();
+            want.push(b'!');
+            assert_eq!(blocking, want, "{mode:?}");
+        }
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 64, "{mode:?}");
+
+        server.stop_flag().store(true, Ordering::Relaxed);
+        handle.shutdown();
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+
+    // Timeout path: no server, bounded patience, clean cancel.
+    let mut fabric = Fabric::new();
+    let a = fabric.add_endpoint(1, 16);
+    let b = fabric.add_endpoint(1, 16);
+    let c_id = fabric.connect(a, 0, b, LbMode::RoundRobin);
+    let client = RpcClient::new(c_id, fabric.rings(a, 0));
+    let handle = fabric.start(EngineSpec::Native);
+    assert_eq!(
+        client.call_blocking_timeout(1, b"void", Duration::from_millis(50)),
+        None,
+        "unanswered call times out"
+    );
+    assert_eq!(client.in_flight(), 0, "timed-out call cancelled, nothing leaks");
+    handle.shutdown();
+}
+
+/// Responses reorder across server flows; the pending table must match
+/// each handle regardless of arrival order, while `wait_any` surfaces
+/// completions as they land.
+#[test]
+fn out_of_order_completions_match_their_handles() {
+    let mut fabric = Fabric::new();
+    let client_addr = fabric.add_endpoint(1, 128);
+    let server_addr = fabric.add_endpoint(1, 128);
+    let c_id = fabric.connect(client_addr, 0, server_addr, LbMode::RoundRobin);
+    let client = RpcClient::new(c_id, fabric.rings(client_addr, 0));
+
+    // Uniform 1 ms handler: completions land in issue order while the
+    // client claims its handles in REVERSE order, so every claim races
+    // a table holding many ready-but-unclaimed entries.
+    let mut server = RpcThreadedServer::new(DispatchMode::Worker);
+    server.add_flow(0, fabric.rings(server_addr, 0));
+    server.register(
+        2,
+        Arc::new(|_, req| {
+            let i = req.first().copied().unwrap_or(0);
+            std::thread::sleep(Duration::from_millis(1));
+            vec![i]
+        }),
+    );
+    let joins = server.start();
+    let handle = fabric.start(EngineSpec::Native);
+
+    let handles: Vec<_> =
+        (0..16u8).map(|i| client.call_async(2, &[i]).expect("issue")).collect();
+    // Claim them in reverse issue order: every payload must match its
+    // own handle even though completions arrived in yet another order.
+    for (i, h) in handles.iter().enumerate().rev() {
+        let resp = client.wait_handle(h, Duration::from_secs(10)).expect("completion");
+        assert_eq!(resp, vec![i as u8], "handle matched the wrong response");
+    }
+    assert_eq!(client.pending().strays, 0);
+    assert!(client.pending().is_idle());
+
+    server.stop_flag().store(true, Ordering::Relaxed);
+    handle.shutdown();
+    for j in joins {
+        let _ = j.join();
+    }
+}
