@@ -1,0 +1,24 @@
+//! `cargo bench --bench overload_wallclock` — the overload-control
+//! benchmark: open-loop traffic from 0.5× to 2.5× of this host's
+//! measured saturation point, each point run twice (admission/shedding
+//! on vs off) over the same SRQ + connection-churn topology.
+//!
+//! With shedding on, per-flow admission thresholds are installed
+//! through the NIC soft registers; the dispatch loop refuses work with
+//! `RpcType::Reject` frames (lowest-priority tenant classes first) and
+//! the client retries under capped exponential backoff + jitter. With
+//! shedding off, excess load queues into the rings and the full client
+//! window. Headline columns: goodput (SLO-qualified completions/s),
+//! reject rate, retry amplification, p99.
+//!
+//! Flags (after `--`): `--fast` (1/8 wall duration), `--duration-us N`
+//! (pin the per-point measurement window), `--out-dir DIR`.
+//! Writes `BENCH_overload-wallclock.json` / `.csv` (default `./bench_out`).
+//!
+//! NOTE: wall-clock numbers are host-dependent — compare the on/off
+//! rows against each other, not absolute Mrps against the paper's
+//! FPGA. See REPRODUCING.md §Overload-control benchmark.
+
+fn main() {
+    dagger::exp::harness::bench_main("overload-wallclock");
+}

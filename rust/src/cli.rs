@@ -65,9 +65,12 @@ COMMANDS:
                                  [--out-dir DIR writes
                                  BENCH_<name>.json/.csv artifacts]
                                  (`sim fabric-wallclock` / `sim app-wallclock`
-                                 measure the real ring/fabric threads in
-                                 wall-clock time — host-dependent, unlike
-                                 the simulators)
+                                 / `sim overload-wallclock` measure the real
+                                 ring/fabric threads in wall-clock time —
+                                 host-dependent, unlike the simulators;
+                                 overload-wallclock sweeps open-loop load to
+                                 2.5x saturation with admission/shedding
+                                 on vs off)
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back

@@ -39,20 +39,57 @@
 //! ([`crate::coordinator::service::HandlerService`]) over the same
 //! layer.
 
-use crate::coordinator::backoff::Backoff;
+use crate::coordinator::backoff::{Backoff, RetryPolicy};
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
 use crate::coordinator::rings::RingPair;
-use crate::coordinator::service::{CallToken, HandlerService, Request, Response, RpcService};
+use crate::coordinator::service::{
+    tenant_class, AdmissionLedger, AdmissionPolicy, CallToken, HandlerService, Request, Response,
+    RpcService, TENANT_CLASSES,
+};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// A completed RPC: id + response payload.
+/// A completed RPC: id + response payload + whether the server answered
+/// with an admission [`RpcType::Reject`] instead of serving it.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Completion {
     pub rpc_id: u32,
     pub payload: Vec<u8>,
+    /// `true` when the "completion" is an overload reject — the call
+    /// finished (its slot is reclaimed) but was refused, not served.
+    pub rejected: bool,
+}
+
+/// Terminal state of one call as seen through its [`CallHandle`] — the
+/// retry/reject-aware completion state overload control needs: a call
+/// now finishes in one of three ways, not two.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CallOutcome {
+    /// Served: the response payload.
+    Ok(Vec<u8>),
+    /// Refused by server-side admission control ([`RpcType::Reject`]);
+    /// the echoed request payload rides along. Retryable.
+    Rejected(Vec<u8>),
+    /// No response within the patience bound; the call was cancelled
+    /// (a late response becomes a counted stray). Retryable.
+    TimedOut,
+}
+
+impl CallOutcome {
+    /// The served payload, if any (`Rejected`/`TimedOut` → `None`).
+    pub fn ok(self) -> Option<Vec<u8>> {
+        match self {
+            CallOutcome::Ok(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Whether a retry may change the answer (rejects and timeouts).
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, CallOutcome::Ok(_))
+    }
 }
 
 /// Continuation invoked on every completion a [`PendingTable`] takes in
@@ -97,8 +134,9 @@ enum Slot {
     Free,
     /// Awaiting its response.
     Pending { rpc_id: u32 },
-    /// Response arrived, not yet claimed.
-    Ready { rpc_id: u32, payload: Vec<u8> },
+    /// Response arrived, not yet claimed. `rejected` records whether it
+    /// was an admission refusal rather than a served response.
+    Ready { rpc_id: u32, payload: Vec<u8>, rejected: bool },
 }
 
 /// Slot-indexed table of in-flight calls: the client-side mirror of the
@@ -136,6 +174,9 @@ pub struct PendingTable {
     /// Completions with no (or no longer a) matching registration:
     /// duplicates, cancelled calls, wire strays. Dropped, never stored.
     pub strays: u64,
+    /// Matched completions that were admission rejects (a subset of
+    /// [`PendingTable::completed`]).
+    pub rejected: u64,
 }
 
 impl Default for PendingTable {
@@ -163,6 +204,7 @@ impl PendingTable {
             ready_n: 0,
             completed: 0,
             strays: 0,
+            rejected: 0,
         }
     }
 
@@ -194,23 +236,41 @@ impl PendingTable {
     /// [`PendingTable::complete_without_sink`] and fires the sink
     /// *outside* its lock, so a continuation may re-enter the client.
     pub fn complete(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
-        let completion = Completion { rpc_id, payload };
+        self.complete_as(rpc_id, payload, false)
+    }
+
+    /// [`PendingTable::complete`] with an explicit reject status.
+    pub fn complete_as(&mut self, rpc_id: u32, payload: Vec<u8>, rejected: bool) -> bool {
+        let completion = Completion { rpc_id, payload, rejected };
         if let Some(sink) = self.sink.as_mut() {
             sink.on_completion(&completion);
         }
-        let Completion { rpc_id, payload } = completion;
-        self.complete_without_sink(rpc_id, payload)
+        let Completion { rpc_id, payload, rejected } = completion;
+        self.complete_without_sink_as(rpc_id, payload, rejected)
     }
 
     /// [`PendingTable::complete`] minus the sink invocation (see there).
     pub fn complete_without_sink(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
+        self.complete_without_sink_as(rpc_id, payload, false)
+    }
+
+    /// [`PendingTable::complete_without_sink`] with an explicit reject
+    /// status — the path [`RpcClient::poll_completions`] feeds
+    /// [`RpcType::Reject`] frames through.
+    pub fn complete_without_sink_as(
+        &mut self,
+        rpc_id: u32,
+        payload: Vec<u8>,
+        rejected: bool,
+    ) -> bool {
         match self.by_rpc.get(&rpc_id).copied() {
             Some(slot) if matches!(self.slots[slot as usize], Slot::Pending { .. }) => {
-                self.slots[slot as usize] = Slot::Ready { rpc_id, payload };
+                self.slots[slot as usize] = Slot::Ready { rpc_id, payload, rejected };
                 self.ready.push_back((slot, rpc_id));
                 self.pending_n -= 1;
                 self.ready_n += 1;
                 self.completed += 1;
+                self.rejected += u64::from(rejected);
                 true
             }
             _ => {
@@ -224,15 +284,22 @@ impl PendingTable {
     /// slot is recycled. Amortized O(1) (the arrival-order deque entry
     /// it leaves behind is garbage-collected by [`Self::compact_ready`]).
     pub fn try_complete(&mut self, rpc_id: u32) -> Option<Vec<u8>> {
+        self.try_complete_status(rpc_id).map(|(payload, _)| payload)
+    }
+
+    /// [`PendingTable::try_complete`] carrying the reject status:
+    /// `(payload, rejected)`. Retry-aware callers
+    /// ([`RpcClient::wait_handle_outcome`]) use this form.
+    pub fn try_complete_status(&mut self, rpc_id: u32) -> Option<(Vec<u8>, bool)> {
         let slot = self.by_rpc.get(&rpc_id).copied()?;
         match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
-            Slot::Ready { rpc_id: r, payload } if r == rpc_id => {
+            Slot::Ready { rpc_id: r, payload, rejected } if r == rpc_id => {
                 self.by_rpc.remove(&rpc_id);
                 self.free.push(slot);
                 self.ready_n -= 1;
                 self.stale_ready += 1;
                 self.compact_ready();
-                Some(payload)
+                Some((payload, rejected))
             }
             other => {
                 // Still pending (or foreign): put it back untouched.
@@ -268,14 +335,15 @@ impl PendingTable {
                 self.stale_ready = self.stale_ready.saturating_sub(1);
                 continue; // stale: already claimed via try_complete
             }
-            let payload = match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
-                Slot::Ready { payload, .. } => payload,
-                _ => unreachable!("checked Ready above"),
-            };
+            let (payload, rejected) =
+                match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
+                    Slot::Ready { payload, rejected, .. } => (payload, rejected),
+                    _ => unreachable!("checked Ready above"),
+                };
             self.by_rpc.remove(&rpc_id);
             self.free.push(slot);
             self.ready_n -= 1;
-            return Some(Completion { rpc_id, payload });
+            return Some(Completion { rpc_id, payload, rejected });
         }
         None
     }
@@ -354,6 +422,12 @@ pub struct RpcClient {
     pub completed_count: AtomicU64,
     pub sent: AtomicU64,
     pub send_failures: AtomicU64,
+    /// Admission rejects harvested through the table (a subset of
+    /// `completed_count`).
+    pub rejected_count: AtomicU64,
+    /// Re-sends issued by [`RpcClient::call_with_retry`] after a reject
+    /// or timeout — the numerator of retry amplification.
+    pub retries: AtomicU64,
 }
 
 impl RpcClient {
@@ -369,6 +443,8 @@ impl RpcClient {
             completed_count: AtomicU64::new(0),
             sent: AtomicU64::new(0),
             send_failures: AtomicU64::new(0),
+            rejected_count: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
         })
     }
 
@@ -460,20 +536,75 @@ impl RpcClient {
     /// Spin until `handle`'s response arrives (harvesting the RX ring
     /// into the pending table) or `timeout` expires. On timeout the
     /// call is cancelled — a late response becomes a counted stray, and
-    /// the caller may treat the RPC as lost.
+    /// the caller may treat the RPC as lost. An admission reject counts
+    /// as "no response" here (`None`) — callers that need to tell the
+    /// two apart use [`RpcClient::wait_handle_outcome`].
     pub fn wait_handle(&self, handle: &CallHandle, timeout: Duration) -> Option<Vec<u8>> {
+        self.wait_handle_outcome(handle, timeout).ok()
+    }
+
+    /// Retry/reject-aware wait: spin until `handle` finishes and report
+    /// *how* — served, rejected by admission control, or timed out
+    /// (cancelled). The overload-control completion state for one
+    /// [`CallHandle`].
+    pub fn wait_handle_outcome(&self, handle: &CallHandle, timeout: Duration) -> CallOutcome {
         let deadline = Instant::now() + timeout;
         let mut backoff = Backoff::new();
         loop {
             self.poll_completions();
-            if let Some(payload) = self.pending.lock().unwrap().try_complete(handle.rpc_id()) {
-                return Some(payload);
+            if let Some((payload, rejected)) =
+                self.pending.lock().unwrap().try_complete_status(handle.rpc_id())
+            {
+                return if rejected {
+                    CallOutcome::Rejected(payload)
+                } else {
+                    CallOutcome::Ok(payload)
+                };
             }
             if Instant::now() > deadline {
                 self.pending.lock().unwrap().cancel(handle.rpc_id());
-                return None; // treat as lost
+                return CallOutcome::TimedOut; // treat as lost
             }
             backoff.snooze();
+        }
+    }
+
+    /// Blocking call with overload-control retry: on a reject or a
+    /// per-try timeout, back off per `policy` (capped exponential +
+    /// deterministic jitter seeded from this client's c_id and the
+    /// attempt's rpc_id) and re-issue, up to `policy.max_retries`
+    /// re-sends. Returns the final [`CallOutcome`]; every re-send is
+    /// counted in [`RpcClient::retries`].
+    pub fn call_with_retry(
+        &self,
+        method: u8,
+        payload: &[u8],
+        policy: RetryPolicy,
+        per_try_timeout: Duration,
+    ) -> CallOutcome {
+        let mut attempts = 0u32; // completed (failed) attempts so far
+        loop {
+            let mut backoff = Backoff::new();
+            let handle = loop {
+                match self.call_async(method, payload) {
+                    Ok(h) => break h,
+                    Err(()) => backoff.snooze(),
+                }
+            };
+            let outcome = self.wait_handle_outcome(&handle, per_try_timeout);
+            if !outcome.is_retryable() {
+                return outcome;
+            }
+            attempts += 1;
+            if !policy.should_retry(attempts - 1) {
+                return outcome;
+            }
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            let seed = ((self.c_id as u64) << 32) ^ handle.rpc_id() as u64;
+            let ns = policy.backoff_ns(attempts, seed);
+            if ns > 0 {
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
         }
     }
 
@@ -527,6 +658,7 @@ impl RpcClient {
     /// deadlocking on the pending-table mutex.
     pub fn poll_completions(&self) -> usize {
         let mut matched = 0u64;
+        let mut rejects = 0u64;
         let mut n = 0;
         let mut sink_batch: Vec<Completion> = Vec::new();
         {
@@ -535,17 +667,22 @@ impl RpcClient {
             while let Some(frame) = self.rings.rx.pop() {
                 let rpc_id = frame.rpc_id();
                 let payload = frame.payload();
+                let rejected = frame.rpc_type() == Some(RpcType::Reject);
                 if has_sink {
-                    sink_batch.push(Completion { rpc_id, payload: payload.clone() });
+                    sink_batch.push(Completion { rpc_id, payload: payload.clone(), rejected });
                 }
-                if table.complete_without_sink(rpc_id, payload) {
+                if table.complete_without_sink_as(rpc_id, payload, rejected) {
                     matched += 1;
+                    rejects += u64::from(rejected);
                 }
                 n += 1;
             }
         }
         if matched > 0 {
             self.completed_count.fetch_add(matched, Ordering::Relaxed);
+        }
+        if rejects > 0 {
+            self.rejected_count.fetch_add(rejects, Ordering::Relaxed);
         }
         if !sink_batch.is_empty() {
             // Borrow the sink out of the table, fire it unlocked, put
@@ -666,6 +803,16 @@ pub struct RpcThreadedServer {
     /// Downstream sub-RPCs declared by parking services
     /// ([`crate::coordinator::service::PendingCall::sub_calls`] summed).
     pub sub_rpcs_issued: Arc<AtomicU64>,
+    /// Per-flow admission policy installed via
+    /// [`RpcThreadedServer::set_admission`] before `start` (`None` =
+    /// admit everything, the pre-overload-control behaviour).
+    admission: Option<AdmissionPolicy>,
+    /// Requests refused with an [`RpcType::Reject`] frame (all flows).
+    pub rejected: Arc<AtomicU64>,
+    /// Rejects broken down by tenant class (SLO-aware shedding drops
+    /// class 0 first — see
+    /// [`crate::coordinator::service::AdmissionPolicy`]).
+    pub shed_by_class: Arc<[AtomicU64; TENANT_CLASSES]>,
 }
 
 /// Reply context of a parked request, held until its token finishes.
@@ -686,7 +833,22 @@ impl RpcThreadedServer {
             oversize_responses: Arc::new(AtomicU64::new(0)),
             parked_peak: Arc::new(AtomicU64::new(0)),
             sub_rpcs_issued: Arc::new(AtomicU64::new(0)),
+            admission: None,
+            rejected: Arc::new(AtomicU64::new(0)),
+            shed_by_class: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
         }
+    }
+
+    /// Install overload admission control on every flow (call before
+    /// [`RpcThreadedServer::start`]). Each dispatch thread gets its own
+    /// [`AdmissionLedger`]; refusals come back to the caller as
+    /// [`RpcType::Reject`] frames and tick [`RpcThreadedServer::rejected`]
+    /// / [`RpcThreadedServer::shed_by_class`]. Typically configured from
+    /// the NIC's soft registers:
+    /// `AdmissionPolicy::from_regs(soft.read(Reg::AdmissionThreshold),
+    /// soft.read(Reg::ShedThreshold))`.
+    pub fn set_admission(&mut self, policy: AdmissionPolicy) {
+        self.admission = Some(policy);
     }
 
     /// Register a remote procedure under a method id (the
@@ -732,6 +894,10 @@ impl RpcThreadedServer {
                 oversize: self.oversize_responses.clone(),
                 parked_peak: self.parked_peak.clone(),
                 sub_rpcs: self.sub_rpcs_issued.clone(),
+                admission: self.admission,
+                ledger: AdmissionLedger::new(),
+                rejected: self.rejected.clone(),
+                shed_by_class: self.shed_by_class.clone(),
                 parked: HashMap::new(),
                 next_token: 1,
                 done: Vec::new(),
@@ -805,6 +971,12 @@ struct FlowLoop {
     oversize: Arc<AtomicU64>,
     parked_peak: Arc<AtomicU64>,
     sub_rpcs: Arc<AtomicU64>,
+    /// Admission policy (`None` = admit everything) and this thread's
+    /// private fairness ledger.
+    admission: Option<AdmissionPolicy>,
+    ledger: AdmissionLedger,
+    rejected: Arc<AtomicU64>,
+    shed_by_class: Arc<[AtomicU64; TENANT_CLASSES]>,
     parked: HashMap<CallToken, ReplyCtx>,
     next_token: CallToken,
     done: Vec<(CallToken, Vec<u8>)>,
@@ -827,7 +999,32 @@ impl FlowLoop {
 
     /// Run one request through the service; park or respond.
     /// Returns `false` if stopped while pushing the response.
+    ///
+    /// Admission control runs first: when the flow's queue depth (RX
+    /// backlog + parked requests) crosses the installed policy's
+    /// thresholds, the request is refused with an [`RpcType::Reject`]
+    /// frame echoing the request payload — an explicit error response,
+    /// not a silent drop, so the client's slot bookkeeping stays intact
+    /// and it can back off and retry. In `Worker` mode the mpsc hand-off
+    /// queue is not counted (the dispatch thread drains RX eagerly), so
+    /// depth there is dominated by `parked`.
     fn ingest(&mut self, frame: Frame) -> bool {
+        if let Some(policy) = self.admission {
+            let depth = self.rings.rx.len() + self.parked.len();
+            if !policy.admit(depth, frame.c_id(), &mut self.ledger) {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shed_by_class[tenant_class(frame.c_id()) as usize]
+                    .fetch_add(1, Ordering::Relaxed);
+                let f = Frame::new(
+                    RpcType::Reject,
+                    frame.flags(),
+                    frame.c_id(),
+                    frame.rpc_id(),
+                    &frame.payload(),
+                );
+                return self.respond(f);
+            }
+        }
         let token = self.next_token;
         self.next_token += 1;
         let method = frame.flags();
@@ -1497,5 +1694,227 @@ mod tests {
             got
         };
         assert_eq!(run(true), run(false));
+    }
+
+    // --------------------------------------------- overload control
+
+    /// Single-frame admission check on a [`FlowLoop`] driven directly:
+    /// refusals come back as [`RpcType::Reject`] frames that echo the
+    /// request (method, ids, payload) and tick the shed counters.
+    #[test]
+    fn admission_rejects_with_echoed_reject_frame() {
+        use crate::coordinator::service::EchoService;
+        let rings = Arc::new(RingPair::new(16, 16));
+        let mut fl = FlowLoop {
+            flow: 0,
+            rings: rings.clone(),
+            service: Box::new(EchoService),
+            stop: Arc::new(AtomicBool::new(false)),
+            handled: Arc::new(AtomicU64::new(0)),
+            oversize: Arc::new(AtomicU64::new(0)),
+            parked_peak: Arc::new(AtomicU64::new(0)),
+            sub_rpcs: Arc::new(AtomicU64::new(0)),
+            admission: Some(AdmissionPolicy { admission_threshold: 1, shed_threshold: 0 }),
+            ledger: AdmissionLedger::new(),
+            rejected: Arc::new(AtomicU64::new(0)),
+            shed_by_class: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            parked: HashMap::new(),
+            next_token: 1,
+            done: Vec::new(),
+        };
+        // Empty backlog: admitted and served.
+        assert!(fl.ingest(Frame::new(RpcType::Request, 3, 6, 0, b"ok")));
+        assert_eq!(rings.tx.pop().unwrap().rpc_type(), Some(RpcType::Response));
+        // One frame queued behind us: depth 1 >= threshold 1 -> reject.
+        rings.rx.push(Frame::new(RpcType::Request, 3, 6, 99, b"queued")).unwrap();
+        assert!(fl.ingest(Frame::new(RpcType::Request, 3, 6, 1, b"busy")));
+        let rej = rings.tx.pop().unwrap();
+        assert_eq!(rej.rpc_type(), Some(RpcType::Reject));
+        assert_eq!(rej.rpc_id(), 1);
+        assert_eq!(rej.c_id(), 6);
+        assert_eq!(rej.flags(), 3, "method rides back in the reject");
+        assert_eq!(rej.payload(), b"busy", "request payload echoed");
+        assert_eq!(fl.rejected.load(Ordering::Relaxed), 1);
+        let class = tenant_class(6) as usize;
+        assert_eq!(fl.shed_by_class[class].load(Ordering::Relaxed), 1);
+        assert_eq!(fl.handled.load(Ordering::Relaxed), 1, "rejects are not 'handled'");
+    }
+
+    /// The threaded dispatch path: a burst queued ahead of `start` is
+    /// shed down to the hard threshold — every frame that sees a
+    /// backlog behind it is refused, the one that drains the queue is
+    /// served. Deterministic because all frames are enqueued before the
+    /// dispatch thread exists.
+    #[test]
+    fn server_rejects_backlog_beyond_admission_threshold() {
+        let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+        let rings = Arc::new(RingPair::new(64, 64));
+        server.add_flow(0, rings.clone());
+        server.register(1, Arc::new(|_, req| req.to_vec()));
+        server.set_admission(AdmissionPolicy { admission_threshold: 1, shed_threshold: 0 });
+        for i in 0..8u32 {
+            rings.rx.push(Frame::new(RpcType::Request, 1, 2, i, b"burst")).unwrap();
+        }
+        let joins = server.start();
+        let (mut served, mut rejected) = (0u32, 0u32);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while served + rejected < 8 {
+            if let Some(r) = rings.tx.pop() {
+                match r.rpc_type() {
+                    Some(RpcType::Response) => served += 1,
+                    Some(RpcType::Reject) => {
+                        assert_eq!(r.payload(), b"burst", "reject echoes the request");
+                        rejected += 1;
+                    }
+                    other => panic!("{other:?}"),
+                }
+            } else {
+                assert!(std::time::Instant::now() < deadline, "timed out");
+                std::thread::yield_now();
+            }
+        }
+        server.stop_flag().store(true, Ordering::Relaxed);
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!((served, rejected), (1, 7));
+        assert_eq!(server.rejected.load(Ordering::Relaxed), 7);
+        assert_eq!(server.handled.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            server.shed_by_class[tenant_class(2) as usize].load(Ordering::Relaxed),
+            7,
+            "all rejects were one tenant class (c_id 2)"
+        );
+    }
+
+    /// A Reject frame finishes its call as `CallOutcome::Rejected` (slot
+    /// reclaimed, reject counted); the legacy `wait_handle` folds it
+    /// into `None`.
+    #[test]
+    fn reject_frame_completes_handle_as_rejected() {
+        let rings = Arc::new(RingPair::new(8, 8));
+        let client = RpcClient::new(5, rings.clone());
+        let h = client.call_async(2, b"req").unwrap();
+        let _ = rings.tx.pop();
+        rings.rx.push(Frame::new(RpcType::Reject, 2, 5, h.rpc_id(), b"req")).unwrap();
+        match client.wait_handle_outcome(&h, Duration::from_secs(1)) {
+            CallOutcome::Rejected(p) => assert_eq!(p, b"req"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(client.rejected_count.load(Ordering::Relaxed), 1);
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 1);
+        assert_eq!(client.in_flight(), 0, "reject reclaims the slot");
+        assert_eq!(client.pending().rejected, 1);
+        let h2 = client.call_async(2, b"x").unwrap();
+        let _ = rings.tx.pop();
+        rings.rx.push(Frame::new(RpcType::Reject, 2, 5, h2.rpc_id(), b"x")).unwrap();
+        assert_eq!(client.wait_handle(&h2, Duration::from_secs(1)), None);
+    }
+
+    /// Retry loop against a server that rejects twice then serves: the
+    /// backoff/retry path converges and the counters account for every
+    /// re-send.
+    #[test]
+    fn call_with_retry_retries_rejects_until_served() {
+        let rings = Arc::new(RingPair::new(8, 8));
+        let client = RpcClient::new(7, rings.clone());
+        let r2 = rings.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let responder = std::thread::spawn(move || {
+            let mut n = 0u32;
+            while !s2.load(Ordering::Relaxed) {
+                if let Some(req) = r2.tx.pop() {
+                    let t = if n < 2 { RpcType::Reject } else { RpcType::Response };
+                    n += 1;
+                    let f = Frame::new(t, req.flags(), req.c_id(), req.rpc_id(), b"done");
+                    while r2.rx.push(f).is_err() {
+                        std::thread::yield_now();
+                    }
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let policy = RetryPolicy { base_us: 1, cap_us: 4, max_retries: 5 };
+        let out = client.call_with_retry(1, b"payload", policy, Duration::from_secs(5));
+        assert_eq!(out, CallOutcome::Ok(b"done".to_vec()));
+        assert_eq!(client.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(client.rejected_count.load(Ordering::Relaxed), 2);
+        assert_eq!(client.sent.load(Ordering::Relaxed), 3, "1 original + 2 retries");
+        stop.store(true, Ordering::Relaxed);
+        responder.join().unwrap();
+    }
+
+    /// Against a server that always rejects, the retry budget is spent
+    /// and the final outcome is the reject itself.
+    #[test]
+    fn call_with_retry_gives_up_after_max_retries() {
+        let rings = Arc::new(RingPair::new(32, 32));
+        let client = RpcClient::new(3, rings.clone());
+        let r2 = rings.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let responder = std::thread::spawn(move || {
+            while !s2.load(Ordering::Relaxed) {
+                if let Some(req) = r2.tx.pop() {
+                    let f = Frame::new(
+                        RpcType::Reject,
+                        req.flags(),
+                        req.c_id(),
+                        req.rpc_id(),
+                        &req.payload(),
+                    );
+                    while r2.rx.push(f).is_err() {
+                        std::thread::yield_now();
+                    }
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let policy = RetryPolicy { base_us: 1, cap_us: 2, max_retries: 2 };
+        let out = client.call_with_retry(4, b"nope", policy, Duration::from_secs(5));
+        assert_eq!(out, CallOutcome::Rejected(b"nope".to_vec()));
+        assert_eq!(client.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(client.sent.load(Ordering::Relaxed), 3, "1 original + 2 retries");
+        stop.store(true, Ordering::Relaxed);
+        responder.join().unwrap();
+    }
+
+    /// Churn determinism (SRQ-style short-lived calls): the table grows
+    /// past its preallocation on demand, recycles every freed slot, and
+    /// neither cancels nor late strays corrupt live calls.
+    #[test]
+    fn pending_table_grows_past_preallocation_and_recycles_under_churn() {
+        let mut t = PendingTable::with_capacity(4);
+        assert_eq!(t.capacity(), 4);
+        let handles: Vec<CallHandle> = (0..64).map(|i| t.register(i).unwrap()).collect();
+        assert_eq!(t.in_flight(), 64);
+        assert_eq!(t.capacity(), 64, "grew past the preallocation");
+        // Churn: claim a third, cancel a third, leave a third pending.
+        for h in handles.iter().take(21) {
+            assert!(t.complete(h.rpc_id(), vec![h.rpc_id() as u8]));
+            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![h.rpc_id() as u8]));
+        }
+        for h in handles.iter().skip(21).take(21) {
+            assert!(t.cancel(h.rpc_id()));
+        }
+        // A fresh wave re-uses the 42 freed slots: no growth.
+        let before = t.capacity();
+        for i in 1000..1042u32 {
+            t.register(i).unwrap();
+        }
+        assert_eq!(t.capacity(), before, "churned slots recycle");
+        // Late completions for cancelled calls are strays, not corruption.
+        for h in handles.iter().skip(21).take(21) {
+            assert!(!t.complete(h.rpc_id(), vec![0xFF]));
+        }
+        assert_eq!(t.strays, 21);
+        // The untouched third still completes normally.
+        for h in handles.iter().skip(42) {
+            assert!(t.complete(h.rpc_id(), vec![1]));
+            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![1]));
+        }
     }
 }

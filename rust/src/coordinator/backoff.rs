@@ -44,6 +44,77 @@ impl Default for Backoff {
     }
 }
 
+/// Retry policy for overload control: capped exponential backoff with
+/// deterministic jitter, applied by [`crate::coordinator::api::RpcClient`]
+/// (and the wall-clock driver's open-loop retry queue) when a call comes
+/// back as an admission [`crate::coordinator::frame::RpcType::Reject`] or
+/// times out.
+///
+/// The jitter is a xorshift64* hash of `(seed, attempt)` — fully
+/// deterministic (no `rand` dependency, reproducible under a fixed
+/// seed) yet decorrelated across clients, so a fleet of rejected
+/// senders does not retry in lockstep and re-spike the server
+/// (the classic retry-storm failure mode this PR's overload experiment
+/// measures as retry amplification).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// First-retry backoff, microseconds.
+    pub base_us: u64,
+    /// Backoff ceiling, microseconds (the "capped" in capped
+    /// exponential).
+    pub cap_us: u64,
+    /// Attempts after the first send; 0 disables retry entirely.
+    pub max_retries: u32,
+}
+
+impl RetryPolicy {
+    /// Default tuned for the microsecond-scale fabric: 4 µs, doubling,
+    /// capped at 256 µs, at most 3 retries.
+    pub const DEFAULT: RetryPolicy = RetryPolicy { base_us: 4, cap_us: 256, max_retries: 3 };
+
+    /// Whether attempt number `attempt` (0 = the original send) may be
+    /// followed by another try.
+    #[inline]
+    pub fn should_retry(&self, attempt: u32) -> bool {
+        attempt < self.max_retries
+    }
+
+    /// Backoff before retry number `attempt` (1-based: the first retry
+    /// is attempt 1), in nanoseconds: `min(base << (attempt-1), cap)`
+    /// exponential growth, then ±50% deterministic jitter from the
+    /// (seed, attempt) hash.
+    pub fn backoff_ns(&self, attempt: u32, seed: u64) -> u64 {
+        let exp = attempt.saturating_sub(1).min(32);
+        let raw_us = self.base_us.saturating_mul(1u64 << exp).min(self.cap_us);
+        let raw_ns = raw_us * 1_000;
+        // Jitter in [-50%, +50%): raw/2 + (hash % raw).
+        if raw_ns == 0 {
+            return 0;
+        }
+        let h = xorshift64star(seed ^ ((attempt as u64) << 32) ^ 0x9E37_79B9_7F4A_7C15);
+        raw_ns / 2 + h % raw_ns
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::DEFAULT
+    }
+}
+
+/// xorshift64* — the deterministic jitter source for [`RetryPolicy`].
+/// Zero seeds are remapped (xorshift has a zero fixed point).
+#[inline]
+pub fn xorshift64star(mut x: u64) -> u64 {
+    if x == 0 {
+        x = 0x4D59_5DF4_D0F3_3173;
+    }
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,6 +127,44 @@ mod tests {
         }
         b.reset();
         assert_eq!(b.spins, 0);
+    }
+
+    #[test]
+    fn retry_backoff_grows_exponentially_and_caps() {
+        let p = RetryPolicy { base_us: 4, cap_us: 64, max_retries: 8 };
+        // Centers double until the cap: jittered values stay within
+        // [raw/2, 3*raw/2).
+        for (attempt, raw_us) in [(1u32, 4u64), (2, 8), (3, 16), (4, 32), (5, 64), (6, 64)] {
+            let b = p.backoff_ns(attempt, 42);
+            let raw = raw_us * 1_000;
+            assert!(
+                b >= raw / 2 && b < raw + raw / 2,
+                "attempt {attempt}: {b} outside [{}, {})",
+                raw / 2,
+                raw + raw / 2
+            );
+        }
+        // Deterministic under a fixed seed, decorrelated across seeds.
+        assert_eq!(p.backoff_ns(3, 7), p.backoff_ns(3, 7));
+        assert_ne!(p.backoff_ns(3, 7), p.backoff_ns(3, 8));
+    }
+
+    #[test]
+    fn retry_policy_bounds_attempts() {
+        let p = RetryPolicy { max_retries: 2, ..RetryPolicy::DEFAULT };
+        assert!(p.should_retry(0));
+        assert!(p.should_retry(1));
+        assert!(!p.should_retry(2));
+        let off = RetryPolicy { max_retries: 0, ..RetryPolicy::DEFAULT };
+        assert!(!off.should_retry(0));
+    }
+
+    #[test]
+    fn jitter_source_is_deterministic_and_nonzero() {
+        assert_eq!(xorshift64star(1), xorshift64star(1));
+        assert_ne!(xorshift64star(1), xorshift64star(2));
+        // The zero fixed point is remapped, not propagated.
+        assert_ne!(xorshift64star(0), 0);
     }
 
     #[test]

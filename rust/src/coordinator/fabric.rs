@@ -290,7 +290,10 @@ fn deliver_batch(
         // Ingress steering at the destination NIC.
         let n_flows = fabric.endpoints[dst].flows.len() as u32;
         let flow = match frame.rpc_type() {
-            Some(RpcType::Response) => {
+            // Rejects travel the response direction: back to the flow
+            // the rejected request originated from, never through the
+            // server-side load balancer.
+            Some(RpcType::Response) | Some(RpcType::Reject) => {
                 match fabric.nics[dst].cm.lookup(Agent::IncomingFlow, frame.c_id()) {
                     Some((t, _)) => t.src_flow % n_flows,
                     None => {

@@ -40,6 +40,14 @@ pub fn fmix32(mut h: u32) -> u32 {
 /// RPC kinds carried in the `rpc_type` header field. Request/response
 /// share the same stack (§4.4: "the stack is symmetric"); the type field
 /// disambiguates.
+///
+/// `Reject` is the overload-control status word: a response-direction
+/// frame a server's admission layer sends instead of serving the request
+/// (same c_id/rpc_id/method, payload echoed verbatim so benchmark stamps
+/// ride back to the sender). It lives in header word 0 — byte-disjoint
+/// from the payload stamp regions (words 4-6 head, 13-15 tail), so a
+/// reject can never be confused with, or corrupt, a slot tag or
+/// timestamp.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum RpcType {
@@ -47,6 +55,10 @@ pub enum RpcType {
     Response = 1,
     ConnSetup = 2,
     ConnTeardown = 3,
+    /// Admission-control reject: the request was refused under overload,
+    /// not served. Routed like a `Response` (back to the requesting
+    /// flow), never through the server-side load balancer.
+    Reject = 4,
 }
 
 impl RpcType {
@@ -56,8 +68,15 @@ impl RpcType {
             1 => Some(RpcType::Response),
             2 => Some(RpcType::ConnSetup),
             3 => Some(RpcType::ConnTeardown),
+            4 => Some(RpcType::Reject),
             _ => None,
         }
+    }
+
+    /// Frames that travel the response direction (server → client) and
+    /// must steer back to the connection's originating flow.
+    pub fn is_response_direction(self) -> bool {
+        matches!(self, RpcType::Response | RpcType::Reject)
     }
 }
 
@@ -355,8 +374,37 @@ mod tests {
 
     #[test]
     fn rpc_type_raw_bounds() {
-        assert_eq!(RpcType::from_u8(4), None);
+        assert_eq!(RpcType::from_u8(4), Some(RpcType::Reject));
+        assert_eq!(RpcType::from_u8(5), None);
         assert_eq!(RpcType::from_u8(1), Some(RpcType::Response));
+        assert!(RpcType::Reject.is_response_direction());
+        assert!(RpcType::Response.is_response_direction());
+        assert!(!RpcType::Request.is_response_direction());
+    }
+
+    /// The reject status word must stay byte-disjoint from the benchmark
+    /// stamp regions: stamping a reject frame leaves its status (and the
+    /// rest of the header) untouched, and flipping the status leaves the
+    /// stamps untouched. This is the invariant the CI grep-guard pins.
+    #[test]
+    fn reject_status_never_collides_with_stamp_bytes() {
+        let payload = [0u8; MAX_PAYLOAD_BYTES];
+        let mut f = Frame::new(RpcType::Reject, 3, 7, 42, &payload);
+        let header = f.words[0];
+        f.set_ts_ns(0xFFFF_FFFF_FFFF_FFFF);
+        f.set_tag(0xFFFF_FFFF);
+        f.set_ts_ns_tail(0xFFFF_FFFF_FFFF_FFFF);
+        f.set_tag_tail(0xFFFF_FFFF);
+        assert_eq!(f.words[0], header, "stamps leaked into the status word");
+        assert_eq!(f.rpc_type(), Some(RpcType::Reject));
+        assert!(f.is_valid());
+        // And the other direction: rewriting the status word leaves
+        // every stamp readable.
+        f.words[0] = (MAGIC << 16) | ((RpcType::Response as u32) << 8) | 3;
+        assert_eq!(f.ts_ns(), 0xFFFF_FFFF_FFFF_FFFF);
+        assert_eq!(f.tag(), 0xFFFF_FFFF);
+        assert_eq!(f.ts_ns_tail(), 0xFFFF_FFFF_FFFF_FFFF);
+        assert_eq!(f.tag_tail(), 0xFFFF_FFFF);
     }
 
     #[test]

@@ -458,6 +458,58 @@ mod tests {
     }
 
     #[test]
+    fn full_ring_backpressure_holds_with_a_stopped_consumer() {
+        // Overload shape: the consumer (dispatch thread) has stalled
+        // entirely, the producer keeps offering. Every attempt past
+        // capacity must fail cleanly — frame handed back intact, no
+        // overwrite of queued frames, occupancy pinned at capacity.
+        let r = Ring::with_capacity(8);
+        for i in 0..8 {
+            r.push(f(i)).unwrap();
+        }
+        assert_eq!(r.free_slots(), 0);
+        for attempt in 0..100 {
+            let rejected = r.push(f(1_000 + attempt)).unwrap_err();
+            assert_eq!(rejected.rpc_id(), 1_000 + attempt, "frame not returned intact");
+            assert_eq!(r.len(), 8, "occupancy drifted under sustained backpressure");
+        }
+        // The consumer wakes up: everything queued before the stall is
+        // still there, in order, uncorrupted by the rejected pushes.
+        for i in 0..8 {
+            assert_eq!(r.pop().unwrap().rpc_id(), i);
+        }
+        assert!(r.pop().is_none());
+        // And the ring is immediately usable again.
+        r.push(f(7_777)).unwrap();
+        assert_eq!(r.pop().unwrap().rpc_id(), 7_777);
+    }
+
+    #[test]
+    fn slot_pool_starves_cleanly_when_acks_stop_arriving() {
+        // The ack path dies (server wedged / responses dropped): the
+        // send window must drain to zero allocations and stay there —
+        // backpressure, not panic or slot invention — then recover
+        // exactly as far as acks actually arrive.
+        let mut p = SlotPool::new(16);
+        let live: Vec<u32> = (0..16).map(|_| p.alloc().unwrap()).collect();
+        assert!(p.is_exhausted());
+        for _ in 0..50 {
+            assert!(p.alloc().is_none(), "pool invented a slot with no acks");
+            assert_eq!(p.in_flight(), 16);
+        }
+        // Acks trickle back for only 3 of the 16 in-flight requests:
+        // the window reopens by exactly 3, no more.
+        for s in &live[..3] {
+            assert!(p.free(*s));
+        }
+        for _ in 0..3 {
+            assert!(p.alloc().is_some());
+        }
+        assert!(p.alloc().is_none(), "window reopened wider than the acks received");
+        assert_eq!(p.in_flight(), 16);
+    }
+
+    #[test]
     fn slot_pool_bookkeeping_over_many_epochs() {
         // Long alloc/free interleave with rotating ack order: in_flight
         // accounting must stay exact (the benchmark's closed-loop window

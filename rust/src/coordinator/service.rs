@@ -60,6 +60,146 @@ use crate::coordinator::frame::{Frame, MAX_PAYLOAD_BYTES};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+// ------------------------------------------------------------------
+// Overload control: admission + SLO-aware shedding
+// ------------------------------------------------------------------
+
+/// Number of tenant priority classes. A connection's class is carried in
+/// the low bits of its `c_id` (assigned at connect time), so the NIC-side
+/// dispatch loop can classify without any per-connection lookup —
+/// mirroring how the paper's connection manager keeps flow state
+/// addressable by c_id alone.
+pub const TENANT_CLASSES: usize = 4;
+
+/// Tenant priority class of a connection: 0 = lowest, 3 = highest.
+#[inline]
+pub fn tenant_class(c_id: u32) -> u8 {
+    (c_id % TENANT_CLASSES as u32) as u8
+}
+
+/// Per-flow admission policy for the dispatch/worker loops: a hard
+/// queue-depth threshold past which everything is rejected, plus an
+/// optional SLO-aware shedding band in which the lowest-priority tenants
+/// are refused first.
+///
+/// Thresholds are queue *depths* (RX backlog + parked requests on the
+/// flow), the quantity that actually predicts queueing latency — the
+/// µs-scale analogue of the paper's Fig. 10 saturation knee. Between
+/// `shed_threshold` and `admission_threshold` the refusal floor ramps
+/// linearly over the priority classes: just past the soft threshold only
+/// class 0 is shed; at the hard threshold every class below the top is.
+///
+/// Both thresholds surface through the NIC's soft register file
+/// ([`crate::nic::soft_config::Reg::AdmissionThreshold`] /
+/// [`ShedThreshold`](crate::nic::soft_config::Reg::ShedThreshold)), so
+/// overload posture is runtime-reconfigurable the same way batch size and
+/// polling mode are (§4.1 soft configuration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Hard cap on per-flow queue depth; 0 disables admission entirely.
+    pub admission_threshold: usize,
+    /// Depth at which priority shedding starts; 0 disables shedding (the
+    /// hard cap alone applies).
+    pub shed_threshold: usize,
+}
+
+impl AdmissionPolicy {
+    /// Policy from the NIC's soft register values.
+    pub fn from_regs(admission_threshold: u32, shed_threshold: u32) -> AdmissionPolicy {
+        AdmissionPolicy {
+            admission_threshold: admission_threshold as usize,
+            shed_threshold: shed_threshold as usize,
+        }
+    }
+
+    /// Lowest tenant class still admitted at queue depth `depth` (all
+    /// classes below it are shed). 0 = nothing shed.
+    fn shed_floor(&self, depth: usize) -> u8 {
+        if self.shed_threshold == 0 || depth < self.shed_threshold {
+            return 0;
+        }
+        let span = self
+            .admission_threshold
+            .saturating_sub(self.shed_threshold)
+            .max(1);
+        let over = depth - self.shed_threshold;
+        // Ramp 1 ..= TENANT_CLASSES-1 across the shedding band.
+        let max_floor = (TENANT_CLASSES - 1) as usize;
+        (1 + (over * max_floor / span).min(max_floor - 1)) as u8
+    }
+
+    /// Admission decision for a request from `c_id` at queue depth
+    /// `depth`, charging the ledger on admit.
+    pub fn admit(&self, depth: usize, c_id: u32, ledger: &mut AdmissionLedger) -> bool {
+        if self.admission_threshold == 0 {
+            ledger.charge(tenant_class(c_id), true);
+            return true;
+        }
+        let class = tenant_class(c_id);
+        let admitted = if depth >= self.admission_threshold {
+            // Hard overload: refuse everything.
+            false
+        } else {
+            let floor = self.shed_floor(depth);
+            // Below the floor a tenant is shed — unless the fairness
+            // ledger shows it has been all but starved of admitted work,
+            // in which case one request slips through (same idea as the
+            // vnic arbiter's `lines_granted` ledger: no class is
+            // starved outright, however loaded the box).
+            class >= floor || ledger.is_starved(class)
+        };
+        ledger.charge(class, admitted);
+        admitted
+    }
+}
+
+/// Per-class admitted/shed accounting — the dispatch-loop mirror of the
+/// vnic arbiter's `lines_granted` fairness ledger
+/// ([`crate::nic::virtualization::MultiNic`]): every admission decision
+/// is charged to the requester's class, and the shedding path consults
+/// the ledger so the lowest class is throttled hard but never starved to
+/// zero.
+#[derive(Clone, Debug, Default)]
+pub struct AdmissionLedger {
+    /// Requests admitted per tenant class.
+    pub admitted: [u64; TENANT_CLASSES],
+    /// Requests shed (rejected by priority or the hard cap) per class.
+    pub shed: [u64; TENANT_CLASSES],
+}
+
+impl AdmissionLedger {
+    pub fn new() -> AdmissionLedger {
+        AdmissionLedger::default()
+    }
+
+    #[inline]
+    fn charge(&mut self, class: u8, admitted: bool) {
+        if admitted {
+            self.admitted[class as usize] += 1;
+        } else {
+            self.shed[class as usize] += 1;
+        }
+    }
+
+    /// A class is starved when its admitted share has fallen below
+    /// 1/(2·TENANT_CLASSES) of all admitted work — half its fair share.
+    fn is_starved(&self, class: u8) -> bool {
+        let total: u64 = self.admitted.iter().sum();
+        if total < TENANT_CLASSES as u64 {
+            return false;
+        }
+        self.admitted[class as usize] * (2 * TENANT_CLASSES as u64) < total
+    }
+
+    pub fn total_admitted(&self) -> u64 {
+        self.admitted.iter().sum()
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+}
+
 /// Identifies one parked request within a dispatch (or worker) thread:
 /// assigned by the dispatch loop, unique per service instance for the
 /// thread's lifetime (a monotonic u64 never wraps in practice).
@@ -272,6 +412,97 @@ mod tests {
 
     fn ready(r: Response) -> Vec<u8> {
         r.ready().expect("expected Response::Ready")
+    }
+
+    #[test]
+    fn admission_policy_off_admits_everything() {
+        let pol = AdmissionPolicy { admission_threshold: 0, shed_threshold: 0 };
+        let mut ledger = AdmissionLedger::new();
+        for depth in [0usize, 10, 100_000] {
+            assert!(pol.admit(depth, 1, &mut ledger));
+        }
+        assert_eq!(ledger.total_admitted(), 3);
+        assert_eq!(ledger.total_shed(), 0);
+    }
+
+    #[test]
+    fn hard_threshold_rejects_all_classes() {
+        let pol = AdmissionPolicy { admission_threshold: 64, shed_threshold: 0 };
+        let mut ledger = AdmissionLedger::new();
+        for c_id in 0..4u32 {
+            assert!(pol.admit(10, c_id, &mut ledger), "below threshold admits");
+            assert!(!pol.admit(64, c_id, &mut ledger), "at threshold rejects");
+            assert!(!pol.admit(1000, c_id, &mut ledger));
+        }
+        assert_eq!(ledger.total_admitted(), 4);
+        assert_eq!(ledger.total_shed(), 8);
+    }
+
+    #[test]
+    fn shedding_drops_lowest_priority_first_and_ramps() {
+        let pol = AdmissionPolicy { admission_threshold: 100, shed_threshold: 40 };
+        // Below the soft threshold nothing is shed.
+        assert_eq!(pol.shed_floor(0), 0);
+        assert_eq!(pol.shed_floor(39), 0);
+        // Just past it only class 0 is shed ...
+        assert_eq!(pol.shed_floor(40), 1);
+        // ... ramping so near the hard cap only the top class survives.
+        assert_eq!(pol.shed_floor(99), 3);
+        // The ramp is monotone in depth.
+        let mut last = 0;
+        for d in 0..100 {
+            let f = pol.shed_floor(d);
+            assert!(f >= last, "shed floor must not relax as depth grows");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn shedding_band_rejects_by_class_and_charges_the_ledger() {
+        let pol = AdmissionPolicy { admission_threshold: 100, shed_threshold: 40 };
+        let mut ledger = AdmissionLedger::new();
+        // Seed the ledger so class 0 is not "starved" (which would earn
+        // it a fairness bypass).
+        for _ in 0..8 {
+            assert!(pol.admit(0, 0, &mut ledger));
+            assert!(pol.admit(0, 1, &mut ledger));
+            assert!(pol.admit(0, 2, &mut ledger));
+            assert!(pol.admit(0, 3, &mut ledger));
+        }
+        // Depth 45: floor is 1 — class 0 shed, classes 1..3 admitted.
+        assert!(!pol.admit(45, 0, &mut ledger));
+        assert!(pol.admit(45, 1, &mut ledger));
+        assert!(pol.admit(45, 2, &mut ledger));
+        assert!(pol.admit(45, 3, &mut ledger));
+        assert_eq!(ledger.shed[0], 1);
+        assert_eq!(ledger.admitted[1], 9);
+        // Deep in the band (floor 3): only the top class survives.
+        assert!(!pol.admit(99, 1, &mut ledger));
+        assert!(pol.admit(99, 3, &mut ledger));
+    }
+
+    #[test]
+    fn starved_class_gets_a_fairness_bypass() {
+        let pol = AdmissionPolicy { admission_threshold: 100, shed_threshold: 10 };
+        let mut ledger = AdmissionLedger::new();
+        // Admit plenty of high-priority work; class 0 gets nothing.
+        for _ in 0..100 {
+            assert!(pol.admit(0, 3, &mut ledger));
+        }
+        // In the shedding band class 0 would normally be refused, but
+        // its admitted share (0) is far under fair share — the ledger
+        // lets one through, exactly the `lines_granted` no-starvation
+        // property.
+        assert!(pol.admit(50, 0, &mut ledger), "starved class must not be shut out");
+        assert_eq!(ledger.admitted[0], 1);
+    }
+
+    #[test]
+    fn tenant_class_is_cid_low_bits() {
+        assert_eq!(tenant_class(0), 0);
+        assert_eq!(tenant_class(5), 1);
+        assert_eq!(tenant_class(7), 3);
+        assert_eq!(tenant_class(8), 0);
     }
 
     #[test]

@@ -209,6 +209,10 @@ const KEY_COLUMNS: &[&str] = &[
     "cache_entries",
     "open_conns",
     "offered_mrps",
+    // Overload sweep axis: the stable saturation *multiplier* joins row
+    // identity; the absolute rate (`offered_rate_mrps`) is derived from
+    // this host's measured saturation and deliberately does NOT.
+    "offered_x",
     "offered_per_vnic_mrps",
     "bg_load_per_vnic_mrps",
     "load_krps",

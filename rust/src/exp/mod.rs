@@ -19,6 +19,7 @@ pub mod bench_diff;
 pub mod fabric_bench;
 pub mod harness;
 pub mod microsim;
+pub mod overload;
 pub mod rpc_sim;
 pub mod vnic;
 pub mod wall_driver;
@@ -159,10 +160,11 @@ impl RunOpts {
     }
 }
 
-/// All 16 registered experiments: the 14 figure/table reproductions in
-/// paper order, plus the two wall-clock benchmarks — the fabric echo
-/// (measured counterpart of §5.2-§5.5) and the applications served over
-/// the real rings (measured counterpart of §5.6/§5.7).
+/// All 17 registered experiments: the 14 figure/table reproductions in
+/// paper order, plus the three wall-clock benchmarks — the fabric echo
+/// (measured counterpart of §5.2-§5.5), the applications served over
+/// the real rings (measured counterpart of §5.6/§5.7), and the
+/// overload-control saturation sweep (admission/shedding/retry).
 pub const EXPERIMENTS: &[ExpSpec] = &[
     ExpSpec {
         name: "fig3",
@@ -291,6 +293,14 @@ pub const EXPERIMENTS: &[ExpSpec] = &[
         bench: "app_wallclock",
         aliases: &["app_wallclock", "apps-wallclock", "kvs-wallclock"],
         run: app_bench::figure,
+    },
+    ExpSpec {
+        name: "overload-wallclock",
+        title: "Overload control — admission, SLO-aware shedding, and reject-retry under open-loop saturation",
+        paper_ref: "§4.1 soft registers / §4.2 flow control (overload extension)",
+        bench: "overload_wallclock",
+        aliases: &["overload", "overload_wallclock"],
+        run: overload::figure,
     },
 ];
 
@@ -1088,7 +1098,7 @@ mod tests {
                 assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
             }
         }
-        assert_eq!(EXPERIMENTS.len(), 16);
+        assert_eq!(EXPERIMENTS.len(), 17);
         assert_eq!(spec("table4").unwrap().name, "table4-fig15");
         assert_eq!(spec("fig13_vnic_scaling").unwrap().name, "fig13");
         assert_eq!(spec("fig14_vnic_latency").unwrap().name, "fig14");
@@ -1096,6 +1106,8 @@ mod tests {
         assert_eq!(spec("wallclock").unwrap().bench, "fabric_wallclock");
         assert_eq!(spec("app_wallclock").unwrap().name, "app-wallclock");
         assert_eq!(spec("kvs-wallclock").unwrap().bench, "app_wallclock");
+        assert_eq!(spec("overload").unwrap().name, "overload-wallclock");
+        assert_eq!(spec("overload_wallclock").unwrap().bench, "overload_wallclock");
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Overload-control experiment (`overload-wallclock`): drive the real
+//! ring/fabric/dispatch path with **open-loop** traffic from 0.5× to
+//! 2.5× of its measured saturation point and show what end-to-end
+//! admission control buys.
+//!
+//! Each offered-load point runs twice over the same SRQ + connection
+//! churn topology:
+//!
+//! * **shedding on** — per-flow admission thresholds installed through
+//!   the NIC soft registers
+//!   ([`crate::nic::soft_config::Reg::AdmissionThreshold`] /
+//!   [`crate::nic::soft_config::Reg::ShedThreshold`]): past the soft
+//!   threshold the dispatch loop refuses the lowest-priority tenant
+//!   classes first ([`crate::coordinator::service::AdmissionPolicy`]),
+//!   past the hard threshold everyone; refused requests come back as
+//!   [`crate::coordinator::frame::RpcType::Reject`] frames and the
+//!   client retries them under capped exponential backoff + jitter
+//!   ([`crate::coordinator::backoff::RetryPolicy`]).
+//! * **shedding off** — no admission control: excess load piles into
+//!   the rings and the full client window, and the latency a served
+//!   request sees grows with the queue it waited in.
+//!
+//! The figure's headline columns are **goodput** (SLO-qualified
+//! completions per second), **reject rate**, **retry amplification**
+//! (`sent / (sent - retries)`), and p99. The SLO is derived from the
+//! measured saturation probe (see [`slo_us_for`]) so the experiment is
+//! host-speed-independent: without shedding, a full client window's
+//! queueing delay sits ~2× past the SLO bound, so goodput collapses
+//! even while raw throughput holds; with shedding, queue depth is
+//! capped by the admission threshold well inside the SLO and goodput
+//! stays near the saturation peak at the cost of explicit rejects.
+//!
+//! Saturation itself is estimated per run with a short closed-loop
+//! probe over the same topology — offered multipliers are relative to
+//! *this host's* capacity, not a hardcoded rate.
+
+use crate::coordinator::backoff::RetryPolicy;
+use crate::coordinator::service::EchoService;
+use crate::exp::fabric_bench::ECHO_METHOD;
+use crate::exp::harness::Figure;
+use crate::exp::wall_driver::{self, EchoWorkload, Stamp, WallConfig, WallResult};
+use crate::exp::RunOpts;
+use std::time::Duration;
+
+/// Offered-load multipliers swept over the measured saturation point.
+pub const OFFERED_X: [f64; 5] = [0.5, 1.0, 1.5, 2.0, 2.5];
+
+/// Per-flow hard admission threshold (queue depth) when shedding is on.
+pub const ADMISSION_THRESHOLD: u32 = 128;
+
+/// Per-flow soft shedding threshold: the lowest tenant class starts
+/// being refused here, ramping to all-but-class-3 at the hard
+/// threshold.
+pub const SHED_THRESHOLD: u32 = 32;
+
+/// Run one grid point (echo service + echo workload over the shared
+/// wall-clock driver, head-stamp convention — same as
+/// [`crate::exp::fabric_bench::run`]).
+pub fn run(cfg: &WallConfig) -> WallResult {
+    wall_driver::run_pair(
+        cfg,
+        Stamp::Head,
+        &mut |_flow| Box::new(EchoService),
+        &mut |_flow| Box::new(EchoWorkload { method: ECHO_METHOD, payload_bytes: cfg.payload_bytes }),
+    )
+}
+
+/// The shared topology every point (and the saturation probe) uses:
+/// SRQ mode — 8 persistent connections multiplexed over 4 client flows
+/// — plus a churn pool of 512 short-lived connections per flow, each
+/// retired after 256 sends (~2k distinct c_ids crossing the fabric per
+/// run).
+fn base_cfg(opts: &RunOpts) -> WallConfig {
+    let measure = Duration::from_millis(opts.wall_measure_ms(600));
+    WallConfig {
+        srq: true,
+        srq_flows: 4,
+        server_flows: 2,
+        window: 128,
+        payload_bytes: 16,
+        churn_period: 256,
+        churn_conns: 512,
+        warmup: measure / 4,
+        measure,
+        ..WallConfig::closed(2, 8, 128)
+    }
+}
+
+/// Closed-loop saturation probe: the same topology driven with full
+/// windows tells us this host's capacity (`achieved_mrps`) and its
+/// loaded latency profile, from which the SLO is derived.
+pub fn estimate_saturation(opts: &RunOpts) -> WallResult {
+    let mut cfg = base_cfg(opts);
+    // Churn off for the probe: capacity, not churn, is being measured.
+    cfg.churn_period = 0;
+    cfg.churn_conns = 0;
+    let measure = Duration::from_millis(opts.wall_measure_ms(300));
+    cfg.warmup = measure / 4;
+    cfg.measure = measure;
+    run(&cfg)
+}
+
+/// SLO bound for goodput accounting, in µs: the time to drain half the
+/// total client window at the measured saturation rate (so an
+/// unshedded run, whose served requests wait behind the *full*
+/// window, lands ~2× past it), floored at 4× the probe's loaded p99
+/// (so the bound never clips honest service latency on a noisy host).
+pub fn slo_us_for(cfg: &WallConfig, saturation_mrps: f64, probe_p99_us: f64) -> f64 {
+    let half_window_us = if saturation_mrps > 0.0 {
+        cfg.total_outstanding() as f64 / 2.0 / saturation_mrps
+    } else {
+        1_000.0
+    };
+    half_window_us.max(4.0 * probe_p99_us)
+}
+
+/// One overload grid point: open-loop at `offered_x` × saturation,
+/// with or without the admission/shed thresholds + client retry.
+fn point_cfg(opts: &RunOpts, saturation_mrps: f64, offered_x: f64, shedding: bool) -> WallConfig {
+    let mut cfg = base_cfg(opts);
+    cfg.open_rate_mrps = (saturation_mrps * offered_x).max(0.001);
+    if shedding {
+        cfg.admission_threshold = ADMISSION_THRESHOLD;
+        cfg.shed_threshold = SHED_THRESHOLD;
+        cfg.retry = RetryPolicy { base_us: 4, cap_us: 256, max_retries: 3 };
+    }
+    cfg
+}
+
+/// Run the sweep and emit the `dagger-bench/v1` figure.
+pub fn figure(opts: &RunOpts) -> Figure {
+    let mut fig = super::fig_for("overload-wallclock");
+
+    let probe = estimate_saturation(opts);
+    let saturation_mrps = probe.achieved_mrps.max(0.001);
+    let slo_us = slo_us_for(&base_cfg(opts), saturation_mrps, probe.p99_us);
+
+    let s = fig.series(
+        "saturation",
+        &["saturation_mrps", "probe_p50_us", "probe_p99_us", "slo_us"],
+    );
+    s.push(vec![
+        saturation_mrps.into(),
+        probe.p50_us.into(),
+        probe.p99_us.into(),
+        slo_us.into(),
+    ]);
+
+    let s = fig.series(
+        "measured",
+        &[
+            "point",
+            "offered_x",
+            "shedding",
+            // Absolute rate, derived from this host's measured
+            // saturation — named so it stays OUT of bench_diff's
+            // KEY_COLUMNS (unlike fixed `offered_mrps` grids).
+            "offered_rate_mrps",
+            "achieved_mrps",
+            "goodput_mrps",
+            "reject_rate",
+            "retry_amplification",
+            "p50_us",
+            "p99_us",
+            "slo_us",
+            "sent",
+            "completed",
+            "rejected",
+            "retries",
+            "overruns",
+            "backpressure",
+            "bad_responses",
+            "leaked_slots",
+            "fabric_rx_drops",
+            "elapsed_s",
+        ],
+    );
+    for &x in &OFFERED_X {
+        for shedding in [true, false] {
+            let mut cfg = point_cfg(opts, saturation_mrps, x, shedding);
+            cfg.slo_us = slo_us;
+            let r = run(&cfg);
+            let reject_rate = if r.sent > 0 { r.rejected as f64 / r.sent as f64 } else { 0.0 };
+            let mode = if shedding { "on" } else { "off" };
+            s.push(vec![
+                format!("{x}x {mode}").into(),
+                x.into(),
+                mode.into(),
+                cfg.open_rate_mrps.into(),
+                r.achieved_mrps.into(),
+                r.goodput_mrps.into(),
+                reject_rate.into(),
+                r.retry_amplification.into(),
+                r.p50_us.into(),
+                r.p99_us.into(),
+                slo_us.into(),
+                r.sent.into(),
+                r.completed.into(),
+                r.rejected.into(),
+                r.retries.into(),
+                r.overruns.into(),
+                r.backpressure.into(),
+                r.bad_responses.into(),
+                r.leaked_slots.into(),
+                r.fabric_rx_drops.into(),
+                r.elapsed_s.into(),
+            ]);
+        }
+    }
+    fig.note(
+        "Open-loop offered load swept as a multiple of this host's measured closed-loop \
+         saturation (see the `saturation` series). shedding=on installs per-flow admission + \
+         SLO-aware tenant shedding through the NIC soft registers and retries rejects under \
+         capped exponential backoff; shedding=off lets excess load queue. goodput_mrps counts \
+         only completions within slo_us; reject_rate = rejected/sent; retry_amplification = \
+         sent/(sent-retries). Wall-clock columns are host-dependent envelopes, not regression \
+         gates (see bench_diff).",
+    );
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offered_grid_brackets_saturation() {
+        assert!(OFFERED_X.first().unwrap() < &1.0, "must probe below saturation");
+        assert!(OFFERED_X.last().unwrap() >= &2.0, "must probe >= 2x saturation");
+        assert!(SHED_THRESHOLD < ADMISSION_THRESHOLD, "soft ramp needs a band");
+    }
+
+    #[test]
+    fn point_cfg_toggles_admission_and_retry() {
+        let opts = RunOpts { fast: true, ..Default::default() };
+        let on = point_cfg(&opts, 1.0, 2.0, true);
+        assert_eq!(on.admission_threshold, ADMISSION_THRESHOLD);
+        assert_eq!(on.shed_threshold, SHED_THRESHOLD);
+        assert!(on.retry.max_retries > 0);
+        assert!((on.open_rate_mrps - 2.0).abs() < 1e-9);
+        let off = point_cfg(&opts, 1.0, 2.0, false);
+        assert_eq!(off.admission_threshold, 0);
+        assert_eq!(off.retry.max_retries, 0, "no admission, no reject retry");
+        assert!(off.churn_period > 0 && off.churn_conns > 0, "churn on in both modes");
+    }
+
+    #[test]
+    fn slo_tracks_window_drain_time_with_a_latency_floor() {
+        let opts = RunOpts { fast: true, ..Default::default() };
+        let cfg = base_cfg(&opts);
+        // total window 8 conns x 128 = 1024; at 1 Mrps half drains in 512 us.
+        let slo = slo_us_for(&cfg, 1.0, 10.0);
+        assert!((slo - 512.0).abs() < 1e-9);
+        // A noisy host with a huge loaded p99 lifts the floor instead.
+        let slo = slo_us_for(&cfg, 1.0, 1_000.0);
+        assert!((slo - 4_000.0).abs() < 1e-9);
+        // Degenerate probe: falls back to a fixed bound, never 0.
+        assert!(slo_us_for(&cfg, 0.0, 0.0) >= 1_000.0);
+    }
+}

@@ -22,12 +22,13 @@
 //!   carries the stamp across services that rewrite the payload.
 
 use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
-use crate::coordinator::backoff::Backoff;
+use crate::coordinator::backoff::{Backoff, RetryPolicy};
 use crate::coordinator::fabric::Fabric;
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
 use crate::coordinator::rings::SlotPool;
-use crate::coordinator::service::RpcService;
+use crate::coordinator::service::{AdmissionPolicy, RpcService};
 use crate::nic::load_balancer::LbMode;
+use crate::nic::soft_config::{Reg, SoftConfig};
 use crate::runtime::EngineSpec;
 use crate::sim::Histogram;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -61,6 +62,28 @@ pub struct WallConfig {
     pub lb: LbMode,
     pub warmup: Duration,
     pub measure: Duration,
+    /// Hard admission threshold per server flow (queue depth; 0 = off).
+    /// Installed through the NIC soft register file
+    /// ([`Reg::AdmissionThreshold`]) before the dispatch threads start.
+    pub admission_threshold: u32,
+    /// Soft SLO-aware shedding threshold ([`Reg::ShedThreshold`];
+    /// 0 = off): low-priority tenant classes are refused first as depth
+    /// ramps from here to the hard threshold.
+    pub shed_threshold: u32,
+    /// Client retry policy for rejected requests: `max_retries == 0`
+    /// (the default) disables the driver's retry queue entirely.
+    pub retry: RetryPolicy,
+    /// SLO bound in µs for goodput accounting: completions slower than
+    /// this count in [`WallResult::completed`] but not
+    /// [`WallResult::slo_good`]. 0 = every good completion qualifies.
+    pub slo_us: f64,
+    /// Connection churn (SRQ short-lived connections): rotate each
+    /// flow's active connection after this many sends (0 = off, all
+    /// connections round-robin per send as before).
+    pub churn_period: u64,
+    /// Extra short-lived connections opened per client flow to feed the
+    /// churn rotation (beyond the `n_conns` persistent ones).
+    pub churn_conns: u32,
 }
 
 impl WallConfig {
@@ -78,6 +101,12 @@ impl WallConfig {
             lb: LbMode::RoundRobin,
             warmup: Duration::from_millis(150),
             measure: Duration::from_millis(600),
+            admission_threshold: 0,
+            shed_threshold: 0,
+            retry: RetryPolicy { max_retries: 0, ..RetryPolicy::DEFAULT },
+            slo_us: 0.0,
+            churn_period: 0,
+            churn_conns: 0,
         }
     }
 
@@ -117,7 +146,24 @@ pub struct WallResult {
     /// (wrong value, bad status — data-integrity failures; 0 in a
     /// correct run).
     pub bad_responses: u64,
+    /// Admission rejects harvested while measuring (each is one send
+    /// attempt answered with [`RpcType::Reject`]; a later retry that
+    /// succeeds counts separately under `completed`, so
+    /// `completed + rejected <= sent` always holds per attempt).
+    pub rejected: u64,
+    /// Re-sends issued by the driver's reject-retry queue while
+    /// measuring (a subset of `sent`).
+    pub retries: u64,
+    /// Completions that were good responses *and* met the SLO bound
+    /// ([`WallConfig::slo_us`]); the goodput numerator.
+    pub slo_good: u64,
     pub achieved_mrps: f64,
+    /// SLO-qualified throughput: `slo_good / elapsed`. Equals
+    /// `achieved_mrps` when no SLO is configured and nothing was bad.
+    pub goodput_mrps: f64,
+    /// `sent / (sent - retries)`: 1.0 when nothing was retried; grows
+    /// as overload turns each logical request into several sends.
+    pub retry_amplification: f64,
     /// Throughput per client driver thread (the paper's "per-core"
     /// axis counts request-issuing cores; the fabric and server threads
     /// are accounted separately, like the paper's dedicated FPGA).
@@ -225,6 +271,20 @@ pub struct FlowDriver {
     workload: Box<dyn WallWorkload>,
     /// Reused request-payload build buffer.
     buf: Vec<u8>,
+    /// Connection-churn rotation: after `churn_period` sends the active
+    /// connection is retired and the next one in `conns` takes over
+    /// (0 = off: every send round-robins over all of `conns`).
+    churn_period: u64,
+    churn_sends: u64,
+    /// Index of the currently-active connection under churn.
+    churn_active: usize,
+    /// Per-slot attempt number of the in-flight request (0 = original
+    /// send): how the harvest learns whether a reject may still retry.
+    attempts: Vec<u32>,
+    /// Rejected requests awaiting their backoff deadline:
+    /// `(due_ns, attempt, reject frame)` — the reject echoes the
+    /// request payload, so the frame is all the pump needs to re-send.
+    retry_q: Vec<(u64, u32, Frame)>,
 }
 
 impl FlowDriver {
@@ -237,14 +297,27 @@ impl FlowDriver {
         workload: Box<dyn WallWorkload>,
     ) -> FlowDriver {
         assert!(!conns.is_empty(), "a flow driver needs at least one connection");
+        let cap = window_capacity.max(1);
         FlowDriver {
             client,
             conns,
-            pool: SlotPool::new(window_capacity.max(1)),
+            pool: SlotPool::new(cap),
             rr: 0,
             workload,
             buf: Vec::with_capacity(MAX_PAYLOAD_BYTES),
+            churn_period: 0,
+            churn_sends: 0,
+            churn_active: 0,
+            attempts: vec![0; cap],
+            retry_q: Vec::new(),
         }
+    }
+
+    /// Enable connection churn on this driver (see
+    /// [`WallConfig::churn_period`]).
+    pub fn with_churn(mut self, period: u64) -> FlowDriver {
+        self.churn_period = period;
+        self
     }
 }
 
@@ -257,6 +330,18 @@ struct Tally {
     overruns: u64,
     leaked_slots: u64,
     bad_responses: u64,
+    rejected: u64,
+    retries: u64,
+    slo_good: u64,
+}
+
+/// Per-thread measurement knobs derived from [`WallConfig`] (plain data
+/// so `drive` threads need no config clone).
+#[derive(Clone, Copy)]
+struct DriveOpts {
+    /// SLO bound in ns (0 = every good completion qualifies).
+    slo_ns: u64,
+    retry: RetryPolicy,
 }
 
 /// Open-loop pacing state for one driver thread.
@@ -334,6 +419,19 @@ pub fn build_client_drivers(
         let c_id = fabric.connect(client_addr, flow, server_addr, cfg.lb);
         conns_of[flow as usize].push(c_id);
     }
+    // Churn pool: extra short-lived connections per flow, opened up
+    // front (the loop-back fabric registers connections before start)
+    // and rotated through at runtime — each serves `churn_period` sends
+    // then retires, modeling SRQ connection churn with thousands of
+    // distinct c_ids crossing one flow's ring pair.
+    if cfg.churn_period > 0 {
+        for f in 0..flows {
+            for _ in 0..cfg.churn_conns {
+                let c_id = fabric.connect(client_addr, f, server_addr, cfg.lb);
+                conns_of[f as usize].push(c_id);
+            }
+        }
+    }
     (0..flows)
         .map(|f| {
             FlowDriver::new(
@@ -342,6 +440,7 @@ pub fn build_client_drivers(
                 caps[f as usize],
                 workloads(f),
             )
+            .with_churn(cfg.churn_period)
         })
         .collect()
 }
@@ -375,6 +474,22 @@ pub fn run_pair(
     let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
     for f in 0..cfg.server_flows {
         server.add_service_flow(f, fabric.rings(server_addr, f), services(f));
+    }
+    // Overload control is configured the way the paper configures
+    // everything runtime-tunable: through the NIC's soft register file
+    // (validated MMIO writes), then read back into the dispatch policy.
+    if cfg.admission_threshold > 0 {
+        let mut soft = SoftConfig::new(cfg.server_flows);
+        soft.write(Reg::AdmissionThreshold, cfg.admission_threshold)
+            .expect("admission threshold rejected by soft config");
+        if cfg.shed_threshold > 0 {
+            soft.write(Reg::ShedThreshold, cfg.shed_threshold)
+                .expect("shed threshold rejected by soft config");
+        }
+        server.set_admission(AdmissionPolicy::from_regs(
+            soft.read(Reg::AdmissionThreshold),
+            soft.read(Reg::ShedThreshold),
+        ));
     }
 
     let drivers = build_client_drivers(cfg, &mut fabric, client_addr, server_addr, workloads);
@@ -413,6 +528,10 @@ pub fn run_measurement(
     for (i, d) in drivers.drain(..).enumerate() {
         per_thread_flows[i % cfg.n_threads as usize].push(d);
     }
+    let opts = DriveOpts {
+        slo_ns: (cfg.slo_us * 1000.0).max(0.0) as u64,
+        retry: cfg.retry,
+    };
     let mut client_joins = Vec::new();
     for (t, mine) in per_thread_flows.into_iter().enumerate() {
         debug_assert!(!mine.is_empty(), "n_threads <= flows guarantees work per thread");
@@ -430,7 +549,7 @@ pub fn run_measurement(
         client_joins.push(
             std::thread::Builder::new()
                 .name(format!("dagger-bench-{t}"))
-                .spawn(move || drive(mine, stamp, pace, &ctl))
+                .spawn(move || drive(mine, stamp, pace, opts, &ctl))
                 .expect("spawn bench client"),
         );
     }
@@ -455,6 +574,9 @@ pub fn run_measurement(
         out.overruns += tally.overruns;
         out.leaked_slots += tally.leaked_slots;
         out.bad_responses += tally.bad_responses;
+        out.rejected += tally.rejected;
+        out.retries += tally.retries;
+        out.slo_good += tally.slo_good;
     }
     for s in &servers {
         s.stop_flag().store(true, Ordering::SeqCst);
@@ -465,6 +587,12 @@ pub fn run_measurement(
     }
 
     out.achieved_mrps = out.completed as f64 / elapsed_s / 1e6;
+    out.goodput_mrps = out.slo_good as f64 / elapsed_s / 1e6;
+    out.retry_amplification = if out.sent == 0 {
+        1.0
+    } else {
+        out.sent as f64 / out.sent.saturating_sub(out.retries).max(1) as f64
+    };
     out.per_core_mrps = out.achieved_mrps / cfg.n_threads as f64;
     if hist.count() > 0 {
         let q = hist.quantiles_ns(&[0.50, 0.90, 0.99]);
@@ -485,6 +613,7 @@ fn drive(
     mut flows: Vec<FlowDriver>,
     stamp: Stamp,
     mut pace: Option<Pace>,
+    opts: DriveOpts,
     ctl: &Controls,
 ) -> Tally {
     let mut tally = Tally {
@@ -495,6 +624,9 @@ fn drive(
         overruns: 0,
         leaked_slots: 0,
         bad_responses: 0,
+        rejected: 0,
+        retries: 0,
+        slo_good: 0,
     };
     let mut backoff = Backoff::new();
     let mut open_rr = 0usize; // open-loop round-robin over this thread's flows
@@ -511,15 +643,37 @@ fn drive(
         // late-swept responses tens of µs early and skew the quantiles
         // low exactly at the connection-scale points.
         for d in flows.iter_mut() {
-            let FlowDriver { client, pool, workload, .. } = d;
+            let FlowDriver { client, pool, workload, attempts, retry_q, .. } = d;
             let now_ns = ctl.epoch.elapsed().as_nanos() as u64;
             let n = client.poll_completions_with(|fr| {
-                pool.free(stamp.tag(fr));
+                let tag = stamp.tag(fr);
+                pool.free(tag);
+                // An admission reject frees the slot like any response,
+                // but is never `observe`d (the payload is the echoed
+                // request, not an answer). If the retry budget allows,
+                // the request re-enters through the backoff queue.
+                if fr.rpc_type() == Some(RpcType::Reject) {
+                    if in_measure {
+                        tally.rejected += 1;
+                    }
+                    let prior = attempts.get(tag as usize).copied().unwrap_or(0);
+                    if opts.retry.should_retry(prior) {
+                        let attempt = prior + 1;
+                        let seed = ((fr.c_id() as u64) << 32) ^ fr.rpc_id() as u64;
+                        let due = now_ns + opts.retry.backoff_ns(attempt, seed);
+                        retry_q.push((due, attempt, *fr));
+                    }
+                    return;
+                }
                 let ok = workload.observe(fr);
                 if in_measure {
                     tally.completed += 1;
                     tally.bad_responses += u64::from(!ok);
-                    tally.hist.record(now_ns.saturating_sub(stamp.ts(fr)).max(1));
+                    let rtt = now_ns.saturating_sub(stamp.ts(fr)).max(1);
+                    tally.hist.record(rtt);
+                    if ok && (opts.slo_ns == 0 || rtt <= opts.slo_ns) {
+                        tally.slo_good += 1;
+                    }
                 }
             });
             if n > 0 {
@@ -528,6 +682,14 @@ fn drive(
         }
 
         if !stopping {
+            // Drive the reject-retry queues ahead of new work: a
+            // retried request is an already-admitted schedule slot, so
+            // it goes out regardless of pacing mode.
+            for d in flows.iter_mut() {
+                if pump_retries(d, stamp, ctl, in_measure, &mut tally) {
+                    progressed = true;
+                }
+            }
             match &mut pace {
                 // Closed loop: keep every connection's window full.
                 None => {
@@ -620,6 +782,59 @@ fn send_one_per_free_slot(
     any
 }
 
+/// Re-send rejected requests whose backoff deadline has passed. Each
+/// entry re-enters with a fresh slot, rpc_id, and stamp (RTT is
+/// measured per attempt; amplification is what ties the attempts
+/// together). A full window or TX ring leaves the entry queued.
+fn pump_retries(
+    d: &mut FlowDriver,
+    stamp: Stamp,
+    ctl: &Controls,
+    in_measure: bool,
+    tally: &mut Tally,
+) -> bool {
+    if d.retry_q.is_empty() {
+        return false;
+    }
+    let mut any = false;
+    let now = ctl.epoch.elapsed().as_nanos() as u64;
+    let mut i = 0;
+    while i < d.retry_q.len() {
+        if d.retry_q[i].0 > now {
+            i += 1;
+            continue;
+        }
+        let Some(slot) = d.pool.alloc() else {
+            break; // window full: retry next pass
+        };
+        let (_, attempt, reject) = d.retry_q.swap_remove(i);
+        let mut frame = Frame::new(
+            RpcType::Request,
+            reject.flags(),
+            reject.c_id(),
+            d.client.next_rpc_id(),
+            &reject.payload(),
+        );
+        stamp.write(&mut frame, ctl.epoch.elapsed().as_nanos() as u64, slot);
+        d.attempts[slot as usize] = attempt;
+        match d.client.send_frame(frame) {
+            Ok(()) => {
+                tally.sent += u64::from(in_measure);
+                tally.retries += u64::from(in_measure);
+                d.client.retries.fetch_add(1, Ordering::Relaxed);
+                any = true;
+            }
+            Err(_) => {
+                d.pool.free(slot);
+                tally.backpressure += u64::from(in_measure);
+                d.retry_q.push((now + 1_000, attempt, reject));
+                break;
+            }
+        }
+    }
+    any
+}
+
 /// Allocate a slot, build the workload's next request, stamp it
 /// (timestamp + slot tag), send it. On `RingFull` the slot is returned
 /// to the pool and `backpressure` is incremented; `WindowFull` touches
@@ -634,8 +849,21 @@ fn send_once(
     let Some(slot) = d.pool.alloc() else {
         return SendOutcome::WindowFull;
     };
-    let c_id = d.conns[d.rr % d.conns.len()];
-    d.rr = d.rr.wrapping_add(1);
+    let c_id = if d.churn_period > 0 {
+        // Churn: one short-lived active connection at a time, retired
+        // after `churn_period` sends.
+        let c = d.conns[d.churn_active % d.conns.len()];
+        d.churn_sends += 1;
+        if d.churn_sends % d.churn_period == 0 {
+            d.churn_active = (d.churn_active + 1) % d.conns.len();
+        }
+        c
+    } else {
+        let c = d.conns[d.rr % d.conns.len()];
+        d.rr = d.rr.wrapping_add(1);
+        c
+    };
+    d.attempts[slot as usize] = 0;
     d.buf.clear();
     let method = d.workload.fill(&mut d.buf);
     match stamp {
@@ -757,5 +985,60 @@ mod tests {
         );
         assert!(r.completed > 0);
         assert_eq!(r.bad_responses, r.completed, "every response must be flagged");
+    }
+
+    /// Closed-loop flood against a hard admission threshold of 1: the
+    /// dispatch loop sheds most of the window, rejects free their slots
+    /// (lossless drain still holds), and the reject-retry queue re-sends
+    /// with amplification > 1.
+    #[test]
+    fn admission_rejects_are_counted_and_retried() {
+        let mut cfg = tiny(WallConfig::closed(1, 1, 64));
+        cfg.admission_threshold = 1;
+        cfg.retry = RetryPolicy { base_us: 1, cap_us: 8, max_retries: 2 };
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.rejected > 0, "a 64-deep flood over threshold 1 must shed");
+        assert!(r.retries > 0, "rejects must re-enter through the retry queue");
+        assert!(r.retry_amplification > 1.0);
+        assert_eq!(r.leaked_slots, 0, "rejects ack their slots like responses");
+        assert_eq!(r.bad_responses, 0, "rejects are not integrity failures");
+    }
+
+    /// The SLO bound partitions completions into goodput: a 1-second
+    /// bound admits every loop-back RTT, a 1-nanosecond bound none.
+    #[test]
+    fn slo_bound_partitions_completions_into_goodput() {
+        let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+        cfg.slo_us = 1_000_000.0;
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.completed > 0);
+        assert_eq!(r.slo_good, r.completed, "1-second SLO admits every RTT");
+        assert!((r.goodput_mrps - r.achieved_mrps).abs() < 1e-9);
+        let mut cfg2 = tiny(WallConfig::closed(1, 2, 4));
+        cfg2.slo_us = 0.001; // 1 ns: no cross-thread RPC round-trips that fast
+        let r2 = echo_pair(&cfg2, Stamp::Head);
+        assert!(r2.completed > 0);
+        assert_eq!(r2.slo_good, 0, "1-ns SLO admits nothing");
+        assert_eq!(r2.goodput_mrps, 0.0);
+    }
+
+    /// SRQ connection churn: 64 short-lived c_ids rotate over one flow,
+    /// each retired after 4 sends. Every response must still route home
+    /// through its own c_id — a broken rotation would strand slots.
+    #[test]
+    fn connection_churn_rotates_short_lived_connections() {
+        let mut cfg = tiny(WallConfig::closed(1, 1, 2));
+        cfg.srq = true;
+        cfg.srq_flows = 1;
+        cfg.churn_period = 4;
+        cfg.churn_conns = 63;
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.completed > 0);
+        assert!(
+            r.completed + r.sent > 64,
+            "enough traffic to cycle the whole churn pool at period 4"
+        );
+        assert_eq!(r.leaked_slots, 0, "every churned c_id routed its responses home");
+        assert_eq!(r.bad_responses, 0);
     }
 }

@@ -99,7 +99,9 @@ impl DaggerNic {
         }
         let mut extra_ns = 0u64;
         let flow = match frame.rpc_type() {
-            Some(RpcType::Response) => {
+            // Rejects are response-direction frames (admission refusals)
+            // and steer exactly like responses.
+            Some(RpcType::Response) | Some(RpcType::Reject) => {
                 // Steer to the flow the request originated from (§4.2).
                 match self.cm.lookup(Agent::IncomingFlow, frame.c_id()) {
                     Some((t, lat)) => {
@@ -196,6 +198,16 @@ mod tests {
         let mut n = nic();
         let resp = Frame::new(RpcType::Response, 0, 7, 5, b"val");
         match n.ingress(0, &resp) {
+            Ingress::Deliver { flow, .. } => assert_eq!(flow, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ingress_reject_steers_like_a_response() {
+        let mut n = nic();
+        let rej = Frame::new(RpcType::Reject, 0, 7, 5, b"val");
+        match n.ingress(0, &rej) {
             Ingress::Deliver { flow, .. } => assert_eq!(flow, 3),
             other => panic!("{other:?}"),
         }

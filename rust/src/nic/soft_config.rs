@@ -18,6 +18,15 @@ pub enum Reg {
     TxRingEntries = 0x10,
     PollingMode = 0x14,
     LoadThresholdKrps = 0x18,
+    /// Hard admission threshold: per-flow queue depth (RX backlog +
+    /// parked requests) beyond which the dispatch loop rejects every
+    /// request with an [`crate::coordinator::frame::RpcType::Reject`]
+    /// frame. 0 disables admission control.
+    AdmissionThreshold = 0x1C,
+    /// Soft shedding threshold: queue depth at which SLO-aware load
+    /// shedding starts refusing the lowest-priority tenants first
+    /// (ramping toward the hard threshold). 0 disables shedding.
+    ShedThreshold = 0x20,
 }
 
 /// Polling source for the UPI RX path (§4.4.1): the NIC either polls its
@@ -41,6 +50,12 @@ pub struct SoftConfig {
     /// Load threshold (Krps) above which batching ramps up and polling
     /// switches to direct-LLC.
     pub load_threshold_krps: u32,
+    /// Hard per-flow admission threshold (queue depth; 0 = off). See
+    /// [`Reg::AdmissionThreshold`].
+    pub admission_threshold: u32,
+    /// Soft shedding threshold (queue depth; 0 = off). Must not exceed
+    /// the hard threshold when both are set. See [`Reg::ShedThreshold`].
+    pub shed_threshold: u32,
     /// Max batch the adaptive controller may select (bounded by the hard
     /// config's ring provisioning).
     pub max_batch: u32,
@@ -57,6 +72,8 @@ impl SoftConfig {
             tx_ring_entries: 32,
             polling_mode: PollingMode::LocalCache,
             load_threshold_krps: 3000,
+            admission_threshold: 0,
+            shed_threshold: 0,
             max_batch: 4,
             mmio_writes: 0,
         }
@@ -89,6 +106,24 @@ impl SoftConfig {
                 }
             }
             Reg::LoadThresholdKrps => self.load_threshold_krps = value,
+            Reg::AdmissionThreshold => {
+                if self.shed_threshold != 0 && value != 0 && value < self.shed_threshold {
+                    return Err(format!(
+                        "admission threshold {value} below shed threshold {}",
+                        self.shed_threshold
+                    ));
+                }
+                self.admission_threshold = value;
+            }
+            Reg::ShedThreshold => {
+                if self.admission_threshold != 0 && value > self.admission_threshold {
+                    return Err(format!(
+                        "shed threshold {value} above admission threshold {}",
+                        self.admission_threshold
+                    ));
+                }
+                self.shed_threshold = value;
+            }
         }
         Ok(())
     }
@@ -102,6 +137,8 @@ impl SoftConfig {
             Reg::TxRingEntries => self.tx_ring_entries,
             Reg::PollingMode => self.polling_mode as u32,
             Reg::LoadThresholdKrps => self.load_threshold_krps,
+            Reg::AdmissionThreshold => self.admission_threshold,
+            Reg::ShedThreshold => self.shed_threshold,
         }
     }
 
@@ -157,6 +194,26 @@ mod tests {
         assert!(sc.write(Reg::BatchSize, 65).is_err());
         assert!(sc.write(Reg::ActiveFlows, 0).is_err());
         assert_eq!(sc.batch_size, 1); // unchanged
+    }
+
+    #[test]
+    fn admission_registers_read_back_and_validate_ordering() {
+        let mut sc = SoftConfig::new(8);
+        // Off by default: admission is opt-in.
+        assert_eq!(sc.read(Reg::AdmissionThreshold), 0);
+        assert_eq!(sc.read(Reg::ShedThreshold), 0);
+        sc.write(Reg::AdmissionThreshold, 256).unwrap();
+        sc.write(Reg::ShedThreshold, 64).unwrap();
+        assert_eq!(sc.read(Reg::AdmissionThreshold), 256);
+        assert_eq!(sc.read(Reg::ShedThreshold), 64);
+        // Shedding must engage at or below the hard threshold.
+        assert!(sc.write(Reg::ShedThreshold, 512).is_err());
+        assert!(sc.write(Reg::AdmissionThreshold, 32).is_err());
+        assert_eq!(sc.read(Reg::ShedThreshold), 64, "failed writes change nothing");
+        assert_eq!(sc.read(Reg::AdmissionThreshold), 256);
+        // Disabling the hard threshold is always allowed.
+        sc.write(Reg::AdmissionThreshold, 0).unwrap();
+        assert_eq!(sc.read(Reg::AdmissionThreshold), 0);
     }
 
     #[test]

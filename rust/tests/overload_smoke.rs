@@ -1,0 +1,174 @@
+//! Integration smoke for the overload-control benchmark: a `--fast`
+//! end-to-end run must produce a schema-valid `dagger-bench/v1`
+//! artifact sweeping offered load from below to well past saturation,
+//! with each point run twice (shedding on / off), and the admission /
+//! reject / retry invariants must hold.
+//!
+//! Wall-clock numbers are host-dependent, so everything here is a
+//! structural or loosely-bounded envelope assert — never an exact rate.
+
+use dagger::cli::Args;
+use dagger::exp::harness::{json::Json, Figure, Value};
+use dagger::exp::run_figure;
+
+fn num(v: &Value) -> f64 {
+    match v {
+        Value::F64(f) => *f,
+        Value::U64(u) => *u as f64,
+        other => panic!("expected a number, got {other:?}"),
+    }
+}
+
+fn text(v: &Value) -> &str {
+    match v {
+        Value::Str(s) => s,
+        other => panic!("expected a string, got {other:?}"),
+    }
+}
+
+#[test]
+fn fast_run_emits_overload_sweep_with_admission_invariants() {
+    let fig = run_figure("overload-wallclock", &Args::parse(&["--fast".to_string()]))
+        .expect("overload-wallclock runs");
+    assert_eq!(fig.name, "overload-wallclock");
+
+    // ----------------------------------------------- saturation series
+    let sat = fig
+        .series
+        .iter()
+        .find(|s| s.label == "saturation")
+        .expect("saturation series");
+    assert_eq!(sat.rows.len(), 1);
+    let sat_col = |name: &str| {
+        sat.columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("saturation column {name}"))
+    };
+    let saturation = num(&sat.rows[0][sat_col("saturation_mrps")]);
+    let slo_us = num(&sat.rows[0][sat_col("slo_us")]);
+    assert!(saturation > 0.0, "dead saturation probe");
+    assert!(slo_us > 0.0, "SLO bound must be positive");
+
+    // ------------------------------------------------- measured series
+    let measured = fig
+        .series
+        .iter()
+        .find(|s| s.label == "measured")
+        .expect("measured series");
+    let col = |name: &str| {
+        measured
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("column {name}"))
+    };
+    let x_c = col("offered_x");
+    let mode_c = col("shedding");
+    let sent_c = col("sent");
+    let completed_c = col("completed");
+    let rejected_c = col("rejected");
+    let retries_c = col("retries");
+    let amp_c = col("retry_amplification");
+    let goodput_c = col("goodput_mrps");
+    let achieved_c = col("achieved_mrps");
+    let reject_rate_c = col("reject_rate");
+
+    // Both shedding modes present at every offered-load multiplier, and
+    // the sweep brackets saturation (below 1x and at least 2x).
+    let rows_at = |x: f64, mode: &str| -> Vec<&Vec<Value>> {
+        measured
+            .rows
+            .iter()
+            .filter(|r| num(&r[x_c]) == x && text(&r[mode_c]) == mode)
+            .collect()
+    };
+    let xs: Vec<f64> = {
+        let mut xs: Vec<f64> = measured.rows.iter().map(|r| num(&r[x_c])).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup();
+        xs
+    };
+    assert!(xs.first().unwrap() < &1.0, "no below-saturation point");
+    assert!(xs.last().unwrap() >= &2.0, "no >=2x overload point");
+    for &x in &xs {
+        assert_eq!(rows_at(x, "on").len(), 1, "missing shedding-on row at {x}x");
+        assert_eq!(rows_at(x, "off").len(), 1, "missing shedding-off row at {x}x");
+    }
+
+    // Per-row invariants. The in-flight window bounds how many attempts
+    // can still be unresolved at measurement-window edges, so the
+    // accounting identity carries that slack.
+    let slack = 2.0 * 1024.0; // 2x total client window (8 conns x 128)
+    for row in &measured.rows {
+        let (sent, completed, rejected, retries) = (
+            num(&row[sent_c]),
+            num(&row[completed_c]),
+            num(&row[rejected_c]),
+            num(&row[retries_c]),
+        );
+        assert!(num(&row[achieved_c]) > 0.0, "a grid point served nothing: {row:?}");
+        // No attempt terminates twice: completions + rejects can never
+        // exceed the attempts that were actually sent (modulo edges).
+        assert!(
+            completed + rejected <= sent + slack,
+            "over-terminated: sent={sent} completed={completed} rejected={rejected}"
+        );
+        // Integrity columns are hard gates even on a noisy host.
+        for name in ["bad_responses", "leaked_slots", "fabric_rx_drops"] {
+            assert_eq!(num(&row[col(name)]), 0.0, "{name} nonzero at {row:?}");
+        }
+        let amp = num(&row[amp_c]);
+        assert!(amp >= 1.0, "retry amplification below 1: {amp}");
+        if text(&row[mode_c]) == "off" {
+            // No admission control => nothing can be rejected/retried.
+            assert_eq!(rejected, 0.0, "reject without admission: {row:?}");
+            assert_eq!(retries, 0.0, "retry without admission: {row:?}");
+            assert!((amp - 1.0).abs() < 1e-9);
+        } else if retries == 0.0 {
+            assert!((amp - 1.0).abs() < 1e-9);
+        }
+    }
+
+    // Shedding engages where it should: essentially quiet below
+    // saturation, busy past 2x. (The 0.5x bound is loose: open-loop
+    // bursts on a noisy CI host can brush the threshold briefly.)
+    let first = rows_at(*xs.first().unwrap(), "on")[0];
+    assert!(
+        num(&first[reject_rate_c]) <= 0.05,
+        "heavy shedding below saturation: {}",
+        num(&first[reject_rate_c])
+    );
+    let last = rows_at(*xs.last().unwrap(), "on")[0];
+    assert!(
+        num(&last[rejected_c]) > 0.0,
+        "admission never engaged at {}x offered load",
+        xs.last().unwrap()
+    );
+
+    // The headline comparison: at >=2x offered load the unshedded run
+    // must show visible distress — SLO-qualified goodput no better than
+    // the shedded run's, or explicit overload signals (overruns /
+    // backpressure). Loose by design: it proves the mechanism works,
+    // not a specific margin.
+    let over_x: Vec<f64> = xs.iter().copied().filter(|x| *x >= 2.0).collect();
+    assert!(!over_x.is_empty());
+    let distressed = over_x.iter().any(|&x| {
+        let on = rows_at(x, "on")[0];
+        let off = rows_at(x, "off")[0];
+        let off_signals =
+            num(&off[col("overruns")]) + num(&off[col("backpressure")]) > 0.0;
+        off_signals || num(&off[goodput_c]) <= num(&on[goodput_c]) * 1.05
+    });
+    assert!(distressed, "no overload point shows shedding helping or queues filling");
+
+    // ------------------------------------------------- artifact schema
+    let dir = std::env::temp_dir().join(format!("dagger_overload_{}", std::process::id()));
+    let paths = fig.write_artifacts(&dir).expect("artifacts written");
+    assert!(paths[0].ends_with("BENCH_overload-wallclock.json"));
+    let fig_text = std::fs::read_to_string(&paths[0]).unwrap();
+    let j = Json::parse(&fig_text).expect("valid JSON");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("dagger-bench/v1"));
+    assert_eq!(Figure::from_json(&fig_text).expect("round-trip"), fig);
+    let _ = std::fs::remove_dir_all(&dir);
+}
