@@ -1,0 +1,23 @@
+//! `cargo bench --bench trace_wallclock` — the request-tracing
+//! benchmark: two topologies (closed-loop echo pair; 3-tier flightreg
+//! chain with calibrated sleeping tier costs) run with 1-in-16 stage
+//! sampling through the in-frame trace word.
+//!
+//! Emits the sampled per-stage latency breakdown
+//! (network/rpc/queue/app, telescoping to the traced end-to-end
+//! total), per-tier exclusive service times with the attributed
+//! bottleneck tier (the chain must attribute `passport`, §5.7), and
+//! the unified `MetricsSnapshot` dump (fabric/NIC/client/server/trace
+//! counters) flattened per point.
+//!
+//! Flags (after `--`): `--fast` (1/8 wall duration), `--duration-us N`
+//! (pin the per-point measurement window), `--out-dir DIR`.
+//! Writes `BENCH_trace-wallclock.json` / `.csv` (default `./bench_out`).
+//!
+//! NOTE: wall-clock numbers are host-dependent — the structural claims
+//! (phase telescoping, bottleneck attribution, snapshot coherence) are
+//! the reproducible part. See REPRODUCING.md §Request-tracing benchmark.
+
+fn main() {
+    dagger::exp::harness::bench_main("trace-wallclock");
+}

@@ -15,6 +15,7 @@
 
 use crate::coordinator::api::{CallHandle, RpcClient};
 use crate::coordinator::backoff::Backoff;
+use crate::coordinator::frame::Frame;
 use crate::coordinator::service::{CallToken, PendingCall, Request, Response, RpcService};
 use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
 use std::collections::HashMap;
@@ -267,17 +268,38 @@ impl TierService {
 }
 
 impl RpcService for TierService {
-    fn call(&mut self, _req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>) -> Response {
         self.cost.run();
         let hops_below = match &self.next {
             None => 0,
-            Some(client) => match client.call_blocking(CHAIN_METHOD, b"") {
-                Some(resp) => resp.first().copied().unwrap_or(0),
-                None => {
-                    self.failures.fetch_add(1, Ordering::Relaxed);
-                    return vec![0].into();
+            Some(client) => {
+                // Trace propagation: a traced request carries its trace
+                // word in payload bytes 32..36 (frame word 12, see
+                // [`crate::coordinator::frame::Frame::set_trace`]).
+                // Copy it into the sub-RPC's payload at the same offset
+                // — zero-padded below it, so the downstream KEY_WORDS
+                // steering hash is unchanged — and the inner tiers
+                // stamp their own service spans under the same id.
+                let trace_word = req
+                    .payload
+                    .get(Frame::TRACE_STAMP_OFFSET..Frame::TRACE_STAMP_OFFSET + 4)
+                    .filter(|w| w.iter().any(|&b| b != 0));
+                let mut sub_buf = [0u8; Frame::TRACE_STAMP_OFFSET + 4];
+                let sub_payload: &[u8] = match trace_word {
+                    Some(w) => {
+                        sub_buf[Frame::TRACE_STAMP_OFFSET..].copy_from_slice(w);
+                        &sub_buf
+                    }
+                    None => b"",
+                };
+                match client.call_blocking(CHAIN_METHOD, sub_payload) {
+                    Some(resp) => resp.first().copied().unwrap_or(0),
+                    None => {
+                        self.failures.fetch_add(1, Ordering::Relaxed);
+                        return vec![0].into();
+                    }
                 }
-            },
+            }
         };
         vec![1 + hops_below].into()
     }

@@ -71,6 +71,13 @@ COMMANDS:
                                  overload-wallclock sweeps open-loop load to
                                  2.5x saturation with admission/shedding
                                  on vs off)
+    trace                        run the request-tracing benchmark and dump the
+                                 sampled stage breakdown, per-tier exclusive
+                                 times, and the unified metrics snapshot
+                                 [--fast] [--seed N] [--duration-us N]
+                                 [--out-dir DIR] (alias for
+                                 `sim trace-wallclock`; 1-in-16 sampling
+                                 through the in-frame trace word)
     idl-gen <file.idl>           generate Rust service stubs from an IDL file
                                  [--out <path>]
     serve                        run a KVS server + client over the loop-back
@@ -111,6 +118,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "info" => cmd_info(),
         "list" => cmd_list(),
         "sim" => cmd_sim(args),
+        "trace" => cmd_trace(args),
         "idl-gen" => cmd_idl_gen(args),
         "bench-diff" => cmd_bench_diff(args),
         "serve" => crate::apps::serve::run(args),
@@ -161,6 +169,22 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     print!("{}", fig.render_text());
     // Write artifacts when a destination is named, via the same
     // resolution the bench targets use (--out-dir, then $DAGGER_BENCH_DIR).
+    if let Some(dir) = crate::exp::harness::explicit_artifact_dir(args) {
+        for p in fig.write_artifacts(&dir)? {
+            println!("wrote {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+/// `dagger trace` — the request-tracing benchmark as a first-class
+/// subcommand: runs the `trace-wallclock` figure (sampled stage
+/// breakdown + bottleneck-tier attribution + unified metrics snapshot)
+/// and writes the `dagger-bench/v1` artifacts when a destination is
+/// named, exactly like `dagger sim trace-wallclock`.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let fig = crate::exp::run_figure("trace-wallclock", args)?;
+    print!("{}", fig.render_text());
     if let Some(dir) = crate::exp::harness::explicit_artifact_dir(args) {
         for p in fig.write_artifacts(&dir)? {
             println!("wrote {}", p.display());

@@ -46,6 +46,7 @@ use crate::coordinator::service::{
     tenant_class, AdmissionLedger, AdmissionPolicy, CallToken, HandlerService, Request, Response,
     RpcService, TENANT_CLASSES,
 };
+use crate::telemetry::{self, Stage, TraceSink};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -813,6 +814,9 @@ pub struct RpcThreadedServer {
     /// class 0 first — see
     /// [`crate::coordinator::service::AdmissionPolicy`]).
     pub shed_by_class: Arc<[AtomicU64; TENANT_CLASSES]>,
+    /// Sampled stage-trace sink ([`crate::telemetry::TraceSink`]);
+    /// `None` (the default) keeps the dispatch hot path trace-free.
+    tracer: Option<Arc<TraceSink>>,
 }
 
 /// Reply context of a parked request, held until its token finishes.
@@ -836,7 +840,16 @@ impl RpcThreadedServer {
             admission: None,
             rejected: Arc::new(AtomicU64::new(0)),
             shed_by_class: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            tracer: None,
         }
+    }
+
+    /// Install the stage-trace sink (call before
+    /// [`RpcThreadedServer::start`]). Dispatch threads then record
+    /// [`Stage::DispatchDequeue`] / [`Stage::ServiceStart`] /
+    /// [`Stage::ServiceEnd`] events for frames carrying a trace id.
+    pub fn set_tracer(&mut self, sink: Arc<TraceSink>) {
+        self.tracer = Some(sink);
     }
 
     /// Install overload admission control on every flow (call before
@@ -901,6 +914,8 @@ impl RpcThreadedServer {
                 parked: HashMap::new(),
                 next_token: 1,
                 done: Vec::new(),
+                tracer: self.tracer.clone(),
+                parked_traces: HashMap::new(),
             };
             joins.push(std::thread::spawn(move || match mode {
                 DispatchMode::Dispatch => dispatch_loop(fl),
@@ -980,6 +995,11 @@ struct FlowLoop {
     parked: HashMap<CallToken, ReplyCtx>,
     next_token: CallToken,
     done: Vec<(CallToken, Vec<u8>)>,
+    /// Stage-trace sink (`None` = tracing off, the hot-path default).
+    tracer: Option<Arc<TraceSink>>,
+    /// Trace ids of parked requests, so [`Stage::ServiceEnd`] can be
+    /// stamped when the token finishes in `flush_parked`.
+    parked_traces: HashMap<CallToken, u32>,
 }
 
 impl FlowLoop {
@@ -1029,6 +1049,17 @@ impl FlowLoop {
         self.next_token += 1;
         let method = frame.flags();
         let payload = frame.payload();
+        // Traced request? (admitted frames only — a reject's lifetime
+        // ends above and its stages are attributed at the client).
+        let trace = match &self.tracer {
+            Some(sink) => frame.trace_id().map(|id| (sink.clone(), id)),
+            None => None,
+        };
+        if let Some((sink, id)) = &trace {
+            let tier = self.service.name();
+            sink.record(*id, Stage::DispatchDequeue, tier, telemetry::now_ns());
+            sink.record(*id, Stage::ServiceStart, tier, telemetry::now_ns());
+        }
         let resp = self.service.call(Request {
             method,
             c_id: frame.c_id(),
@@ -1039,6 +1070,9 @@ impl FlowLoop {
         });
         match resp {
             Response::Ready(p) => {
+                if let Some((sink, id)) = &trace {
+                    sink.record(*id, Stage::ServiceEnd, self.service.name(), telemetry::now_ns());
+                }
                 self.handled.fetch_add(1, Ordering::Relaxed);
                 let f = response_frame(
                     &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
@@ -1049,6 +1083,9 @@ impl FlowLoop {
             }
             Response::Pending(pc) => {
                 self.sub_rpcs.fetch_add(pc.sub_calls as u64, Ordering::Relaxed);
+                if let Some((_, id)) = &trace {
+                    self.parked_traces.insert(token, *id);
+                }
                 self.parked.insert(
                     token,
                     ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
@@ -1073,6 +1110,11 @@ impl FlowLoop {
         for (token, payload) in &done {
             match self.parked.remove(token) {
                 Some(ctx) => {
+                    if let (Some(sink), Some(id)) =
+                        (&self.tracer, self.parked_traces.remove(token))
+                    {
+                        sink.record(id, Stage::ServiceEnd, self.service.name(), telemetry::now_ns());
+                    }
                     self.handled.fetch_add(1, Ordering::Relaxed);
                     let f = response_frame(&ctx, payload, &self.oversize);
                     if !self.respond(f) {
@@ -1721,6 +1763,8 @@ mod tests {
             parked: HashMap::new(),
             next_token: 1,
             done: Vec::new(),
+            tracer: None,
+            parked_traces: HashMap::new(),
         };
         // Empty backlog: admitted and served.
         assert!(fl.ingest(Frame::new(RpcType::Request, 3, 6, 0, b"ok")));

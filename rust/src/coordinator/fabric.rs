@@ -15,10 +15,12 @@ use crate::coordinator::rings::RingPair;
 use crate::nic::connection::Agent;
 use crate::nic::hard_config::HardConfig;
 use crate::nic::load_balancer::LbMode;
+use crate::nic::packet_monitor::PacketMonitor;
 use crate::nic::DaggerNic;
 use crate::runtime::{Engine, EngineSpec};
+use crate::telemetry::{self, Stage, TraceSink};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One host endpoint: a set of flows (ring pairs) behind one NIC.
 pub struct Endpoint {
@@ -61,6 +63,13 @@ pub struct Fabric {
     next_c_id: u32,
     pub stats: Arc<FabricStats>,
     stop: Arc<AtomicBool>,
+    /// Sampled stage-trace sink (None ⇒ tracing off, zero cost on the
+    /// forwarding path beyond one branch per frame).
+    tracer: Option<Arc<TraceSink>>,
+    /// Final per-NIC [`PacketMonitor`] states, written by the fabric
+    /// thread after its graceful drain (the thread owns the NICs while
+    /// running). Read via [`FabricHandle::monitors`] after `shutdown`.
+    monitors_out: Arc<Mutex<Vec<PacketMonitor>>>,
 }
 
 impl Fabric {
@@ -71,7 +80,15 @@ impl Fabric {
             next_c_id: 1,
             stats: Arc::new(FabricStats::default()),
             stop: Arc::new(AtomicBool::new(false)),
+            tracer: None,
+            monitors_out: Arc::new(Mutex::new(Vec::new())),
         }
+    }
+
+    /// Install a stage-trace sink: traced request frames get
+    /// `FabricPickup`/`NicIngress` stamps as they cross the fabric.
+    pub fn set_tracer(&mut self, sink: Arc<TraceSink>) {
+        self.tracer = Some(sink);
     }
 
     /// Add a host endpoint with `n_flows` flows; returns its address.
@@ -145,6 +162,7 @@ impl Fabric {
     pub fn start(self, spec: EngineSpec) -> FabricHandle {
         let stop = self.stop.clone();
         let stats = self.stats.clone();
+        let monitors = self.monitors_out.clone();
         let join = std::thread::Builder::new()
             .name("dagger-fpga".into())
             .spawn(move || {
@@ -152,7 +170,7 @@ impl Fabric {
                 run_fabric(self, engine)
             })
             .expect("spawn fabric");
-        FabricHandle { stop, stats, join: Some(join) }
+        FabricHandle { stop, stats, monitors, join: Some(join) }
     }
 }
 
@@ -165,6 +183,10 @@ impl Default for Fabric {
 pub struct FabricHandle {
     stop: Arc<AtomicBool>,
     pub stats: Arc<FabricStats>,
+    /// Per-NIC packet-monitor states, one per endpoint in address
+    /// order; populated by the fabric thread after its graceful drain
+    /// (empty until then). Read after `shutdown()` for exact counts.
+    pub monitors: Arc<Mutex<Vec<PacketMonitor>>>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -227,6 +249,12 @@ fn run_fabric(mut fabric: Fabric, mut engine: Engine) {
             std::thread::yield_now();
         }
     }
+
+    // Publish the final per-NIC monitor states — the NICs lived on this
+    // thread, so this is the only point their counters are both exact
+    // and safe to hand out.
+    *fabric.monitors_out.lock().unwrap() =
+        fabric.nics.iter().map(|n| n.monitor.clone()).collect();
 }
 
 /// One sweep over every endpoint's TX rings: drain each ring in
@@ -256,7 +284,7 @@ fn forward_pass(
                     .drained_on_stop
                     .fetch_add(batch_buf.len() as u64, Ordering::Relaxed);
             }
-            deliver_batch(fabric, engine, src, batch_buf, stats);
+            deliver_batch(fabric, engine, src, flow, batch_buf, stats);
         }
     }
     moved
@@ -266,18 +294,33 @@ fn deliver_batch(
     fabric: &mut Fabric,
     engine: &mut Engine,
     src: usize,
+    src_flow: usize,
     frames: &[Frame],
     stats: &FabricStats,
 ) {
+    let tracer = fabric.tracer.clone();
     for frame in frames {
+        // Sampled stage tracing: a traced *request* frame is stamped at
+        // fabric pickup. Responses/rejects echo the trace word back but
+        // their return hop is attributed at harvest, not re-stamped.
+        let trace_id = match (&tracer, frame.rpc_type()) {
+            (Some(_), Some(RpcType::Request)) => frame.trace_id(),
+            _ => None,
+        };
+        if let (Some(sink), Some(id)) = (&tracer, trace_id) {
+            sink.record(id, Stage::FabricPickup, "fabric", telemetry::now_ns());
+        }
         if !frame.is_valid() {
             stats.dropped_invalid.fetch_add(1, Ordering::Relaxed);
+            fabric.nics[src].monitor.on_drop_invalid(src_flow);
             continue;
         }
-        // Egress on the source NIC resolves the destination address.
-        let dst_addr = match fabric.nics[src].egress(0, frame) {
+        // Egress on the source NIC resolves the destination address (and
+        // ticks the source monitor's tx counter).
+        let dst_addr = match fabric.nics[src].egress(telemetry::now_ns(), frame) {
             Some((dst, _lat)) => dst,
             None => {
+                // egress accounted the no-connection drop on the monitor.
                 stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
@@ -285,6 +328,7 @@ fn deliver_batch(
         let dst = dst_addr as usize;
         if dst >= fabric.endpoints.len() {
             stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
+            fabric.nics[src].monitor.on_drop_no_connection(src_flow);
             continue;
         }
         // Ingress steering at the destination NIC.
@@ -298,6 +342,7 @@ fn deliver_batch(
                     Some((t, _)) => t.src_flow % n_flows,
                     None => {
                         stats.dropped_no_route.fetch_add(1, Ordering::Relaxed);
+                        fabric.nics[dst].monitor.on_drop_no_connection(0);
                         continue;
                     }
                 }
@@ -324,9 +369,14 @@ fn deliver_batch(
         match rx.push(*frame) {
             Ok(()) => {
                 stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                fabric.nics[dst].monitor.on_rx(telemetry::now_ns(), flow as usize);
+                if let (Some(sink), Some(id)) = (&tracer, trace_id) {
+                    sink.record(id, Stage::NicIngress, "nic", telemetry::now_ns());
+                }
             }
             Err(_) => {
                 stats.dropped_rx_full.fetch_add(1, Ordering::Relaxed);
+                fabric.nics[dst].monitor.on_drop_ring_full(flow as usize);
             }
         }
     }

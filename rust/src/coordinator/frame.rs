@@ -257,6 +257,66 @@ impl Frame {
         self.words[15]
     }
 
+    // ------------------------------------------------ trace stamping
+    //
+    // Sampled per-RPC stage tracing (§5.7's "lightweight request
+    // tracing"): a traced request carries a 31-bit trace id in payload
+    // word 12 (bytes 32..36) — the single payload word that is disjoint
+    // from *all three* existing conventions: the object-level steering
+    // hash (KEY_WORDS = words 4..11), the head stamp (words 4-6), and
+    // the tail stamp (words 13-15). Tracing a frame therefore never
+    // perturbs steering and never collides with a timestamp or slot
+    // tag; `trace_word_is_outside_key_hash_and_stamps` proves the
+    // byte-level disjointness and the CI grep-guard pins it.
+    //
+    // The top bit of the word is the presence flag, so an untraced
+    // frame (word 12 zero, or any app payload with the top bit clear)
+    // reads as `None` and the id space stays 31 bits. One app-layer
+    // sharing note: `apps::kvwire` places its optional SET value at the
+    // same bytes (REQ_VALUE_OFFSET = 32), so KVS grid points run
+    // untraced — the chain/fan-out and echo workloads, whose app
+    // payloads leave bytes 32..36 free, are the traced ones.
+    //
+    // There is deliberately no payload-length assert here: head-stamped
+    // echo frames have short payloads (16 B) and carry the trace word
+    // out-of-band in the raw 64-byte cache line. Harvest correlates by
+    // slot tag, not by the echoed word, so payload()-based rebuilds
+    // dropping it is fine.
+
+    /// Payload word index of the trace id (bytes 32..36).
+    pub const TRACE_WORD: usize = 12;
+    /// Byte offset of the trace stamp within the payload.
+    pub const TRACE_STAMP_OFFSET: usize = 32;
+    /// Size of the trace stamp region in bytes.
+    pub const TRACE_STAMP_BYTES: usize = 4;
+    /// Presence flag in the trace word's top bit (ids are 31-bit).
+    pub const TRACE_FLAG: u32 = 0x8000_0000;
+
+    /// Mark the frame as traced with `id` (top bit reserved).
+    #[inline]
+    pub fn set_trace(&mut self, id: u32) {
+        debug_assert_eq!(id & Self::TRACE_FLAG, 0, "trace ids are 31-bit");
+        self.words[Self::TRACE_WORD] = Self::TRACE_FLAG | id;
+    }
+
+    /// The frame's trace id, if it carries one.
+    #[inline]
+    pub fn trace_id(&self) -> Option<u32> {
+        let w = self.words[Self::TRACE_WORD];
+        if w & Self::TRACE_FLAG != 0 {
+            Some(w & !Self::TRACE_FLAG)
+        } else {
+            None
+        }
+    }
+
+    /// Remove the trace mark (used when a rejected request is rebuilt
+    /// for retry — the retry is a fresh, unsampled attempt).
+    #[inline]
+    pub fn clear_trace(&mut self) {
+        self.words[Self::TRACE_WORD] = 0;
+    }
+
     /// FNV-1a over the 8 key words + fmix32 finisher — identical to the
     /// Pallas kernel. (The finisher restores low-bit avalanche that
     /// word-wise FNV lacks; `hash % n_flows` partitioning depends on it.)
@@ -432,6 +492,58 @@ mod tests {
         assert_ne!(c.key_hash(), d.key_hash());
         // Offset bookkeeping: app region + stamp = one cache line.
         assert_eq!(Frame::TAIL_STAMP_OFFSET + Frame::BENCH_STAMP_BYTES, MAX_PAYLOAD_BYTES);
+    }
+
+    /// The trace word must stay byte-disjoint from the steering hash
+    /// and both stamp regions: tracing a frame changes neither its
+    /// `key_hash` nor any stamp byte, and writing every stamp leaves
+    /// the trace id readable. This is the invariant the CI grep-guard
+    /// pins alongside the reject status word.
+    #[test]
+    fn trace_word_is_outside_key_hash_and_stamps() {
+        // Offset bookkeeping: the trace word sits exactly between the
+        // hashed key words (4..11) and the tail stamp (13..15).
+        assert_eq!(Frame::TRACE_WORD, 4 + KEY_WORDS);
+        assert_eq!(Frame::TRACE_STAMP_OFFSET, KEY_WORDS * 4);
+        assert_eq!(
+            Frame::TRACE_STAMP_OFFSET + Frame::TRACE_STAMP_BYTES,
+            Frame::TAIL_STAMP_OFFSET
+        );
+
+        let mut payload = [0u8; MAX_PAYLOAD_BYTES];
+        payload[..8].copy_from_slice(&0xFEED_u64.to_le_bytes());
+        let mut a = Frame::new(RpcType::Request, 0, 1, 1, &payload);
+        let h = a.key_hash();
+        a.set_trace(0x7FFF_FFFF);
+        assert_eq!(a.key_hash(), h, "trace id leaked into the key hash");
+        assert_eq!(a.trace_id(), Some(0x7FFF_FFFF));
+
+        // Saturating every stamp leaves the trace id intact, and the
+        // trace id leaves every stamp intact.
+        a.set_ts_ns(0xFFFF_FFFF_FFFF_FFFF);
+        a.set_tag(0xFFFF_FFFF);
+        a.set_ts_ns_tail(0xFFFF_FFFF_FFFF_FFFF);
+        a.set_tag_tail(0xFFFF_FFFF);
+        assert_eq!(a.trace_id(), Some(0x7FFF_FFFF), "a stamp overwrote the trace word");
+        assert_eq!(a.ts_ns(), 0xFFFF_FFFF_FFFF_FFFF);
+        assert_eq!(a.tag(), 0xFFFF_FFFF);
+        assert_eq!(a.ts_ns_tail(), 0xFFFF_FFFF_FFFF_FFFF);
+        assert_eq!(a.tag_tail(), 0xFFFF_FFFF);
+
+        // Untraced frames read None even with all-ones app payloads as
+        // long as the flag bit is clear; clear_trace removes the mark.
+        let b = Frame::new(RpcType::Request, 0, 1, 2, &[0x7F; MAX_PAYLOAD_BYTES]);
+        assert_eq!(b.words[Frame::TRACE_WORD] & Frame::TRACE_FLAG, 0);
+        assert_eq!(b.trace_id(), None);
+        a.clear_trace();
+        assert_eq!(a.trace_id(), None);
+
+        // A trace id set on a short head-stamped frame survives the raw
+        // cache-line round trip (it rides out-of-band, past payload_len).
+        let mut c = Frame::new(RpcType::Request, 0, 7, 3, &[0u8; 16]);
+        c.set_trace(42);
+        let d = Frame::from_bytes(&c.to_bytes());
+        assert_eq!(d.trace_id(), Some(42));
     }
 
     #[test]

@@ -65,6 +65,15 @@ use std::time::Duration;
 /// wrong value is a real failure).
 const N_KEYS: u64 = 2048;
 
+/// Tier costs of the *traced* chain point: I/O-bound (sleeping)
+/// handlers at checkin 20 µs → passport 200 µs → citizens 40 µs, so the
+/// middle tier's exclusive time dominates by an order of magnitude over
+/// both the other tiers and the ~tens-of-µs hop overhead the parent
+/// tier absorbs — the traced bottleneck attribution (§5.7) must find
+/// "passport" regardless of host jitter.
+pub(crate) const TRACED_CHAIN_COSTS: &[TierCost] =
+    &[TierCost::Sleep(20_000), TierCost::Sleep(200_000), TierCost::Sleep(40_000)];
+
 /// Zipfian skew of the key popularity (MICA's standard workload skew).
 const SKEW: f64 = 0.99;
 
@@ -137,9 +146,9 @@ impl WallWorkload for ChainWorkload {
 }
 
 /// Outcome of one chain point.
-struct ChainOutcome {
-    r: WallResult,
-    downstream_failures: u64,
+pub(crate) struct ChainOutcome {
+    pub(crate) r: WallResult,
+    pub(crate) downstream_failures: u64,
 }
 
 // ===================================================================
@@ -316,8 +325,17 @@ fn run_fanout(cfg: &WallConfig, mode: DispatchMode) -> FanoutOutcome {
 /// Stand up an `n_tiers`-deep chain — client endpoint, then one fabric
 /// endpoint per tier (flow 0 serves, flow 1 is the tier's outbound
 /// client ring) — and measure it through the shared driver core.
-fn run_chain(cfg: &WallConfig, n_tiers: usize) -> ChainOutcome {
+///
+/// `costs` overrides the default calibrated spin costs
+/// ([`flightreg::chain_tiers`]) per tier — the traced bottleneck point
+/// uses sleeping tiers scaled to tens/hundreds of µs so the per-tier
+/// exclusive times dwarf the hop overhead and the §5.7 bottleneck
+/// attribution is unambiguous.
+pub(crate) fn run_chain(cfg: &WallConfig, n_tiers: usize, costs: Option<&[TierCost]>) -> ChainOutcome {
     let tiers = flightreg::chain_tiers(n_tiers);
+    if let Some(c) = costs {
+        assert_eq!(c.len(), n_tiers, "one cost override per tier");
+    }
     assert!(!cfg.srq, "chain points use plain per-flow connections");
 
     let mut fabric = Fabric::new();
@@ -353,7 +371,11 @@ fn run_chain(cfg: &WallConfig, n_tiers: usize) -> ChainOutcome {
         } else {
             None
         };
-        let svc = TierService::new(name, local_ns, next);
+        let svc = match costs.map(|c| c[i]) {
+            None => TierService::new(name, local_ns, next),
+            Some(TierCost::Spin(ns)) => TierService::new(name, ns, next),
+            Some(TierCost::Sleep(ns)) => TierService::sleeping(name, ns, next),
+        };
         failure_counters.push(svc.failures.clone());
         let boxed: Box<dyn RpcService> = if i == 0 {
             // Only the entry tier carries the measurement stamp; inner
@@ -466,6 +488,12 @@ pub fn figure(opts: &RunOpts) -> Figure {
     }
 
     // ---------------------------------------------------- chain series
+    // The last point is the §5.7 tracing reproduction: a 3-tier chain
+    // with I/O-bound (sleeping) tier costs scaled so the middle tier
+    // dominates, traced at 1-in-16 — the per-stage breakdown and the
+    // per-tier exclusive times come from harvested stage traces, and
+    // `bottleneck_tier` names the dominating tier from data, exactly
+    // how the paper's request tracing finds the Flight service.
     let s = fig.series(
         "flightreg-chain",
         &[
@@ -473,6 +501,7 @@ pub fn figure(opts: &RunOpts) -> Figure {
             "tiers",
             "conns",
             "window",
+            "trace_every",
             "achieved_krps",
             "p50_us",
             "p90_us",
@@ -482,9 +511,21 @@ pub fn figure(opts: &RunOpts) -> Figure {
             "bad_responses",
             "downstream_failures",
             "leaked_slots",
+            "stage_network_us",
+            "stage_rpc_us",
+            "stage_queue_us",
+            "stage_app_us",
+            "stage_total_us",
+            "traces_complete",
+            "bottleneck_tier",
         ],
     );
-    for n_tiers in [2usize, 3] {
+    let chain_points: [(usize, u32, Option<&[TierCost]>); 3] = [
+        (2, 0, None),
+        (3, 0, None),
+        (3, 16, Some(TRACED_CHAIN_COSTS)),
+    ];
+    for (n_tiers, trace_every, costs) in chain_points {
         let names: Vec<&str> =
             flightreg::chain_tiers(n_tiers).iter().map(|&(n, _)| n).collect();
         let cfg = WallConfig {
@@ -492,14 +533,16 @@ pub fn figure(opts: &RunOpts) -> Figure {
             n_conns: 2,
             window: 4,
             server_flows: 1,
+            trace_every,
             ..base.clone()
         };
-        let out = run_chain(&cfg, n_tiers);
+        let out = run_chain(&cfg, n_tiers, costs);
         s.push(vec![
             names.join("->").into(),
             n_tiers.into(),
             cfg.n_conns.into(),
             cfg.window.into(),
+            trace_every.into(),
             (out.r.achieved_mrps * 1000.0).into(),
             out.r.p50_us.into(),
             out.r.p90_us.into(),
@@ -509,6 +552,13 @@ pub fn figure(opts: &RunOpts) -> Figure {
             out.r.bad_responses.into(),
             out.downstream_failures.into(),
             out.r.leaked_slots.into(),
+            out.r.stage_network_us.into(),
+            out.r.stage_rpc_us.into(),
+            out.r.stage_queue_us.into(),
+            out.r.stage_app_us.into(),
+            out.r.stage_total_us.into(),
+            out.r.traces_complete.into(),
+            out.r.bottleneck_tier.clone().into(),
         ]);
     }
 
@@ -739,7 +789,7 @@ mod tests {
             ..WallConfig::closed(1, 2, 2)
         });
         for n_tiers in [2usize, 3] {
-            let out = run_chain(&cfg, n_tiers);
+            let out = run_chain(&cfg, n_tiers, None);
             assert!(out.r.completed > 0, "{n_tiers}-tier chain measured nothing");
             assert_eq!(
                 out.r.bad_responses, 0,
@@ -789,6 +839,47 @@ mod tests {
                 out.r.p50_us,
                 out.mean_branch_sum_us
             );
+        }
+    }
+
+    /// The §5.7 request-tracing reproduction at unit scale: a traced
+    /// 3-tier sleeping chain whose middle tier dominates must (a)
+    /// complete traces, (b) attribute the bottleneck to that tier from
+    /// per-tier exclusive times, and (c) put the sleeps in the app
+    /// phase of the stage breakdown.
+    #[test]
+    fn traced_chain_finds_the_bottleneck_tier() {
+        let cfg = tiny(WallConfig {
+            n_threads: 1,
+            n_conns: 2,
+            window: 2,
+            server_flows: 1,
+            trace_every: 4,
+            ..WallConfig::closed(1, 2, 2)
+        });
+        let costs: &[TierCost] =
+            &[TierCost::Sleep(5_000), TierCost::Sleep(50_000), TierCost::Sleep(10_000)];
+        let out = run_chain(&cfg, 3, Some(costs));
+        assert!(out.r.completed > 0);
+        assert_eq!(out.r.bad_responses, 0, "tracing must not corrupt chain traversal");
+        assert!(out.r.traces_complete > 0, "1-in-4 sampling must complete traces");
+        assert_eq!(
+            out.r.bottleneck_tier, "passport",
+            "exclusive times: {:?}",
+            out.r.tier_excl_us
+        );
+        // The sleeps (65 µs serial) live in the app phase; it must
+        // dominate the network phase of the breakdown.
+        assert!(
+            out.r.stage_app_us > out.r.stage_network_us,
+            "app {} <= network {}",
+            out.r.stage_app_us,
+            out.r.stage_network_us
+        );
+        // All three tiers appear in the exclusive-time table.
+        let tiers: Vec<&str> = out.r.tier_excl_us.iter().map(|(t, _)| t.as_str()).collect();
+        for t in ["checkin", "passport", "citizens"] {
+            assert!(tiers.contains(&t), "tier {t} missing from {tiers:?}");
         }
     }
 

@@ -102,6 +102,14 @@ fn grid(opts: &RunOpts) -> Vec<(String, WallConfig)> {
     for &t in &[1u32, 2, 4] {
         g.push((format!("closed t={t}"), dur(WallConfig::closed(t, t, 16))));
     }
+    // One traced twin of the t=2 point (1-in-16 sampling): its
+    // stage_*_us columns populate while every other point keeps
+    // trace_every=0 — the untraced rows are the bench-diff baseline
+    // proving tracing is free when off.
+    g.push((
+        "closed t=2 traced".to_string(),
+        dur(WallConfig { trace_every: 16, ..WallConfig::closed(2, 2, 16) }),
+    ));
     for &conns in &[64u32, 256, 512] {
         g.push((format!("stress c={conns}"), dur(WallConfig::closed(2, conns, 2))));
     }
@@ -162,6 +170,16 @@ pub fn figure(opts: &RunOpts) -> Figure {
             "leaked_slots",
             "fabric_rx_drops",
             "elapsed_s",
+            "trace_every",
+            "stage_network_us",
+            "stage_rpc_us",
+            "stage_queue_us",
+            "stage_app_us",
+            "stage_total_us",
+            "traces_complete",
+            "nic_tx_rpcs",
+            "nic_rx_rpcs",
+            "nic_drops",
         ],
     );
     for (label, cfg, r) in &measured {
@@ -186,6 +204,18 @@ pub fn figure(opts: &RunOpts) -> Figure {
             r.leaked_slots.into(),
             r.fabric_rx_drops.into(),
             r.elapsed_s.into(),
+            cfg.trace_every.into(),
+            r.stage_network_us.into(),
+            r.stage_rpc_us.into(),
+            r.stage_queue_us.into(),
+            r.stage_app_us.into(),
+            r.stage_total_us.into(),
+            r.traces_complete.into(),
+            // Unified-plane columns: every endpoint's packet monitor,
+            // summed (the snapshot holds the per-NIC split).
+            (r.snapshot.get("nic.0.tx_rpcs") + r.snapshot.get("nic.1.tx_rpcs")).into(),
+            (r.snapshot.get("nic.0.rx_rpcs") + r.snapshot.get("nic.1.rx_rpcs")).into(),
+            (r.snapshot.get("nic.0.drops") + r.snapshot.get("nic.1.drops")).into(),
         ]);
     }
 

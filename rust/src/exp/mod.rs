@@ -21,6 +21,7 @@ pub mod harness;
 pub mod microsim;
 pub mod overload;
 pub mod rpc_sim;
+pub mod trace_bench;
 pub mod vnic;
 pub mod wall_driver;
 
@@ -160,11 +161,12 @@ impl RunOpts {
     }
 }
 
-/// All 17 registered experiments: the 14 figure/table reproductions in
-/// paper order, plus the three wall-clock benchmarks — the fabric echo
+/// All 18 registered experiments: the 14 figure/table reproductions in
+/// paper order, plus the four wall-clock benchmarks — the fabric echo
 /// (measured counterpart of §5.2-§5.5), the applications served over
-/// the real rings (measured counterpart of §5.6/§5.7), and the
-/// overload-control saturation sweep (admission/shedding/retry).
+/// the real rings (measured counterpart of §5.6/§5.7), the
+/// overload-control saturation sweep (admission/shedding/retry), and
+/// the stage-tracing plane (§5.7's bottleneck attribution, measured).
 pub const EXPERIMENTS: &[ExpSpec] = &[
     ExpSpec {
         name: "fig3",
@@ -301,6 +303,14 @@ pub const EXPERIMENTS: &[ExpSpec] = &[
         bench: "overload_wallclock",
         aliases: &["overload", "overload_wallclock"],
         run: overload::figure,
+    },
+    ExpSpec {
+        name: "trace-wallclock",
+        title: "Request tracing — sampled stage breakdown and bottleneck-tier attribution",
+        paper_ref: "§5.7 (lightweight request tracing)",
+        bench: "trace_wallclock",
+        aliases: &["trace", "trace_wallclock"],
+        run: trace_bench::figure,
     },
 ];
 
@@ -1098,7 +1108,8 @@ mod tests {
                 assert_eq!(spec(a).unwrap().name, s.name, "alias {a}");
             }
         }
-        assert_eq!(EXPERIMENTS.len(), 17);
+        assert_eq!(EXPERIMENTS.len(), 18);
+        assert_eq!(spec("trace").unwrap().name, "trace-wallclock");
         assert_eq!(spec("table4").unwrap().name, "table4-fig15");
         assert_eq!(spec("fig13_vnic_scaling").unwrap().name, "fig13");
         assert_eq!(spec("fig14_vnic_latency").unwrap().name, "fig14");

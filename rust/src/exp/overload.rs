@@ -173,6 +173,11 @@ pub fn figure(opts: &RunOpts) -> Figure {
             "leaked_slots",
             "fabric_rx_drops",
             "elapsed_s",
+            // Unified metrics plane (whole-run cumulative, unlike the
+            // window-scoped columns above): the server's own reject
+            // ledger and the low-class shed count from the snapshot.
+            "server_rejected",
+            "shed_class0",
         ],
     );
     for &x in &OFFERED_X {
@@ -204,6 +209,8 @@ pub fn figure(opts: &RunOpts) -> Figure {
                 r.leaked_slots.into(),
                 r.fabric_rx_drops.into(),
                 r.elapsed_s.into(),
+                r.snapshot.get("server.rejected").into(),
+                r.snapshot.get("server.shed_class.0").into(),
             ]);
         }
     }

@@ -1,0 +1,220 @@
+//! Stage-tracing experiment (registry `trace-wallclock`, bench target
+//! `trace_wallclock`): the §5.7 lightweight request-tracing plane
+//! exercised end-to-end over the real rings/fabric path.
+//!
+//! Two traced topologies run at 1-in-[`TRACE_EVERY`] sampling:
+//!
+//! * **echo pair** — the `fabric-wallclock` closed-loop echo point
+//!   ([`fabric_bench::run`], head-stamp convention). One hop, no app
+//!   work: the breakdown is dominated by network + rpc time and the
+//!   bottleneck tier is the echo service itself.
+//! * **3-tier flightreg chain** — Check-in ─▶ Passport ─▶ Citizens with
+//!   the calibrated sleeping tier costs
+//!   ([`app_bench::TRACED_CHAIN_COSTS`]: 20/200/40 µs), reusing the
+//!   `app-wallclock` chain topology. The per-tier exclusive times must
+//!   attribute the bottleneck to the middle (passport) tier — the
+//!   paper's §5.7 result that tracing finds the slow tier of a chain.
+//!
+//! Three series come out of each run:
+//!
+//! * `stages` — per-point phase breakdown (`network/rpc/queue/app`
+//!   means, telescoping to the traced end-to-end total) plus the
+//!   attributed bottleneck tier.
+//! * `tiers` — per-(point, tier) mean *exclusive* service time, the
+//!   span-containment attribution behind the bottleneck call.
+//! * `snapshot` — the unified [`crate::telemetry::MetricsSnapshot`]
+//!   flattened to (point, metric, value) rows: fabric forward/drop
+//!   counters, per-NIC PacketMonitor totals, client/server ledgers,
+//!   and the trace completion counts, all from one coherent dump.
+//!
+//! Wall-clock numbers are host-specific envelopes; the structural
+//! claims (telescoping, bottleneck attribution, snapshot coherence)
+//! are what the smoke tests pin down.
+
+use crate::exp::app_bench;
+use crate::exp::fabric_bench;
+use crate::exp::harness::Figure;
+use crate::exp::wall_driver::{WallConfig, WallResult};
+use crate::exp::RunOpts;
+use std::time::Duration;
+
+/// Sampling period for every traced point: 1 in 16 requests carries a
+/// trace id (the ISSUE's reference rate — cheap enough to leave on,
+/// dense enough that a fast run still completes hundreds of traces).
+pub const TRACE_EVERY: u32 = 16;
+
+/// Echo-pair point: the `fabric-wallclock` closed-loop topology with
+/// sampling on.
+fn echo_cfg(opts: &RunOpts) -> WallConfig {
+    let measure = Duration::from_millis(opts.wall_measure_ms(400));
+    WallConfig {
+        trace_every: TRACE_EVERY,
+        warmup: measure / 4,
+        measure,
+        ..WallConfig::closed(2, 2, 16)
+    }
+}
+
+/// Chain point: the `app-wallclock` chain topology (plain per-flow
+/// connections) with sampling on.
+fn chain_cfg(opts: &RunOpts) -> WallConfig {
+    let measure = Duration::from_millis(opts.wall_measure_ms(400));
+    WallConfig {
+        trace_every: TRACE_EVERY,
+        warmup: measure / 4,
+        measure,
+        ..WallConfig::closed(2, 4, 8)
+    }
+}
+
+/// Run both traced points and emit the `dagger-bench/v1` figure.
+pub fn figure(opts: &RunOpts) -> Figure {
+    let mut fig = super::fig_for("trace-wallclock");
+
+    let echo = fabric_bench::run(&echo_cfg(opts));
+    let chain = app_bench::run_chain(&chain_cfg(opts), 3, Some(app_bench::TRACED_CHAIN_COSTS));
+    let points: [(&str, WallResult); 2] = [("echo", echo), ("chain-3", chain.r)];
+
+    let s = fig.series(
+        "stages",
+        &[
+            "point",
+            "trace_every",
+            "sent",
+            "completed",
+            "bad_responses",
+            "traces_complete",
+            "traces_incomplete",
+            "mean_us",
+            "p99_us",
+            "stage_network_us",
+            "stage_rpc_us",
+            "stage_queue_us",
+            "stage_app_us",
+            "stage_total_us",
+            "bottleneck_tier",
+        ],
+    );
+    for (label, r) in &points {
+        s.push(vec![
+            (*label).into(),
+            (TRACE_EVERY as u64).into(),
+            r.sent.into(),
+            r.completed.into(),
+            r.bad_responses.into(),
+            r.traces_complete.into(),
+            r.traces_incomplete.into(),
+            r.mean_us.into(),
+            r.p99_us.into(),
+            r.stage_network_us.into(),
+            r.stage_rpc_us.into(),
+            r.stage_queue_us.into(),
+            r.stage_app_us.into(),
+            r.stage_total_us.into(),
+            r.bottleneck_tier.clone().into(),
+        ]);
+    }
+
+    let s = fig.series("tiers", &["point", "tier", "excl_us"]);
+    for (label, r) in &points {
+        for (tier, excl_us) in &r.tier_excl_us {
+            s.push(vec![(*label).into(), tier.clone().into(), (*excl_us).into()]);
+        }
+    }
+
+    let s = fig.series("snapshot", &["point", "metric", "value"]);
+    for (label, r) in &points {
+        for (metric, value) in r.snapshot.iter() {
+            s.push(vec![(*label).into(), metric.into(), value.into()]);
+        }
+    }
+
+    fig.note(
+        "Both points sample 1-in-16 requests into the in-frame trace word (payload word 12, \
+         outside the steering hash and both stamp regions). `stages` phase means telescope \
+         exactly: network + rpc + queue + app = total = Harvest - ClientSend over completed \
+         traces. `tiers` is per-tier exclusive service time (child spans subtracted), the basis \
+         of bottleneck_tier — the chain point must attribute `passport`. `snapshot` is the \
+         unified metrics plane dumped verbatim: fabric.*, nic.<addr>.*, client.*, server.*, \
+         trace.*. Wall-clock columns are host-dependent envelopes, not regression gates.",
+    );
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> RunOpts {
+        RunOpts { fast: true, duration_us: Some(25_000), ..Default::default() }
+    }
+
+    /// The full figure, fast: both points trace, phases telescope, the
+    /// chain attributes its sleeping middle tier, and the snapshot
+    /// series carries the unified counters for both points.
+    #[test]
+    fn figure_traces_both_points_and_attributes_the_chain_bottleneck() {
+        let fig = figure(&fast());
+        assert_eq!(fig.name, "trace-wallclock");
+
+        let stages = fig.series.iter().find(|s| s.label == "stages").expect("stages series");
+        assert_eq!(stages.rows.len(), 2);
+        let col = |name: &str| {
+            stages.columns.iter().position(|c| c == name).unwrap_or_else(|| panic!("{name}"))
+        };
+        use crate::exp::harness::Value;
+        let num = |v: &Value| match v {
+            Value::F64(f) => *f,
+            Value::U64(u) => *u as f64,
+            other => panic!("expected number, got {other:?}"),
+        };
+        let text = |v: &Value| match v {
+            Value::Str(s) => s.clone(),
+            other => panic!("expected string, got {other:?}"),
+        };
+        for row in &stages.rows {
+            let label = text(&row[col("point")]);
+            assert!(num(&row[col("completed")]) > 0.0, "{label}: measured nothing");
+            assert_eq!(num(&row[col("bad_responses")]), 0.0, "{label}");
+            assert!(num(&row[col("traces_complete")]) > 0.0, "{label}: no complete traces");
+            let sum = num(&row[col("stage_network_us")])
+                + num(&row[col("stage_rpc_us")])
+                + num(&row[col("stage_queue_us")])
+                + num(&row[col("stage_app_us")]);
+            let total = num(&row[col("stage_total_us")]);
+            assert!(
+                (sum - total).abs() < 1e-6,
+                "{label}: phases must telescope (sum {sum} vs total {total})"
+            );
+            if label == "chain-3" {
+                assert_eq!(
+                    text(&row[col("bottleneck_tier")]),
+                    "passport",
+                    "chain bottleneck attribution missed the sleeping middle tier"
+                );
+            }
+        }
+
+        // Chain tier attribution covers all three tiers.
+        let tiers = fig.series.iter().find(|s| s.label == "tiers").expect("tiers series");
+        for tier in ["checkin", "passport", "citizens"] {
+            assert!(
+                tiers.rows.iter().any(|r| text(&r[1]) == tier && text(&r[0]) == "chain-3"),
+                "no exclusive-time row for chain tier {tier}"
+            );
+        }
+
+        // The snapshot dump carries the unified plane for both points.
+        let snap = fig.series.iter().find(|s| s.label == "snapshot").expect("snapshot series");
+        for point in ["echo", "chain-3"] {
+            for metric in ["fabric.forwarded", "client.sent", "server.handled", "trace.complete"] {
+                let v = snap
+                    .rows
+                    .iter()
+                    .find(|r| text(&r[0]) == point && text(&r[1]) == metric)
+                    .unwrap_or_else(|| panic!("{point}: snapshot missing {metric}"));
+                assert!(num(&v[2]) > 0.0, "{point}: {metric} is zero");
+            }
+        }
+    }
+}

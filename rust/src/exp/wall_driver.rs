@@ -31,6 +31,7 @@ use crate::nic::load_balancer::LbMode;
 use crate::nic::soft_config::{Reg, SoftConfig};
 use crate::runtime::EngineSpec;
 use crate::sim::Histogram;
+use crate::telemetry::{self, MetricsSnapshot, Sampler, Stage, TraceSink};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -84,6 +85,15 @@ pub struct WallConfig {
     /// Extra short-lived connections opened per client flow to feed the
     /// churn rotation (beyond the `n_conns` persistent ones).
     pub churn_conns: u32,
+    /// Stage-trace sampling: trace one request in `trace_every` sends
+    /// (0 = off, the default — the hot path then never touches the
+    /// trace machinery). Sampled requests carry a trace id in the
+    /// frame's word 12 ([`Frame::set_trace`]) and stamp
+    /// [`crate::telemetry::Stage`] timestamps at every hop; the
+    /// harvested events aggregate into [`WallResult`]'s `stage_*_us`
+    /// phase breakdown. Incompatible with payloads that use bytes
+    /// 32..36 for app data (the kvwire value region) — leave it 0 there.
+    pub trace_every: u32,
 }
 
 impl WallConfig {
@@ -107,6 +117,7 @@ impl WallConfig {
             slo_us: 0.0,
             churn_period: 0,
             churn_conns: 0,
+            trace_every: 0,
         }
     }
 
@@ -175,6 +186,27 @@ pub struct WallResult {
     /// Fabric counters over the whole run (warmup + measure + drain).
     pub fabric_forwarded: u64,
     pub fabric_rx_drops: u64,
+    /// Per-phase mean latencies from sampled stage traces (µs; all
+    /// zero when [`WallConfig::trace_every`] is 0). The four phases
+    /// telescope: their sum equals `stage_total_us` exactly.
+    pub stage_network_us: f64,
+    pub stage_rpc_us: f64,
+    pub stage_queue_us: f64,
+    pub stage_app_us: f64,
+    /// Mean traced end-to-end latency (Harvest − ClientSend), µs.
+    pub stage_total_us: f64,
+    /// Sampled traces with a full stage set / missing stages (run-edge
+    /// sends, rejects, lost frames).
+    pub traces_complete: u64,
+    pub traces_incomplete: u64,
+    /// The serving tier with the largest mean *exclusive* time in the
+    /// traces — the §5.7 bottleneck answer ("" when untraced).
+    pub bottleneck_tier: String,
+    /// Mean exclusive service time per tier, µs, descending.
+    pub tier_excl_us: Vec<(String, f64)>,
+    /// Unified counter export: fabric, NIC packet-monitor, client, and
+    /// server counters over the whole run, named and namespaced.
+    pub snapshot: MetricsSnapshot,
 }
 
 /// Where the driver embeds the send timestamp + slot tag in each frame.
@@ -285,6 +317,12 @@ pub struct FlowDriver {
     /// `(due_ns, attempt, reject frame)` — the reject echoes the
     /// request payload, so the frame is all the pump needs to re-send.
     retry_q: Vec<(u64, u32, Frame)>,
+    /// Stage tracing: the shared sink plus this flow's private sampler
+    /// (`None` = tracing off; `send_once` never touches the machinery).
+    tracer: Option<(Arc<TraceSink>, Sampler)>,
+    /// Trace id in flight per slot (0 = the slot's request is
+    /// untraced) — how the harvest finds the trace to close.
+    slot_traces: Vec<u32>,
 }
 
 impl FlowDriver {
@@ -310,6 +348,8 @@ impl FlowDriver {
             churn_active: 0,
             attempts: vec![0; cap],
             retry_q: Vec::new(),
+            tracer: None,
+            slot_traces: vec![0; cap],
         }
     }
 
@@ -321,7 +361,11 @@ impl FlowDriver {
     }
 }
 
-/// What one driver thread brings home.
+/// What one driver thread brings home. Rejects and retries are *not*
+/// tallied here: they tick the shared [`RpcClient`] atomics
+/// (`rejected_count` / `retries`) — the unified metrics plane — and
+/// `run_measurement` reads window deltas off those instead of merging
+/// duplicated per-thread bookkeeping.
 struct Tally {
     hist: Histogram,
     sent: u64,
@@ -330,8 +374,6 @@ struct Tally {
     overruns: u64,
     leaked_slots: u64,
     bad_responses: u64,
-    rejected: u64,
-    retries: u64,
     slo_good: u64,
 }
 
@@ -504,11 +546,33 @@ pub fn run_pair(
 pub fn run_measurement(
     cfg: &WallConfig,
     stamp: Stamp,
-    fabric: Fabric,
+    mut fabric: Fabric,
     mut servers: Vec<RpcThreadedServer>,
     mut drivers: Vec<FlowDriver>,
 ) -> WallResult {
     assert!(cfg.n_threads >= 1 && cfg.n_threads as usize <= drivers.len());
+
+    // Stage tracing: one shared sink wired into the fabric, every
+    // server, and every client driver (each with its own deterministic
+    // sampler) — all before any thread starts.
+    let tracer = if cfg.trace_every > 0 {
+        Some(Arc::new(TraceSink::new()))
+    } else {
+        None
+    };
+    if let Some(sink) = &tracer {
+        fabric.set_tracer(sink.clone());
+        for s in &mut servers {
+            s.set_tracer(sink.clone());
+        }
+        for (i, d) in drivers.iter_mut().enumerate() {
+            d.tracer = Some((sink.clone(), Sampler::new(cfg.trace_every, i as u64)));
+        }
+    }
+    // Keep a handle on every flow's client: the unified metrics plane
+    // reads the shared atomics (rejects, retries, strays) from here —
+    // the driver threads own the FlowDrivers themselves.
+    let clients: Vec<Arc<RpcClient>> = drivers.iter().map(|d| d.client.clone()).collect();
 
     let controls = Arc::new(Controls {
         epoch: Instant::now(),
@@ -554,17 +618,28 @@ pub fn run_measurement(
         );
     }
 
-    // Warmup -> measurement window -> drain.
+    // Warmup -> measurement window -> drain. The per-window reject /
+    // retry counts are boundary deltas off the clients' cumulative
+    // atomics (the unified plane), not thread-local tallies.
     std::thread::sleep(cfg.warmup);
     controls.measuring.store(true, Ordering::SeqCst);
+    let read_counters = |f: &dyn Fn(&RpcClient) -> u64| -> u64 {
+        clients.iter().map(|c| f(c)).sum()
+    };
+    let base_rejected = read_counters(&|c| c.rejected_count.load(Ordering::Relaxed));
+    let base_retries = read_counters(&|c| c.retries.load(Ordering::Relaxed));
     let t0 = Instant::now();
     std::thread::sleep(cfg.measure);
     controls.measuring.store(false, Ordering::SeqCst);
     let elapsed_s = t0.elapsed().as_secs_f64();
+    let end_rejected = read_counters(&|c| c.rejected_count.load(Ordering::Relaxed));
+    let end_retries = read_counters(&|c| c.retries.load(Ordering::Relaxed));
     controls.stop_send.store(true, Ordering::SeqCst);
 
     let mut hist = Histogram::new();
     let mut out = WallResult { elapsed_s, ..Default::default() };
+    out.rejected = end_rejected.saturating_sub(base_rejected);
+    out.retries = end_retries.saturating_sub(base_retries);
     for j in client_joins {
         let tally = j.join().expect("bench client thread panicked");
         hist.merge(&tally.hist);
@@ -574,8 +649,6 @@ pub fn run_measurement(
         out.overruns += tally.overruns;
         out.leaked_slots += tally.leaked_slots;
         out.bad_responses += tally.bad_responses;
-        out.rejected += tally.rejected;
-        out.retries += tally.retries;
         out.slo_good += tally.slo_good;
     }
     for s in &servers {
@@ -603,6 +676,60 @@ pub fn run_measurement(
     }
     out.fabric_forwarded = stats.forwarded.load(Ordering::Relaxed);
     out.fabric_rx_drops = stats.dropped_rx_full.load(Ordering::Relaxed);
+
+    // Stage-trace aggregation: every thread has joined, so the sink
+    // holds the complete event set for the run.
+    if let Some(sink) = &tracer {
+        let events = sink.drain();
+        let rep = telemetry::aggregate_stages(&events);
+        out.stage_network_us = rep.network_us;
+        out.stage_rpc_us = rep.rpc_us;
+        out.stage_queue_us = rep.queue_us;
+        out.stage_app_us = rep.app_us;
+        out.stage_total_us = rep.total_us;
+        out.traces_complete = rep.complete;
+        out.traces_incomplete = rep.incomplete;
+        out.bottleneck_tier = rep.bottleneck_tier;
+        out.tier_excl_us = rep.tier_excl_us;
+    }
+
+    // Unified metrics plane: one named-counter snapshot over the whole
+    // run (warmup + measure + drain — cumulative, unlike the
+    // window-scoped fields above).
+    let mut snap = MetricsSnapshot::new();
+    snap.set("fabric.forwarded", stats.forwarded.load(Ordering::Relaxed));
+    snap.set("fabric.dropped_rx_full", stats.dropped_rx_full.load(Ordering::Relaxed));
+    snap.set("fabric.dropped_no_route", stats.dropped_no_route.load(Ordering::Relaxed));
+    snap.set("fabric.dropped_invalid", stats.dropped_invalid.load(Ordering::Relaxed));
+    snap.set("fabric.datapath_batches", stats.datapath_batches.load(Ordering::Relaxed));
+    // Per-NIC packet monitors, published by the fabric thread at drain.
+    for (addr, m) in fabric_handle.monitors.lock().unwrap().iter().enumerate() {
+        snap.set(&format!("nic.{addr}.rx_rpcs"), m.total_rx());
+        snap.set(&format!("nic.{addr}.tx_rpcs"), m.total_tx());
+        snap.set(&format!("nic.{addr}.drops"), m.total_drops());
+        snap.set(&format!("nic.{addr}.oob_drops_invalid"), m.oob.drops_invalid);
+    }
+    for c in &clients {
+        snap.add("client.sent", c.sent.load(Ordering::Relaxed));
+        snap.add("client.send_failures", c.send_failures.load(Ordering::Relaxed));
+        snap.add("client.completed", c.completed_count.load(Ordering::Relaxed));
+        snap.add("client.rejected", c.rejected_count.load(Ordering::Relaxed));
+        snap.add("client.retries", c.retries.load(Ordering::Relaxed));
+        snap.add("client.strays", c.pending().strays);
+    }
+    for s in &servers {
+        snap.add("server.handled", s.handled.load(Ordering::Relaxed));
+        snap.add("server.oversize_responses", s.oversize_responses.load(Ordering::Relaxed));
+        snap.add("server.parked_peak", s.parked_peak.load(Ordering::Relaxed));
+        snap.add("server.sub_rpcs_issued", s.sub_rpcs_issued.load(Ordering::Relaxed));
+        snap.add("server.rejected", s.rejected.load(Ordering::Relaxed));
+        for (class, n) in s.shed_by_class.iter().enumerate() {
+            snap.add(&format!("server.shed_class.{class}"), n.load(Ordering::Relaxed));
+        }
+    }
+    snap.set("trace.complete", out.traces_complete);
+    snap.set("trace.incomplete", out.traces_incomplete);
+    out.snapshot = snap;
     out
 }
 
@@ -624,8 +751,6 @@ fn drive(
         overruns: 0,
         leaked_slots: 0,
         bad_responses: 0,
-        rejected: 0,
-        retries: 0,
         slo_good: 0,
     };
     let mut backoff = Backoff::new();
@@ -643,7 +768,9 @@ fn drive(
         // late-swept responses tens of µs early and skew the quantiles
         // low exactly at the connection-scale points.
         for d in flows.iter_mut() {
-            let FlowDriver { client, pool, workload, attempts, retry_q, .. } = d;
+            let FlowDriver { client, pool, workload, attempts, retry_q, tracer, slot_traces, .. } =
+                d;
+            let rejected_ctr = &client.rejected_count;
             let now_ns = ctl.epoch.elapsed().as_nanos() as u64;
             let n = client.poll_completions_with(|fr| {
                 let tag = stamp.tag(fr);
@@ -653,8 +780,13 @@ fn drive(
                 // request, not an answer). If the retry budget allows,
                 // the request re-enters through the backoff queue.
                 if fr.rpc_type() == Some(RpcType::Reject) {
-                    if in_measure {
-                        tally.rejected += 1;
+                    // Unified plane: rejects tick the client's own
+                    // counter; the window delta is read centrally.
+                    rejected_ctr.fetch_add(1, Ordering::Relaxed);
+                    // A rejected traced request never completes its
+                    // stage set; abandon the trace (counted incomplete).
+                    if let Some(id) = slot_traces.get_mut(tag as usize) {
+                        *id = 0;
                     }
                     let prior = attempts.get(tag as usize).copied().unwrap_or(0);
                     if opts.retry.should_retry(prior) {
@@ -664,6 +796,14 @@ fn drive(
                         retry_q.push((due, attempt, *fr));
                     }
                     return;
+                }
+                if let Some((sink, _)) = tracer {
+                    if let Some(id) = slot_traces.get_mut(tag as usize) {
+                        if *id != 0 {
+                            sink.record(*id, Stage::Harvest, "client", telemetry::now_ns());
+                            *id = 0;
+                        }
+                    }
                 }
                 let ok = workload.observe(fr);
                 if in_measure {
@@ -815,12 +955,15 @@ fn pump_retries(
             d.client.next_rpc_id(),
             &reject.payload(),
         );
+        // A full-cache-line reject echoes the original trace word back
+        // in its payload; the retry is a fresh send, not a traced one.
+        frame.clear_trace();
+        d.slot_traces[slot as usize] = 0;
         stamp.write(&mut frame, ctl.epoch.elapsed().as_nanos() as u64, slot);
         d.attempts[slot as usize] = attempt;
         match d.client.send_frame(frame) {
             Ok(()) => {
                 tally.sent += u64::from(in_measure);
-                tally.retries += u64::from(in_measure);
                 d.client.retries.fetch_add(1, Ordering::Relaxed);
                 any = true;
             }
@@ -882,12 +1025,30 @@ fn send_once(
         &d.buf,
     );
     stamp.write(&mut frame, ctl.epoch.elapsed().as_nanos() as u64, slot);
+    // Sampled stage tracing (off ⇒ this is one branch on a None).
+    let trace = match &mut d.tracer {
+        Some((sink, sampler)) if sampler.sample() => {
+            let id = sink.alloc_id();
+            frame.set_trace(id);
+            Some(id)
+        }
+        _ => None,
+    };
     match d.client.send_frame(frame) {
         Ok(()) => {
+            if let (Some(id), Some((sink, _))) = (trace, &d.tracer) {
+                sink.record(id, Stage::ClientSend, "client", telemetry::now_ns());
+                d.slot_traces[slot as usize] = id;
+            } else {
+                d.slot_traces[slot as usize] = 0;
+            }
             tally.sent += u64::from(in_measure);
             SendOutcome::Sent
         }
         Err(_) => {
+            // The trace (if any) recorded no events; the id is simply
+            // abandoned and the slot stays untraced.
+            d.slot_traces[slot as usize] = 0;
             d.pool.free(slot);
             tally.backpressure += u64::from(in_measure);
             SendOutcome::RingFull
@@ -1020,6 +1181,45 @@ mod tests {
         assert!(r2.completed > 0);
         assert_eq!(r2.slo_good, 0, "1-ns SLO admits nothing");
         assert_eq!(r2.goodput_mrps, 0.0);
+    }
+
+    /// 1-in-4 sampled tracing on the echo pair: stage phases populate,
+    /// telescope to the traced end-to-end mean, and the snapshot's
+    /// unified counters agree with the fabric/server totals.
+    #[test]
+    fn sampled_traces_break_latency_into_stages() {
+        let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+        cfg.trace_every = 4;
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.completed > 0);
+        assert!(r.traces_complete > 0, "sampling 1-in-4 must complete traces");
+        assert!(r.stage_total_us > 0.0);
+        let sum = r.stage_network_us + r.stage_rpc_us + r.stage_queue_us + r.stage_app_us;
+        assert!(
+            (sum - r.stage_total_us).abs() < 1e-6,
+            "phase join must telescope exactly: {sum} vs {}",
+            r.stage_total_us
+        );
+        // The echo service is the only tier the traces saw.
+        assert_eq!(r.bottleneck_tier, "echo");
+        // Unified plane: the snapshot saw the fabric's forwarded count
+        // and both endpoints' NIC monitors.
+        assert_eq!(r.snapshot.get("fabric.forwarded"), r.fabric_forwarded);
+        assert!(r.snapshot.get("nic.0.tx_rpcs") > 0, "client NIC egress unwired");
+        assert!(r.snapshot.get("nic.1.rx_rpcs") > 0, "server NIC ingress unwired");
+        assert!(r.snapshot.get("client.sent") >= r.sent, "cumulative >= window-scoped");
+        assert_eq!(r.snapshot.get("trace.complete"), r.traces_complete);
+    }
+
+    /// Tracing off (the default): no trace machinery runs, stage
+    /// columns stay zero, but the snapshot still exports the counters.
+    #[test]
+    fn tracing_off_leaves_stage_columns_zero() {
+        let r = echo_pair(&tiny(WallConfig::closed(1, 2, 4)), Stamp::Head);
+        assert_eq!(r.traces_complete + r.traces_incomplete, 0);
+        assert_eq!(r.stage_total_us, 0.0);
+        assert_eq!(r.bottleneck_tier, "");
+        assert_eq!(r.snapshot.get("fabric.forwarded"), r.fabric_forwarded);
     }
 
     /// SRQ connection churn: 64 short-lived c_ids rotate over one flow,

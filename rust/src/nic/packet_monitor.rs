@@ -2,6 +2,11 @@
 //! statistics — per-flow counters, drop accounting, and a coarse
 //! per-epoch rate estimator that feeds the soft-configuration controller
 //! (adaptive batching needs a load estimate).
+//!
+//! Flow ids come off the wire (steering hashes, connection-table
+//! lookups), so every counter hook tolerates an out-of-range id: it is
+//! accounted in the [`PacketMonitor::oob`] catch-all bucket as an
+//! invalid-frame drop instead of panicking the datapath thread.
 
 use crate::sim::Ns;
 
@@ -14,9 +19,13 @@ pub struct FlowCounters {
     pub drops_no_connection: u64,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct PacketMonitor {
     pub flows: Vec<FlowCounters>,
+    /// Catch-all for events carrying an out-of-range flow id — a
+    /// malformed/misrouted frame, counted under `drops_invalid` (plus
+    /// whatever the event itself was).
+    pub oob: FlowCounters,
     /// Rate estimation epoch.
     epoch_start: Ns,
     epoch_rpcs: u64,
@@ -28,6 +37,7 @@ impl PacketMonitor {
     pub fn new(n_flows: usize) -> Self {
         PacketMonitor {
             flows: vec![FlowCounters::default(); n_flows],
+            oob: FlowCounters::default(),
             epoch_start: 0,
             epoch_rpcs: 0,
             epoch_len_ns: 100_000, // 100 us epochs
@@ -35,26 +45,37 @@ impl PacketMonitor {
         }
     }
 
+    /// The flow's counters, or the out-of-bounds bucket (which also
+    /// records the bad id as an invalid drop).
+    fn slot(&mut self, flow: usize) -> &mut FlowCounters {
+        if flow < self.flows.len() {
+            &mut self.flows[flow]
+        } else {
+            self.oob.drops_invalid += 1;
+            &mut self.oob
+        }
+    }
+
     pub fn on_rx(&mut self, now: Ns, flow: usize) {
-        self.flows[flow].rx_rpcs += 1;
+        self.slot(flow).rx_rpcs += 1;
         self.tick(now);
     }
 
     pub fn on_tx(&mut self, now: Ns, flow: usize) {
-        self.flows[flow].tx_rpcs += 1;
+        self.slot(flow).tx_rpcs += 1;
         self.tick(now);
     }
 
     pub fn on_drop_ring_full(&mut self, flow: usize) {
-        self.flows[flow].drops_ring_full += 1;
+        self.slot(flow).drops_ring_full += 1;
     }
 
     pub fn on_drop_invalid(&mut self, flow: usize) {
-        self.flows[flow].drops_invalid += 1;
+        self.slot(flow).drops_invalid += 1;
     }
 
     pub fn on_drop_no_connection(&mut self, flow: usize) {
-        self.flows[flow].drops_no_connection += 1;
+        self.slot(flow).drops_no_connection += 1;
     }
 
     fn tick(&mut self, now: Ns) {
@@ -73,18 +94,20 @@ impl PacketMonitor {
     }
 
     pub fn total_rx(&self) -> u64 {
-        self.flows.iter().map(|f| f.rx_rpcs).sum()
+        self.flows.iter().map(|f| f.rx_rpcs).sum::<u64>() + self.oob.rx_rpcs
     }
 
     pub fn total_tx(&self) -> u64 {
-        self.flows.iter().map(|f| f.tx_rpcs).sum()
+        self.flows.iter().map(|f| f.tx_rpcs).sum::<u64>() + self.oob.tx_rpcs
     }
 
     pub fn total_drops(&self) -> u64 {
-        self.flows
+        let per_flow: u64 = self
+            .flows
             .iter()
             .map(|f| f.drops_ring_full + f.drops_invalid + f.drops_no_connection)
-            .sum()
+            .sum();
+        per_flow + self.oob.drops_ring_full + self.oob.drops_invalid + self.oob.drops_no_connection
     }
 }
 
@@ -103,6 +126,34 @@ mod tests {
         assert_eq!(pm.total_tx(), 1);
         assert_eq!(pm.total_drops(), 1);
         assert_eq!(pm.flows[1].drops_ring_full, 1);
+    }
+
+    /// Regression: an out-of-range flow id (wire data) must be counted
+    /// as an invalid drop in the catch-all bucket — never a panic.
+    #[test]
+    fn out_of_range_flow_counts_as_invalid_drop() {
+        let mut pm = PacketMonitor::new(2);
+        pm.on_rx(0, 99);
+        pm.on_tx(10, 2); // first out-of-range id (flows are 0..2)
+        pm.on_drop_ring_full(usize::MAX);
+        pm.on_drop_no_connection(7);
+        pm.on_drop_invalid(1_000_000);
+        // Every event landed in oob, each also ticking drops_invalid.
+        assert_eq!(pm.oob.rx_rpcs, 1);
+        assert_eq!(pm.oob.tx_rpcs, 1);
+        assert_eq!(pm.oob.drops_ring_full, 1);
+        assert_eq!(pm.oob.drops_no_connection, 1);
+        // 5 oob penalties (one per event) + the explicit invalid drop.
+        assert_eq!(pm.oob.drops_invalid, 6, "each oob id is itself an invalid drop");
+        // Totals include the catch-all; in-range flows untouched.
+        assert_eq!(pm.total_rx(), 1);
+        assert_eq!(pm.total_tx(), 1);
+        assert_eq!(pm.total_drops(), 8);
+        assert!(pm.flows.iter().all(|f| f.rx_rpcs == 0 && f.drops_invalid == 0));
+        // In-range accounting still works alongside.
+        pm.on_rx(20, 1);
+        assert_eq!(pm.flows[1].rx_rpcs, 1);
+        assert_eq!(pm.total_rx(), 2);
     }
 
     #[test]

@@ -6,9 +6,26 @@
 //! simulated or wall-clock nanoseconds. The Flight Registration analysis
 //! uses traces to find the bottleneck tier (the paper found the Flight
 //! service dominated with the Simple threading model).
+//!
+//! Two layers live here:
+//!
+//! * the original simulated-axis types ([`Trace`]/[`Span`]/
+//!   [`PhaseBreakdown`]/[`Metrics`]), consumed by `exp::microsim` and
+//!   `apps::socialnet`;
+//! * the **measured-path** tracing plane (PR 7): a sampled 1-in-N
+//!   [`Sampler`], a shared [`TraceSink`] collecting [`StageEvent`]s
+//!   stamped at each hop of a real RPC's life (client send → fabric
+//!   pickup → NIC ingress → dispatch dequeue → service start/end →
+//!   harvest), [`aggregate_stages`] joining them into per-[`Phase`]
+//!   breakdowns + per-tier exclusive time (the §5.7 bottleneck-tier
+//!   analysis), and [`MetricsSnapshot`] — the unified named-counter
+//!   export every `exp::wall_driver::WallResult` carries.
 
 use crate::sim::Ns;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 /// Phase of a request's life inside one tier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -141,6 +158,381 @@ impl PhaseBreakdown {
     }
 }
 
+// ===================================================================
+// Measured-path stage tracing
+// ===================================================================
+
+/// Nanoseconds since the process-wide telemetry epoch (first call).
+///
+/// Every stage stamp across every thread uses this one monotonic
+/// clock, so cross-thread stage deltas are directly comparable.
+#[inline]
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// A point in a traced RPC's life on the measured path, in causal
+/// order. Multi-tier topologies stamp `FabricPickup`..`ServiceEnd`
+/// once per hop; `ClientSend` and `Harvest` bracket the whole RPC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Client wrote the request frame into its TX ring.
+    ClientSend,
+    /// The fabric thread popped the frame off the client's TX ring.
+    FabricPickup,
+    /// The destination NIC accepted the frame into a flow's RX ring.
+    NicIngress,
+    /// The dispatch loop dequeued the frame (and admitted it).
+    DispatchDequeue,
+    /// The service handler started executing.
+    ServiceStart,
+    /// The service handler produced the response (parked requests
+    /// stamp this when the join completes).
+    ServiceEnd,
+    /// The client harvested the response from its RX ring.
+    Harvest,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::ClientSend => "client_send",
+            Stage::FabricPickup => "fabric_pickup",
+            Stage::NicIngress => "nic_ingress",
+            Stage::DispatchDequeue => "dispatch_dequeue",
+            Stage::ServiceStart => "service_start",
+            Stage::ServiceEnd => "service_end",
+            Stage::Harvest => "harvest",
+        }
+    }
+}
+
+/// One stamped stage of one traced RPC.
+#[derive(Clone, Copy, Debug)]
+pub struct StageEvent {
+    pub trace_id: u32,
+    pub stage: Stage,
+    /// Where the stamp was taken ("client", "fabric", or a service
+    /// tier's name) — the tier axis of the §5.7 bottleneck analysis.
+    pub tier: &'static str,
+    /// [`now_ns`] at the stamp.
+    pub at_ns: u64,
+}
+
+/// Shared collector for stage events + the trace-id allocator.
+///
+/// One sink is shared (via `Arc`) by the client drivers, the fabric
+/// thread, and every dispatch loop of a traced run; only *sampled*
+/// RPCs ever touch it, so the mutex is uncontended at 1-in-N rates.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    events: Mutex<Vec<StageEvent>>,
+    /// Next trace id; starts at 1 so 0 stays the "untraced" sentinel
+    /// in per-slot bookkeeping.
+    next_id: AtomicU32,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink { events: Mutex::new(Vec::new()), next_id: AtomicU32::new(1) }
+    }
+
+    /// Allocate a fresh 31-bit trace id (wraps at 2^31, far beyond any
+    /// run's sampled count).
+    pub fn alloc_id(&self) -> u32 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) & 0x7FFF_FFFF
+    }
+
+    /// Record one stage stamp.
+    pub fn record(&self, trace_id: u32, stage: Stage, tier: &'static str, at_ns: u64) {
+        self.events
+            .lock()
+            .unwrap()
+            .push(StageEvent { trace_id, stage, tier, at_ns });
+    }
+
+    /// Take every event recorded so far.
+    pub fn drain(&self) -> Vec<StageEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Events recorded so far (for tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic 1-in-N sampling decision stream (xorshift64).
+///
+/// `every == 0` never samples (tracing off — the decision is two
+/// compares, no RNG step, no allocation); `every == 1` samples every
+/// call; otherwise each call samples independently with probability
+/// 1/every. Same `(every, seed)` ⇒ the same decision sequence, so a
+/// traced run is reproducible per seed.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    every: u32,
+    state: u64,
+}
+
+impl Sampler {
+    pub fn new(every: u32, seed: u64) -> Sampler {
+        // splitmix64 scramble so adjacent seeds give unrelated streams;
+        // xorshift needs a nonzero state.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        Sampler { every, state: (z ^ (z >> 31)) | 1 }
+    }
+
+    /// Is tracing enabled at all for this sampler?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// Decide whether to sample this call. Pure arithmetic — never
+    /// allocates, never locks.
+    #[inline]
+    pub fn sample(&mut self) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        if self.every == 1 {
+            return true;
+        }
+        self.state ^= self.state << 13;
+        self.state ^= self.state >> 7;
+        self.state ^= self.state << 17;
+        self.state < u64::MAX / self.every as u64
+    }
+}
+
+/// Aggregated per-stage latency breakdown over a run's harvested
+/// traces — the output of [`aggregate_stages`].
+#[derive(Debug, Default)]
+pub struct StageReport {
+    /// Traces with a full stage set (ClientSend + ≥1 of each hop stage
+    /// + Harvest).
+    pub complete: u64,
+    /// Traces missing stages (sent near the run edge, rejected, or
+    /// never harvested).
+    pub incomplete: u64,
+    /// Mean per-phase time over complete traces, µs.
+    pub network_us: f64,
+    pub rpc_us: f64,
+    pub queue_us: f64,
+    pub app_us: f64,
+    /// Mean end-to-end (Harvest − ClientSend) over complete traces, µs.
+    /// Equals the four phase means summed — the join is exact.
+    pub total_us: f64,
+    /// Mean *exclusive* service time per tier, µs, descending — a
+    /// tier's own handler time minus the spans of the tiers it called.
+    pub tier_excl_us: Vec<(String, f64)>,
+    /// The tier with the largest mean exclusive time (empty when no
+    /// tier spans were recorded) — the §5.7 bottleneck-tier answer.
+    pub bottleneck_tier: String,
+    /// The same data as a per-tier/per-phase breakdown (network/rpc
+    /// attributed to "fabric"/"nic", queue/app to the serving tiers).
+    pub breakdown: PhaseBreakdown,
+}
+
+/// Join a run's stage events into per-phase means and per-tier
+/// exclusive times.
+///
+/// Phase attribution per trace (first/last semantics keep the math
+/// exact for multi-tier chains, where inner hops stamp the middle
+/// stages more than once):
+///
+/// ```text
+/// network = (first FabricPickup − ClientSend) + (Harvest − last ServiceEnd)
+/// rpc     = (first NicIngress − first FabricPickup)
+///         + (first ServiceStart − first DispatchDequeue)
+/// queue   = first DispatchDequeue − first NicIngress
+/// app     = last ServiceEnd − first ServiceStart
+/// ```
+///
+/// which telescopes to `network + rpc + queue + app = Harvest −
+/// ClientSend` exactly. `app` spans the whole service chain including
+/// downstream hops; the per-tier *exclusive* times split it back up:
+/// each (trace, tier) service span is `[first ServiceStart, last
+/// ServiceEnd]` at that tier, its parent is the smallest strictly
+/// containing span, and exclusive = own duration − immediate
+/// children's durations. The tier with the largest mean exclusive time
+/// is the bottleneck — the paper's §5.7 analysis.
+pub fn aggregate_stages(events: &[StageEvent]) -> StageReport {
+    // Group by trace id.
+    let mut by_trace: HashMap<u32, Vec<&StageEvent>> = HashMap::new();
+    for e in events {
+        by_trace.entry(e.trace_id).or_default().push(e);
+    }
+
+    let mut report = StageReport::default();
+    let mut sums = [0u128; 5]; // network, rpc, queue, app, total
+    let mut tier_excl: BTreeMap<String, (u128, u64)> = BTreeMap::new();
+
+    for (_, evs) in by_trace {
+        let find = |stage: Stage| -> Option<&&StageEvent> {
+            evs.iter().filter(|e| e.stage == stage).min_by_key(|e| e.at_ns)
+        };
+        let find_last = |stage: Stage| -> Option<&&StageEvent> {
+            evs.iter().filter(|e| e.stage == stage).max_by_key(|e| e.at_ns)
+        };
+        let (Some(send), Some(pickup), Some(ingress), Some(dequeue), Some(sstart), Some(send_end), Some(harvest)) = (
+            find(Stage::ClientSend),
+            find(Stage::FabricPickup),
+            find(Stage::NicIngress),
+            find(Stage::DispatchDequeue),
+            find(Stage::ServiceStart),
+            find_last(Stage::ServiceEnd),
+            find(Stage::Harvest),
+        ) else {
+            report.incomplete += 1;
+            continue;
+        };
+        report.complete += 1;
+
+        let network = pickup.at_ns.saturating_sub(send.at_ns)
+            + harvest.at_ns.saturating_sub(send_end.at_ns);
+        let rpc = ingress.at_ns.saturating_sub(pickup.at_ns)
+            + sstart.at_ns.saturating_sub(dequeue.at_ns);
+        let queue = dequeue.at_ns.saturating_sub(ingress.at_ns);
+        let app = send_end.at_ns.saturating_sub(sstart.at_ns);
+        let total = harvest.at_ns.saturating_sub(send.at_ns);
+        for (slot, v) in [network, rpc, queue, app, total].into_iter().enumerate() {
+            sums[slot] += v as u128;
+        }
+        report.breakdown.add("fabric", Phase::Network, network);
+        report.breakdown.add("nic", Phase::RpcProcessing, rpc);
+        report.breakdown.add(dequeue.tier, Phase::Queueing, queue);
+        report.breakdown.add(sstart.tier, Phase::AppLogic, app);
+        report.breakdown.requests += 1;
+
+        // Per-tier service spans: [first ServiceStart, last ServiceEnd]
+        // at each tier this trace crossed.
+        let mut spans: Vec<(&'static str, u64, u64)> = Vec::new();
+        for e in &evs {
+            if e.stage != Stage::ServiceStart {
+                continue;
+            }
+            if spans.iter().any(|&(t, _, _)| t == e.tier) {
+                continue;
+            }
+            let start = evs
+                .iter()
+                .filter(|x| x.stage == Stage::ServiceStart && x.tier == e.tier)
+                .map(|x| x.at_ns)
+                .min()
+                .unwrap();
+            let end = evs
+                .iter()
+                .filter(|x| x.stage == Stage::ServiceEnd && x.tier == e.tier)
+                .map(|x| x.at_ns)
+                .max()
+                .unwrap_or(start);
+            spans.push((e.tier, start, end));
+        }
+        // Exclusive time: own span minus immediate children (parent =
+        // smallest strictly containing span).
+        for (i, &(tier, s, e)) in spans.iter().enumerate() {
+            let mut excl = e.saturating_sub(s);
+            for (j, &(_, cs, ce)) in spans.iter().enumerate() {
+                if i == j || cs < s || ce > e || (cs == s && ce == e) {
+                    continue;
+                }
+                // (cs,ce) is inside (s,e); count it only if (i) is its
+                // *immediate* parent — no third span sits between.
+                let immediate = !spans.iter().enumerate().any(|(k, &(_, ms, me))| {
+                    k != i && k != j && ms <= cs && me >= ce && ms >= s && me <= e
+                        && !(ms == s && me == e)
+                        && !(ms == cs && me == ce)
+                });
+                if immediate {
+                    excl = excl.saturating_sub(ce.saturating_sub(cs));
+                }
+            }
+            let slot = tier_excl.entry(tier.to_string()).or_insert((0, 0));
+            slot.0 += excl as u128;
+            slot.1 += 1;
+        }
+    }
+
+    if report.complete > 0 {
+        let n = report.complete as f64;
+        report.network_us = sums[0] as f64 / n / 1000.0;
+        report.rpc_us = sums[1] as f64 / n / 1000.0;
+        report.queue_us = sums[2] as f64 / n / 1000.0;
+        report.app_us = sums[3] as f64 / n / 1000.0;
+        report.total_us = sums[4] as f64 / n / 1000.0;
+    }
+    report.tier_excl_us = tier_excl
+        .into_iter()
+        .map(|(t, (ns, n))| (t, ns as f64 / n.max(1) as f64 / 1000.0))
+        .collect();
+    report
+        .tier_excl_us
+        .sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    report.bottleneck_tier =
+        report.tier_excl_us.first().map(|(t, _)| t.clone()).unwrap_or_default();
+    report
+}
+
+/// Unified named-counter export: one flat, ordered `name -> value` map
+/// unifying the packet monitors, fabric stats, client counters, and
+/// server counters of a measured run. Attached to every
+/// `exp::wall_driver::WallResult`; names are namespaced
+/// (`fabric.*`, `nic.*`, `client.*`, `server.*`, `trace.*`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    counters: BTreeMap<String, u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn new() -> MetricsSnapshot {
+        MetricsSnapshot::default()
+    }
+
+    pub fn set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    pub fn add(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.counters.contains_key(name)
+    }
+
+    /// Iterate `(name, value)` in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    /// `name value` lines in name order (same shape as
+    /// [`Metrics::render`]).
+    pub fn render(&self) -> String {
+        self.counters.iter().map(|(k, v)| format!("{k} {v}\n")).collect()
+    }
+}
+
 /// Simple counter/gauge registry for runtime metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -235,5 +627,151 @@ mod tests {
         m.incr("rpc.sent", 2);
         assert_eq!(m.get("rpc.sent"), 7);
         assert!(m.render().contains("rpc.sent 7"));
+    }
+
+    // ------------------------------------------ measured-path tracing
+
+    #[test]
+    fn now_ns_is_monotonic_and_shared() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_per_seed() {
+        let draws = |every: u32, seed: u64| -> Vec<bool> {
+            let mut s = Sampler::new(every, seed);
+            (0..256).map(|_| s.sample()).collect()
+        };
+        // Same (every, seed) => identical decision sequence.
+        assert_eq!(draws(16, 7), draws(16, 7));
+        // Different seeds diverge.
+        assert_ne!(draws(16, 7), draws(16, 8));
+        // every=0 never samples; every=1 always samples.
+        assert!(draws(0, 7).iter().all(|&x| !x));
+        assert!(!Sampler::new(0, 7).enabled());
+        assert!(draws(1, 7).iter().all(|&x| x));
+        // 1-in-16 over many draws lands loosely near 1/16.
+        let mut s = Sampler::new(16, 3);
+        let hits = (0..100_000).filter(|_| s.sample()).count();
+        assert!((3_000..10_500).contains(&hits), "1-in-16 sampled {hits}/100000");
+    }
+
+    #[test]
+    fn trace_sink_allocates_ids_from_one_and_drains() {
+        let sink = TraceSink::new();
+        assert_eq!(sink.alloc_id(), 1, "0 must stay the untraced sentinel");
+        assert_eq!(sink.alloc_id(), 2);
+        sink.record(1, Stage::ClientSend, "client", 10);
+        sink.record(1, Stage::Harvest, "client", 20);
+        assert_eq!(sink.len(), 2);
+        let evs = sink.drain();
+        assert_eq!(evs.len(), 2);
+        assert!(sink.is_empty());
+        assert_eq!(evs[0].stage.name(), "client_send");
+    }
+
+    /// The phase join telescopes exactly: network + rpc + queue + app
+    /// == harvest − client_send, per trace and in the means.
+    #[test]
+    fn aggregate_joins_stages_into_exact_phases() {
+        let sink = TraceSink::new();
+        let t = sink.alloc_id();
+        sink.record(t, Stage::ClientSend, "client", 1_000);
+        sink.record(t, Stage::FabricPickup, "fabric", 1_400); //  400 network (out)
+        sink.record(t, Stage::NicIngress, "nic", 1_700); //       300 rpc (ingress)
+        sink.record(t, Stage::DispatchDequeue, "svc", 2_900); // 1200 queue
+        sink.record(t, Stage::ServiceStart, "svc", 3_000); //     100 rpc (dispatch)
+        sink.record(t, Stage::ServiceEnd, "svc", 8_000); //      5000 app
+        sink.record(t, Stage::Harvest, "client", 8_600); //       600 network (back)
+        let r = aggregate_stages(&sink.drain());
+        assert_eq!(r.complete, 1);
+        assert_eq!(r.incomplete, 0);
+        assert!((r.network_us - 1.0).abs() < 1e-9, "{}", r.network_us);
+        assert!((r.rpc_us - 0.4).abs() < 1e-9, "{}", r.rpc_us);
+        assert!((r.queue_us - 1.2).abs() < 1e-9, "{}", r.queue_us);
+        assert!((r.app_us - 5.0).abs() < 1e-9, "{}", r.app_us);
+        assert!((r.total_us - 7.6).abs() < 1e-9, "{}", r.total_us);
+        let sum = r.network_us + r.rpc_us + r.queue_us + r.app_us;
+        assert!((sum - r.total_us).abs() < 1e-9, "phase join must telescope");
+        assert_eq!(r.bottleneck_tier, "svc");
+        // The breakdown rows carry the same attribution.
+        assert_eq!(r.breakdown.requests, 1);
+        assert!((r.breakdown.fraction("svc", Phase::AppLogic) - 5_000.0 / 6_200.0).abs() < 1e-9);
+    }
+
+    /// Multi-tier exclusive time: a chain entry's exclusive time
+    /// excludes its nested downstream span, so a heavy middle tier is
+    /// found as the bottleneck even though the entry's inclusive span
+    /// is the longest (§5.7's Flight-service result).
+    #[test]
+    fn aggregate_finds_the_bottleneck_tier_by_exclusive_time() {
+        let sink = TraceSink::new();
+        let t = sink.alloc_id();
+        sink.record(t, Stage::ClientSend, "client", 0);
+        sink.record(t, Stage::FabricPickup, "fabric", 10);
+        sink.record(t, Stage::NicIngress, "nic", 20);
+        sink.record(t, Stage::DispatchDequeue, "checkin", 30);
+        sink.record(t, Stage::ServiceStart, "checkin", 40); // inclusive 40..10_040
+        sink.record(t, Stage::ServiceStart, "passport", 1_000); // inclusive 1_000..9_000
+        sink.record(t, Stage::ServiceStart, "citizens", 2_000); // 2_000..3_000
+        sink.record(t, Stage::ServiceEnd, "citizens", 3_000); // excl 1_000
+        sink.record(t, Stage::ServiceEnd, "passport", 9_000); // excl 8_000 − 1_000 = 7_000
+        sink.record(t, Stage::ServiceEnd, "checkin", 10_040); // excl 10_000 − 8_000 = 2_000
+        sink.record(t, Stage::Harvest, "client", 10_100);
+        let r = aggregate_stages(&sink.drain());
+        assert_eq!(r.complete, 1);
+        let excl: HashMap<&str, f64> =
+            r.tier_excl_us.iter().map(|(t, v)| (t.as_str(), *v)).collect();
+        assert!((excl["checkin"] - 2.0).abs() < 1e-9, "{excl:?}");
+        assert!((excl["passport"] - 7.0).abs() < 1e-9, "{excl:?}");
+        assert!((excl["citizens"] - 1.0).abs() < 1e-9, "{excl:?}");
+        assert_eq!(r.bottleneck_tier, "passport", "exclusive time must skip nested spans");
+        // tier_excl_us is sorted descending.
+        assert!(r.tier_excl_us.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn aggregate_counts_partial_traces_as_incomplete() {
+        let sink = TraceSink::new();
+        let a = sink.alloc_id();
+        sink.record(a, Stage::ClientSend, "client", 0);
+        // Never harvested (in flight at the run edge, or rejected).
+        let b = sink.alloc_id();
+        for (stage, tier, at) in [
+            (Stage::ClientSend, "client", 0),
+            (Stage::FabricPickup, "fabric", 1),
+            (Stage::NicIngress, "nic", 2),
+            (Stage::DispatchDequeue, "svc", 3),
+            (Stage::ServiceStart, "svc", 4),
+            (Stage::ServiceEnd, "svc", 5),
+            (Stage::Harvest, "client", 6),
+        ] {
+            sink.record(b, stage, tier, at);
+        }
+        let r = aggregate_stages(&sink.drain());
+        assert_eq!(r.complete, 1);
+        assert_eq!(r.incomplete, 1);
+        // No events at all: an empty, well-formed report.
+        let empty = aggregate_stages(&[]);
+        assert_eq!(empty.complete + empty.incomplete, 0);
+        assert_eq!(empty.bottleneck_tier, "");
+        assert_eq!(empty.total_us, 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_ordered_and_renders() {
+        let mut s = MetricsSnapshot::new();
+        s.set("nic.rx", 10);
+        s.set("client.sent", 7);
+        s.add("nic.rx", 5);
+        assert_eq!(s.get("nic.rx"), 15);
+        assert_eq!(s.get("absent"), 0);
+        assert!(s.contains("client.sent") && !s.contains("absent"));
+        let names: Vec<&str> = s.iter().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["client.sent", "nic.rx"], "iteration must be name-ordered");
+        assert_eq!(s.render(), "client.sent 7\nnic.rx 15\n");
+        assert_eq!(s.len(), 2);
     }
 }

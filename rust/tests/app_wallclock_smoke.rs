@@ -138,6 +138,38 @@ fn fast_run_emits_kvs_and_chain_series() {
         assert_eq!(num(&row[fail_c]), 0.0, "downstream sub-RPC failures: {row:?}");
     }
 
+    // The traced chain point (§5.7 bottleneck attribution): 1-in-16
+    // sampling over the sleeping-tier chain must complete traces and
+    // attribute the bottleneck to the middle (passport) tier, whose
+    // sleep cost dominates the other tiers by an order of magnitude.
+    let (te_c, tc_c, bt_c, app_c, net_c) = (
+        ccol("trace_every"),
+        ccol("traces_complete"),
+        ccol("bottleneck_tier"),
+        ccol("stage_app_us"),
+        ccol("stage_network_us"),
+    );
+    let traced = chain
+        .rows
+        .iter()
+        .find(|r| num(&r[te_c]) > 0.0)
+        .expect("no traced chain point");
+    assert!(num(&traced[tc_c]) > 0.0, "traced chain completed no traces: {traced:?}");
+    assert_eq!(
+        text(&traced[bt_c]),
+        "passport",
+        "bottleneck attribution missed the dominant sleeping tier"
+    );
+    // Sleeping handlers make app time the dominant phase of the traced
+    // breakdown — far above the wire time.
+    assert!(
+        num(&traced[app_c]) > num(&traced[net_c]),
+        "app phase should dominate a sleeping chain: {traced:?}"
+    );
+    for row in chain.rows.iter().filter(|r| num(&r[te_c]) == 0.0) {
+        assert_eq!(num(&row[tc_c]), 0.0, "untraced chain row has trace data: {row:?}");
+    }
+
     // -------------------------------------------------- fan-out series
     let fan = fig
         .series

@@ -91,6 +91,49 @@ fn fast_run_emits_measured_and_simulated_series() {
         "throughput collapsed with threads: t1={t1} t4={t4}"
     );
 
+    // ------------------------------------------------ traced grid point
+    // One point runs with 1-in-16 stage-trace sampling: its per-stage
+    // columns must populate, telescope exactly to the traced end-to-end
+    // mean, and land in the same ballpark as the untraced RTT mean.
+    // Every other row must stay all-zero (tracing off = no stage data).
+    let te_c = col("trace_every");
+    let (net_c, rpc_c, que_c, app_c, tot_c, tc_c, mean_c) = (
+        col("stage_network_us"),
+        col("stage_rpc_us"),
+        col("stage_queue_us"),
+        col("stage_app_us"),
+        col("stage_total_us"),
+        col("traces_complete"),
+        col("mean_us"),
+    );
+    let mut saw_traced = false;
+    for row in &measured.rows {
+        if num(&row[te_c]) > 0.0 {
+            saw_traced = true;
+            assert!(num(&row[tc_c]) > 0.0, "traced point completed no traces: {row:?}");
+            let sum =
+                num(&row[net_c]) + num(&row[rpc_c]) + num(&row[que_c]) + num(&row[app_c]);
+            let total = num(&row[tot_c]);
+            assert!(total > 0.0, "traced point has no stage breakdown: {row:?}");
+            assert!(
+                (sum - total).abs() < 1e-6,
+                "stage phases must telescope: sum {sum} vs total {total}"
+            );
+            // The traced mean is the same quantity the stamp RTT
+            // measures, over the sampled subset — same ballpark, with
+            // wide slack for sampling noise on a loaded host.
+            let mean = num(&row[mean_c]);
+            assert!(
+                total > mean * 0.1 && total < mean * 10.0,
+                "traced total {total}us implausible vs RTT mean {mean}us"
+            );
+        } else {
+            assert_eq!(num(&row[tot_c]), 0.0, "untraced row has stage data: {row:?}");
+            assert_eq!(num(&row[tc_c]), 0.0);
+        }
+    }
+    assert!(saw_traced, "grid lost its traced point");
+
     // ----------------------------------------- simulated + ratio series
     let simulated = fig
         .series
