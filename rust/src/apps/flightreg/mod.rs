@@ -16,7 +16,9 @@
 use crate::coordinator::api::{CallHandle, RpcClient};
 use crate::coordinator::backoff::Backoff;
 use crate::coordinator::frame::Frame;
-use crate::coordinator::service::{CallToken, PendingCall, Request, Response, RpcService};
+use crate::coordinator::service::{
+    CallToken, PendingCall, ReplyArena, Request, Response, RpcService,
+};
 use crate::exp::microsim::{AppCfg, DurDist, TierCfg};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -268,7 +270,7 @@ impl TierService {
 }
 
 impl RpcService for TierService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         self.cost.run();
         let hops_below = match &self.next {
             None => 0,
@@ -296,12 +298,14 @@ impl RpcService for TierService {
                     Some(resp) => resp.first().copied().unwrap_or(0),
                     None => {
                         self.failures.fetch_add(1, Ordering::Relaxed);
-                        return vec![0].into();
+                        reply.write(&[0]);
+                        return Response::Ready;
                     }
                 }
             }
         };
-        vec![1 + hops_below].into()
+        reply.write(&[1 + hops_below]);
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
@@ -524,7 +528,7 @@ impl FanoutService {
 }
 
 impl RpcService for FanoutService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         self.cost.run();
         let n = self.branches.len();
         let issued_at = Instant::now();
@@ -539,7 +543,8 @@ impl RpcService for FanoutService {
                     for (i, h) in handles.iter().enumerate() {
                         self.branches[i].client.pending().cancel(h.rpc_id());
                     }
-                    return Response::Ready(vec![0]);
+                    reply.write(&[0]);
+                    return Response::Ready;
                 }
             }
         }
@@ -764,9 +769,10 @@ mod tests {
         );
 
         let req = Request { method: CHAIN_METHOD, c_id: 5, rpc_id: 40, flow: 0, token: 9, payload: b"" };
-        match svc.call(req) {
+        let mut arena = ReplyArena::new();
+        match svc.call(req, &mut arena) {
             Response::Pending(pc) => assert_eq!(pc.sub_calls, 2),
-            Response::Ready(_) => panic!("fan-out must park"),
+            Response::Ready => panic!("fan-out must park"),
         }
         assert_eq!(svc.parked(), 1);
         let q0 = r0.tx.pop().expect("branch 0 sub-RPC issued");
@@ -813,7 +819,8 @@ mod tests {
             None,
         );
         let req = Request { method: CHAIN_METHOD, c_id: 5, rpc_id: 1, flow: 0, token: 3, payload: b"" };
-        assert!(matches!(svc.call(req), Response::Pending(_)));
+        let mut arena = ReplyArena::new();
+        assert!(matches!(svc.call(req, &mut arena), Response::Pending(_)));
         let q = rings.tx.pop().unwrap();
         rings.rx.push(Frame::new(RpcType::Response, CHAIN_METHOD, 1, q.rpc_id(), &[0])).unwrap();
         let mut done = Vec::new();

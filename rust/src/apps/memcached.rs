@@ -10,7 +10,7 @@
 //! stack, §5.6) — reflected in `op_cost_ns`.
 
 use super::{kvwire, KvStore};
-use crate::coordinator::service::{Request, Response, RpcService};
+use crate::coordinator::service::{ReplyArena, Request, Response, RpcService};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -160,10 +160,11 @@ impl MemcachedService {
 }
 
 impl RpcService for MemcachedService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         *self.per_conn_ops.entry(req.c_id).or_insert(0) += 1;
         let Some(key) = kvwire::req_key(req.payload) else {
-            return kvwire::resp_miss(0).into();
+            reply.write(&kvwire::resp_miss(0));
+            return Response::Ready;
         };
         let kb = key.to_le_bytes();
         let out = match req.method {
@@ -183,7 +184,8 @@ impl RpcService for MemcachedService {
                 _ => kvwire::resp_miss(key),
             },
         };
-        out.into()
+        reply.write(&out);
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
@@ -194,6 +196,7 @@ impl RpcService for MemcachedService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::oneshot;
     use crate::sim::prop;
 
     fn svc_req(method: u8, c_id: u32, payload: &[u8]) -> Request<'_> {
@@ -206,16 +209,16 @@ mod tests {
         let mut svc = MemcachedService::new(store.clone());
         let mut p = Vec::new();
         kvwire::fill_req(&mut p, 5, Some(kvwire::value_of(5)));
-        let resp = svc.call(svc_req(kvwire::METHOD_SET, 1, &p)).ready().unwrap();
+        let resp = oneshot(&mut svc, svc_req(kvwire::METHOD_SET, 1, &p)).unwrap();
         assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
 
         let mut g = Vec::new();
         kvwire::fill_req(&mut g, 5, None);
-        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g)).ready().unwrap();
+        let resp = oneshot(&mut svc, svc_req(kvwire::METHOD_GET, 2, &g)).unwrap();
         assert_eq!(kvwire::parse_resp(&resp), Some((true, 5, kvwire::value_of(5))));
 
         kvwire::fill_req(&mut g, 6, None);
-        let resp = svc.call(svc_req(kvwire::METHOD_GET, 2, &g)).ready().unwrap();
+        let resp = oneshot(&mut svc, svc_req(kvwire::METHOD_GET, 2, &g)).unwrap();
         assert_eq!(kvwire::parse_resp(&resp).map(|r| r.0), Some(false), "unset key misses");
 
         // Per-connection state: two ops on c_id 2, one on c_id 1.

@@ -12,7 +12,7 @@
 
 use super::{kvwire, KvStore};
 use crate::coordinator::frame::{fmix32, FNV_OFFSET, FNV_PRIME};
-use crate::coordinator::service::{Request, Response, RpcService};
+use crate::coordinator::service::{ReplyArena, Request, Response, RpcService};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -261,16 +261,18 @@ impl MicaService {
 }
 
 impl RpcService for MicaService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         let Some(key) = kvwire::req_key(req.payload) else {
-            return kvwire::resp_miss(0).into();
+            reply.write(&kvwire::resp_miss(0));
+            return Response::Ready;
         };
         let kb = key.to_le_bytes();
         let h = key_hash(&kb);
         if h as usize % self.n_partitions != self.own {
             // Another flow's partition: the data is not here.
             self.misrouted.fetch_add(1, Ordering::Relaxed);
-            return kvwire::resp_miss(key).into();
+            reply.write(&kvwire::resp_miss(key));
+            return Response::Ready;
         }
         let out = match req.method {
             kvwire::METHOD_SET => {
@@ -292,7 +294,8 @@ impl RpcService for MicaService {
                 }
             },
         };
-        out.into()
+        reply.write(&out);
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
@@ -318,9 +321,10 @@ impl SharedMicaService {
 }
 
 impl RpcService for SharedMicaService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         let Some(key) = kvwire::req_key(req.payload) else {
-            return kvwire::resp_miss(0).into();
+            reply.write(&kvwire::resp_miss(0));
+            return Response::Ready;
         };
         let kb = key.to_le_bytes();
         let mut store = self.store.lock().unwrap();
@@ -341,7 +345,8 @@ impl RpcService for SharedMicaService {
                 _ => kvwire::resp_miss(key),
             },
         };
-        out.into()
+        reply.write(&out);
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
@@ -352,6 +357,7 @@ impl RpcService for SharedMicaService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::oneshot;
     use crate::sim::prop;
 
     /// Per-flow owned partitions: the owning service serves its keys
@@ -379,7 +385,7 @@ mod tests {
             token: 0,
             payload: &p,
         };
-        let resp = services[own].call(set).ready().unwrap();
+        let resp = oneshot(&mut services[own], set).unwrap();
         assert_eq!(kvwire::parse_resp(&resp).map(|r| r.0), Some(true));
         assert_eq!(misrouted.load(Ordering::Relaxed), 0, "right partition, no misroute");
 
@@ -394,10 +400,10 @@ mod tests {
             token: 0,
             payload: &g,
         };
-        let hit = services[own].call(get(own)).ready().unwrap();
+        let hit = oneshot(&mut services[own], get(own)).unwrap();
         assert_eq!(kvwire::parse_resp(&hit), Some((true, key, kvwire::value_of(key))));
         let wrong = (own + 1) % n;
-        let miss = services[wrong].call(get(wrong)).ready().unwrap();
+        let miss = oneshot(&mut services[wrong], get(wrong)).unwrap();
         assert_eq!(kvwire::parse_resp(&miss).map(|r| r.0), Some(false));
         assert_eq!(misrouted.load(Ordering::Relaxed), 1);
     }
@@ -442,7 +448,7 @@ mod tests {
             token: 0,
             payload: &p,
         };
-        assert_eq!(kvwire::parse_resp(&svc.call(set).ready().unwrap()).map(|r| r.0), Some(true));
+        assert_eq!(kvwire::parse_resp(&oneshot(&mut svc, set).unwrap()).map(|r| r.0), Some(true));
         assert_eq!(store.lock().unwrap().misrouted, 0, "right partition, no misroute");
 
         // Same key arriving at the wrong flow (round-robin steering):
@@ -458,7 +464,7 @@ mod tests {
             payload: &g,
         };
         assert_eq!(
-            kvwire::parse_resp(&svc.call(get).ready().unwrap()),
+            kvwire::parse_resp(&oneshot(&mut svc, get).unwrap()),
             Some((true, key, kvwire::value_of(key)))
         );
         assert_eq!(store.lock().unwrap().misrouted, 1);

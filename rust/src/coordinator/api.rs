@@ -40,11 +40,11 @@
 //! layer.
 
 use crate::coordinator::backoff::{Backoff, RetryPolicy};
-use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
+use crate::coordinator::frame::{Frame, Payload, RpcType, MAX_PAYLOAD_BYTES};
 use crate::coordinator::rings::RingPair;
 use crate::coordinator::service::{
-    tenant_class, AdmissionLedger, AdmissionPolicy, CallToken, HandlerService, Request, Response,
-    RpcService, TENANT_CLASSES,
+    tenant_class, AdmissionLedger, AdmissionPolicy, CallToken, HandlerService, ReplyArena,
+    Request, Response, RpcService, TENANT_CLASSES,
 };
 use crate::telemetry::{self, Stage, TraceSink};
 use std::collections::{HashMap, VecDeque};
@@ -53,11 +53,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A completed RPC: id + response payload + whether the server answered
-/// with an admission [`RpcType::Reject`] instead of serving it.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// with an admission [`RpcType::Reject`] instead of serving it. The
+/// payload is the inline [`Payload`] value copied out of the response
+/// frame — plain `Copy` data, no heap allocation per completion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Completion {
     pub rpc_id: u32,
-    pub payload: Vec<u8>,
+    pub payload: Payload,
     /// `true` when the "completion" is an overload reject — the call
     /// finished (its slot is reclaimed) but was refused, not served.
     pub rejected: bool,
@@ -66,13 +68,13 @@ pub struct Completion {
 /// Terminal state of one call as seen through its [`CallHandle`] — the
 /// retry/reject-aware completion state overload control needs: a call
 /// now finishes in one of three ways, not two.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CallOutcome {
     /// Served: the response payload.
-    Ok(Vec<u8>),
+    Ok(Payload),
     /// Refused by server-side admission control ([`RpcType::Reject`]);
     /// the echoed request payload rides along. Retryable.
-    Rejected(Vec<u8>),
+    Rejected(Payload),
     /// No response within the patience bound; the call was cancelled
     /// (a late response becomes a counted stray). Retryable.
     TimedOut,
@@ -80,7 +82,7 @@ pub enum CallOutcome {
 
 impl CallOutcome {
     /// The served payload, if any (`Rejected`/`TimedOut` → `None`).
-    pub fn ok(self) -> Option<Vec<u8>> {
+    pub fn ok(self) -> Option<Payload> {
         match self {
             CallOutcome::Ok(p) => Some(p),
             _ => None,
@@ -130,14 +132,17 @@ impl CallHandle {
     }
 }
 
-/// One pending-table slot.
+/// One pending-table slot. A `Ready` slot holds the response payload
+/// inline ([`Payload`] is one cache line of `Copy` data), so completing
+/// a call never allocates — the table's slot array is the only heap
+/// storage and it is recycled LIFO.
 enum Slot {
     Free,
     /// Awaiting its response.
     Pending { rpc_id: u32 },
     /// Response arrived, not yet claimed. `rejected` records whether it
     /// was an admission refusal rather than a served response.
-    Ready { rpc_id: u32, payload: Vec<u8>, rejected: bool },
+    Ready { rpc_id: u32, payload: Payload, rejected: bool },
 }
 
 /// Slot-indexed table of in-flight calls: the client-side mirror of the
@@ -209,6 +214,12 @@ impl PendingTable {
         }
     }
 
+    // --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+    // The issue/complete/claim cycle below runs once per RPC. In steady
+    // state (slot high-water mark reached, hash capacity warmed) none
+    // of it allocates: slots recycle LIFO, payloads are inline `Payload`
+    // values, and the arrival-order deque reuses its ring storage.
+
     /// Register an issued call. `None` on a duplicate rpc_id (the
     /// original registration is untouched — a duplicate must not
     /// alias two calls onto one slot).
@@ -236,22 +247,22 @@ impl PendingTable {
     /// client's mutexed wrapper instead uses
     /// [`PendingTable::complete_without_sink`] and fires the sink
     /// *outside* its lock, so a continuation may re-enter the client.
-    pub fn complete(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
+    /// The payload is copied inline (no heap allocation).
+    pub fn complete(&mut self, rpc_id: u32, payload: &[u8]) -> bool {
         self.complete_as(rpc_id, payload, false)
     }
 
     /// [`PendingTable::complete`] with an explicit reject status.
-    pub fn complete_as(&mut self, rpc_id: u32, payload: Vec<u8>, rejected: bool) -> bool {
-        let completion = Completion { rpc_id, payload, rejected };
+    pub fn complete_as(&mut self, rpc_id: u32, payload: &[u8], rejected: bool) -> bool {
+        let completion = Completion { rpc_id, payload: Payload::from_slice(payload), rejected };
         if let Some(sink) = self.sink.as_mut() {
             sink.on_completion(&completion);
         }
-        let Completion { rpc_id, payload, rejected } = completion;
-        self.complete_without_sink_as(rpc_id, payload, rejected)
+        self.complete_without_sink_as(rpc_id, completion.payload, rejected)
     }
 
     /// [`PendingTable::complete`] minus the sink invocation (see there).
-    pub fn complete_without_sink(&mut self, rpc_id: u32, payload: Vec<u8>) -> bool {
+    pub fn complete_without_sink(&mut self, rpc_id: u32, payload: Payload) -> bool {
         self.complete_without_sink_as(rpc_id, payload, false)
     }
 
@@ -261,7 +272,7 @@ impl PendingTable {
     pub fn complete_without_sink_as(
         &mut self,
         rpc_id: u32,
-        payload: Vec<u8>,
+        payload: Payload,
         rejected: bool,
     ) -> bool {
         match self.by_rpc.get(&rpc_id).copied() {
@@ -284,14 +295,14 @@ impl PendingTable {
     /// Claim the response of one specific call if it has arrived; the
     /// slot is recycled. Amortized O(1) (the arrival-order deque entry
     /// it leaves behind is garbage-collected by [`Self::compact_ready`]).
-    pub fn try_complete(&mut self, rpc_id: u32) -> Option<Vec<u8>> {
+    pub fn try_complete(&mut self, rpc_id: u32) -> Option<Payload> {
         self.try_complete_status(rpc_id).map(|(payload, _)| payload)
     }
 
     /// [`PendingTable::try_complete`] carrying the reject status:
     /// `(payload, rejected)`. Retry-aware callers
     /// ([`RpcClient::wait_handle_outcome`]) use this form.
-    pub fn try_complete_status(&mut self, rpc_id: u32) -> Option<(Vec<u8>, bool)> {
+    pub fn try_complete_status(&mut self, rpc_id: u32) -> Option<(Payload, bool)> {
         let slot = self.by_rpc.get(&rpc_id).copied()?;
         match std::mem::replace(&mut self.slots[slot as usize], Slot::Free) {
             Slot::Ready { rpc_id: r, payload, rejected } if r == rpc_id => {
@@ -348,6 +359,7 @@ impl PendingTable {
         }
         None
     }
+    // --- HOT PATH END ---
 
     /// Forget a call (handle dropped / timed out). Frees the slot; a
     /// completion arriving later becomes a harmless counted stray. A
@@ -513,7 +525,7 @@ impl RpcClient {
     /// wait ([`RpcClient::wait_handle`]). Same dispatch-thread model as
     /// before the handle API existed: no context switch, O(1) matching
     /// per poll.
-    pub fn call_blocking(&self, method: u8, payload: &[u8]) -> Option<Vec<u8>> {
+    pub fn call_blocking(&self, method: u8, payload: &[u8]) -> Option<Payload> {
         self.call_blocking_timeout(method, payload, Self::BLOCKING_TIMEOUT)
     }
 
@@ -523,7 +535,7 @@ impl RpcClient {
         method: u8,
         payload: &[u8],
         timeout: Duration,
-    ) -> Option<Vec<u8>> {
+    ) -> Option<Payload> {
         let mut backoff = Backoff::new();
         let handle = loop {
             match self.call_async(method, payload) {
@@ -540,7 +552,7 @@ impl RpcClient {
     /// the caller may treat the RPC as lost. An admission reject counts
     /// as "no response" here (`None`) — callers that need to tell the
     /// two apart use [`RpcClient::wait_handle_outcome`].
-    pub fn wait_handle(&self, handle: &CallHandle, timeout: Duration) -> Option<Vec<u8>> {
+    pub fn wait_handle(&self, handle: &CallHandle, timeout: Duration) -> Option<Payload> {
         self.wait_handle_outcome(handle, timeout).ok()
     }
 
@@ -670,7 +682,7 @@ impl RpcClient {
                 let payload = frame.payload();
                 let rejected = frame.rpc_type() == Some(RpcType::Reject);
                 if has_sink {
-                    sink_batch.push(Completion { rpc_id, payload: payload.clone(), rejected });
+                    sink_batch.push(Completion { rpc_id, payload, rejected });
                 }
                 if table.complete_without_sink_as(rpc_id, payload, rejected) {
                     matched += 1;
@@ -916,6 +928,7 @@ impl RpcThreadedServer {
                 done: Vec::new(),
                 tracer: self.tracer.clone(),
                 parked_traces: HashMap::new(),
+                arena: ReplyArena::new(),
             };
             joins.push(std::thread::spawn(move || match mode {
                 DispatchMode::Dispatch => dispatch_loop(fl),
@@ -925,46 +938,60 @@ impl RpcThreadedServer {
         joins
     }
 
-    /// Dispatch one request frame through a service: decode, call, and
-    /// either build the response frame (`Some`) or park the request
-    /// under `token` (`None`; the caller records the reply context).
-    /// `handled` counts *responses produced*, so it ticks here only on
-    /// the ready path — parked requests tick when they resume. The
-    /// live loops run the equivalent logic inside `FlowLoop::ingest`
-    /// (which also does the parked bookkeeping); this entry point is
-    /// the single-frame harness used by unit tests.
-    #[cfg_attr(not(test), allow(dead_code))]
-    fn handle_one(
+    /// Dispatch one request frame through a service: decode, call into
+    /// `arena`, and either build the response frame (`Some`) or park
+    /// the request under `token` (`None`; the caller records the reply
+    /// context). `handled` counts *responses produced*, so it ticks
+    /// here only on the ready path — parked requests tick when they
+    /// resume. The live loops run the equivalent logic inside
+    /// `FlowLoop::ingest` (which also does the parked bookkeeping);
+    /// this entry point is the single-frame harness unit tests and the
+    /// `hotpath_alloc` allocation-regression suite drive — steady
+    /// state, it must never touch the allocator (the arena is the only
+    /// scratch space and it is reused across calls).
+    // --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+    pub fn handle_one(
         frame: &Frame,
         flow: u32,
         token: CallToken,
         service: &mut dyn RpcService,
+        arena: &mut ReplyArena,
         handled: &AtomicU64,
         oversize: &AtomicU64,
     ) -> Option<Frame> {
         let method = frame.flags();
         let payload = frame.payload();
-        let resp = service.call(Request {
-            method,
-            c_id: frame.c_id(),
-            rpc_id: frame.rpc_id(),
-            flow,
-            token,
-            payload: &payload,
-        });
+        let resp = service.call(
+            Request {
+                method,
+                c_id: frame.c_id(),
+                rpc_id: frame.rpc_id(),
+                flow,
+                token,
+                payload: &payload,
+            },
+            arena,
+        );
         match resp {
-            Response::Ready(resp_payload) => {
+            Response::Ready => {
                 handled.fetch_add(1, Ordering::Relaxed);
                 Some(response_frame(
                     &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
-                    &resp_payload,
+                    arena.bytes(),
                     oversize,
                 ))
             }
             Response::Pending(_) => None,
         }
     }
+    // --- HOT PATH END ---
 }
+
+// --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+// Everything from here through `FlowLoop::ingest` runs once per served
+// request. Steady state it never allocates: the request payload is an
+// inline `Payload` copy, the service writes its reply into the flow's
+// reused `ReplyArena`, and the response frame is built on the stack.
 
 /// Build a response frame, truncating an oversize payload (counted).
 fn response_frame(ctx: &ReplyCtx, payload: &[u8], oversize: &AtomicU64) -> Frame {
@@ -995,6 +1022,10 @@ struct FlowLoop {
     parked: HashMap<CallToken, ReplyCtx>,
     next_token: CallToken,
     done: Vec<(CallToken, Vec<u8>)>,
+    /// Per-flow reply slab: every ready response is written into this
+    /// one reused buffer — the dispatch loop's steady state never
+    /// allocates a reply (see `ReplyArena`).
+    arena: ReplyArena,
     /// Stage-trace sink (`None` = tracing off, the hot-path default).
     tracer: Option<Arc<TraceSink>>,
     /// Trace ids of parked requests, so [`Stage::ServiceEnd`] can be
@@ -1060,23 +1091,26 @@ impl FlowLoop {
             sink.record(*id, Stage::DispatchDequeue, tier, telemetry::now_ns());
             sink.record(*id, Stage::ServiceStart, tier, telemetry::now_ns());
         }
-        let resp = self.service.call(Request {
-            method,
-            c_id: frame.c_id(),
-            rpc_id: frame.rpc_id(),
-            flow: self.flow,
-            token,
-            payload: &payload,
-        });
+        let resp = self.service.call(
+            Request {
+                method,
+                c_id: frame.c_id(),
+                rpc_id: frame.rpc_id(),
+                flow: self.flow,
+                token,
+                payload: &payload,
+            },
+            &mut self.arena,
+        );
         match resp {
-            Response::Ready(p) => {
+            Response::Ready => {
                 if let Some((sink, id)) = &trace {
                     sink.record(*id, Stage::ServiceEnd, self.service.name(), telemetry::now_ns());
                 }
                 self.handled.fetch_add(1, Ordering::Relaxed);
                 let f = response_frame(
                     &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
-                    &p,
+                    self.arena.bytes(),
                     &self.oversize,
                 );
                 self.respond(f)
@@ -1095,6 +1129,7 @@ impl FlowLoop {
             }
         }
     }
+    // --- HOT PATH END ---
 
     /// Give the service a chance to finish parked tokens; flush every
     /// response it produced. Returns whether anything progressed (and
@@ -1224,15 +1259,15 @@ mod tests {
         let c = t.register(12).unwrap();
         assert_eq!(t.in_flight(), 3);
         // Completions arrive in reverse order.
-        assert!(t.complete(12, b"c".to_vec()));
-        assert!(t.complete(10, b"a".to_vec()));
-        assert!(t.complete(11, b"b".to_vec()));
+        assert!(t.complete(12, b"c"));
+        assert!(t.complete(10, b"a"));
+        assert!(t.complete(11, b"b"));
         assert_eq!(t.in_flight(), 0);
         assert_eq!(t.ready_len(), 3);
         // Targeted claims work regardless of arrival order.
-        assert_eq!(t.try_complete(b.rpc_id()), Some(b"b".to_vec()));
-        assert_eq!(t.try_complete(a.rpc_id()), Some(b"a".to_vec()));
-        assert_eq!(t.try_complete(c.rpc_id()), Some(b"c".to_vec()));
+        assert_eq!(t.try_complete(b.rpc_id()).as_deref(), Some(&b"b"[..]));
+        assert_eq!(t.try_complete(a.rpc_id()).as_deref(), Some(&b"a"[..]));
+        assert_eq!(t.try_complete(c.rpc_id()).as_deref(), Some(&b"c"[..]));
         assert!(t.is_idle());
         assert_eq!(t.completed, 3);
         assert_eq!(t.strays, 0);
@@ -1248,12 +1283,12 @@ mod tests {
         for id in [5u32, 6, 7] {
             t.register(id).unwrap();
         }
-        t.complete(7, vec![7]);
-        t.complete(5, vec![5]);
+        t.complete(7, &[7]);
+        t.complete(5, &[5]);
         assert_eq!(t.take_ready().unwrap().rpc_id, 7, "oldest arrival first");
         // A targeted claim makes its deque entry stale; take_ready skips it.
-        t.complete(6, vec![6]);
-        assert_eq!(t.try_complete(5), Some(vec![5]));
+        t.complete(6, &[6]);
+        assert_eq!(t.try_complete(5).as_deref(), Some(&[5u8][..]));
         assert_eq!(t.take_ready().unwrap().rpc_id, 6);
         assert!(t.take_ready().is_none());
         assert!(t.is_idle());
@@ -1265,14 +1300,14 @@ mod tests {
         let h = t.register(42).unwrap();
         assert!(t.register(42).is_none(), "duplicate registration refused");
         // The original call is intact.
-        assert!(t.complete(42, b"ok".to_vec()));
-        assert_eq!(t.try_complete(h.rpc_id()), Some(b"ok".to_vec()));
+        assert!(t.complete(42, b"ok"));
+        assert_eq!(t.try_complete(h.rpc_id()).as_deref(), Some(&b"ok"[..]));
         // A duplicate *completion* is a stray, not a second result.
         t.register(43).unwrap();
-        assert!(t.complete(43, vec![1]));
-        assert!(!t.complete(43, vec![2]), "dup completion rejected");
+        assert!(t.complete(43, &[1]));
+        assert!(!t.complete(43, &[2]), "dup completion rejected");
         assert_eq!(t.strays, 1);
-        assert_eq!(t.try_complete(43), Some(vec![1]), "first result wins");
+        assert_eq!(t.try_complete(43).as_deref(), Some(&[1u8][..]), "first result wins");
     }
 
     #[test]
@@ -1285,14 +1320,14 @@ mod tests {
         assert!(t.is_idle());
         let h2 = t.register(2).unwrap();
         assert_eq!(h2.slot(), h.slot(), "slot recycled");
-        assert!(!t.complete(1, b"late".to_vec()), "late completion is a stray");
+        assert!(!t.complete(1, b"late"), "late completion is a stray");
         assert_eq!(t.strays, 1);
-        assert!(t.complete(2, b"live".to_vec()), "reused slot unaffected");
-        assert_eq!(t.try_complete(2), Some(b"live".to_vec()));
+        assert!(t.complete(2, b"live"), "reused slot unaffected");
+        assert_eq!(t.try_complete(2).as_deref(), Some(&b"live"[..]));
         assert!(!t.cancel(99), "unknown rpc_id");
         // Cancelling a ready-but-unclaimed call discards the result.
         t.register(3).unwrap();
-        t.complete(3, vec![3]);
+        t.complete(3, &[3]);
         assert!(t.cancel(3));
         assert!(t.take_ready().is_none());
         assert!(t.is_idle());
@@ -1307,8 +1342,8 @@ mod tests {
         let mut t = PendingTable::new();
         for rpc_id in 0..10_000u32 {
             let h = t.register(rpc_id).unwrap();
-            assert!(t.complete(rpc_id, vec![1]));
-            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![1]));
+            assert!(t.complete(rpc_id, &[1]));
+            assert_eq!(t.try_complete(h.rpc_id()).as_deref(), Some(&[1u8][..]));
         }
         assert!(t.is_idle());
         assert!(
@@ -1319,13 +1354,13 @@ mod tests {
         // Same bound when the claim path is cancel() on ready results.
         for rpc_id in 10_000..20_000u32 {
             t.register(rpc_id).unwrap();
-            t.complete(rpc_id, vec![2]);
+            t.complete(rpc_id, &[2]);
             assert!(t.cancel(rpc_id));
         }
         assert!(t.ready.len() <= 64, "cancel leaked: {}", t.ready.len());
         // take_ready still works afterwards.
         t.register(99_999).unwrap();
-        t.complete(99_999, vec![9]);
+        t.complete(99_999, &[9]);
         assert_eq!(t.take_ready().unwrap().rpc_id, 99_999);
     }
 
@@ -1339,9 +1374,9 @@ mod tests {
         }));
         t.register(1).unwrap();
         t.register(2).unwrap();
-        t.complete(1, vec![]);
-        t.complete(2, vec![]);
-        t.complete(99, vec![]); // stray: sink still observes it
+        t.complete(1, &[]);
+        t.complete(2, &[]);
+        t.complete(99, &[]); // stray: sink still observes it
         assert_eq!(hits.load(Ordering::Relaxed), 1 + 2 + 99);
         assert_eq!(t.completed, 2);
         assert_eq!(t.strays, 1);
@@ -1420,7 +1455,7 @@ mod tests {
         let seen = Arc::new(Mutex::new(Vec::new()));
         let s = seen.clone();
         client.set_sink(Box::new(move |c: &Completion| {
-            s.lock().unwrap().push(c.payload.clone());
+            s.lock().unwrap().push(c.payload.to_vec());
         }));
         let h = client.call_async(1, b"q").unwrap();
         rings.rx.push(Frame::new(RpcType::Response, 1, 3, h.rpc_id(), b"cont")).unwrap();
@@ -1449,7 +1484,7 @@ mod tests {
         client.poll_completions(); // would deadlock if the sink fired under the lock
         let follow_up = rings.tx.pop().expect("continuation issued the follow-up RPC");
         assert_eq!(follow_up.payload(), b"resp");
-        assert_eq!(client.pending().try_complete(h.rpc_id()), Some(b"resp".to_vec()));
+        assert_eq!(client.pending().try_complete(h.rpc_id()).as_deref(), Some(&b"resp"[..]));
     }
 
     #[test]
@@ -1533,7 +1568,7 @@ mod tests {
             parked: Vec<CallToken>,
         }
         impl RpcService for ParkAll {
-            fn call(&mut self, req: Request<'_>) -> Response {
+            fn call(&mut self, req: Request<'_>, _reply: &mut ReplyArena) -> Response {
                 self.parked.push(req.token);
                 Response::Pending(PendingCall { sub_calls: 2 })
             }
@@ -1628,11 +1663,13 @@ mod tests {
     #[test]
     fn unknown_method_returns_empty() {
         let mut svc = HandlerService::new(Arc::new(Mutex::new(HashMap::new())));
+        let mut arena = ReplyArena::new();
         let handled = AtomicU64::new(0);
         let oversize = AtomicU64::new(0);
         let req = Frame::new(RpcType::Request, 42, 1, 1, b"zz");
-        let resp = RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &handled, &oversize)
-            .expect("handler-table services never park");
+        let resp =
+            RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &mut arena, &handled, &oversize)
+                .expect("handler-table services never park");
         assert_eq!(resp.payload_len(), 0);
         assert_eq!(resp.rpc_type(), Some(RpcType::Response));
         assert_eq!(handled.load(Ordering::Relaxed), 1);
@@ -1643,16 +1680,24 @@ mod tests {
     fn oversize_service_response_truncated_and_counted() {
         struct Big;
         impl crate::coordinator::service::RpcService for Big {
-            fn call(&mut self, _req: crate::coordinator::service::Request<'_>) -> Response {
-                vec![7u8; 300].into()
+            fn call(
+                &mut self,
+                _req: crate::coordinator::service::Request<'_>,
+                reply: &mut ReplyArena,
+            ) -> Response {
+                reply.reset();
+                reply.resize(300, 7u8);
+                Response::Ready
             }
         }
         let mut svc = Big;
+        let mut arena = ReplyArena::new();
         let handled = AtomicU64::new(0);
         let oversize = AtomicU64::new(0);
         let req = Frame::new(RpcType::Request, 1, 1, 1, b"x");
-        let resp = RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &handled, &oversize)
-            .expect("ready");
+        let resp =
+            RpcThreadedServer::handle_one(&req, 0, 1, &mut svc, &mut arena, &handled, &oversize)
+                .expect("ready");
         assert_eq!(resp.payload_len(), MAX_PAYLOAD_BYTES, "truncated to one cache line");
         assert!(resp.is_valid());
         assert_eq!(oversize.load(Ordering::Relaxed), 1);
@@ -1665,8 +1710,9 @@ mod tests {
         use crate::coordinator::service::{Request, RpcService};
         struct FlowTagger;
         impl RpcService for FlowTagger {
-            fn call(&mut self, req: Request<'_>) -> Response {
-                vec![req.flow as u8].into()
+            fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
+                reply.write(&[req.flow as u8]);
+                Response::Ready
             }
         }
         let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
@@ -1701,7 +1747,7 @@ mod tests {
     #[test]
     fn echo_service_matches_handler_table_echo() {
         use crate::coordinator::service::EchoService;
-        let run = |use_service: bool| -> Vec<Vec<u8>> {
+        let run = |use_service: bool| -> Vec<Payload> {
             let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
             let rings = Arc::new(RingPair::new(64, 64));
             if use_service {
@@ -1765,6 +1811,7 @@ mod tests {
             done: Vec::new(),
             tracer: None,
             parked_traces: HashMap::new(),
+            arena: ReplyArena::new(),
         };
         // Empty backlog: admitted and served.
         assert!(fl.ingest(Frame::new(RpcType::Request, 3, 6, 0, b"ok")));
@@ -1882,7 +1929,7 @@ mod tests {
         });
         let policy = RetryPolicy { base_us: 1, cap_us: 4, max_retries: 5 };
         let out = client.call_with_retry(1, b"payload", policy, Duration::from_secs(5));
-        assert_eq!(out, CallOutcome::Ok(b"done".to_vec()));
+        assert_eq!(out, CallOutcome::Ok(Payload::from_slice(b"done")));
         assert_eq!(client.retries.load(Ordering::Relaxed), 2);
         assert_eq!(client.rejected_count.load(Ordering::Relaxed), 2);
         assert_eq!(client.sent.load(Ordering::Relaxed), 3, "1 original + 2 retries");
@@ -1919,7 +1966,7 @@ mod tests {
         });
         let policy = RetryPolicy { base_us: 1, cap_us: 2, max_retries: 2 };
         let out = client.call_with_retry(4, b"nope", policy, Duration::from_secs(5));
-        assert_eq!(out, CallOutcome::Rejected(b"nope".to_vec()));
+        assert_eq!(out, CallOutcome::Rejected(Payload::from_slice(b"nope")));
         assert_eq!(client.retries.load(Ordering::Relaxed), 2);
         assert_eq!(client.sent.load(Ordering::Relaxed), 3, "1 original + 2 retries");
         stop.store(true, Ordering::Relaxed);
@@ -1938,8 +1985,8 @@ mod tests {
         assert_eq!(t.capacity(), 64, "grew past the preallocation");
         // Churn: claim a third, cancel a third, leave a third pending.
         for h in handles.iter().take(21) {
-            assert!(t.complete(h.rpc_id(), vec![h.rpc_id() as u8]));
-            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![h.rpc_id() as u8]));
+            assert!(t.complete(h.rpc_id(), &[h.rpc_id() as u8]));
+            assert_eq!(t.try_complete(h.rpc_id()).as_deref(), Some(&[h.rpc_id() as u8][..]));
         }
         for h in handles.iter().skip(21).take(21) {
             assert!(t.cancel(h.rpc_id()));
@@ -1952,13 +1999,13 @@ mod tests {
         assert_eq!(t.capacity(), before, "churned slots recycle");
         // Late completions for cancelled calls are strays, not corruption.
         for h in handles.iter().skip(21).take(21) {
-            assert!(!t.complete(h.rpc_id(), vec![0xFF]));
+            assert!(!t.complete(h.rpc_id(), &[0xFF]));
         }
         assert_eq!(t.strays, 21);
         // The untouched third still completes normally.
         for h in handles.iter().skip(42) {
-            assert!(t.complete(h.rpc_id(), vec![1]));
-            assert_eq!(t.try_complete(h.rpc_id()), Some(vec![1]));
+            assert!(t.complete(h.rpc_id(), &[1]));
+            assert_eq!(t.try_complete(h.rpc_id()).as_deref(), Some(&[1u8][..]));
         }
     }
 }

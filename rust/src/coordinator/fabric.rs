@@ -471,7 +471,7 @@ mod tests {
     /// client ring) and response routing back across two hops.
     #[test]
     fn three_endpoint_chain_routes_end_to_end() {
-        use crate::coordinator::service::{Request, Response, RpcService};
+        use crate::coordinator::service::{ReplyArena, Request, Response, RpcService};
 
         let mut fabric = Fabric::new();
         let a = fabric.add_endpoint(1, 64);
@@ -492,11 +492,12 @@ mod tests {
             next: Arc<RpcClient>,
         }
         impl RpcService for Proxy {
-            fn call(&mut self, _req: Request<'_>) -> Response {
+            fn call(&mut self, _req: Request<'_>, reply: &mut ReplyArena) -> Response {
                 match self.next.call_blocking(9, b"down") {
-                    Some(resp) => vec![1 + resp.first().copied().unwrap_or(0)].into(),
-                    None => vec![0xEE].into(),
+                    Some(resp) => reply.write(&[1 + resp.first().copied().unwrap_or(0)]),
+                    None => reply.write(&[0xEE]),
                 }
+                Response::Ready
             }
         }
         let next = RpcClient::new(bc, fabric.rings(b, 1));

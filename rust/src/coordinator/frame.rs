@@ -80,6 +80,126 @@ impl RpcType {
     }
 }
 
+/// Inline payload buffer: the bytes of one frame's payload held on the
+/// stack (length + a [`MAX_PAYLOAD_BYTES`] array) instead of a heap
+/// `Vec<u8>`. This is the currency of the allocation-free hot path —
+/// [`Frame::payload`] extracts into it, the client's pending table
+/// stores completions as it, and everything downstream reads it through
+/// `Deref<Target = [u8]>` exactly like a slice.
+///
+/// `Copy` is deliberate: a payload is at most 48 bytes + 1, cheaper to
+/// copy than to box and free.
+#[derive(Clone, Copy)]
+pub struct Payload {
+    len: u8,
+    bytes: [u8; MAX_PAYLOAD_BYTES],
+}
+
+impl Payload {
+    /// The empty payload.
+    pub const EMPTY: Payload = Payload { len: 0, bytes: [0; MAX_PAYLOAD_BYTES] };
+
+    /// Inline copy of `bytes` (must fit the frame payload cap).
+    pub fn from_slice(bytes: &[u8]) -> Payload {
+        assert!(bytes.len() <= MAX_PAYLOAD_BYTES, "payload too large");
+        let mut p = Payload { len: bytes.len() as u8, bytes: [0; MAX_PAYLOAD_BYTES] };
+        p.bytes[..bytes.len()].copy_from_slice(bytes);
+        p
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.bytes[..self.len as usize]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap copy, for call sites that need an owned `Vec` (cold paths).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Payload {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(bytes: &[u8]) -> Payload {
+        Payload::from_slice(bytes)
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({:?})", self.as_slice())
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Payload {}
+
+// Slice-shaped comparisons so call sites read like the Vec era:
+// `assert_eq!(completion.payload, b"pong")`.
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Payload {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Payload {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Payload {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Payload> for Vec<u8> {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 /// One RPC frame (a 64-byte cache line).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Frame {
@@ -146,13 +266,17 @@ impl Frame {
         self.magic() == MAGIC && self.payload_len() <= MAX_PAYLOAD_BYTES
     }
 
-    pub fn payload(&self) -> Vec<u8> {
+    /// Extract the payload bytes as an inline [`Payload`] — a stack
+    /// copy, **no heap allocation**. This is the accessor the dispatch
+    /// and harvest hot paths use; `rust/tests/hotpath_alloc.rs` pins the
+    /// zero-allocation property with a counting global allocator.
+    pub fn payload(&self) -> Payload {
         let len = self.payload_len().min(MAX_PAYLOAD_BYTES);
-        let mut out = Vec::with_capacity(len);
+        let mut out = Payload { len: len as u8, bytes: [0; MAX_PAYLOAD_BYTES] };
         for i in 0..len.div_ceil(4) {
             let bytes = self.words[4 + i].to_le_bytes();
             let take = (len - i * 4).min(4);
-            out.extend_from_slice(&bytes[..take]);
+            out.bytes[i * 4..i * 4 + take].copy_from_slice(&bytes[..take]);
         }
         out
     }

@@ -72,23 +72,53 @@ impl Ring {
         self.cap.saturating_sub(self.len())
     }
 
+    // --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+
     /// Producer side: write one frame. Fails (backpressure) when the ring
     /// is full — the caller decides whether to spin, drop, or batch.
     ///
     /// Safety: at most one producer thread at a time (enforce with
     /// [`LockedProducer`] when sharing).
     pub fn push(&self, frame: Frame) -> Result<(), Frame> {
+        self.stage(0, frame)?;
+        self.publish(1);
+        Ok(())
+    }
+
+    /// Producer side, batched transfer (§4.4's CCI-P write-combining
+    /// analogue in software): write `frame` into the slot `staged`
+    /// entries past the published tail **without** making it visible to
+    /// the consumer. The frame lands in the buffer but the tail index —
+    /// the software doorbell — does not move until [`Ring::publish`].
+    /// Fails (backpressure) when the ring cannot hold the already-staged
+    /// frames plus this one.
+    ///
+    /// Safety: producer-side call (one producer thread at a time), and
+    /// the `staged` count must track exactly how many frames have been
+    /// staged since the last publish — [`BatchProducer`] wraps this
+    /// discipline.
+    pub fn stage(&self, staged: usize, frame: Frame) -> Result<(), Frame> {
         let tail = self.tail.load(Ordering::Relaxed);
         let head = self.head.load(Ordering::Acquire);
-        if tail.wrapping_sub(head) >= self.cap {
+        if tail.wrapping_add(staged).wrapping_sub(head) >= self.cap {
             return Err(frame);
         }
         unsafe {
-            *self.buf[tail & (self.cap - 1)].get() = frame;
+            *self.buf[tail.wrapping_add(staged) & (self.cap - 1)].get() = frame;
         }
-        self.tail.store(tail.wrapping_add(1), Ordering::Release);
         Ok(())
     }
+
+    /// Producer side: ring the doorbell — publish `n` staged frames to
+    /// the consumer in one release store. One tail update per batch is
+    /// the whole point: at MMIO (or cross-core cache-line) cost per
+    /// doorbell, batching divides that cost by the batch size (§6.2).
+    pub fn publish(&self, n: usize) {
+        let tail = self.tail.load(Ordering::Relaxed);
+        self.tail.store(tail.wrapping_add(n), Ordering::Release);
+    }
+
+    // --- HOT PATH END ---
 
     /// Consumer side: pop one frame.
     ///
@@ -118,6 +148,89 @@ impl Ring {
             }
         }
         n
+    }
+}
+
+/// Doorbell-coalescing producer (§4.4 batched transfers): frames are
+/// staged into the ring's buffer immediately but the tail index — the
+/// software doorbell — is only published every `batch` frames, or on an
+/// explicit [`BatchProducer::flush`]. `batch == 1` degenerates to plain
+/// [`Ring::push`] (every frame publishes).
+///
+/// The wall-clock benchmark surfaces `batch` as `WallConfig::batch_size`
+/// — the measured counterpart of the simulator's `Iface::Upi(batch)`
+/// batching ablation.
+///
+/// Discipline:
+/// * SPSC still holds — this handle IS the producer side of its ring;
+///   do not push through the `Arc<Ring>` directly while one exists.
+/// * Staged frames are invisible to the consumer. In a closed loop the
+///   caller must [`BatchProducer::flush`] before waiting for responses,
+///   or the tail of every burst deadlocks (the drivers in
+///   `exp::wall_driver` flush at the end of every send pass).
+/// * On backpressure (`Err`) the staged frames are published first, so
+///   the consumer can drain and make room — the rejected frame comes
+///   back to the caller exactly like [`Ring::push`].
+/// * Dropping the producer flushes the remainder: frames are never
+///   silently lost in the staging window.
+pub struct BatchProducer {
+    ring: Arc<Ring>,
+    /// Frames staged past the published tail (always `< batch`).
+    staged: usize,
+    batch: usize,
+}
+
+impl BatchProducer {
+    /// `batch` is clamped to at least 1.
+    pub fn new(ring: Arc<Ring>, batch: usize) -> BatchProducer {
+        BatchProducer { ring, staged: 0, batch: batch.max(1) }
+    }
+
+    /// The configured coalescing factor.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Frames staged but not yet published.
+    pub fn staged(&self) -> usize {
+        self.staged
+    }
+
+    // --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+
+    /// Stage one frame; publishes automatically once `batch` frames are
+    /// pending. On backpressure the pending frames are published (the
+    /// consumer may drain them) and the rejected frame is handed back.
+    pub fn push(&mut self, frame: Frame) -> Result<(), Frame> {
+        match self.ring.stage(self.staged, frame) {
+            Ok(()) => {
+                self.staged += 1;
+                if self.staged >= self.batch {
+                    self.flush();
+                }
+                Ok(())
+            }
+            Err(back) => {
+                self.flush();
+                Err(back)
+            }
+        }
+    }
+
+    /// Ring the doorbell for any staged frames (one tail store).
+    pub fn flush(&mut self) {
+        if self.staged > 0 {
+            self.ring.publish(self.staged);
+            self.staged = 0;
+        }
+    }
+
+    // --- HOT PATH END ---
+}
+
+impl Drop for BatchProducer {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -418,6 +531,141 @@ mod tests {
         // The tiny ring guarantees the producer actually hit the full
         // condition, so the retry path is what this test exercised.
         assert!(rejections.load(Ordering::Relaxed) > 0);
+    }
+
+    // ------------------------------------------------- batched writes
+
+    #[test]
+    fn staged_frames_invisible_until_published() {
+        let r = Ring::with_capacity(8);
+        r.stage(0, f(0)).unwrap();
+        r.stage(1, f(1)).unwrap();
+        assert!(r.is_empty(), "staged frames must not be visible");
+        assert!(r.pop().is_none());
+        r.publish(2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.pop().unwrap().rpc_id(), 0);
+        assert_eq!(r.pop().unwrap().rpc_id(), 1);
+    }
+
+    #[test]
+    fn stage_respects_capacity_including_staged_frames() {
+        let r = Ring::with_capacity(4);
+        for i in 0..4 {
+            r.stage(i as usize, f(i)).unwrap();
+        }
+        // A 5th staged frame would overwrite an unpublished slot.
+        assert!(r.stage(4, f(9)).is_err());
+        r.publish(4);
+        assert!(r.is_full());
+    }
+
+    #[test]
+    fn batch_producer_coalesces_doorbells() {
+        let r = Ring::with_capacity(16);
+        let mut p = BatchProducer::new(r.clone(), 4);
+        assert_eq!(p.batch(), 4);
+        for i in 0..3 {
+            p.push(f(i)).unwrap();
+        }
+        assert_eq!(p.staged(), 3);
+        assert!(r.is_empty(), "below the batch threshold nothing is published");
+        p.push(f(3)).unwrap(); // 4th frame rings the doorbell
+        assert_eq!(p.staged(), 0);
+        assert_eq!(r.len(), 4);
+        // Remainder path: 2 staged frames flushed explicitly.
+        p.push(f(4)).unwrap();
+        p.push(f(5)).unwrap();
+        assert_eq!(r.len(), 4);
+        p.flush();
+        assert_eq!(r.len(), 6);
+        for i in 0..6 {
+            assert_eq!(r.pop().unwrap().rpc_id(), i, "FIFO across batches");
+        }
+    }
+
+    #[test]
+    fn batch_producer_backpressure_publishes_staged_then_reports() {
+        let r = Ring::with_capacity(4);
+        let mut p = BatchProducer::new(r.clone(), 8);
+        for i in 0..4 {
+            p.push(f(i)).unwrap();
+        }
+        assert_eq!(r.len(), 0, "all four staged, none published");
+        // The 5th frame does not fit; the staged batch is published so
+        // the consumer can drain, and the frame comes back.
+        let back = p.push(f(4)).unwrap_err();
+        assert_eq!(back.rpc_id(), 4);
+        assert_eq!(r.len(), 4, "staged frames published on backpressure");
+        assert_eq!(p.staged(), 0);
+        // After the consumer drains, the returned frame goes through.
+        assert_eq!(r.pop().unwrap().rpc_id(), 0);
+        p.push(back).unwrap();
+        p.flush();
+    }
+
+    #[test]
+    fn batch_producer_drop_flushes_remainder() {
+        let r = Ring::with_capacity(8);
+        {
+            let mut p = BatchProducer::new(r.clone(), 4);
+            p.push(f(42)).unwrap();
+            assert!(r.is_empty());
+        } // drop
+        assert_eq!(r.pop().unwrap().rpc_id(), 42, "drop must not lose staged frames");
+    }
+
+    #[test]
+    fn batch_size_one_matches_plain_push() {
+        let r = Ring::with_capacity(8);
+        let mut p = BatchProducer::new(r.clone(), 1);
+        for i in 0..5 {
+            p.push(f(i)).unwrap();
+            assert_eq!(r.len() as u32, i + 1, "batch=1 publishes every frame");
+        }
+        for i in 0..5 {
+            assert_eq!(r.pop().unwrap().rpc_id(), i);
+        }
+    }
+
+    #[test]
+    fn batched_producer_cross_thread_stress() {
+        // Same invariant as spsc_cross_thread_stress, through the
+        // doorbell-coalescing producer: every frame arrives exactly
+        // once, in order, with periodic flushes standing in for the
+        // closed-loop send-pass boundary.
+        let r = Ring::with_capacity(64);
+        let n = 100_000u32;
+        let prod = {
+            let r = r.clone();
+            thread::spawn(move || {
+                let mut p = BatchProducer::new(r, 8);
+                for i in 0..n {
+                    let mut frame = f(i);
+                    loop {
+                        match p.push(frame) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                frame = back;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                }
+                // Final partial batch leaves via Drop.
+            })
+        };
+        let mut expected = 0u32;
+        while expected < n {
+            if let Some(frame) = r.pop() {
+                assert_eq!(frame.rpc_id(), expected, "out of order");
+                expected += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        prod.join().unwrap();
+        assert!(r.is_empty());
     }
 
     // ------------------------------------------------------- slot pool

@@ -17,8 +17,9 @@
 //!
 //! [`RpcService::call`] returns a [`Response`]:
 //!
-//! * [`Response::Ready`] — the common case: the response payload is
-//!   available now and the dispatch loop sends it immediately.
+//! * [`Response::Ready`] — the common case: the response payload was
+//!   written into the dispatch loop's reused [`ReplyArena`] and is sent
+//!   immediately (no per-call allocation; see the arena's docs).
 //! * [`Response::Pending`] — the service issued one or more
 //!   **non-blocking sub-RPCs** (§4.2's continuation-based interface)
 //!   and parked the request. The dispatch loop stores the request's
@@ -58,7 +59,92 @@
 use crate::coordinator::api::Handler;
 use crate::coordinator::frame::{Frame, MAX_PAYLOAD_BYTES};
 use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Mutex};
+
+// ------------------------------------------------------------------
+// Reply arena: the reused per-flow response buffer
+// ------------------------------------------------------------------
+
+/// Per-flow reply buffer a service writes its response payload into,
+/// reused across every call the owning dispatch (or worker) thread
+/// serves — the slab behind [`Response::Ready`].
+///
+/// The buffer is allocated once, sized to [`MAX_PAYLOAD_BYTES`] (the
+/// frame payload cap), and only ever cleared between calls — `clear`
+/// keeps the capacity, so the steady-state request path performs **zero
+/// heap allocations** (`rust/tests/hotpath_alloc.rs` pins this with a
+/// counting global allocator). A service that writes more than the cap
+/// grows the buffer (one realloc) and the dispatch layer truncates the
+/// response frame, counting it in `oversize_responses` — a service bug
+/// stays visible without wedging the flow.
+///
+/// Ownership: the dispatch loop owns the arena and hands it to
+/// [`RpcService::call`] by `&mut`; the service's reply is valid until
+/// the next call on the same flow, by which time the dispatch loop has
+/// copied it into the response [`Frame`]. Nothing is ever freed
+/// per-request.
+#[derive(Debug)]
+pub struct ReplyArena {
+    buf: Vec<u8>,
+}
+
+// --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+
+impl ReplyArena {
+    /// Clear the arena, keeping its capacity (no free, no alloc).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Replace the arena's contents with `bytes` — the common
+    /// whole-reply write (allocation-free while `bytes` fits the
+    /// pre-sized capacity).
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        self.buf.clear();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The reply written so far.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+// --- HOT PATH END ---
+
+impl ReplyArena {
+    /// One arena, pre-sized to the frame payload cap so in-cap replies
+    /// never reallocate.
+    pub fn new() -> ReplyArena {
+        ReplyArena { buf: Vec::with_capacity(MAX_PAYLOAD_BYTES) }
+    }
+}
+
+impl Default for ReplyArena {
+    fn default() -> ReplyArena {
+        ReplyArena::new()
+    }
+}
+
+/// Services build replies incrementally through the `Vec` API
+/// (`push`/`extend_from_slice`/`resize`); within the pre-sized capacity
+/// none of it allocates.
+impl Deref for ReplyArena {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for ReplyArena {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
 
 // ------------------------------------------------------------------
 // Overload control: admission + SLO-aware shedding
@@ -215,28 +301,34 @@ pub struct PendingCall {
 }
 
 /// Outcome of [`RpcService::call`].
-#[derive(Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Response {
-    /// Response payload available now; sent immediately.
-    Ready(Vec<u8>),
+    /// The response payload was written into the caller-provided
+    /// [`ReplyArena`]; the dispatch loop sends it immediately. No bytes
+    /// travel through the enum — the arena is the single reused reply
+    /// buffer, so the steady-state path never allocates.
+    Ready,
     /// Request parked behind in-flight sub-RPCs; the service will
     /// finish the token through [`RpcService::poll_parked`].
     Pending(PendingCall),
 }
 
-impl From<Vec<u8>> for Response {
-    fn from(payload: Vec<u8>) -> Response {
-        Response::Ready(payload)
+impl Response {
+    /// `true` for [`Response::Ready`] (tests/adapters).
+    pub fn is_ready(&self) -> bool {
+        matches!(self, Response::Ready)
     }
 }
 
-impl Response {
-    /// The payload of a `Ready` response (tests/adapters).
-    pub fn ready(self) -> Option<Vec<u8>> {
-        match self {
-            Response::Ready(p) => Some(p),
-            Response::Pending(_) => None,
-        }
+/// Run one call against a throwaway scratch arena and return the reply
+/// bytes (`None` if the service parked the request). Allocates per call
+/// — a convenience for tests, examples and cold adapter paths, **not**
+/// the dispatch hot path (which reuses one [`ReplyArena`] per flow).
+pub fn oneshot<S: RpcService + ?Sized>(svc: &mut S, req: Request<'_>) -> Option<Vec<u8>> {
+    let mut arena = ReplyArena::new();
+    match svc.call(req, &mut arena) {
+        Response::Ready => Some(arena.bytes().to_vec()),
+        Response::Pending(_) => None,
     }
 }
 
@@ -260,21 +352,24 @@ pub struct Request<'a> {
     pub payload: &'a [u8],
 }
 
-/// A server-side RPC service: request frame in, [`Response`] out.
+/// A server-side RPC service: request frame in, reply written into the
+/// caller's [`ReplyArena`], [`Response`] out.
 ///
 /// The dispatch layer builds the response frame (same c_id/rpc_id/method,
-/// type flipped to Response) and truncates oversize payloads to
-/// [`MAX_PAYLOAD_BYTES`], counting the truncation in
+/// type flipped to Response) from the arena and truncates oversize
+/// payloads to [`MAX_PAYLOAD_BYTES`], counting the truncation in
 /// `RpcThreadedServer::oversize_responses` — a service bug is reported,
 /// never a wedged flow. Parked responses get the same treatment when
 /// they resume.
 pub trait RpcService: Send {
     /// Handle one request. Runs on the flow's dispatch thread
     /// (`DispatchMode::Dispatch`) or its worker thread
-    /// (`DispatchMode::Worker`). Return `payload.into()` (or
-    /// `Response::Ready`) for a synchronous reply, or park the request
-    /// with [`Response::Pending`] after issuing non-blocking sub-RPCs.
-    fn call(&mut self, req: Request<'_>) -> Response;
+    /// (`DispatchMode::Worker`). Write the reply into `reply` (reused
+    /// across calls; see [`ReplyArena`]) and return [`Response::Ready`]
+    /// for a synchronous reply, or park the request with
+    /// [`Response::Pending`] after issuing non-blocking sub-RPCs —
+    /// anything left in `reply` by a parking service is ignored.
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response;
 
     /// Drive parked requests: harvest downstream completions and push
     /// every token that finished, with its response payload, into
@@ -297,15 +392,20 @@ pub trait RpcService: Send {
 #[derive(Default)]
 pub struct EchoService;
 
+// --- HOT PATH BEGIN (allocation-free steady state; hotpath_alloc.rs) ---
+
 impl RpcService for EchoService {
-    fn call(&mut self, req: Request<'_>) -> Response {
-        req.payload.to_vec().into()
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
+        reply.write(req.payload);
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
         "echo"
     }
 }
+
+// --- HOT PATH END ---
 
 /// Adapter from the method-table `Handler` API to [`RpcService`]: looks
 /// the method up in the shared table and runs the registered closure
@@ -325,12 +425,13 @@ impl HandlerService {
 }
 
 impl RpcService for HandlerService {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         let handler = self.handlers.lock().unwrap().get(&req.method).cloned();
         match handler {
-            Some(h) => h(req.method, req.payload).into(),
-            None => Vec::new().into(),
+            Some(h) => reply.write(&h(req.method, req.payload)),
+            None => reply.reset(),
         }
+        Response::Ready
     }
 
     fn name(&self) -> &'static str {
@@ -375,11 +476,19 @@ impl<S: RpcService> StampedService<S> {
 }
 
 impl<S: RpcService> RpcService for StampedService<S> {
-    fn call(&mut self, req: Request<'_>) -> Response {
+    fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
         let split = req.payload.len().min(Frame::TAIL_STAMP_OFFSET);
         let (app, stamp) = req.payload.split_at(split);
-        match self.inner.call(Request { payload: app, ..req }) {
-            Response::Ready(p) => Response::Ready(Self::attach(p, stamp)),
+        match self.inner.call(Request { payload: app, ..req }, reply) {
+            Response::Ready => {
+                // Pin the inner reply to the app region and re-attach
+                // the stamp in place — resize + extend stay within the
+                // arena's pre-sized capacity, so no allocation.
+                reply.resize(Frame::TAIL_STAMP_OFFSET, 0);
+                reply.extend_from_slice(stamp);
+                debug_assert!(reply.len() <= MAX_PAYLOAD_BYTES);
+                Response::Ready
+            }
             Response::Pending(pc) => {
                 self.parked_stamps.insert(req.token, stamp.to_vec());
                 Response::Pending(pc)
@@ -410,8 +519,8 @@ mod tests {
         Request { method: 1, c_id: 9, rpc_id: 3, flow: 0, token: 1, payload }
     }
 
-    fn ready(r: Response) -> Vec<u8> {
-        r.ready().expect("expected Response::Ready")
+    fn ready<S: RpcService>(s: &mut S, r: Request<'_>) -> Vec<u8> {
+        oneshot(s, r).expect("expected Response::Ready")
     }
 
     #[test]
@@ -508,8 +617,22 @@ mod tests {
     #[test]
     fn echo_returns_payload_verbatim() {
         let mut s = EchoService;
-        assert_eq!(ready(s.call(req(b"hello"))), b"hello");
+        assert_eq!(ready(&mut s, req(b"hello")), b"hello");
         assert_eq!(s.name(), "echo");
+    }
+
+    #[test]
+    fn reply_arena_reuses_its_buffer_across_calls() {
+        let mut arena = ReplyArena::new();
+        let cap = arena.capacity();
+        assert!(cap >= MAX_PAYLOAD_BYTES);
+        arena.write(b"first reply");
+        assert_eq!(arena.bytes(), b"first reply");
+        arena.write(b"2nd");
+        assert_eq!(arena.bytes(), b"2nd", "write replaces, never appends");
+        arena.reset();
+        assert!(arena.bytes().is_empty());
+        assert_eq!(arena.capacity(), cap, "reset/write keep the slab");
     }
 
     #[test]
@@ -524,8 +647,8 @@ mod tests {
             }),
         );
         let mut s = HandlerService::new(table);
-        assert_eq!(ready(s.call(req(b"abc"))), b"cba");
-        assert_eq!(ready(s.call(Request { method: 99, ..req(b"abc") })), Vec::<u8>::new());
+        assert_eq!(ready(&mut s, req(b"abc")), b"cba");
+        assert_eq!(ready(&mut s, Request { method: 99, ..req(b"abc") }), Vec::<u8>::new());
     }
 
     /// A service keeping per-connection state: the trait's `&mut self`
@@ -535,10 +658,11 @@ mod tests {
     }
 
     impl RpcService for PerConnCounter {
-        fn call(&mut self, req: Request<'_>) -> Response {
+        fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
             let n = self.seen.entry(req.c_id).or_insert(0);
             *n += 1;
-            n.to_le_bytes().to_vec().into()
+            reply.write(&n.to_le_bytes());
+            Response::Ready
         }
     }
 
@@ -546,7 +670,7 @@ mod tests {
     fn per_connection_state_persists_across_calls() {
         let mut s = PerConnCounter { seen: HashMap::new() };
         let count = |s: &mut PerConnCounter, c_id| {
-            let out = s.call(Request { c_id, ..req(b"") }).ready().unwrap();
+            let out = oneshot(s, Request { c_id, ..req(b"") }).unwrap();
             u64::from_le_bytes(out.try_into().unwrap())
         };
         assert_eq!(count(&mut s, 7), 1);
@@ -559,13 +683,15 @@ mod tests {
     /// back attached to the (padded) response.
     struct UpperCaser;
     impl RpcService for UpperCaser {
-        fn call(&mut self, req: Request<'_>) -> Response {
-            req.payload
-                .iter()
-                .map(|b| b.to_ascii_uppercase())
-                .take_while(|&b| b != 0)
-                .collect::<Vec<u8>>()
-                .into()
+        fn call(&mut self, req: Request<'_>, reply: &mut ReplyArena) -> Response {
+            reply.reset();
+            for &b in req.payload {
+                if b == 0 {
+                    break;
+                }
+                reply.push(b.to_ascii_uppercase());
+            }
+            Response::Ready
         }
     }
 
@@ -579,7 +705,7 @@ mod tests {
         let frame_payload = f.payload();
 
         let mut s = StampedService::new(UpperCaser);
-        let resp = ready(s.call(req(&frame_payload)));
+        let resp = ready(&mut s, req(&frame_payload));
         assert_eq!(resp.len(), MAX_PAYLOAD_BYTES, "stamp stays at its fixed offset");
         assert_eq!(&resp[..3], b"ABC", "inner service saw (only) the app region");
         let rf = Frame::new(RpcType::Response, 1, 5, 11, &resp);
@@ -591,8 +717,10 @@ mod tests {
     /// than displacing the stamp.
     struct Flooder;
     impl RpcService for Flooder {
-        fn call(&mut self, _req: Request<'_>) -> Response {
-            vec![0xAA; 400].into()
+        fn call(&mut self, _req: Request<'_>, reply: &mut ReplyArena) -> Response {
+            reply.reset();
+            reply.resize(400, 0xAA);
+            Response::Ready
         }
     }
 
@@ -601,7 +729,7 @@ mod tests {
         let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
         payload[Frame::TAIL_STAMP_OFFSET..].fill(0x55);
         let mut s = StampedService::new(Flooder);
-        let resp = ready(s.call(req(&payload)));
+        let resp = ready(&mut s, req(&payload));
         assert_eq!(resp.len(), MAX_PAYLOAD_BYTES);
         assert!(resp[..Frame::TAIL_STAMP_OFFSET].iter().all(|&b| b == 0xAA));
         assert!(resp[Frame::TAIL_STAMP_OFFSET..].iter().all(|&b| b == 0x55), "stamp intact");
@@ -622,7 +750,7 @@ mod tests {
     }
 
     impl RpcService for ParkThenFinish {
-        fn call(&mut self, req: Request<'_>) -> Response {
+        fn call(&mut self, req: Request<'_>, _reply: &mut ReplyArena) -> Response {
             self.parked.push(req.token);
             Response::Pending(PendingCall { sub_calls: 1 })
         }
@@ -644,10 +772,11 @@ mod tests {
     #[test]
     fn pending_parks_and_resumes_by_token() {
         let mut s = ParkThenFinish::new(2);
+        let mut arena = ReplyArena::new();
         for token in 10..13u64 {
-            match s.call(Request { token, ..req(b"") }) {
+            match s.call(Request { token, ..req(b"") }, &mut arena) {
                 Response::Pending(pc) => assert_eq!(pc.sub_calls, 1),
-                Response::Ready(_) => panic!("must park"),
+                Response::Ready => panic!("must park"),
             }
         }
         let mut done = Vec::new();
@@ -668,9 +797,10 @@ mod tests {
         let mut s = StampedService::new(ParkThenFinish::new(1));
         let mut payload = vec![0u8; MAX_PAYLOAD_BYTES];
         payload[Frame::TAIL_STAMP_OFFSET..].fill(0x77);
-        match s.call(Request { token: 42, ..req(&payload) }) {
+        let mut arena = ReplyArena::new();
+        match s.call(Request { token: 42, ..req(&payload) }, &mut arena) {
             Response::Pending(_) => {}
-            Response::Ready(_) => panic!("inner parks"),
+            Response::Ready => panic!("inner parks"),
         }
         let mut done = Vec::new();
         s.poll_parked(&mut done);

@@ -205,6 +205,10 @@ const KEY_COLUMNS: &[&str] = &[
     "sim_threads",
     "payload_b",
     "batch",
+    // fabric_wallclock's doorbell-coalescing axis (the string-valued
+    // `dispatch` / `lb` columns on the same grid join automatically:
+    // non-numeric cells are always part of the row key).
+    "batch_size",
     "n_vnics",
     "cache_entries",
     "open_conns",

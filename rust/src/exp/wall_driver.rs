@@ -25,7 +25,7 @@ use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
 use crate::coordinator::backoff::{Backoff, RetryPolicy};
 use crate::coordinator::fabric::Fabric;
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
-use crate::coordinator::rings::SlotPool;
+use crate::coordinator::rings::{BatchProducer, SlotPool};
 use crate::coordinator::service::{AdmissionPolicy, RpcService};
 use crate::nic::load_balancer::LbMode;
 use crate::nic::soft_config::{Reg, SoftConfig};
@@ -94,6 +94,17 @@ pub struct WallConfig {
     /// phase breakdown. Incompatible with payloads that use bytes
     /// 32..36 for app data (the kvwire value region) — leave it 0 there.
     pub trace_every: u32,
+    /// TX doorbell coalescing (§4.4 batched transfers): each client
+    /// flow stages up to this many frames before publishing the ring
+    /// tail once ([`BatchProducer`]). 1 (the default) publishes per
+    /// frame — plain [`crate::coordinator::rings::Ring::push`]. The
+    /// measured counterpart of the simulator's `Iface::Upi(batch)`
+    /// batching ablation.
+    pub batch_size: u32,
+    /// Server threading model (§4.6): `Dispatch` (default) handles
+    /// requests inline on the dispatch threads; `Worker` hands them to
+    /// a worker pool over a thread-crossing queue.
+    pub dispatch: DispatchMode,
 }
 
 impl WallConfig {
@@ -118,6 +129,8 @@ impl WallConfig {
             churn_period: 0,
             churn_conns: 0,
             trace_every: 0,
+            batch_size: 1,
+            dispatch: DispatchMode::Dispatch,
         }
     }
 
@@ -295,6 +308,11 @@ impl WallWorkload for EchoWorkload {
 /// Per-flow client state owned by exactly one driver thread.
 pub struct FlowDriver {
     client: Arc<RpcClient>,
+    /// Doorbell-coalescing producer over the client's TX ring: every
+    /// send in this driver goes through it (never through
+    /// [`RpcClient::send_frame`] directly — the batcher owns the
+    /// producer side while it exists). `batch == 1` by default.
+    tx: BatchProducer,
     /// Wire connection ids multiplexed over this flow (1 without SRQ).
     conns: Vec<u32>,
     pool: SlotPool,
@@ -336,8 +354,10 @@ impl FlowDriver {
     ) -> FlowDriver {
         assert!(!conns.is_empty(), "a flow driver needs at least one connection");
         let cap = window_capacity.max(1);
+        let tx = BatchProducer::new(client.rings.tx.clone(), 1);
         FlowDriver {
             client,
+            tx,
             conns,
             pool: SlotPool::new(cap),
             rr: 0,
@@ -358,6 +378,30 @@ impl FlowDriver {
     pub fn with_churn(mut self, period: u64) -> FlowDriver {
         self.churn_period = period;
         self
+    }
+
+    /// Set the TX doorbell-coalescing factor (see
+    /// [`WallConfig::batch_size`]; clamped to ≥ 1).
+    pub fn with_batch(mut self, batch: u32) -> FlowDriver {
+        self.tx = BatchProducer::new(self.client.rings.tx.clone(), batch.max(1) as usize);
+        self
+    }
+
+    /// Send through the flow's coalescing producer, maintaining the
+    /// client's shared send counters — the batched analogue of
+    /// [`RpcClient::send_frame`]. A staged-but-unpublished frame counts
+    /// as sent (it is committed to the wire; only the doorbell lags).
+    fn send(&mut self, frame: Frame) -> Result<(), Frame> {
+        match self.tx.push(frame) {
+            Ok(()) => {
+                self.client.sent.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(back) => {
+                self.client.send_failures.fetch_add(1, Ordering::Relaxed);
+                Err(back)
+            }
+        }
     }
 }
 
@@ -483,6 +527,7 @@ pub fn build_client_drivers(
                 workloads(f),
             )
             .with_churn(cfg.churn_period)
+            .with_batch(cfg.batch_size)
         })
         .collect()
 }
@@ -513,7 +558,7 @@ pub fn run_pair(
     let server_addr = fabric.add_endpoint(cfg.server_flows, server_ring_entries(cfg));
     fabric.set_lb(server_addr, cfg.lb);
 
-    let mut server = RpcThreadedServer::new(DispatchMode::Dispatch);
+    let mut server = RpcThreadedServer::new(cfg.dispatch);
     for f in 0..cfg.server_flows {
         server.add_service_flow(f, fabric.rings(server_addr, f), services(f));
     }
@@ -874,6 +919,14 @@ fn drive(
                     }
                 }
             }
+            // End of the send pass: ring every flow's doorbell for
+            // whatever is still staged. In a closed loop the staged
+            // tail of a burst would otherwise never complete — the
+            // window can only refill from responses to frames the
+            // consumer can actually see.
+            for d in flows.iter_mut() {
+                d.tx.flush();
+            }
         } else {
             // Stop requested: wait for outstanding acks, bounded.
             let outstanding: usize = flows.iter().map(|d| d.pool.in_flight()).sum();
@@ -961,7 +1014,7 @@ fn pump_retries(
         d.slot_traces[slot as usize] = 0;
         stamp.write(&mut frame, ctl.epoch.elapsed().as_nanos() as u64, slot);
         d.attempts[slot as usize] = attempt;
-        match d.client.send_frame(frame) {
+        match d.send(frame) {
             Ok(()) => {
                 tally.sent += u64::from(in_measure);
                 d.client.retries.fetch_add(1, Ordering::Relaxed);
@@ -1034,7 +1087,7 @@ fn send_once(
         }
         _ => None,
     };
-    match d.client.send_frame(frame) {
+    match d.send(frame) {
         Ok(()) => {
             if let (Some(id), Some((sink, _))) = (trace, &d.tracer) {
                 sink.record(id, Stage::ClientSend, "client", telemetry::now_ns());
@@ -1092,8 +1145,13 @@ mod tests {
     /// workload verifier sees the rewritten bytes.
     struct Doubler;
     impl crate::coordinator::service::RpcService for Doubler {
-        fn call(&mut self, req: Request<'_>) -> crate::coordinator::service::Response {
-            vec![req.payload.first().copied().unwrap_or(0).wrapping_mul(2)].into()
+        fn call(
+            &mut self,
+            req: Request<'_>,
+            reply: &mut crate::coordinator::service::ReplyArena,
+        ) -> crate::coordinator::service::Response {
+            reply.write(&[req.payload.first().copied().unwrap_or(0).wrapping_mul(2)]);
+            crate::coordinator::service::Response::Ready
         }
     }
 
@@ -1220,6 +1278,34 @@ mod tests {
         assert_eq!(r.stage_total_us, 0.0);
         assert_eq!(r.bottleneck_tier, "");
         assert_eq!(r.snapshot.get("fabric.forwarded"), r.fabric_forwarded);
+    }
+
+    /// Doorbell coalescing end to end: with `batch_size` > window the
+    /// per-pass flush is the only thing publishing the staged tail —
+    /// if it ever stopped running, the closed loop would deadlock and
+    /// the drain would report leaked slots.
+    #[test]
+    fn batched_doorbells_still_drain_losslessly() {
+        for batch in [2u32, 8, 64] {
+            let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+            cfg.batch_size = batch;
+            let r = echo_pair(&cfg, Stamp::Head);
+            assert!(r.completed > 0, "batch={batch}: nothing measured");
+            assert_eq!(r.leaked_slots, 0, "batch={batch}: staged frames stranded");
+            assert_eq!(r.bad_responses, 0, "batch={batch}");
+        }
+    }
+
+    /// Worker mode on the measured path: requests cross the dispatch →
+    /// worker queue and back, and the run still drains losslessly.
+    #[test]
+    fn worker_dispatch_mode_measures_round_trips() {
+        let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+        cfg.dispatch = DispatchMode::Worker;
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.completed > 0, "worker mode: nothing measured");
+        assert_eq!(r.leaked_slots, 0);
+        assert_eq!(r.bad_responses, 0);
     }
 
     /// SRQ connection churn: 64 short-lived c_ids rotate over one flow,

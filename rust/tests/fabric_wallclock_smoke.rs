@@ -19,6 +19,13 @@ fn num(v: &Value) -> f64 {
     }
 }
 
+fn text(v: &Value) -> &str {
+    match v {
+        Value::Str(s) => s,
+        other => panic!("expected a string, got {other:?}"),
+    }
+}
+
 #[test]
 fn fast_run_emits_measured_and_simulated_series() {
     let fig = run_figure("fabric-wallclock", &Args::parse(&["--fast".to_string()]))
@@ -70,6 +77,42 @@ fn fast_run_emits_measured_and_simulated_series() {
             .any(|r| num(&r[conns_c]) > num(&r[flows_c])),
         "no SRQ point (conns > flows)"
     );
+
+    // ---------------------------------- batching / dispatch / lb rows
+    // The grid's new measured axes: at least two doorbell-coalescing
+    // factors beyond 1, a worker-pool threading row, and an
+    // object-level steering row — each identified by its own column
+    // (numeric batch_size joins bench-diff row identity as a KEY
+    // column; the string dispatch/lb cells join automatically).
+    let (batch_c, disp_c, lb_c) = (col("batch_size"), col("dispatch"), col("lb"));
+    let batches: std::collections::BTreeSet<u64> = measured
+        .rows
+        .iter()
+        .map(|r| num(&r[batch_c]) as u64)
+        .filter(|&b| b > 1)
+        .collect();
+    assert!(batches.len() >= 2, "need >=2 batched grid points, got {batches:?}");
+    assert!(
+        measured.rows.iter().any(|r| text(&r[disp_c]) == "Worker"),
+        "no DispatchMode::Worker row"
+    );
+    assert!(
+        measured.rows.iter().any(|r| text(&r[lb_c]) == "ObjectLevel"),
+        "no LbMode::ObjectLevel row"
+    );
+    // The baseline rows keep the defaults the new axes deviate from.
+    assert!(
+        measured
+            .rows
+            .iter()
+            .any(|r| num(&r[batch_c]) == 1.0
+                && text(&r[disp_c]) == "Dispatch"
+                && text(&r[lb_c]) == "RoundRobin"),
+        "no default (unbatched, inline-dispatch, round-robin) row"
+    );
+    // Batched/worker/objlevel points measured real traffic too (the
+    // per-row loop above already checked throughput > 0 and zero leaks
+    // for every row, these included).
 
     // Throughput-vs-threads anchor: adding driver threads must not
     // collapse the fabric. Wall-clock runs on arbitrary (possibly

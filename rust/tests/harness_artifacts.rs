@@ -135,6 +135,89 @@ fn seed_and_duration_overrides_reach_the_simulation() {
 }
 
 #[test]
+fn sweep_pool_and_serial_paths_produce_identical_artifacts() {
+    // The determinism contract behind BENCH_* diffing, stated at the
+    // execution layer: the thread-pool sweep (`Sweep::run`) and the
+    // serial reference (`run_serial`) must render byte-identical
+    // `dagger-bench/v1` JSON for the same seed — including the
+    // batching axis (`Iface::Upi(B)`, the sim twin of the wall grid's
+    // `batch_size` rows). Each grid point seeds its own simulation, so
+    // pool scheduling order must not leak into the artifact.
+    use dagger::exp::harness::{sweep_series, Sweep};
+    use dagger::exp::rpc_sim::SimConfig;
+    use dagger::interconnect::Iface;
+
+    let sweep = Sweep::new(SimConfig {
+        duration_us: 1_500,
+        warmup_us: 200,
+        seed: 42,
+        ..Default::default()
+    })
+    .ifaces(&[Iface::Doorbell, Iface::Upi(1), Iface::Upi(4), Iface::Upi(8)])
+    .threads(&[1, 2]);
+
+    let render = |points| {
+        let mut fig = Figure::new("sweep-determinism", "pool vs serial", "§5.2");
+        fig.series.push(sweep_series("sweep", &points));
+        fig.to_json()
+    };
+    let pooled = render(sweep.run());
+    let serial = render(sweep.run_serial());
+    assert_eq!(pooled, serial, "thread-pool sweep must match the serial reference exactly");
+    // Same seed, same path → same bytes (no hidden run-to-run state).
+    assert_eq!(pooled, render(sweep.run()), "pool path must be self-reproducible");
+}
+
+#[test]
+fn wall_grid_sim_twins_are_seed_deterministic() {
+    // The new fabric-wallclock grid rows (doorbell batching, the
+    // worker threading model, object-level steering) each carry a
+    // simulated twin via `matching_sim`. The wall-clock halves are
+    // timing-noisy by nature; the twins must not be: same `--seed` →
+    // identical results through both sweep execution paths.
+    use dagger::coordinator::api::DispatchMode;
+    use dagger::exp::fabric_bench::matching_sim;
+    use dagger::exp::harness::{run_grid, sweep_row, Series};
+    use dagger::exp::rpc_sim;
+    use dagger::exp::wall_driver::WallConfig;
+    use dagger::exp::RunOpts;
+    use dagger::nic::load_balancer::LbMode;
+
+    let opts = RunOpts { fast: true, seed: Some(7), ..Default::default() };
+    let walls = [
+        WallConfig::closed(2, 2, 16),
+        WallConfig { batch_size: 4, ..WallConfig::closed(2, 2, 16) },
+        WallConfig { batch_size: 8, ..WallConfig::closed(2, 2, 16) },
+        WallConfig { dispatch: DispatchMode::Worker, ..WallConfig::closed(2, 2, 16) },
+        WallConfig { lb: LbMode::ObjectLevel, ..WallConfig::closed(2, 2, 16) },
+    ];
+    let cfgs: Vec<_> = walls.iter().map(|w| matching_sim(w, &opts)).collect();
+    // The batching rows really reach the simulator as distinct configs.
+    assert_eq!(cfgs[1].iface, dagger::interconnect::Iface::Upi(4));
+    assert_eq!(cfgs[2].iface, dagger::interconnect::Iface::Upi(8));
+
+    let render = |points: Vec<dagger::exp::harness::SweepPoint>| {
+        let mut fig = Figure::new("wall-twins", "sim twins of the wall grid", "§5.2");
+        let mut s = Series::new("twins", dagger::exp::harness::SWEEP_COLUMNS);
+        for p in &points {
+            s.push(sweep_row(&p.cfg, &p.result));
+        }
+        fig.series.push(s);
+        fig.to_json()
+    };
+    let pooled = render(run_grid(cfgs.clone()));
+    let serial = render(
+        cfgs.iter()
+            .map(|cfg| dagger::exp::harness::SweepPoint {
+                result: rpc_sim::run(cfg.clone()),
+                cfg: cfg.clone(),
+            })
+            .collect(),
+    );
+    assert_eq!(pooled, serial, "sim twins must be identical across execution paths");
+}
+
+#[test]
 fn fig13_fast_run_writes_schema_valid_artifact() {
     // The vnic scaling experiment end-to-end on a tiny window: valid
     // schema, the full 1..=8 scaling series, and an aggregate that

@@ -11,6 +11,17 @@ use dagger::cli::Args;
 use dagger::exp::harness::{json::Json, Figure, Value};
 use dagger::exp::run_figure;
 
+/// The fixed goodput-retention margin the shedding mechanism must buy:
+/// at the deepest overload point (the sweep's max `offered_x`), the
+/// shedding-on run must keep SLO-qualified goodput at or above this
+/// fraction of the measured saturation rate. Deliberately conservative
+/// — admission control is supposed to hold goodput *near* saturation
+/// under overload (§5.5's motivation), but CI hosts are noisy and
+/// share cores, so this pins "still doing real work under 2-4x
+/// overload" rather than a tuned single-machine number. Raise it
+/// before loosening any mechanism assert.
+const GOODPUT_RETENTION_FRAC: f64 = 0.25;
+
 fn num(v: &Value) -> f64 {
     match v {
         Value::F64(f) => *f,
@@ -161,6 +172,21 @@ fn fast_run_emits_overload_sweep_with_admission_invariants() {
         off_signals || num(&off[goodput_c]) <= num(&on[goodput_c]) * 1.05
     });
     assert!(distressed, "no overload point shows shedding helping or queues filling");
+
+    // ...and a fixed margin on top of the mechanism check: shedding
+    // must not merely engage, it must *retain* goodput. At the deepest
+    // overload point the shedded run keeps at least
+    // GOODPUT_RETENTION_FRAC of the saturation rate — collapse under
+    // load (goodput → 0 while rejects soar) fails here even when every
+    // structural invariant above still holds.
+    let deepest = rows_at(*xs.last().unwrap(), "on")[0];
+    let retained = num(&deepest[goodput_c]);
+    assert!(
+        retained >= saturation * GOODPUT_RETENTION_FRAC,
+        "shedding-on goodput collapsed at {}x: {retained:.3} Mrps < {}% of saturation ({saturation:.3} Mrps)",
+        xs.last().unwrap(),
+        GOODPUT_RETENTION_FRAC * 100.0
+    );
 
     // ------------------------------------------------- artifact schema
     let dir = std::env::temp_dir().join(format!("dagger_overload_{}", std::process::id()));
