@@ -11,8 +11,16 @@ Frame layout (one 64-byte CCI-P cache line = 16 little-endian u32 words):
   word 0   : magic(16) | rpc_type(8) | flags(8)     -- header
   word 1   : connection id (c_id)
   word 2   : rpc id (monotonic per client)
-  word 3   : payload length in bytes (0..=48)
+  word 3   : frag(1) | total_len(14) | frag_index(8) | payload len (8)
   words 4..15 : payload (KVS: key words first)
+
+Word 3's low byte is the in-frame payload length (0..=48); the high bits
+are zero on single-line frames and carry the multi-cache-line
+fragmentation header otherwise (rust/src/coordinator/frame.rs). Every
+length consumer masks the low byte. Fragments steer by a
+fragment-invariant header hash under the object-level LB — the payload
+words of a fragment are a message *slice*, so hashing them would scatter
+one RPC's fragments across flows.
 
 Datapath outputs, per frame:
   flow     : steered NIC flow (load-balancer dependent)
@@ -29,6 +37,7 @@ FNV_PRIME = 16777619     # pallas_call constants, which is rejected
 WORDS_PER_FRAME = 16
 KEY_WORDS = 8  # words 4..11 participate in the object-level hash
 MAX_PAYLOAD_BYTES = 48
+FRAG_FLAG_BIT = 31  # word-3 top bit: frame is one fragment of a message
 
 # Load-balancer modes (must match rust/src/nic/load_balancer.rs)
 LB_ROUND_ROBIN = 0  # dynamic uniform steering: rpc_id % n_flows
@@ -72,7 +81,9 @@ def datapath_ref(frames, lb_mode, n_flows):
     word0 = frames[:, 0]
     c_id = frames[:, 1]
     rpc_id = frames[:, 2]
-    plen = frames[:, 3]
+    word3 = frames[:, 3]
+    plen = word3 & jnp.uint32(0xFF)  # low byte; high bits = frag header
+    is_frag = (word3 >> jnp.uint32(FRAG_FLAG_BIT)) & jnp.uint32(1)
 
     magic = word0 >> 16
     valid = ((magic == MAGIC) & (plen <= MAX_PAYLOAD_BYTES)).astype(jnp.uint32)
@@ -87,7 +98,15 @@ def datapath_ref(frames, lb_mode, n_flows):
     n = jnp.maximum(n_flows.astype(jnp.uint32), jnp.uint32(1))
     flow_rr = rpc_id % n
     flow_static = c_id % n
-    flow_obj = h % n
+    # Object-level: fragments hash the (c_id, rpc_id) header pair —
+    # identical for every fragment of one RPC — instead of the payload
+    # key words (each fragment carries a different message slice).
+    # rotl(rpc_id, 16) mirrors Rust's rpc_id.rotate_left(16).
+    rot = ((rpc_id << jnp.uint32(16)) | (rpc_id >> jnp.uint32(16))).astype(
+        jnp.uint32
+    )
+    flow_frag = fmix32(c_id ^ rot) % n
+    flow_obj = jnp.where(is_frag == 1, flow_frag, h % n)
     lb = lb_mode.astype(jnp.uint32)
     flow = jnp.where(
         lb == LB_ROUND_ROBIN,
@@ -108,7 +127,7 @@ def deserialize_ref(frames):
     argument buffers). Header words (0..3) pass through unmasked.
     """
     frames = frames.astype(jnp.uint32)
-    plen = frames[:, 3]  # bytes
+    plen = frames[:, 3] & jnp.uint32(0xFF)  # bytes; mask off frag header
     lanes = frames.T  # [16, B]
     word_idx = jnp.arange(WORDS_PER_FRAME, dtype=jnp.uint32)[:, None]  # [16,1]
     payload_words = (plen[None, :] + jnp.uint32(3)) // jnp.uint32(4)  # ceil

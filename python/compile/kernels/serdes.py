@@ -25,7 +25,7 @@ BLOCK_B = 256
 
 def _deserialize_kernel(frames_ref, out_ref):
     frames = frames_ref[...]  # u32[block, 16]
-    plen = frames[:, 3]
+    plen = frames[:, 3] & jnp.uint32(0xFF)  # low byte; high bits = frag header
     lanes = frames.T  # [16, block]
     word_idx = jax.lax.broadcasted_iota(jnp.uint32, lanes.shape, 0)
     payload_words = (plen[None, :] + jnp.uint32(3)) // jnp.uint32(4)

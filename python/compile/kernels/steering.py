@@ -51,7 +51,9 @@ def _steering_kernel(scalar_ref, frames_ref, out_ref):
     word0 = frames[:, 0]
     c_id = frames[:, 1]
     rpc_id = frames[:, 2]
-    plen = frames[:, 3]
+    word3 = frames[:, 3]
+    plen = word3 & jnp.uint32(0xFF)  # low byte; high bits = frag header
+    is_frag = (word3 >> jnp.uint32(ref.FRAG_FLAG_BIT)) & jnp.uint32(1)
 
     magic = word0 >> 16
     valid = (
@@ -74,7 +76,13 @@ def _steering_kernel(scalar_ref, frames_ref, out_ref):
 
     flow_rr = rpc_id % n_flows
     flow_static = c_id % n_flows
-    flow_obj = h % n_flows
+    # Fragments steer by the fragment-invariant header hash (see
+    # ref.datapath_ref): rotl(rpc_id, 16) mixed with c_id.
+    rot = ((rpc_id << jnp.uint32(16)) | (rpc_id >> jnp.uint32(16))).astype(
+        jnp.uint32
+    )
+    flow_frag = ref.fmix32(c_id ^ rot) % n_flows
+    flow_obj = jnp.where(is_frag == jnp.uint32(1), flow_frag, h % n_flows)
     flow = jnp.where(
         lb_mode == jnp.uint32(ref.LB_ROUND_ROBIN),
         flow_rr,

@@ -41,6 +41,7 @@
 
 use crate::coordinator::backoff::{Backoff, RetryPolicy};
 use crate::coordinator::frame::{Frame, Payload, RpcType, MAX_PAYLOAD_BYTES};
+use crate::coordinator::reassembly::{self, Push, Reassembler};
 use crate::coordinator::rings::RingPair;
 use crate::coordinator::service::{
     tenant_class, AdmissionLedger, AdmissionPolicy, CallToken, HandlerService, ReplyArena,
@@ -441,6 +442,12 @@ pub struct RpcClient {
     /// Re-sends issued by [`RpcClient::call_with_retry`] after a reject
     /// or timeout — the numerator of retry amplification.
     pub retries: AtomicU64,
+    /// Fragmented (multi-line) responses that reached the *table*
+    /// harvest path and were dropped: [`Completion`]'s inline payload is
+    /// one cache line, so fragmented responses must be harvested
+    /// zero-copy ([`RpcClient::poll_completions_with`] + a
+    /// [`Reassembler`]) — see [`RpcClient::call_async_bytes`].
+    pub frag_dropped: AtomicU64,
 }
 
 impl RpcClient {
@@ -458,6 +465,7 @@ impl RpcClient {
             send_failures: AtomicU64::new(0),
             rejected_count: AtomicU64::new(0),
             retries: AtomicU64::new(0),
+            frag_dropped: AtomicU64::new(0),
         })
     }
 
@@ -495,6 +503,73 @@ impl RpcClient {
                 Err(())
             }
         }
+    }
+
+    /// Multi-cache-line call (§4.7): a payload longer than one frame is
+    /// split into fragment frames — each carrying a 48 B message slice
+    /// with the fragment header in word-3 spare bits — staged into the
+    /// TX ring and published with **one doorbell** (one tail store for
+    /// the whole train, the batched multi-line transfer the paper's
+    /// CCI-P write-combining provides in hardware). Payloads that fit
+    /// one line delegate to [`RpcClient::call_async`] unchanged.
+    ///
+    /// All-or-nothing send: on backpressure no fragment is published
+    /// and nothing stays registered (`Err`), so the server never sees a
+    /// partial train from this path.
+    ///
+    /// Harvest caveat: the pending-table path ([`RpcClient::poll_completions`])
+    /// delivers single-line responses only — its inline [`Completion`]
+    /// payload is one cache line. A service that replies to a
+    /// multi-line call with a multi-line *response* must be harvested
+    /// zero-copy ([`RpcClient::poll_completions_with`]) through a
+    /// [`Reassembler`], the way `exp::wall_driver` does; fragmented
+    /// responses reaching the table path are counted in
+    /// [`RpcClient::frag_dropped`] and discarded.
+    pub fn call_async_bytes(&self, method: u8, payload: &[u8]) -> Result<CallHandle, ()> {
+        if payload.len() <= MAX_PAYLOAD_BYTES {
+            return self.call_async(method, payload);
+        }
+        if payload.len() > reassembly::MAX_MESSAGE_BYTES {
+            return Err(()); // over the reassembly budget
+        }
+        let rpc_id = self.rpc_seq.fetch_add(1, Ordering::Relaxed);
+        let Some(handle) = self.pending.lock().unwrap().register(rpc_id) else {
+            return Err(());
+        };
+        // --- HOT PATH BEGIN (fragmented send; hotpath_alloc.rs) ---
+        // Fragments are built on the stack one at a time and staged
+        // straight into the ring — no frame Vec, no doorbell until the
+        // whole train is in place.
+        let n = reassembly::frag_count(payload.len());
+        let tx = &self.rings.tx;
+        let mut ok = tx.free_slots() >= n;
+        if ok {
+            for i in 0..n {
+                let f = reassembly::frag_frame(
+                    RpcType::Request,
+                    method,
+                    self.c_id,
+                    rpc_id,
+                    payload,
+                    i,
+                );
+                if tx.stage(i, f).is_err() {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            // Staged-but-unpublished frames are invisible to the
+            // consumer and harmlessly overwritten by the next send.
+            self.send_failures.fetch_add(1, Ordering::Relaxed);
+            self.pending.lock().unwrap().cancel(rpc_id);
+            return Err(());
+        }
+        tx.publish(n); // one doorbell for the whole message
+        self.sent.fetch_add(1, Ordering::Relaxed);
+        // --- HOT PATH END ---
+        Ok(handle)
     }
 
     /// Reserve the next rpc id without sending (callers that build their
@@ -678,6 +753,15 @@ impl RpcClient {
             let mut table = self.pending.lock().unwrap();
             let has_sink = table.has_sink();
             while let Some(frame) = self.rings.rx.pop() {
+                if frame.is_frag() {
+                    // Multi-line response on the table path: Completion's
+                    // inline payload is one cache line, so fragmented
+                    // responses must be harvested zero-copy — count the
+                    // misuse instead of delivering a partial payload.
+                    self.frag_dropped.fetch_add(1, Ordering::Relaxed);
+                    n += 1;
+                    continue;
+                }
                 let rpc_id = frame.rpc_id();
                 let payload = frame.payload();
                 let rejected = frame.rpc_type() == Some(RpcType::Reject);
@@ -806,9 +890,13 @@ pub struct RpcThreadedServer {
     pub mode: DispatchMode,
     stop: Arc<AtomicBool>,
     pub handled: Arc<AtomicU64>,
-    /// Service responses longer than [`MAX_PAYLOAD_BYTES`] that were
-    /// truncated at dispatch (a service bug surfaced as a counter, not
-    /// a wedged flow).
+    /// **Legacy counter** (non-fragmenting path only): responses longer
+    /// than [`MAX_PAYLOAD_BYTES`] truncated by the single-frame
+    /// [`RpcThreadedServer::handle_one`] entry point, plus responses
+    /// over the *reassembly budget* ([`reassembly::MAX_MESSAGE_BYTES`])
+    /// anywhere. The live dispatch loops no longer truncate: oversize
+    /// responses fragment back to the client (§4.7) through the same
+    /// reassembly machinery the request path uses.
     pub oversize_responses: Arc<AtomicU64>,
     /// Peak number of requests parked behind sub-RPCs on a single
     /// dispatch/worker thread (max over threads).
@@ -929,6 +1017,7 @@ impl RpcThreadedServer {
                 tracer: self.tracer.clone(),
                 parked_traces: HashMap::new(),
                 arena: ReplyArena::new(),
+                reassembler: Reassembler::new(FLOW_REASSEMBLY_SLOTS),
             };
             joins.push(std::thread::spawn(move || match mode {
                 DispatchMode::Dispatch => dispatch_loop(fl),
@@ -1002,6 +1091,15 @@ fn response_frame(ctx: &ReplyCtx, payload: &[u8], oversize: &AtomicU64) -> Frame
     Frame::new(RpcType::Response, ctx.method, ctx.c_id, ctx.rpc_id, &payload[..take])
 }
 
+/// Message slots per flow reassembler: up to this many multi-line RPCs
+/// can be mid-reassembly on one dispatch thread (matches the deepest
+/// per-flow in-flight window the wall-clock drivers use).
+const FLOW_REASSEMBLY_SLOTS: usize = 64;
+
+/// Age budget for partial messages (a lost tail fragment) before the
+/// dispatch loop's idle-path sweep reclaims the slot.
+const FRAG_GC_AGE_NS: u64 = 100_000_000; // 100 ms
+
 /// Everything one dispatch (or worker) thread owns: the flow's rings,
 /// its boxed service, and the parked-request ledger.
 struct FlowLoop {
@@ -1031,6 +1129,12 @@ struct FlowLoop {
     /// Trace ids of parked requests, so [`Stage::ServiceEnd`] can be
     /// stamped when the token finishes in `flush_parked`.
     parked_traces: HashMap<CallToken, u32>,
+    /// §4.7 multi-line requests: per-`(c_id, rpc_id)` arena-backed
+    /// fragment reassembly, one per flow (single-threaded, like the
+    /// loop that owns it). All slot buffers are allocated at `start`;
+    /// the steady-state push/serve/release cycle never touches the
+    /// heap.
+    reassembler: Reassembler,
 }
 
 impl FlowLoop {
@@ -1048,6 +1152,35 @@ impl FlowLoop {
         true
     }
 
+    /// Flush a service reply back to the client, fragmenting multi-line
+    /// payloads (§4.7) instead of truncating them. Single-line replies
+    /// are one plain frame — bit-identical to the pre-fragmentation
+    /// path. Replies over the reassembly budget are truncated to one
+    /// line and counted in the legacy `oversize` counter (a service
+    /// bug surfaced as a counter, not a wedged flow).
+    fn respond_payload(&self, method: u8, c_id: u32, rpc_id: u32, payload: &[u8]) -> bool {
+        if payload.len() <= MAX_PAYLOAD_BYTES {
+            return self.respond(Frame::new(RpcType::Response, method, c_id, rpc_id, payload));
+        }
+        if payload.len() > reassembly::MAX_MESSAGE_BYTES {
+            self.oversize.fetch_add(1, Ordering::Relaxed);
+            let f =
+                Frame::new(RpcType::Response, method, c_id, rpc_id, &payload[..MAX_PAYLOAD_BYTES]);
+            return self.respond(f);
+        }
+        // Fragments are built on the stack one at a time; `respond`
+        // pushes each through the flow's TX ring (the response
+        // direction has no staging producer — per-frame publishes keep
+        // the client's harvest latency flat).
+        for i in 0..reassembly::frag_count(payload.len()) {
+            let f = reassembly::frag_frame(RpcType::Response, method, c_id, rpc_id, payload, i);
+            if !self.respond(f) {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Run one request through the service; park or respond.
     /// Returns `false` if stopped while pushing the response.
     ///
@@ -1060,6 +1193,23 @@ impl FlowLoop {
     /// queue is not counted (the dispatch thread drains RX eagerly), so
     /// depth there is dominated by `parked`.
     fn ingest(&mut self, frame: Frame) -> bool {
+        // §4.7 multi-line requests: fragments accumulate in the flow's
+        // reassembler (out-of-order tolerant); the RPC enters admission
+        // and the service only when its last fragment lands. Dropped
+        // fragments (no slot / malformed) are counted by the
+        // reassembler and the message eventually expires via the
+        // idle-path sweep — the client's patience bound treats it as
+        // lost, exactly like a dropped single-line frame.
+        if frame.is_frag() {
+            return match self.reassembler.push(&frame) {
+                Push::Complete(slot) => {
+                    let done = self.ingest_reassembled(slot);
+                    self.reassembler.release(slot);
+                    done
+                }
+                _ => true,
+            };
+        }
         if let Some(policy) = self.admission {
             let depth = self.rings.rx.len() + self.parked.len();
             if !policy.admit(depth, frame.c_id(), &mut self.ledger) {
@@ -1108,12 +1258,7 @@ impl FlowLoop {
                     sink.record(*id, Stage::ServiceEnd, self.service.name(), telemetry::now_ns());
                 }
                 self.handled.fetch_add(1, Ordering::Relaxed);
-                let f = response_frame(
-                    &ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
-                    self.arena.bytes(),
-                    &self.oversize,
-                );
-                self.respond(f)
+                self.respond_payload(method, frame.c_id(), frame.rpc_id(), self.arena.bytes())
             }
             Response::Pending(pc) => {
                 self.sub_rpcs.fetch_add(pc.sub_calls as u64, Ordering::Relaxed);
@@ -1123,6 +1268,63 @@ impl FlowLoop {
                 self.parked.insert(
                     token,
                     ReplyCtx { method, c_id: frame.c_id(), rpc_id: frame.rpc_id() },
+                );
+                self.parked_peak.fetch_max(self.parked.len() as u64, Ordering::Relaxed);
+                true
+            }
+        }
+    }
+
+    /// Serve a fully-reassembled multi-line request held in `slot` —
+    /// the fragment-path twin of the tail of `ingest`. The service sees
+    /// the whole message through the ordinary [`Request`] surface
+    /// (`payload` borrows the reassembler's slot buffer — zero copy);
+    /// admission runs here, on message completion, so a shed multi-line
+    /// RPC costs its fragments but never a service call. Fragmented
+    /// RPCs run *untraced*: every payload word of a fragment carries
+    /// message bytes, so there is no trace word to read (the ladder
+    /// grid rows keep `trace_every = 0`).
+    fn ingest_reassembled(&mut self, slot: usize) -> bool {
+        let meta = self.reassembler.slot_meta(slot);
+        if let Some(policy) = self.admission {
+            let depth = self.rings.rx.len() + self.parked.len();
+            if !policy.admit(depth, meta.c_id, &mut self.ledger) {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shed_by_class[tenant_class(meta.c_id) as usize]
+                    .fetch_add(1, Ordering::Relaxed);
+                // The reject echoes the first line of the request — the
+                // benchmark stamp rides in bytes 0..12, so the client's
+                // retry bookkeeping still works (a reject is a
+                // single-line status frame, never a fragment train).
+                let bytes = self.reassembler.slot_bytes(slot);
+                let head = &bytes[..bytes.len().min(MAX_PAYLOAD_BYTES)];
+                let f = Frame::new(RpcType::Reject, meta.flags, meta.c_id, meta.rpc_id, head);
+                return self.respond(f);
+            }
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        let resp = self.service.call(
+            Request {
+                method: meta.flags,
+                c_id: meta.c_id,
+                rpc_id: meta.rpc_id,
+                flow: self.flow,
+                token,
+                payload: self.reassembler.slot_bytes(slot),
+            },
+            &mut self.arena,
+        );
+        match resp {
+            Response::Ready => {
+                self.handled.fetch_add(1, Ordering::Relaxed);
+                self.respond_payload(meta.flags, meta.c_id, meta.rpc_id, self.arena.bytes())
+            }
+            Response::Pending(pc) => {
+                self.sub_rpcs.fetch_add(pc.sub_calls as u64, Ordering::Relaxed);
+                self.parked.insert(
+                    token,
+                    ReplyCtx { method: meta.flags, c_id: meta.c_id, rpc_id: meta.rpc_id },
                 );
                 self.parked_peak.fetch_max(self.parked.len() as u64, Ordering::Relaxed);
                 true
@@ -1151,8 +1353,7 @@ impl FlowLoop {
                         sink.record(id, Stage::ServiceEnd, self.service.name(), telemetry::now_ns());
                     }
                     self.handled.fetch_add(1, Ordering::Relaxed);
-                    let f = response_frame(&ctx, payload, &self.oversize);
-                    if !self.respond(f) {
+                    if !self.respond_payload(ctx.method, ctx.c_id, ctx.rpc_id, payload) {
                         ok = false;
                         break;
                     }
@@ -1190,6 +1391,9 @@ fn dispatch_loop(mut fl: FlowLoop) {
         if progressed {
             backoff.reset();
         } else {
+            // Idle (cold path): reclaim reassembly slots whose tail
+            // fragment was lost in the fabric.
+            fl.reassembler.sweep(FRAG_GC_AGE_NS);
             backoff.snooze();
         }
     }
@@ -1224,6 +1428,7 @@ fn worker_loop(mut fl: FlowLoop) {
             if progressed {
                 backoff.reset();
             } else {
+                fl.reassembler.sweep(FRAG_GC_AGE_NS);
                 backoff.snooze();
             }
         }
@@ -1557,6 +1762,142 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+    }
+
+    /// §4.7 end to end at the unit level: two interleaved multi-line
+    /// RPCs on one flow, fragments arriving out of order, served by the
+    /// echo service through both dispatch modes — responses fragment
+    /// back (never truncate) and reassemble byte-exact.
+    #[test]
+    fn fragmented_echo_round_trip_both_modes() {
+        use crate::coordinator::service::EchoService;
+        for mode in [DispatchMode::Dispatch, DispatchMode::Worker] {
+            let mut server = RpcThreadedServer::new(mode);
+            let rings = Arc::new(RingPair::new(64, 64));
+            server.add_service_flow(0, rings.clone(), Box::new(EchoService));
+            let joins = server.start();
+
+            let msg_a: Vec<u8> = (0..300u32).map(|i| i as u8).collect();
+            let msg_b: Vec<u8> = (0..1536u32).map(|i| (i * 31) as u8).collect();
+            let mut fa = Vec::new();
+            let mut fb = Vec::new();
+            reassembly::fragment_into(&mut fa, RpcType::Request, 9, 1, 100, &msg_a).unwrap();
+            reassembly::fragment_into(&mut fb, RpcType::Request, 9, 1, 101, &msg_b).unwrap();
+            fa.reverse(); // out-of-order arrival within the train
+            let (mut ia, mut ib) = (fa.into_iter(), fb.into_iter());
+            let mut train: Vec<Frame> = Vec::new();
+            loop {
+                match (ia.next(), ib.next()) {
+                    (None, None) => break,
+                    (a, b) => {
+                        train.extend(a);
+                        train.extend(b);
+                    }
+                }
+            }
+            for f in train {
+                while rings.rx.push(f).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+
+            let mut r = Reassembler::new(8);
+            let mut got: Vec<(u32, Vec<u8>)> = Vec::new();
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while got.len() < 2 {
+                if let Some(resp) = rings.tx.pop() {
+                    assert_eq!(resp.rpc_type(), Some(RpcType::Response));
+                    match r.push(&resp) {
+                        Push::Complete(slot) => {
+                            got.push((r.slot_meta(slot).rpc_id, r.slot_bytes(slot).to_vec()));
+                            r.release(slot);
+                        }
+                        Push::Incomplete => {}
+                        other => panic!("unexpected response frame state {other:?} ({mode:?})"),
+                    }
+                } else {
+                    assert!(std::time::Instant::now() < deadline, "timed out ({mode:?})");
+                    std::thread::yield_now();
+                }
+            }
+            got.sort_by_key(|(id, _)| *id);
+            assert_eq!(got[0].0, 100);
+            assert_eq!(got[0].1, msg_a, "{mode:?}: small message corrupted");
+            assert_eq!(got[1].0, 101);
+            assert_eq!(got[1].1, msg_b, "{mode:?}: full-budget message corrupted");
+
+            server.stop_flag().store(true, Ordering::Relaxed);
+            for j in joins {
+                j.join().unwrap();
+            }
+            assert_eq!(server.handled.load(Ordering::Relaxed), 2, "{mode:?}");
+            assert_eq!(
+                server.oversize_responses.load(Ordering::Relaxed),
+                0,
+                "{mode:?}: the fragmenting path must never truncate"
+            );
+        }
+    }
+
+    /// `call_async_bytes`: single-line payloads stay plain; multi-line
+    /// payloads become one atomically-published fragment train (one
+    /// doorbell); backpressure and over-budget sends leave nothing
+    /// registered or staged.
+    #[test]
+    fn call_async_bytes_fragments_with_one_doorbell() {
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(3, rings.clone());
+
+        let h = client.call_async_bytes(1, b"small").unwrap();
+        let f = rings.tx.pop().unwrap();
+        assert!(!f.is_frag(), "single-line payloads must stay unfragmented");
+        assert_eq!(f.payload(), b"small");
+        client.pending().cancel(h.rpc_id());
+
+        let msg: Vec<u8> = (0..200u32).map(|i| i as u8).collect();
+        let h = client.call_async_bytes(7, &msg).unwrap();
+        assert_eq!(rings.tx.len(), 5, "whole train published in one doorbell");
+        let mut r = Reassembler::new(2);
+        let mut out = None;
+        while let Some(f) = rings.tx.pop() {
+            assert_eq!(f.rpc_type(), Some(RpcType::Request));
+            assert_eq!(f.flags(), 7);
+            assert_eq!(f.rpc_id(), h.rpc_id(), "all fragments share the rpc id");
+            if let Push::Complete(slot) = r.push(&f) {
+                out = Some(r.slot_bytes(slot).to_vec());
+                r.release(slot);
+            }
+        }
+        assert_eq!(out.as_deref(), Some(&msg[..]), "train reassembles byte-exact");
+
+        // A train that doesn't fit the ring sends nothing at all (no
+        // partial message) and leaves nothing newly registered.
+        let big = vec![0u8; 1536]; // 32 fragments > 16 slots
+        assert!(client.call_async_bytes(7, &big).is_err());
+        assert_eq!(rings.tx.len(), 0, "no partial train published");
+        assert_eq!(client.in_flight(), 1, "only the live 200 B call remains");
+        client.pending().cancel(h.rpc_id());
+
+        // Beyond the reassembly budget: refused outright.
+        let over = vec![0u8; reassembly::MAX_MESSAGE_BYTES + 1];
+        assert!(client.call_async_bytes(7, &over).is_err());
+    }
+
+    /// Fragmented responses must not reach the one-line `Completion`
+    /// surface: the table harvest counts and discards them.
+    #[test]
+    fn table_harvest_drops_fragmented_responses() {
+        let rings = Arc::new(RingPair::new(16, 16));
+        let client = RpcClient::new(1, rings.clone());
+        let msg = vec![7u8; 100]; // 3 fragments
+        let mut frames = Vec::new();
+        reassembly::fragment_into(&mut frames, RpcType::Response, 0, 1, 5, &msg).unwrap();
+        for f in frames {
+            rings.rx.push(f).unwrap();
+        }
+        assert_eq!(client.poll_completions(), 3);
+        assert_eq!(client.frag_dropped.load(Ordering::Relaxed), 3);
+        assert_eq!(client.completed_count.load(Ordering::Relaxed), 0);
     }
 
     /// A service that parks every request; both dispatch modes must

@@ -10,9 +10,16 @@
 //! word 0   : magic(16) | rpc_type(8) | flags(8)
 //! word 1   : connection id (c_id)
 //! word 2   : rpc id (monotonic per client)
-//! word 3   : payload length in bytes (0..=48)
+//! word 3   : frag(1) | total_len(14) | frag_index(8) | payload length (8)
 //! words 4..15 : payload (48 bytes; KVS keys first)
 //! ```
+//!
+//! Word 3's low byte is the in-frame payload length (0..=48); the high
+//! bits are zero on ordinary single-line frames and carry the §4.7
+//! multi-cache-line fragmentation header otherwise (see the
+//! "fragmentation header" section on [`Frame`]). Every consumer of the
+//! length — Rust and kernel alike — masks the low byte, so fragmented
+//! and plain frames parse identically.
 
 /// Magic tag in the top 16 bits of word 0 (must match ref.MAGIC).
 pub const MAGIC: u32 = 0xDA66;
@@ -258,7 +265,10 @@ impl Frame {
 
     #[inline]
     pub fn payload_len(&self) -> usize {
-        self.words[3] as usize
+        // Low byte only: the high bits of word 3 belong to the
+        // fragmentation header (zero on unfragmented frames, so this is
+        // wire-compatible with every pre-fragmentation frame).
+        (self.words[3] & 0xFF) as usize
     }
 
     /// Header validity — mirrors the kernel's `valid` output.
@@ -439,6 +449,84 @@ impl Frame {
     #[inline]
     pub fn clear_trace(&mut self) {
         self.words[Self::TRACE_WORD] = 0;
+    }
+
+    // ------------------------------------------- fragmentation header
+    //
+    // §4.7: the interconnect MTU is one cache line, so an RPC larger
+    // than 48 B crosses the fabric as a train of fragment frames. The
+    // fragment header lives entirely in the *spare bits of word 3* —
+    // the header word whose low byte is the in-frame payload length —
+    // so it consumes zero payload bytes and is trivially byte-disjoint
+    // from everything the payload words carry: the object-level
+    // steering hash (KEY_WORDS = words 4..11), the head stamp (words
+    // 4-6), the trace word (12), and the tail stamp (words 13-15).
+    // `frag_header_is_outside_payload_words` proves the disjointness
+    // and the CI grep-guard pins it alongside the Reject/trace guards.
+    //
+    //   bit  31     : FRAG_FLAG — this frame is one fragment of a
+    //                 multi-line message
+    //   bits 16..30 : total *message* length in bytes (14 bits, so up
+    //                 to 16 KB; the reassembler caps it lower)
+    //   bits  8..16 : fragment index (0-based, sequential)
+    //   bits  0..8  : this fragment's payload length (0..=48), exactly
+    //                 as on an unfragmented frame
+    //
+    // All fragments of one RPC share (c_id, rpc_id) — that pair is the
+    // reassembly key — and must steer to one flow; the load balancer's
+    // object-level mode switches to a fragment-invariant header hash
+    // for flagged frames (see nic::load_balancer).
+
+    /// Word-3 top bit: this frame is a fragment of a multi-line message.
+    pub const FRAG_FLAG: u32 = 1 << 31;
+    /// Shift of the 8-bit fragment index within word 3.
+    pub const FRAG_INDEX_SHIFT: u32 = 8;
+    /// Shift of the 14-bit total-message-length field within word 3.
+    pub const FRAG_TOTAL_SHIFT: u32 = 16;
+    /// Mask of the total-message-length field (14 bits).
+    pub const FRAG_TOTAL_MASK: u32 = 0x3FFF;
+
+    /// Mark the frame as fragment `index` of a `total_len`-byte message.
+    /// The frame's own payload (low byte of word 3) is untouched.
+    #[inline]
+    pub fn set_frag(&mut self, index: u8, total_len: usize) {
+        debug_assert!(
+            total_len <= Self::FRAG_TOTAL_MASK as usize,
+            "message too large for the frag header"
+        );
+        self.words[3] = (self.words[3] & 0xFF)
+            | Self::FRAG_FLAG
+            | ((total_len as u32 & Self::FRAG_TOTAL_MASK) << Self::FRAG_TOTAL_SHIFT)
+            | ((index as u32) << Self::FRAG_INDEX_SHIFT);
+    }
+
+    /// Is this frame one fragment of a multi-cache-line message?
+    #[inline]
+    pub fn is_frag(&self) -> bool {
+        self.words[3] & Self::FRAG_FLAG != 0
+    }
+
+    /// The 0-based fragment index (meaningful only when [`is_frag`]).
+    ///
+    /// [`is_frag`]: Frame::is_frag
+    #[inline]
+    pub fn frag_index(&self) -> u8 {
+        ((self.words[3] >> Self::FRAG_INDEX_SHIFT) & 0xFF) as u8
+    }
+
+    /// Total reassembled message length in bytes (meaningful only when
+    /// [`is_frag`]).
+    ///
+    /// [`is_frag`]: Frame::is_frag
+    #[inline]
+    pub fn frag_total_len(&self) -> usize {
+        ((self.words[3] >> Self::FRAG_TOTAL_SHIFT) & Self::FRAG_TOTAL_MASK) as usize
+    }
+
+    /// Strip the fragment header, leaving a plain single-line frame.
+    #[inline]
+    pub fn clear_frag(&mut self) {
+        self.words[3] &= 0xFF;
     }
 
     /// FNV-1a over the 8 key words + fmix32 finisher — identical to the
@@ -668,6 +756,67 @@ mod tests {
         c.set_trace(42);
         let d = Frame::from_bytes(&c.to_bytes());
         assert_eq!(d.trace_id(), Some(42));
+    }
+
+    /// The fragmentation header must stay byte-disjoint from every
+    /// payload-word convention: it lives in word 3's spare bits, so
+    /// flagging a frame as a fragment changes neither the steering key
+    /// hash (words 4-11) nor the head stamp (words 4-6) nor the trace
+    /// word (12) nor the tail stamp (words 13-15) — and writing all of
+    /// those leaves the fragment header readable. This is the invariant
+    /// the CI grep-guard pins alongside the Reject and trace guards.
+    #[test]
+    fn frag_header_is_outside_payload_words() {
+        // Offset bookkeeping: the header shares word 3 with the length
+        // byte and touches no payload word at all.
+        assert_eq!(Frame::FRAG_FLAG, 1 << 31);
+        assert!(Frame::FRAG_TOTAL_SHIFT + 14 <= 31, "total field must clear the flag bit");
+
+        let payload = [0x5Au8; MAX_PAYLOAD_BYTES];
+        let mut f = Frame::new(RpcType::Request, 2, 9, 1001, &payload);
+        let hash = f.key_hash();
+        let payload_words = [f.words[4], f.words[5], f.words[6], f.words[12], f.words[13]];
+        f.set_frag(3, 1536);
+        assert!(f.is_frag());
+        assert_eq!(f.frag_index(), 3);
+        assert_eq!(f.frag_total_len(), 1536);
+        assert_eq!(f.payload_len(), MAX_PAYLOAD_BYTES, "frag header clobbered the length byte");
+        assert!(f.is_valid(), "a fragment frame must still parse as valid");
+        assert_eq!(f.key_hash(), hash, "frag header leaked into the key hash");
+        assert_eq!(
+            [f.words[4], f.words[5], f.words[6], f.words[12], f.words[13]],
+            payload_words,
+            "frag header touched a payload word"
+        );
+
+        // Saturating every payload-word convention leaves the fragment
+        // header intact...
+        f.set_ts_ns(0xFFFF_FFFF_FFFF_FFFF);
+        f.set_tag(0xFFFF_FFFF);
+        f.set_ts_ns_tail(0xFFFF_FFFF_FFFF_FFFF);
+        f.set_tag_tail(0xFFFF_FFFF);
+        f.words[Frame::TRACE_WORD] = 0xFFFF_FFFF;
+        assert!(f.is_frag());
+        assert_eq!(f.frag_index(), 3);
+        assert_eq!(f.frag_total_len(), 1536);
+        // ...and the header survives the raw cache-line round trip.
+        let g = Frame::from_bytes(&f.to_bytes());
+        assert!(g.is_frag());
+        assert_eq!(g.frag_index(), 3);
+        assert_eq!(g.frag_total_len(), 1536);
+        assert_eq!(g.payload_len(), MAX_PAYLOAD_BYTES);
+
+        // clear_frag restores a plain frame (header word high bits zero).
+        let mut h = g;
+        h.clear_frag();
+        assert!(!h.is_frag());
+        assert_eq!(h.words[3], MAX_PAYLOAD_BYTES as u32);
+
+        // Pre-fragmentation frames (high bits zero) are never mistaken
+        // for fragments.
+        let plain = Frame::new(RpcType::Request, 0, 1, 2, b"short");
+        assert!(!plain.is_frag());
+        assert_eq!(plain.payload_len(), 5);
     }
 
     #[test]

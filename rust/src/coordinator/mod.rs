@@ -4,6 +4,9 @@
 //! * [`frame`] — the 64-byte wire format shared with the Pallas kernels,
 //!   including the benchmark stamping convention (embedded send
 //!   timestamp + slot tag) used by the wall-clock fabric benchmark.
+//! * [`reassembly`] — multi-cache-line RPCs (§4.7): alloc-free
+//!   fragment-train construction and the arena-backed reassembler the
+//!   dispatch loop and the wall-clock driver run on the measured path.
 //! * [`rings`] — lock-free RX/TX rings (the CPU side of the NIC I/O)
 //!   and [`rings::SlotPool`], the Fig. 8 ④/⑥ free-slot bookkeeping.
 //! * [`api`] — RpcClient / RpcClientPool / RpcThreadedServer and the

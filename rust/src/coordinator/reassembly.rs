@@ -1,144 +1,329 @@
 //! Software RPC reassembly (§4.7): transferring RPCs larger than one
-//! cache line.
+//! cache line, on the measured hot path.
 //!
 //! The memory-interconnect MTU is a single 64 B line; relaxed memory
 //! ordering means multi-line messages cannot assume in-order delivery.
 //! The paper's hardware reassembly (NeBuLa-style CAM) is future work —
 //! "as of now, Dagger only features software-based RPC reassembling".
-//! This module is that software path:
+//! This module is that software path, and it obeys the repo's HOT PATH
+//! discipline (`rust/tests/hotpath_alloc.rs` drives a multi-fragment
+//! echo through it under a counting allocator):
 //!
-//! * the sender splits a large payload into fragments, each a normal
-//!   frame whose flags byte carries `frag_index`, and whose payload is
-//!   prefixed with a 4-byte fragment header (message id, total length);
-//! * the receiver collects fragments per (c_id, msg_id) out of order and
-//!   yields the full payload when every byte has arrived;
-//! * incomplete messages are garbage-collected after a timeout budget
-//!   (counted in collector sweeps).
+//! * the sender splits a large payload into fragment frames — each a
+//!   normal frame carrying a full 48 B payload slice, with the fragment
+//!   header (index, total message length, presence flag) packed into
+//!   the *spare bits of header word 3* (see [`Frame::set_frag`]), so
+//!   fragmentation costs zero payload bytes and never touches the
+//!   steering hash, the stamps, or the trace word;
+//! * the receiver collects fragments per `(c_id, rpc_id)` out of order
+//!   into pre-allocated fixed-capacity slot buffers (an arena sized at
+//!   construction — no per-RPC heap allocation, mirroring the CAM the
+//!   paper sketches) and reports completion as a slot *index* so the
+//!   caller can borrow the bytes, serve the request, and recycle the
+//!   slot;
+//! * incomplete messages (a lost tail fragment) are garbage-collected
+//!   by an age sweep the dispatch loop runs on its idle path.
 
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
-use std::collections::HashMap;
+use std::time::Instant;
 
-/// Per-fragment overhead: msg_id (u16) | total_len (u16).
-const FRAG_HEADER_BYTES: usize = 4;
-/// Payload bytes carried by each fragment.
-pub const FRAG_CAPACITY: usize = MAX_PAYLOAD_BYTES - FRAG_HEADER_BYTES;
-/// flags byte holds the fragment index -> max 256 fragments.
-pub const MAX_MESSAGE_BYTES: usize = FRAG_CAPACITY * 256;
+/// Payload bytes carried by each fragment — the full frame payload; the
+/// fragment header lives in word-3 spare bits and eats none of it.
+pub const FRAG_CAPACITY: usize = MAX_PAYLOAD_BYTES;
+/// Fragment indices are tracked in a u32 arrival mask.
+pub const MAX_FRAGMENTS: usize = 32;
+/// Reassembly budget per message: 32 fragments × 48 B = 1536 B — the
+/// top of the `fabric_wallclock` payload ladder (Fig. 10 reaches 2 KB
+/// on the simulated axis; the measured ladder stops at 1.5 KB).
+pub const MAX_MESSAGE_BYTES: usize = MAX_FRAGMENTS * FRAG_CAPACITY;
 
-/// Split a large payload into fragment frames. `msg_id` must be unique
-/// per (connection, in-flight message).
-pub fn fragment(
+/// Number of frames a `len`-byte message occupies on the wire (one
+/// plain frame when it fits a single line).
+#[inline]
+pub fn frag_count(len: usize) -> usize {
+    if len <= FRAG_CAPACITY {
+        1
+    } else {
+        len.div_ceil(FRAG_CAPACITY)
+    }
+}
+
+/// Build fragment `index` of a multi-line message — the alloc-free
+/// primitive the send paths use to stage fragments straight into a ring
+/// without materialising a frame Vec. `payload` is the *whole* message
+/// (> [`FRAG_CAPACITY`] bytes); the frame carries its `index`-th 48 B
+/// slice plus the word-3 fragment header.
+#[inline]
+pub fn frag_frame(
     rpc_type: RpcType,
+    flags: u8,
     c_id: u32,
     rpc_id: u32,
-    msg_id: u16,
     payload: &[u8],
-) -> Result<Vec<Frame>, String> {
+    index: usize,
+) -> Frame {
+    debug_assert!(payload.len() > FRAG_CAPACITY && payload.len() <= MAX_MESSAGE_BYTES);
+    debug_assert!(index < frag_count(payload.len()));
+    let start = index * FRAG_CAPACITY;
+    let end = (start + FRAG_CAPACITY).min(payload.len());
+    let mut f = Frame::new(rpc_type, flags, c_id, rpc_id, &payload[start..end]);
+    f.set_frag(index as u8, payload.len());
+    f
+}
+
+/// Split `payload` into wire frames, appending to `out` (cleared
+/// first). Single-line messages become one *plain* frame — the frag
+/// header only appears when the message really spans multiple lines,
+/// so sub-48 B traffic is bit-identical to the pre-fragmentation wire
+/// format. Alloc-free when `out` has capacity.
+pub fn fragment_into(
+    out: &mut Vec<Frame>,
+    rpc_type: RpcType,
+    flags: u8,
+    c_id: u32,
+    rpc_id: u32,
+    payload: &[u8],
+) -> Result<(), &'static str> {
     if payload.len() > MAX_MESSAGE_BYTES {
-        return Err(format!(
-            "message of {} bytes exceeds the {} byte reassembly budget",
-            payload.len(),
-            MAX_MESSAGE_BYTES
-        ));
+        return Err("message exceeds the reassembly budget");
     }
-    let total = payload.len() as u16;
-    let frames = payload
-        .chunks(FRAG_CAPACITY.max(1))
-        .enumerate()
-        .map(|(i, chunk)| {
-            let mut buf = Vec::with_capacity(FRAG_HEADER_BYTES + chunk.len());
-            buf.extend_from_slice(&msg_id.to_le_bytes());
-            buf.extend_from_slice(&total.to_le_bytes());
-            buf.extend_from_slice(chunk);
-            Frame::new(rpc_type, i as u8, c_id, rpc_id, &buf)
-        })
-        .collect::<Vec<_>>();
-    if frames.is_empty() {
-        // Zero-length message still needs one fragment to carry the header.
-        let mut buf = Vec::with_capacity(FRAG_HEADER_BYTES);
-        buf.extend_from_slice(&msg_id.to_le_bytes());
-        buf.extend_from_slice(&0u16.to_le_bytes());
-        return Ok(vec![Frame::new(rpc_type, 0, c_id, rpc_id, &buf)]);
+    out.clear();
+    if payload.len() <= FRAG_CAPACITY {
+        out.push(Frame::new(rpc_type, flags, c_id, rpc_id, payload));
+    } else {
+        for i in 0..frag_count(payload.len()) {
+            out.push(frag_frame(rpc_type, flags, c_id, rpc_id, payload, i));
+        }
     }
-    Ok(frames)
+    Ok(())
 }
 
-struct Partial {
+/// Outcome of feeding one frame to [`Reassembler::push`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Push {
+    /// The frame carries no fragment header — process it as a plain
+    /// single-line RPC.
+    NotFragment,
+    /// Fragment absorbed; the message is still missing pieces (or was a
+    /// duplicate of one already held).
+    Incomplete,
+    /// The message completed: every byte is in slot `.0`. Read it with
+    /// [`Reassembler::slot_bytes`] / [`Reassembler::slot_meta`], then
+    /// recycle the slot with [`Reassembler::release`].
+    Complete(usize),
+    /// The fragment was dropped — no free slot, or a malformed header.
+    Dropped,
+}
+
+/// Reassembly-key metadata for a completed slot — the header fields the
+/// dispatch loop needs to build the `Request` and route the response.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotMeta {
+    pub c_id: u32,
+    pub rpc_id: u32,
+    pub flags: u8,
+    pub rpc_type: Option<RpcType>,
+    pub total_len: usize,
+}
+
+struct Slot {
+    in_use: bool,
+    c_id: u32,
+    rpc_id: u32,
+    flags: u8,
+    rpc_type: u8,
     total_len: usize,
-    received: usize,
-    chunks: HashMap<u8, Vec<u8>>,
-    age: u32,
+    /// Bit i set = fragment i arrived.
+    frag_mask: u32,
+    born_ns: u64,
+    buf: Box<[u8]>,
 }
 
-/// Receiver-side reassembler, one per endpoint.
-#[derive(Default)]
+/// Receiver-side reassembler: a fixed arena of message slots keyed by
+/// `(c_id, rpc_id)`. One per dispatch/harvest thread — single-threaded
+/// by design, like the `FlowLoop` that owns it. All buffers are
+/// allocated once in [`Reassembler::new`]; `push`/`slot_bytes`/
+/// `release` never touch the heap.
 pub struct Reassembler {
-    partial: HashMap<(u32, u16), Partial>,
+    slots: Vec<Slot>,
+    epoch: Instant,
+    /// Messages fully reassembled.
     pub completed: u64,
+    /// Partial messages garbage-collected by [`Reassembler::sweep`].
     pub expired: u64,
+    /// Fragments that duplicated one already held (relaxed-order fabric
+    /// redelivery).
     pub duplicate_fragments: u64,
+    /// Fragments dropped because every slot was occupied.
+    pub dropped_no_slot: u64,
+    /// Fragments dropped for inconsistent headers (index out of range,
+    /// total over budget, mid-message length mismatch).
+    pub malformed: u64,
 }
 
 impl Reassembler {
-    pub fn new() -> Self {
-        Self::default()
+    /// An arena of `capacity` message slots (each [`MAX_MESSAGE_BYTES`]
+    /// long, allocated here, never after).
+    pub fn new(capacity: usize) -> Reassembler {
+        Reassembler {
+            slots: (0..capacity.max(1))
+                .map(|_| Slot {
+                    in_use: false,
+                    c_id: 0,
+                    rpc_id: 0,
+                    flags: 0,
+                    rpc_type: 0,
+                    total_len: 0,
+                    frag_mask: 0,
+                    born_ns: 0,
+                    buf: vec![0u8; MAX_MESSAGE_BYTES].into_boxed_slice(),
+                })
+                .collect(),
+            epoch: Instant::now(),
+            completed: 0,
+            expired: 0,
+            duplicate_fragments: 0,
+            dropped_no_slot: 0,
+            malformed: 0,
+        }
     }
 
-    /// Feed one fragment frame. Returns the whole payload when the
-    /// message completes.
-    pub fn push(&mut self, frame: &Frame) -> Option<Vec<u8>> {
-        let payload = frame.payload();
-        if payload.len() < FRAG_HEADER_BYTES {
-            return None;
-        }
-        let msg_id = u16::from_le_bytes(payload[0..2].try_into().unwrap());
-        let total_len = u16::from_le_bytes(payload[2..4].try_into().unwrap()) as usize;
-        let chunk = payload[FRAG_HEADER_BYTES..].to_vec();
-        let idx = frame.flags();
-        let key = (frame.c_id(), msg_id);
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
 
-        let p = self.partial.entry(key).or_insert_with(|| Partial {
-            total_len,
-            received: 0,
-            chunks: HashMap::new(),
-            age: 0,
-        });
-        if p.chunks.contains_key(&idx) {
-            self.duplicate_fragments += 1;
-            return None;
-        }
-        p.received += chunk.len();
-        p.chunks.insert(idx, chunk);
+    // --- HOT PATH BEGIN (fragment reassembly) ---
+    // Per-fragment work: a linear scan over a small fixed arena, one
+    // 48-byte copy into a pre-allocated buffer, bit-mask bookkeeping.
+    // No allocation, no map, no per-RPC state outside the arena.
 
-        if p.received >= p.total_len {
-            let p = self.partial.remove(&key).unwrap();
-            let mut out = Vec::with_capacity(p.total_len);
-            let mut indices: Vec<u8> = p.chunks.keys().copied().collect();
-            indices.sort_unstable();
-            for i in indices {
-                out.extend_from_slice(&p.chunks[&i]);
+    /// Feed one frame. Fragments accumulate in their `(c_id, rpc_id)`
+    /// slot; [`Push::Complete`] hands back the slot index once every
+    /// fragment has arrived (in any order).
+    pub fn push(&mut self, frame: &Frame) -> Push {
+        if !frame.is_frag() {
+            return Push::NotFragment;
+        }
+        let total = frame.frag_total_len();
+        let index = frame.frag_index() as usize;
+        let n_frags = frag_count(total);
+        if total > MAX_MESSAGE_BYTES || total <= FRAG_CAPACITY || index >= n_frags {
+            self.malformed += 1;
+            return Push::Dropped;
+        }
+        // Each fragment but the last carries a full line; the last
+        // carries the remainder.
+        let start = index * FRAG_CAPACITY;
+        let expect_len = (total - start).min(FRAG_CAPACITY);
+        if frame.payload_len() != expect_len {
+            self.malformed += 1;
+            return Push::Dropped;
+        }
+
+        let (c_id, rpc_id) = (frame.c_id(), frame.rpc_id());
+        // Find this message's slot, or claim a free one.
+        let mut slot_idx = None;
+        let mut free_idx = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.in_use {
+                if s.c_id == c_id && s.rpc_id == rpc_id {
+                    slot_idx = Some(i);
+                    break;
+                }
+            } else if free_idx.is_none() {
+                free_idx = Some(i);
             }
-            out.truncate(p.total_len);
+        }
+        let i = match slot_idx.or(free_idx) {
+            Some(i) => i,
+            None => {
+                self.dropped_no_slot += 1;
+                return Push::Dropped;
+            }
+        };
+        let born_ns = self.now_ns();
+        let slot = &mut self.slots[i];
+        if !slot.in_use {
+            slot.in_use = true;
+            slot.c_id = c_id;
+            slot.rpc_id = rpc_id;
+            slot.flags = frame.flags();
+            slot.rpc_type = frame.rpc_type_raw();
+            slot.total_len = total;
+            slot.frag_mask = 0;
+            slot.born_ns = born_ns;
+        } else if slot.total_len != total {
+            self.malformed += 1;
+            return Push::Dropped;
+        }
+        let bit = 1u32 << index;
+        if slot.frag_mask & bit != 0 {
+            self.duplicate_fragments += 1;
+            return Push::Incomplete;
+        }
+        // Copy the slice into place: a stack Payload extract + memcpy,
+        // no heap.
+        let payload = frame.payload();
+        slot.buf[start..start + expect_len].copy_from_slice(&payload);
+        slot.frag_mask |= bit;
+
+        let full = if n_frags == MAX_FRAGMENTS { u32::MAX } else { (1u32 << n_frags) - 1 };
+        if slot.frag_mask == full {
             self.completed += 1;
-            Some(out)
+            Push::Complete(i)
         } else {
-            None
+            Push::Incomplete
         }
     }
 
-    /// Garbage-collection sweep: ages every partial message; drops those
-    /// seen `max_age` sweeps without completing.
-    pub fn sweep(&mut self, max_age: u32) {
-        let before = self.partial.len();
-        self.partial.retain(|_, p| {
-            p.age += 1;
-            p.age <= max_age
-        });
-        self.expired += (before - self.partial.len()) as u64;
+    /// The reassembled message held in `slot` (valid between
+    /// [`Push::Complete`] and [`Reassembler::release`]).
+    #[inline]
+    pub fn slot_bytes(&self, slot: usize) -> &[u8] {
+        &self.slots[slot].buf[..self.slots[slot].total_len]
     }
 
+    /// Header metadata of the message held in `slot`.
+    #[inline]
+    pub fn slot_meta(&self, slot: usize) -> SlotMeta {
+        let s = &self.slots[slot];
+        SlotMeta {
+            c_id: s.c_id,
+            rpc_id: s.rpc_id,
+            flags: s.flags,
+            rpc_type: RpcType::from_u8(s.rpc_type),
+            total_len: s.total_len,
+        }
+    }
+
+    /// Recycle a completed (or abandoned) slot.
+    #[inline]
+    pub fn release(&mut self, slot: usize) {
+        self.slots[slot].in_use = false;
+        self.slots[slot].frag_mask = 0;
+    }
+
+    // --- HOT PATH END (fragment reassembly) ---
+
+    /// Garbage-collect partial messages older than `max_age_ns` (a lost
+    /// tail fragment would otherwise pin its slot forever). Cold path:
+    /// the dispatch loop calls this from its idle/backoff branch.
+    pub fn sweep(&mut self, max_age_ns: u64) {
+        let now = self.now_ns();
+        for s in &mut self.slots {
+            if s.in_use && now.saturating_sub(s.born_ns) > max_age_ns {
+                s.in_use = false;
+                s.frag_mask = 0;
+                self.expired += 1;
+            }
+        }
+    }
+
+    /// Messages currently mid-reassembly (completed-but-unreleased
+    /// slots included).
     pub fn in_flight(&self) -> usize {
-        self.partial.len()
+        self.slots.iter().filter(|s| s.in_use).count()
     }
 }
 
@@ -147,26 +332,49 @@ mod tests {
     use super::*;
     use crate::sim::prop;
 
+    fn frags(rpc_type: RpcType, c_id: u32, rpc_id: u32, payload: &[u8]) -> Vec<Frame> {
+        let mut out = Vec::new();
+        fragment_into(&mut out, rpc_type, 0, c_id, rpc_id, payload).unwrap();
+        out
+    }
+
+    /// Drive a fragment train through `r`, returning the reassembled
+    /// bytes (and releasing the slot).
+    fn drain(r: &mut Reassembler, frames: &[Frame]) -> Option<Vec<u8>> {
+        for f in frames {
+            if let Push::Complete(slot) = r.push(f) {
+                let out = r.slot_bytes(slot).to_vec();
+                r.release(slot);
+                return Some(out);
+            }
+        }
+        None
+    }
+
     #[test]
-    fn small_message_one_fragment() {
-        let frames = fragment(RpcType::Request, 1, 2, 7, b"tiny").unwrap();
+    fn small_message_is_a_plain_frame() {
+        let frames = frags(RpcType::Request, 1, 2, b"tiny");
         assert_eq!(frames.len(), 1);
-        let mut r = Reassembler::new();
-        assert_eq!(r.push(&frames[0]), Some(b"tiny".to_vec()));
-        assert_eq!(r.completed, 1);
+        assert!(!frames[0].is_frag(), "single-line messages must stay unfragmented");
+        assert_eq!(frames[0].payload(), b"tiny");
+        let mut r = Reassembler::new(4);
+        assert_eq!(r.push(&frames[0]), Push::NotFragment);
+        assert_eq!(r.in_flight(), 0);
     }
 
     #[test]
     fn large_message_in_order() {
         let payload: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
-        let frames = fragment(RpcType::Request, 1, 2, 9, &payload).unwrap();
+        let frames = frags(RpcType::Request, 1, 2, &payload);
         assert_eq!(frames.len(), payload.len().div_ceil(FRAG_CAPACITY));
-        let mut r = Reassembler::new();
-        let mut out = None;
-        for f in &frames {
-            out = out.or(r.push(f));
+        for (i, f) in frames.iter().enumerate() {
+            assert!(f.is_frag());
+            assert_eq!(f.frag_index() as usize, i);
+            assert_eq!(f.frag_total_len(), payload.len());
         }
-        assert_eq!(out, Some(payload));
+        let mut r = Reassembler::new(4);
+        assert_eq!(drain(&mut r, &frames), Some(payload));
+        assert_eq!(r.completed, 1);
         assert_eq!(r.in_flight(), 0);
     }
 
@@ -174,30 +382,28 @@ mod tests {
     fn out_of_order_reassembly() {
         // Relaxed memory consistency: fragments arrive in any order.
         let payload: Vec<u8> = (0..500u32).map(|i| (i * 7) as u8).collect();
-        let mut frames = fragment(RpcType::Response, 3, 4, 11, &payload).unwrap();
+        let mut frames = frags(RpcType::Response, 3, 4, &payload);
         frames.reverse();
-        let mut r = Reassembler::new();
-        let mut out = None;
-        for f in &frames {
-            out = out.or(r.push(f));
-        }
-        assert_eq!(out, Some(payload));
+        let mut r = Reassembler::new(4);
+        assert_eq!(drain(&mut r, &frames), Some(payload));
     }
 
     #[test]
-    fn interleaved_messages_dont_mix() {
+    fn interleaved_messages_on_one_flow_dont_mix() {
+        // Two in-flight RPCs on one connection, fragments interleaved —
+        // the (c_id, rpc_id) key must keep them apart.
         let a: Vec<u8> = vec![0xAA; 200];
         let b: Vec<u8> = vec![0xBB; 200];
-        let fa = fragment(RpcType::Request, 1, 2, 1, &a).unwrap();
-        let fb = fragment(RpcType::Request, 1, 3, 2, &b).unwrap();
-        let mut r = Reassembler::new();
+        let fa = frags(RpcType::Request, 1, 2, &a);
+        let fb = frags(RpcType::Request, 1, 3, &b);
+        let mut r = Reassembler::new(4);
         let mut done = vec![];
         for (x, y) in fa.iter().zip(fb.iter()) {
-            if let Some(m) = r.push(x) {
-                done.push(m);
-            }
-            if let Some(m) = r.push(y) {
-                done.push(m);
+            for f in [x, y] {
+                if let Push::Complete(slot) = r.push(f) {
+                    done.push(r.slot_bytes(slot).to_vec());
+                    r.release(slot);
+                }
             }
         }
         assert_eq!(done.len(), 2);
@@ -208,58 +414,125 @@ mod tests {
     #[test]
     fn duplicates_ignored() {
         let payload = vec![1u8; 100];
-        let frames = fragment(RpcType::Request, 1, 2, 5, &payload).unwrap();
-        let mut r = Reassembler::new();
-        r.push(&frames[0]);
-        r.push(&frames[0]); // dup
+        let frames = frags(RpcType::Request, 1, 2, &payload);
+        let mut r = Reassembler::new(4);
+        assert_eq!(r.push(&frames[0]), Push::Incomplete);
+        assert_eq!(r.push(&frames[0]), Push::Incomplete); // dup
         assert_eq!(r.duplicate_fragments, 1);
-        let mut out = None;
-        for f in &frames[1..] {
-            out = out.or(r.push(f));
-        }
-        assert_eq!(out, Some(payload));
+        assert_eq!(drain(&mut r, &frames[1..]), Some(payload));
     }
 
     #[test]
-    fn gc_expires_stale_partials() {
-        let frames = fragment(RpcType::Request, 1, 2, 5, &vec![0u8; 500]).unwrap();
-        let mut r = Reassembler::new();
-        r.push(&frames[0]); // lose the rest
+    fn sweep_expires_lost_tail() {
+        let frames = frags(RpcType::Request, 1, 2, &vec![0u8; 500]);
+        let mut r = Reassembler::new(4);
+        r.push(&frames[0]); // lose the rest of the train
         assert_eq!(r.in_flight(), 1);
-        r.sweep(2);
-        r.sweep(2);
-        r.sweep(2);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.sweep(1_000_000); // 1 ms budget, already exceeded
         assert_eq!(r.in_flight(), 0);
         assert_eq!(r.expired, 1);
+        // A generous budget must NOT expire a live partial.
+        r.push(&frames[0]);
+        r.sweep(u64::MAX);
+        assert_eq!(r.in_flight(), 1);
     }
 
     #[test]
     fn oversize_rejected() {
-        assert!(fragment(RpcType::Request, 1, 2, 3, &vec![0; MAX_MESSAGE_BYTES + 1]).is_err());
+        let mut out = Vec::new();
+        assert!(fragment_into(
+            &mut out,
+            RpcType::Request,
+            0,
+            1,
+            2,
+            &vec![0; MAX_MESSAGE_BYTES + 1]
+        )
+        .is_err());
     }
 
     #[test]
-    fn empty_message_roundtrip() {
-        let frames = fragment(RpcType::Request, 1, 2, 3, b"").unwrap();
+    fn empty_message_is_a_plain_frame() {
+        let frames = frags(RpcType::Request, 1, 2, b"");
         assert_eq!(frames.len(), 1);
-        let mut r = Reassembler::new();
-        assert_eq!(r.push(&frames[0]), Some(vec![]));
+        assert!(!frames[0].is_frag());
+        assert_eq!(frames[0].payload_len(), 0);
+    }
+
+    #[test]
+    fn slot_exhaustion_drops_and_counts() {
+        let fa = frags(RpcType::Request, 1, 1, &vec![0xAA; 200]);
+        let fb = frags(RpcType::Request, 1, 2, &vec![0xBB; 200]);
+        let mut r = Reassembler::new(1);
+        assert_eq!(r.push(&fa[0]), Push::Incomplete); // occupies the only slot
+        assert_eq!(r.push(&fb[0]), Push::Dropped);
+        assert_eq!(r.dropped_no_slot, 1);
+        // Finishing message A frees the slot for message B.
+        assert_eq!(drain(&mut r, &fa[1..]), Some(vec![0xAA; 200]));
+        assert_eq!(drain(&mut r, &fb), Some(vec![0xBB; 200]));
+    }
+
+    #[test]
+    fn malformed_headers_dropped() {
+        let mut r = Reassembler::new(4);
+        // Index beyond the fragment count its own total implies.
+        let mut f = Frame::new(RpcType::Request, 0, 1, 2, &[0u8; 48]);
+        f.set_frag(9, 96); // 96 B = 2 fragments; index 9 is nonsense
+        assert_eq!(r.push(&f), Push::Dropped);
+        // Payload length inconsistent with (index, total).
+        let mut g = Frame::new(RpcType::Request, 0, 1, 2, &[0u8; 10]);
+        g.set_frag(0, 96); // fragment 0 of 96 B must carry 48 B
+        assert_eq!(r.push(&g), Push::Dropped);
+        assert_eq!(r.malformed, 2);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn meta_carries_the_request_header() {
+        let payload = vec![7u8; 300];
+        let frames = frags(RpcType::Request, 42, 77, &payload);
+        let mut r = Reassembler::new(4);
+        let mut meta = None;
+        for f in &frames {
+            if let Push::Complete(slot) = r.push(f) {
+                meta = Some(r.slot_meta(slot));
+                r.release(slot);
+            }
+        }
+        let m = meta.expect("message completed");
+        assert_eq!(m.c_id, 42);
+        assert_eq!(m.rpc_id, 77);
+        assert_eq!(m.rpc_type, Some(RpcType::Request));
+        assert_eq!(m.total_len, 300);
     }
 
     #[test]
     fn prop_roundtrip_any_order() {
         prop::check("reassembly-roundtrip", |rng| {
-            let len = rng.gen_range(4000) as usize;
+            let len = rng.gen_range(MAX_MESSAGE_BYTES as u32 - 49) as usize + 49;
             let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
-            let mut frames =
-                fragment(RpcType::Request, rng.next_u32(), 1, rng.next_u32() as u16, &payload)
-                    .map_err(|e| e.to_string())?;
+            let mut frames = Vec::new();
+            fragment_into(
+                &mut frames,
+                RpcType::Request,
+                0,
+                rng.next_u32(),
+                rng.next_u32(),
+                &payload,
+            )
+            .map_err(|e| e.to_string())?;
             rng.shuffle(&mut frames);
-            let mut r = Reassembler::new();
+            let mut r = Reassembler::new(2);
             let mut out = None;
             for f in &frames {
-                if let Some(m) = r.push(f) {
-                    out = Some(m);
+                match r.push(f) {
+                    Push::Complete(slot) => {
+                        out = Some(r.slot_bytes(slot).to_vec());
+                        r.release(slot);
+                    }
+                    Push::Dropped => return Err("fragment dropped".into()),
+                    _ => {}
                 }
             }
             if out.as_deref() != Some(&payload[..]) {

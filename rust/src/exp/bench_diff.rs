@@ -221,6 +221,11 @@ const KEY_COLUMNS: &[&str] = &[
     "bg_load_per_vnic_mrps",
     "load_krps",
     "size_b",
+    // fabric_wallclock's multi-cache-line ladder and core-affinity
+    // axes: payload size and pinning are grid configuration, so rows
+    // pair by (size, pinned) across runs even if the ladder grows.
+    "payload_bytes",
+    "pin_cores",
 ];
 
 /// Row identity: the non-numeric cells plus the [`KEY_COLUMNS`]

@@ -35,6 +35,7 @@
 //!   connections over 128 flows through explicit connection ids.
 
 use crate::coordinator::api::DispatchMode;
+use crate::coordinator::reassembly;
 use crate::coordinator::service::EchoService;
 use crate::exp::harness::Figure;
 use crate::exp::rpc_sim::{self, SimConfig, SimResult};
@@ -83,6 +84,12 @@ pub fn matching_sim(w: &WallConfig, opts: &RunOpts) -> SimConfig {
         server_ring_entries: 8192,
         duration_us: opts.dur(4_000),
         warmup_us: opts.warmup(500),
+        // Same cache-line count per RPC as the measured point: the
+        // wall path carries 48 payload bytes per 64 B line (16 B of
+        // header), the sim divides by the full line — so the twin maps
+        // the measured *fragment count* onto the sim's line budget
+        // rather than copying payload_bytes through.
+        payload_bytes: reassembly::frag_count(w.payload_bytes.max(1)) * 64,
         ..opts.base()
     }
 }
@@ -159,6 +166,26 @@ fn grid(opts: &RunOpts) -> Vec<(String, WallConfig)> {
         "objlevel t=2".to_string(),
         dur(WallConfig { lb: LbMode::ObjectLevel, ..WallConfig::closed(2, 2, 16) }),
     ));
+    // Multi-cache-line payload ladder (§4.7): 48 B is the one-line
+    // baseline; above it every request and response really fragments
+    // into a ⌈n/48⌉-frame train (one doorbell per train) and
+    // reassembles at both ends. The sim twins carry the same
+    // line-per-RPC count, so the model-vs-measured ratio stays a
+    // like-for-like comparison along the whole size axis.
+    for &pb in &[48usize, 192, 768, reassembly::MAX_MESSAGE_BYTES] {
+        g.push((
+            format!("payload {pb}B"),
+            dur(WallConfig { payload_bytes: pb, ..WallConfig::closed(2, 2, 8) }),
+        ));
+    }
+    // Core-affinity contrast (runtime::affinity): the "closed t=2"
+    // topology with each client driver thread pinned to its own core.
+    // Read against the unpinned "closed t=2" row — same topology, same
+    // load, only the scheduler's freedom removed.
+    g.push((
+        "pinned t=2".to_string(),
+        dur(WallConfig { pin_cores: true, ..WallConfig::closed(2, 2, 16) }),
+    ));
     g
 }
 
@@ -210,6 +237,8 @@ pub fn figure(opts: &RunOpts) -> Figure {
             "batch_size",
             "dispatch",
             "lb",
+            "payload_bytes",
+            "pin_cores",
         ],
     );
     for (label, cfg, r) in &measured {
@@ -249,6 +278,8 @@ pub fn figure(opts: &RunOpts) -> Figure {
             cfg.batch_size.into(),
             format!("{:?}", cfg.dispatch).into(),
             format!("{:?}", cfg.lb).into(),
+            cfg.payload_bytes.into(),
+            cfg.pin_cores.into(),
         ]);
     }
 
@@ -390,6 +421,56 @@ mod tests {
         assert_eq!(base.batch_size, 1);
         assert_eq!(base.dispatch, DispatchMode::Dispatch);
         assert_eq!(base.lb, LbMode::RoundRobin);
+    }
+
+    /// The measured payload ladder (§4.7) and the core-affinity
+    /// contrast row: ≥ 4 strictly-increasing sizes from the one-line
+    /// baseline past 1 KiB, a pinned row sharing the unpinned
+    /// baseline's topology, and sim twins carrying the measured
+    /// line-per-RPC count.
+    #[test]
+    fn grid_includes_payload_ladder_and_pinned_rows() {
+        let opts = RunOpts { fast: true, ..Default::default() };
+        let g = grid(&opts);
+        let ladder: Vec<usize> = g
+            .iter()
+            .filter(|(l, _)| l.starts_with("payload "))
+            .map(|(_, c)| c.payload_bytes)
+            .collect();
+        assert!(ladder.len() >= 4, "ladder needs >= 4 sizes, got {ladder:?}");
+        assert_eq!(ladder[0], 48, "the ladder starts at the one-line baseline");
+        assert!(*ladder.last().unwrap() >= 1024, "the ladder must pass 1 KiB");
+        assert!(ladder.windows(2).all(|w| w[0] < w[1]), "strictly increasing: {ladder:?}");
+        let find = |label: &str| {
+            &g.iter().find(|(l, _)| l == label).unwrap_or_else(|| panic!("missing row {label}")).1
+        };
+        let pinned = find("pinned t=2");
+        assert!(pinned.pin_cores);
+        let base = find("closed t=2");
+        assert!(!base.pin_cores, "the contrast baseline must stay unpinned");
+        assert_eq!(
+            (pinned.n_threads, pinned.n_conns, pinned.window),
+            (base.n_threads, base.n_conns, base.window),
+            "pinned row must differ from its twin only in affinity"
+        );
+        for (l, c) in g.iter().filter(|(l, _)| l.starts_with("payload ")) {
+            let sim = matching_sim(c, &opts);
+            assert_eq!(
+                sim.lines_per_rpc() as usize,
+                crate::coordinator::reassembly::frag_count(c.payload_bytes),
+                "{l}: sim twin's line count diverges from the measured train length"
+            );
+        }
+    }
+
+    /// A fragmented ladder point through the public entry point: the
+    /// echo really round-trips multi-line messages losslessly.
+    #[test]
+    fn fragmented_grid_point_measures_losslessly() {
+        let r = run(&tiny(WallConfig { payload_bytes: 192, ..WallConfig::closed(1, 2, 4) }));
+        assert!(r.completed > 0, "no multi-line completions");
+        assert_eq!(r.leaked_slots, 0);
+        assert_eq!(r.bad_responses, 0);
     }
 
     /// Batched run through the public entry point: doorbell coalescing

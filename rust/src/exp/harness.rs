@@ -574,9 +574,13 @@ pub fn run_grid(configs: Vec<SimConfig>) -> Vec<SweepPoint> {
     use std::sync::Mutex;
 
     let n = configs.len();
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
+    // Stay off cores a pinned wall-clock measurement has reserved
+    // (runtime::affinity): a sim sweep stacking onto the measured
+    // cores would perturb the very latencies being recorded.
+    let reserved = crate::runtime::affinity::reserved_cores();
+    let workers = crate::runtime::affinity::available_cores()
+        .saturating_sub(reserved)
+        .max(1)
         .min(n.max(1));
     if workers <= 1 {
         return configs

@@ -25,11 +25,12 @@ use crate::coordinator::api::{DispatchMode, RpcClient, RpcThreadedServer};
 use crate::coordinator::backoff::{Backoff, RetryPolicy};
 use crate::coordinator::fabric::Fabric;
 use crate::coordinator::frame::{Frame, RpcType, MAX_PAYLOAD_BYTES};
+use crate::coordinator::reassembly::{self, Push, Reassembler};
 use crate::coordinator::rings::{BatchProducer, SlotPool};
 use crate::coordinator::service::{AdmissionPolicy, RpcService};
 use crate::nic::load_balancer::LbMode;
 use crate::nic::soft_config::{Reg, SoftConfig};
-use crate::runtime::EngineSpec;
+use crate::runtime::{affinity, EngineSpec};
 use crate::sim::Histogram;
 use crate::telemetry::{self, MetricsSnapshot, Sampler, Stage, TraceSink};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -55,9 +56,13 @@ pub struct WallConfig {
     pub window: u32,
     /// Total offered load in Mrps; 0 selects closed-loop mode.
     pub open_rate_mrps: f64,
-    /// RPC payload bytes — with [`Stamp::Head`], the whole payload
-    /// (≥ the 12-byte stamp, ≤ 48); with [`Stamp::Tail`] frames are
-    /// always a full cache line and this field is ignored.
+    /// RPC payload bytes — with [`Stamp::Head`], the whole logical
+    /// message (≥ the 12-byte stamp). Above one cache line (48 B) the
+    /// driver fragments the message into a ⌈n/48⌉-frame train sent
+    /// under a single doorbell (§4.7), up to
+    /// [`reassembly::MAX_MESSAGE_BYTES`]; the echo path reassembles at
+    /// both ends. With [`Stamp::Tail`] frames are always exactly one
+    /// cache line and this field is ignored.
     pub payload_bytes: usize,
     /// Server-side request load balancer.
     pub lb: LbMode,
@@ -105,6 +110,13 @@ pub struct WallConfig {
     /// requests inline on the dispatch threads; `Worker` hands them to
     /// a worker pool over a thread-crossing queue.
     pub dispatch: DispatchMode,
+    /// Pin each client driver thread to its own core
+    /// ([`crate::runtime::affinity`]) — the paper's measured
+    /// configuration, where request-issuing threads own their cores
+    /// for the whole run. The cores are reserved process-wide so a
+    /// concurrent sim sweep (`exp::harness`) stays off them; non-Linux
+    /// builds run unpinned (the artifact row still records the ask).
+    pub pin_cores: bool,
 }
 
 impl WallConfig {
@@ -131,6 +143,7 @@ impl WallConfig {
             trace_every: 0,
             batch_size: 1,
             dispatch: DispatchMode::Dispatch,
+            pin_cores: false,
         }
     }
 
@@ -289,6 +302,15 @@ pub trait WallWorkload: Send {
         let _ = resp;
         true
     }
+
+    /// Inspect a harvested *multi-cache-line* response after
+    /// reassembly — the fragmented analogue of [`observe`](Self::observe).
+    /// The slice is the whole logical message, stamp bytes included.
+    /// Return `false` to count it in [`WallResult::bad_responses`].
+    fn observe_bytes(&mut self, resp: &[u8]) -> bool {
+        let _ = resp;
+        true
+    }
 }
 
 /// Fixed-size all-zero payloads on one method: the echo benchmark's
@@ -302,6 +324,14 @@ impl WallWorkload for EchoWorkload {
     fn fill(&mut self, payload: &mut Vec<u8>) -> u8 {
         payload.resize(self.payload_bytes, 0);
         self.method
+    }
+
+    /// Reassembled echo integrity: same length back, and zeros
+    /// everywhere the stamp did not overwrite — a dropped, duplicated,
+    /// or misordered fragment cannot pass this.
+    fn observe_bytes(&mut self, resp: &[u8]) -> bool {
+        resp.len() == self.payload_bytes
+            && resp[Frame::BENCH_STAMP_BYTES.min(resp.len())..].iter().all(|&b| b == 0)
     }
 }
 
@@ -341,6 +371,10 @@ pub struct FlowDriver {
     /// Trace id in flight per slot (0 = the slot's request is
     /// untraced) — how the harvest finds the trace to close.
     slot_traces: Vec<u32>,
+    /// Multi-cache-line response collector: fragmented responses
+    /// reassemble here (arena-backed, no per-message allocation)
+    /// before the harvest sees them as one message.
+    frag: Reassembler,
 }
 
 impl FlowDriver {
@@ -370,6 +404,7 @@ impl FlowDriver {
             retry_q: Vec::new(),
             tracer: None,
             slot_traces: vec![0; cap],
+            frag: Reassembler::new(cap),
         }
     }
 
@@ -458,25 +493,35 @@ fn per_flow_capacity(cfg: &WallConfig) -> Vec<usize> {
         .collect()
 }
 
+/// Cache lines per logical message at the configured payload size: 1
+/// for single-line payloads, ⌈payload/48⌉ once the driver fragments.
+/// Ring sizing must scale by this — an in-flight *message* occupies a
+/// whole train of ring slots, and a dropped fragment strands its slot.
+fn frames_per_message(cfg: &WallConfig) -> usize {
+    reassembly::frag_count(cfg.payload_bytes.max(1))
+}
+
 /// Client-endpoint ring depth that keeps the configured windows
-/// lossless: each flow's ring holds the flow's whole window with
-/// margin.
+/// lossless: each flow's ring holds the flow's whole window — in
+/// frames, not messages — with margin.
 pub fn client_ring_entries(cfg: &WallConfig) -> usize {
     per_flow_capacity(cfg)
         .iter()
         .copied()
         .max()
         .unwrap_or(1)
+        .saturating_mul(frames_per_message(cfg))
         .saturating_mul(2)
         .next_power_of_two()
         .max(64)
 }
 
-/// Server-endpoint ring depth: the total outstanding load spread over
-/// the serving flows, with margin (residual drops are reported, not
-/// hidden — see [`WallResult::fabric_rx_drops`]).
+/// Server-endpoint ring depth: the total outstanding load (in frames)
+/// spread over the serving flows, with margin (residual drops are
+/// reported, not hidden — see [`WallResult::fabric_rx_drops`]).
 pub fn server_ring_entries(cfg: &WallConfig) -> usize {
-    ((cfg.total_outstanding() as usize / cfg.server_flows.max(1) as usize)
+    ((cfg.total_outstanding() as usize * frames_per_message(cfg)
+        / cfg.server_flows.max(1) as usize)
         .max(1)
         .saturating_mul(4))
     .next_power_of_two()
@@ -548,8 +593,9 @@ pub fn run_pair(
     assert!(cfg.n_threads >= 1 && cfg.n_threads <= flows);
     if stamp == Stamp::Head {
         assert!(
-            cfg.payload_bytes >= Frame::BENCH_STAMP_BYTES && cfg.payload_bytes <= MAX_PAYLOAD_BYTES,
-            "payload must hold the 12-byte stamp and fit one cache line"
+            cfg.payload_bytes >= Frame::BENCH_STAMP_BYTES
+                && cfg.payload_bytes <= reassembly::MAX_MESSAGE_BYTES,
+            "payload must hold the 12-byte stamp and fit the reassembly budget"
         );
     }
 
@@ -641,9 +687,20 @@ pub fn run_measurement(
         slo_ns: (cfg.slo_us * 1000.0).max(0.0) as u64,
         retry: cfg.retry,
     };
+    // Core affinity: each client driver thread pins to its own core
+    // from a sweep-aware layout, and the claim is registered
+    // process-wide (RAII — released when this run returns, panic
+    // included) so concurrent sim sweeps shrink their pools instead of
+    // stacking onto the measured cores. Server dispatch and fabric
+    // threads stay unpinned: they are the reproduction's "FPGA side",
+    // accounted separately from the request-issuing cores.
+    let mut layout = cfg.pin_cores.then(affinity::CoreLayout::new);
+    let _reservation =
+        cfg.pin_cores.then(|| affinity::Reservation::claim(cfg.n_threads as usize));
     let mut client_joins = Vec::new();
     for (t, mine) in per_thread_flows.into_iter().enumerate() {
         debug_assert!(!mine.is_empty(), "n_threads <= flows guarantees work per thread");
+        let pin_core = layout.as_mut().map(|l| l.next_core());
         let ctl = controls.clone();
         let pace = if cfg.open_rate_mrps > 0.0 {
             // Each thread paces its share of the total rate.
@@ -658,7 +715,15 @@ pub fn run_measurement(
         client_joins.push(
             std::thread::Builder::new()
                 .name(format!("dagger-bench-{t}"))
-                .spawn(move || drive(mine, stamp, pace, opts, &ctl))
+                .spawn(move || {
+                    if let Some(core) = pin_core {
+                        // Best-effort: a cpuset that lacks the core
+                        // leaves the thread floating, reported by the
+                        // bench row's pin_cores column semantics.
+                        affinity::pin_current_thread(core);
+                    }
+                    drive(mine, stamp, pace, opts, &ctl)
+                })
                 .expect("spawn bench client"),
         );
     }
@@ -813,11 +878,37 @@ fn drive(
         // late-swept responses tens of µs early and skew the quantiles
         // low exactly at the connection-scale points.
         for d in flows.iter_mut() {
-            let FlowDriver { client, pool, workload, attempts, retry_q, tracer, slot_traces, .. } =
-                d;
+            let FlowDriver {
+                client, pool, workload, attempts, retry_q, tracer, slot_traces, frag, ..
+            } = d;
             let rejected_ctr = &client.rejected_count;
             let now_ns = ctl.epoch.elapsed().as_nanos() as u64;
             let n = client.poll_completions_with(|fr| {
+                // Multi-cache-line response: collect the train. The
+                // stamp rides the reassembled message's first 12 bytes
+                // (ts 0..8, slot tag 8..12 — fragment 0's words 4-6),
+                // so RTT and slot accounting happen on message
+                // completion, exactly once per logical RPC.
+                if fr.is_frag() {
+                    if let Push::Complete(si) = frag.push(fr) {
+                        let bytes = frag.slot_bytes(si);
+                        let ts = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+                        let tag = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+                        pool.free(tag);
+                        let ok = workload.observe_bytes(bytes);
+                        if in_measure {
+                            tally.completed += 1;
+                            tally.bad_responses += u64::from(!ok);
+                            let rtt = now_ns.saturating_sub(ts).max(1);
+                            tally.hist.record(rtt);
+                            if ok && (opts.slo_ns == 0 || rtt <= opts.slo_ns) {
+                                tally.slo_good += 1;
+                            }
+                        }
+                        frag.release(si);
+                    }
+                    return;
+                }
                 let tag = stamp.tag(fr);
                 pool.free(tag);
                 // An admission reject frees the slot like any response,
@@ -1070,6 +1161,12 @@ fn send_once(
             d.buf.resize(MAX_PAYLOAD_BYTES, 0);
         }
     }
+    // Multi-cache-line request (Stamp::Head only — Tail pads to
+    // exactly one line above): stage the whole fragment train under a
+    // single doorbell.
+    if d.buf.len() > MAX_PAYLOAD_BYTES {
+        return send_fragment_train(d, stamp, ctl, in_measure, tally, slot, method, c_id);
+    }
     let mut frame = Frame::new(
         RpcType::Request,
         method,
@@ -1107,6 +1204,61 @@ fn send_once(
             SendOutcome::RingFull
         }
     }
+}
+
+/// Stage one multi-cache-line request as an atomic fragment train:
+/// `free_slots` precheck, `stage` every fragment, then one `publish`
+/// — §4.7's single doorbell per logical message. All-or-nothing: on a
+/// full ring nothing is published (staged-but-unpublished frames are
+/// simply overwritten later), the slot returns to the pool, and the
+/// attempt counts as backpressure. Fragmented requests run untraced —
+/// word 12 of a fragment carries message bytes, not a trace id.
+fn send_fragment_train(
+    d: &mut FlowDriver,
+    stamp: Stamp,
+    ctl: &Controls,
+    in_measure: bool,
+    tally: &mut Tally,
+    slot: u32,
+    method: u8,
+    c_id: u32,
+) -> SendOutcome {
+    debug_assert_eq!(stamp, Stamp::Head, "fragmented payloads use the head stamp");
+    debug_assert!(d.buf.len() <= reassembly::MAX_MESSAGE_BYTES);
+    // The train needs contiguous staging slots: publish whatever the
+    // coalescing producer is still holding first.
+    d.tx.flush();
+    let ring = &d.client.rings.tx;
+    let n = reassembly::frag_count(d.buf.len());
+    let rpc_id = d.client.next_rpc_id();
+    let mut ok = ring.free_slots() >= n;
+    if ok {
+        for i in 0..n {
+            let mut f =
+                reassembly::frag_frame(RpcType::Request, method, c_id, rpc_id, &d.buf, i);
+            if i == 0 {
+                // The stamp rides the message's first 12 bytes —
+                // fragment 0's words 4-6, exactly where a single-line
+                // head stamp would sit.
+                stamp.write(&mut f, ctl.epoch.elapsed().as_nanos() as u64, slot);
+            }
+            if ring.stage(i, f).is_err() {
+                ok = false;
+                break;
+            }
+        }
+    }
+    d.slot_traces[slot as usize] = 0;
+    if !ok {
+        d.client.send_failures.fetch_add(1, Ordering::Relaxed);
+        d.pool.free(slot);
+        tally.backpressure += u64::from(in_measure);
+        return SendOutcome::RingFull;
+    }
+    ring.publish(n);
+    d.client.sent.fetch_add(1, Ordering::Relaxed);
+    tally.sent += u64::from(in_measure);
+    SendOutcome::Sent
 }
 
 #[cfg(test)]
@@ -1304,6 +1456,41 @@ mod tests {
         cfg.dispatch = DispatchMode::Worker;
         let r = echo_pair(&cfg, Stamp::Head);
         assert!(r.completed > 0, "worker mode: nothing measured");
+        assert_eq!(r.leaked_slots, 0);
+        assert_eq!(r.bad_responses, 0);
+    }
+
+    /// Multi-cache-line echo (§4.7): payloads above one cache line
+    /// fragment on send (one doorbell per train), reassemble at both
+    /// ends, and still measure with a lossless drain and byte-exact
+    /// echoes — across a just-fragmented, a mid-ladder, and the
+    /// full-budget payload size.
+    #[test]
+    fn fragmented_payloads_measure_round_trips() {
+        for pb in [49usize, 192, reassembly::MAX_MESSAGE_BYTES] {
+            let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+            cfg.payload_bytes = pb;
+            let r = echo_pair(&cfg, Stamp::Head);
+            assert!(r.completed > 0, "payload {pb}: nothing measured");
+            assert_eq!(r.leaked_slots, 0, "payload {pb}: fragment loss stranded slots");
+            assert_eq!(r.bad_responses, 0, "payload {pb}: reassembled echo corrupted");
+            assert_eq!(
+                r.snapshot.get("server.oversize_responses"),
+                0,
+                "payload {pb}: a response was truncated instead of fragmented"
+            );
+        }
+    }
+
+    /// Pinned run: the measurement completes under core affinity (or
+    /// gracefully unpinned where affinity is unavailable) and drains
+    /// losslessly — pinning must not change correctness, only jitter.
+    #[test]
+    fn pinned_run_measures_round_trips() {
+        let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+        cfg.pin_cores = true;
+        let r = echo_pair(&cfg, Stamp::Head);
+        assert!(r.completed > 0, "pinned: nothing measured");
         assert_eq!(r.leaked_slots, 0);
         assert_eq!(r.bad_responses, 0);
     }

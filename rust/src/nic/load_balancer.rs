@@ -16,7 +16,7 @@
 //! (python/compile/kernels/steering.py); LB_* discriminants must match
 //! ref.py.
 
-use crate::coordinator::frame::Frame;
+use crate::coordinator::frame::{fmix32, Frame};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u32)]
@@ -62,6 +62,16 @@ pub fn steer(frame: &Frame, mode: LbMode, n_flows: u32) -> u32 {
     match mode {
         LbMode::RoundRobin => frame.rpc_id() % n,
         LbMode::Static => frame.c_id() % n,
+        // Object-level steering hashes the payload key words — but a
+        // fragment's payload words carry a *slice* of the message, so
+        // hashing them would scatter one RPC's fragments across flows
+        // and reassembly could never complete. Fragments steer by a
+        // fragment-invariant header hash instead: every fragment of one
+        // RPC shares (c_id, rpc_id), so all land on one flow. Mirrored
+        // bit-for-bit in kernels/steering.py and kernels/ref.py.
+        LbMode::ObjectLevel if frame.is_frag() => {
+            fmix32(frame.c_id() ^ frame.rpc_id().rotate_left(16)) % n
+        }
         LbMode::ObjectLevel => frame.key_hash() % n,
     }
 }
@@ -119,6 +129,36 @@ mod tests {
             .map(|i| steer(&frame(1, 10, format!("user:{i}").as_bytes()), LbMode::ObjectLevel, 8))
             .collect();
         assert!(distinct.len() > 1);
+    }
+
+    /// All fragments of one RPC must land on one flow under every mode
+    /// — otherwise the per-(c_id, rpc_id) reassembler on one dispatch
+    /// thread never sees the complete message. RoundRobin (rpc_id) and
+    /// Static (c_id) are invariant by construction; ObjectLevel must
+    /// switch off the payload hash (each fragment carries different
+    /// payload words) onto the fragment-invariant header hash.
+    #[test]
+    fn fragments_of_one_rpc_steer_to_one_flow() {
+        for mode in [LbMode::RoundRobin, LbMode::Static, LbMode::ObjectLevel] {
+            let flows: std::collections::HashSet<u32> = (0..8u8)
+                .map(|i| {
+                    // Each fragment carries a *different* payload slice.
+                    let mut f = frame(5, 1234, &[i.wrapping_mul(37); 48]);
+                    f.set_frag(i, 8 * 48);
+                    steer(&f, mode, 8)
+                })
+                .collect();
+            assert_eq!(flows.len(), 1, "{mode:?} scattered fragments: {flows:?}");
+        }
+        // Distinct RPCs still spread across flows under ObjectLevel.
+        let distinct: std::collections::HashSet<u32> = (0..64u32)
+            .map(|r| {
+                let mut f = frame(5, r, &[1; 48]);
+                f.set_frag(0, 96);
+                steer(&f, LbMode::ObjectLevel, 8)
+            })
+            .collect();
+        assert!(distinct.len() > 2, "fragment steering collapsed: {distinct:?}");
     }
 
     #[test]

@@ -66,7 +66,9 @@ pub fn deserialize(frames: &[Frame]) -> Vec<Vec<u32>> {
     let b = frames.len();
     let mut lanes = vec![vec![0u32; b]; WORDS_PER_FRAME];
     for (j, f) in frames.iter().enumerate() {
-        let plen = f.words[3];
+        // Low byte only — the high bits of word 3 are the §4.7
+        // fragmentation header (kernels/serdes.py masks identically).
+        let plen = f.words[3] & 0xFF;
         let payload_words = plen.div_ceil(4);
         for (i, lane) in lanes.iter_mut().enumerate() {
             let keep = i < 4 || (i as u32) < 4 + payload_words;

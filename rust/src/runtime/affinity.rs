@@ -1,0 +1,244 @@
+//! Core-affinity runtime for the measured wall-clock path.
+//!
+//! The paper's closed-loop numbers (§6) come from threads that own a
+//! core: the FPGA polls dedicated cache lines and the software side
+//! pins its RPC threads so the request path never migrates between
+//! cores mid-measurement. Unpinned, the scheduler is free to bounce a
+//! client thread across sockets between the TSC-stamped send and the
+//! harvest, which both inflates tail latency and de-warms the rings'
+//! cache lines.
+//!
+//! Three pieces live here:
+//!
+//!  * [`pin_current_thread`] — a raw `sched_setaffinity(2)` binding on
+//!    Linux (no libc crate: the build is offline, so the symbol is
+//!    declared directly; it resolves from the platform C runtime every
+//!    Rust binary already links). On non-Linux targets it is a
+//!    graceful no-op that reports `false` so callers can record the
+//!    layout as unpinned instead of silently lying in artifacts.
+//!  * [`CoreLayout`] — a sweep-aware planner that deals distinct cores
+//!    to the measured roles (client, server, fabric pump) and wraps
+//!    honestly when the machine has fewer cores than threads,
+//!    reporting [`CoreLayout::oversubscribed`] so the bench artifact
+//!    can flag the row.
+//!  * [`reserve_cores`] / [`reserved_cores`] — a process-wide ledger
+//!    the experiment harness consults when sizing its worker pool, so
+//!    simulation sweeps scheduled alongside a pinned wall-clock run
+//!    do not stack onto the cores the measurement owns.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cores the wall-clock path has claimed; the harness subtracts this
+/// from its worker-pool size (clamped to >= 1). A plain counter, not a
+/// core *set*: the harness only needs "how many cores are spoken for".
+static RESERVED: AtomicUsize = AtomicUsize::new(0);
+
+/// Claim `n` cores for pinned measurement threads. Returns a guard
+/// value (the previous total) callers can ignore; pair with
+/// [`release_cores`] when the measurement ends.
+pub fn reserve_cores(n: usize) -> usize {
+    RESERVED.fetch_add(n, Ordering::Relaxed)
+}
+
+/// Release `n` previously reserved cores (saturating at zero).
+pub fn release_cores(n: usize) {
+    let mut cur = RESERVED.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_sub(n);
+        match RESERVED.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// How many cores pinned measurements currently own.
+pub fn reserved_cores() -> usize {
+    RESERVED.load(Ordering::Relaxed)
+}
+
+/// Best-effort core count of the machine (>= 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    /// Mirrors glibc's `cpu_set_t`: 1024 bits. `#[repr(C)]` so the
+    /// pointer we hand the kernel has the layout it expects.
+    #[repr(C)]
+    pub struct CpuSet {
+        pub bits: [u64; 16],
+    }
+
+    extern "C" {
+        /// `pid == 0` targets the calling thread (Linux semantics:
+        /// affinity is per-thread, and 0 means "me").
+        pub fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const CpuSet,
+        ) -> i32;
+    }
+}
+
+/// Pin the calling thread to `core`. Returns `true` iff the kernel
+/// accepted the mask; callers record the result in bench artifacts
+/// rather than treating failure as fatal (a container cpuset may
+/// simply not contain the requested core).
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(core: usize) -> bool {
+    let mut set = sys::CpuSet { bits: [0u64; 16] };
+    if core >= 16 * 64 {
+        return false;
+    }
+    set.bits[core / 64] = 1u64 << (core % 64);
+    // SAFETY: `set` is a valid, initialized cpu_set_t-layout value and
+    // outlives the call; sched_setaffinity only reads the mask.
+    let rc = unsafe {
+        sys::sched_setaffinity(0, std::mem::size_of::<sys::CpuSet>(), &set)
+    };
+    rc == 0
+}
+
+/// Non-Linux: affinity is not portable; report unpinned honestly.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_core: usize) -> bool {
+    false
+}
+
+/// Sweep-aware core dealer for one measured run.
+///
+/// Roles draw cores in spawn order (client threads first, then server,
+/// then fabric pumps — the order `wall_driver::run_measurement` spawns
+/// them) so each measured thread lands on its own core when the
+/// machine is wide enough. When it is not, assignment wraps and
+/// [`oversubscribed`](CoreLayout::oversubscribed) turns true so the
+/// artifact row can carry the caveat instead of presenting a
+/// contended layout as a pinned one.
+#[derive(Debug)]
+pub struct CoreLayout {
+    n_cores: usize,
+    dealt: usize,
+}
+
+impl CoreLayout {
+    /// Plan over the whole machine.
+    pub fn new() -> CoreLayout {
+        CoreLayout::with_cores(available_cores())
+    }
+
+    /// Plan over an explicit core count (tests, or a sub-partition).
+    pub fn with_cores(n_cores: usize) -> CoreLayout {
+        CoreLayout { n_cores: n_cores.max(1), dealt: 0 }
+    }
+
+    /// Deal the next core id (round-robin past the end).
+    pub fn next_core(&mut self) -> usize {
+        let c = self.dealt % self.n_cores;
+        self.dealt += 1;
+        c
+    }
+
+    /// Deal `n` cores at once (one per thread of a role).
+    pub fn take(&mut self, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.next_core()).collect()
+    }
+
+    /// How many cores this layout has dealt so far.
+    pub fn dealt(&self) -> usize {
+        self.dealt
+    }
+
+    /// True once more threads were dealt than the machine has cores —
+    /// the "pinned" label no longer means "isolated".
+    pub fn oversubscribed(&self) -> bool {
+        self.dealt > self.n_cores
+    }
+}
+
+impl Default for CoreLayout {
+    fn default() -> Self {
+        CoreLayout::new()
+    }
+}
+
+/// RAII reservation: reserves on construction, releases on drop. Used
+/// by the wall-clock driver so a panicking measurement cannot leak its
+/// claim and permanently shrink the harness worker pool.
+pub struct Reservation {
+    n: usize,
+}
+
+impl Reservation {
+    pub fn claim(n: usize) -> Reservation {
+        reserve_cores(n);
+        Reservation { n }
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        release_cores(self.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_deals_distinct_cores_until_wrap() {
+        let mut l = CoreLayout::with_cores(4);
+        assert_eq!(l.take(4), vec![0, 1, 2, 3]);
+        assert!(!l.oversubscribed());
+        assert_eq!(l.next_core(), 0, "wraps past the end");
+        assert!(l.oversubscribed());
+    }
+
+    #[test]
+    fn layout_survives_zero_cores() {
+        let mut l = CoreLayout::with_cores(0);
+        assert_eq!(l.next_core(), 0);
+    }
+
+    #[test]
+    fn reservation_is_scoped() {
+        let before = reserved_cores();
+        {
+            let _r = Reservation::claim(3);
+            assert_eq!(reserved_cores(), before + 3);
+        }
+        assert_eq!(reserved_cores(), before);
+    }
+
+    #[test]
+    fn release_saturates() {
+        let before = reserved_cores();
+        release_cores(before + 100);
+        assert_eq!(reserved_cores(), 0);
+        // restore for other tests sharing the process
+        reserve_cores(before);
+    }
+
+    #[test]
+    fn pin_current_thread_is_safe_to_call() {
+        // On Linux this should succeed for core 0 of the cpuset in
+        // nearly every environment; elsewhere it must be a quiet no-op.
+        // Either way it must not crash, and out-of-range cores fail.
+        let _ = pin_current_thread(0);
+        assert!(!pin_current_thread(16 * 64 + 1));
+    }
+
+    #[test]
+    fn available_cores_is_positive() {
+        assert!(available_cores() >= 1);
+    }
+}

@@ -23,6 +23,8 @@
 //! `apps::serve`, `coordinator::fabric`) transparently falls back to
 //! the bit-identical native datapath in `nic::rpc_unit`.
 
+pub mod affinity;
+
 use std::path::{Path, PathBuf};
 
 /// Batch sizes emitted by aot.py (keep in sync with BATCH_SIZES there).

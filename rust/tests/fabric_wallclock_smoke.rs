@@ -114,6 +114,43 @@ fn fast_run_emits_measured_and_simulated_series() {
     // per-row loop above already checked throughput > 0 and zero leaks
     // for every row, these included).
 
+    // -------------------------- payload ladder / core-affinity rows
+    // The multi-cache-line axes (§4.7 + affinity): a measured payload
+    // ladder of ≥ 4 sizes from the one-line 48 B baseline past 1 KiB
+    // (each ladder row really fragments: loss/corruption would have
+    // tripped the per-row leak and throughput checks above), plus one
+    // pinned row with an unpinned twin at the same topology.
+    let (pb_c, pin_c, point_c) = (col("payload_bytes"), col("pin_cores"), col("point"));
+    let yes = |v: &Value| -> bool {
+        match v {
+            Value::Bool(b) => *b,
+            other => panic!("expected a bool, got {other:?}"),
+        }
+    };
+    let ladder: Vec<u64> = measured
+        .rows
+        .iter()
+        .filter(|r| text(&r[point_c]).starts_with("payload "))
+        .map(|r| num(&r[pb_c]) as u64)
+        .collect();
+    assert!(ladder.len() >= 4, "payload ladder too short: {ladder:?}");
+    assert!(ladder.contains(&48), "ladder lost its one-line baseline: {ladder:?}");
+    assert!(
+        ladder.iter().any(|&s| s >= 1024),
+        "ladder never crosses 1 KiB: {ladder:?}"
+    );
+    let pinned: Vec<&Vec<Value>> =
+        measured.rows.iter().filter(|r| yes(&r[pin_c])).collect();
+    assert_eq!(pinned.len(), 1, "expected exactly one pinned contrast row");
+    let pinned = pinned[0];
+    assert!(
+        measured.rows.iter().any(|r| !yes(&r[pin_c])
+            && num(&r[threads_c]) == num(&pinned[threads_c])
+            && num(&r[conns_c]) == num(&pinned[conns_c])
+            && num(&r[pb_c]) == num(&pinned[pb_c])),
+        "pinned row has no unpinned twin at the same topology"
+    );
+
     // Throughput-vs-threads anchor: adding driver threads must not
     // collapse the fabric. Wall-clock runs on arbitrary (possibly
     // single-core CI) hosts are noisy, so this is a floor, not a

@@ -1,0 +1,96 @@
+//! End-to-end multi-cache-line RPCs over the *real* fabric (§4.7):
+//! fragmented echo through `wall_driver::run_pair` — real client
+//! threads, the loop-back fabric thread, threaded server dispatch —
+//! must measure round trips with byte-exact reassembly and zero
+//! integrity-counter noise. The unit suites prove the reassembler and
+//! the send/harvest paths in isolation; this target proves the whole
+//! measured pipeline carries trains across thread boundaries without
+//! losing, mixing, or truncating a message.
+
+use dagger::coordinator::api::DispatchMode;
+use dagger::coordinator::reassembly::MAX_MESSAGE_BYTES;
+use dagger::coordinator::service::EchoService;
+use dagger::exp::fabric_bench;
+use dagger::exp::wall_driver::{self, EchoWorkload, Stamp, WallConfig};
+use dagger::nic::load_balancer::LbMode;
+use std::time::Duration;
+
+fn tiny(mut cfg: WallConfig) -> WallConfig {
+    cfg.warmup = Duration::from_millis(10);
+    cfg.measure = Duration::from_millis(60);
+    cfg
+}
+
+fn echo_pair(cfg: &WallConfig) -> wall_driver::WallResult {
+    wall_driver::run_pair(
+        cfg,
+        Stamp::Head,
+        &mut |_| Box::new(EchoService),
+        &mut |_| Box::new(EchoWorkload { method: 1, payload_bytes: cfg.payload_bytes }),
+    )
+}
+
+/// Every integrity counter the fragmented path can trip must read
+/// zero, and throughput must be real.
+fn assert_clean(r: &wall_driver::WallResult, label: &str) {
+    assert!(r.completed > 0, "{label}: nothing measured");
+    assert!(r.achieved_mrps > 0.0, "{label}");
+    assert_eq!(r.bad_responses, 0, "{label}: reassembled echo corrupted");
+    assert_eq!(r.leaked_slots, 0, "{label}: fragment loss stranded slots");
+    assert_eq!(
+        r.snapshot.get("server.oversize_responses"),
+        0,
+        "{label}: a multi-line response was truncated instead of fragmented"
+    );
+    assert_eq!(
+        r.snapshot.get("client.strays"),
+        0,
+        "{label}: a response was misrouted to the wrong flow"
+    );
+}
+
+/// The measured payload ladder, 2-fragment to full-budget trains,
+/// through the default dispatch topology.
+#[test]
+fn fragmented_echo_round_trips_over_the_real_fabric() {
+    for pb in [96usize, 480, MAX_MESSAGE_BYTES] {
+        let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+        cfg.payload_bytes = pb;
+        let r = echo_pair(&cfg);
+        assert_clean(&r, &format!("payload {pb}B"));
+    }
+}
+
+/// Object-level steering with fragmented traffic: all fragments of one
+/// RPC must steer to one flow (the fragment-invariant header hash), or
+/// the per-flow reassemblers would never complete a message.
+#[test]
+fn fragments_survive_object_level_steering() {
+    let mut cfg = tiny(WallConfig::closed(2, 4, 4));
+    cfg.payload_bytes = 192;
+    cfg.lb = LbMode::ObjectLevel;
+    cfg.server_flows = 4;
+    let r = echo_pair(&cfg);
+    assert_clean(&r, "objlevel fragmented");
+}
+
+/// Worker dispatch mode: reassembled requests cross the dispatch →
+/// worker queue as whole messages and fragment back on the way out.
+#[test]
+fn fragments_survive_worker_dispatch() {
+    let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+    cfg.payload_bytes = 240;
+    cfg.dispatch = DispatchMode::Worker;
+    let r = echo_pair(&cfg);
+    assert_clean(&r, "worker fragmented");
+}
+
+/// The bench entry point (`fabric_bench::run`) carries the ladder
+/// config through unchanged — what the CI smoke artifact exercises.
+#[test]
+fn bench_entry_point_measures_fragmented_payloads() {
+    let mut cfg = tiny(WallConfig::closed(1, 2, 4));
+    cfg.payload_bytes = 192;
+    let r = fabric_bench::run(&cfg);
+    assert_clean(&r, "fabric_bench 192B");
+}
