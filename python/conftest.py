@@ -1,4 +1,7 @@
 import os
 import sys
 
-sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, _HERE)
+# tools/ holds dagger_lint, exercised by python/tests/test_dagger_lint.py.
+sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "tools"))

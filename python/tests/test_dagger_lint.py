@@ -1,0 +1,459 @@
+"""Tests for tools/dagger_lint.py — the toolchain-free invariant prover.
+
+Strategy: build a minimal synthetic repo tree that satisfies every rule
+family (including decoys: allocating constructs in comments/strings,
+annotated allocations, annotated Relaxed orderings), assert it passes
+clean, then apply one known-bad mutation per fixture case and assert it
+trips exactly the intended rule. Finally the real repo tree must pass
+`--all` — the same gate CI runs.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import dagger_lint  # via conftest sys.path entry for tools/
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+LINT = os.path.join(REPO_ROOT, "tools", "dagger_lint.py")
+
+
+# ------------------------------------------------------------ fixture
+
+FRAME_RS = """\
+pub const WORDS_PER_FRAME: usize = 16;
+pub const FRAME_BYTES: usize = 64;
+
+pub struct Frame {
+    words: [u32; WORDS_PER_FRAME],
+}
+
+impl Frame {
+    pub const PAYLOAD_WORDS: usize = 12;
+    pub const MAX_PAYLOAD_BYTES: usize = 48;
+    pub const KEY_WORDS: usize = 8;
+    pub const BENCH_STAMP_BYTES: usize = 12;
+    pub const TAIL_STAMP_OFFSET: usize = 36;
+    pub const TRACE_WORD: usize = 12;
+    pub const TRACE_STAMP_OFFSET: usize = 32;
+    pub const TRACE_STAMP_BYTES: usize = 4;
+    pub const TRACE_FLAG: u32 = 0x8000_0000;
+    pub const FRAG_FLAG: u32 = 1 << 31;
+    pub const FRAG_INDEX_SHIFT: u32 = 8;
+    pub const FRAG_TOTAL_SHIFT: u32 = 16;
+    pub const FRAG_TOTAL_MASK: u32 = 0x3FFF;
+
+    pub fn set_frag(&mut self, total_len: u32, idx: u32, len: u32) {
+        self.words[3] = Self::FRAG_FLAG
+            | (total_len << Self::FRAG_TOTAL_SHIFT)
+            | (idx << Self::FRAG_INDEX_SHIFT)
+            | len;
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum RpcType {
+    Request = 1,
+    Response = 2,
+    Connect = 3,
+    Reject = 4,
+}
+
+impl RpcType {
+    pub fn from_u8(v: u8) -> Option<RpcType> {
+        match v {
+            1 => Some(RpcType::Request),
+            2 => Some(RpcType::Response),
+            3 => Some(RpcType::Connect),
+            4 => Some(RpcType::Reject),
+            _ => None,
+        }
+    }
+
+    pub fn is_response_direction(self) -> bool {
+        matches!(self, RpcType::Response | RpcType::Reject)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reject_status_never_collides_with_stamp_bytes() {}
+    #[test]
+    fn trace_word_is_outside_key_hash_and_stamps() {}
+    #[test]
+    fn frag_header_is_outside_payload_words() {}
+}
+"""
+
+RINGS_RS = """\
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Ring {
+    head: AtomicUsize,
+    tail: AtomicUsize,
+}
+
+// SAFETY: single-producer/single-consumer discipline serializes every
+// slot access around the Acquire/Release index protocol.
+unsafe impl Send for Ring {}
+// SAFETY: same SPSC argument as Send.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    // --- HOT PATH BEGIN ---
+    pub fn push(&self) {
+        // Decoy: Vec::new() in a comment must not trip the lint.
+        let s = "decoy: Vec::new() and format! in a string literal";
+        // lint: allow(relaxed, tail is producer-owned)
+        let t = self.tail.load(Ordering::Relaxed);
+        // SAFETY: slot at t is unpublished; this thread is its only accessor.
+        unsafe { core::hint::unreachable_unchecked() };
+        self.tail.store(t + 1, Ordering::Release);
+        let _ = s;
+    }
+    // --- HOT PATH END ---
+}
+"""
+
+API_RS = """\
+pub struct Loop {
+    sink: std::sync::Arc<u32>,
+}
+
+impl Loop {
+    // --- HOT PATH BEGIN ---
+    pub fn dispatch(&self) -> u32 {
+        // lint: allow(alloc, Arc refcount bump on the shared sink only)
+        let sink = self.sink.clone();
+        *sink + 1
+    }
+    // --- HOT PATH END ---
+}
+"""
+
+SERVICE_RS = """\
+// --- HOT PATH BEGIN ---
+pub fn serve(x: u32) -> u32 {
+    x + 1
+}
+// --- HOT PATH END ---
+"""
+
+REASSEMBLY_RS = """\
+// --- HOT PATH BEGIN ---
+pub fn absorb(x: u32) -> u32 {
+    x ^ 1
+}
+// --- HOT PATH END ---
+"""
+
+AFFINITY_RS = """\
+pub fn pin_current_thread(core: usize) -> bool {
+    // SAFETY: the cpu_set_t value is fully initialized before the call.
+    unsafe { core::ptr::read_volatile(&core) == core }
+}
+"""
+
+FABRIC_RS = """\
+use crate::frame::RpcType;
+
+pub fn route(t: RpcType) -> bool {
+    t.is_response_direction()
+}
+"""
+
+EXP_MOD_RS = """\
+pub struct ExpSpec {
+    pub name: &'static str,
+    pub title: &'static str,
+    pub bench: &'static str,
+}
+
+pub const EXPERIMENTS: &[ExpSpec] = &[
+    ExpSpec { name: "fig10", title: "Interfaces", bench: "fig10_bench" },
+    ExpSpec { name: "fig13", title: "vNIC scaling", bench: "fig13_bench" },
+];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_is_complete() {
+        assert_eq!(super::EXPERIMENTS.len(), 2);
+    }
+}
+"""
+
+BENCH_DIFF_RS = """\
+const KEY_COLUMNS: &[&str] = &[
+    "window",
+    "payload_b",
+];
+"""
+
+HARNESS_RS = """\
+pub fn columns() -> Vec<&'static str> {
+    vec!["window", "payload_b", "mrps"]
+}
+"""
+
+CARGO_TOML = """\
+[package]
+name = "fixture"
+version = "0.1.0"
+
+# bench targets (2)
+[[bench]]
+name = "fig10_bench"
+path = "rust/benches/fig10_bench.rs"
+harness = false
+
+[[bench]]
+name = "fig13_bench"
+path = "rust/benches/fig13_bench.rs"
+harness = false
+
+[[test]]
+name = "hotpath_alloc"
+path = "rust/tests/hotpath_alloc.rs"
+"""
+
+CI_YML = """\
+name: ci
+on: [push]
+jobs:
+  build:
+    steps:
+      - run: python3 tools/dagger_lint.py --all --json
+      - run: cargo bench --bench fig10_bench -- --fast
+      - run: cargo test -q --test hotpath_alloc
+"""
+
+README_MD = """\
+Fixture repo. Run `cargo run -- list` for the 2 reproducible experiments.
+"""
+
+REPRODUCING_MD = """\
+- `cargo bench --bench fig10_bench`
+- `cargo bench --bench fig13_bench`
+"""
+
+FIXTURE_FILES = {
+    "rust/src/coordinator/frame.rs": FRAME_RS,
+    "rust/src/coordinator/rings.rs": RINGS_RS,
+    "rust/src/coordinator/api.rs": API_RS,
+    "rust/src/coordinator/service.rs": SERVICE_RS,
+    "rust/src/coordinator/reassembly.rs": REASSEMBLY_RS,
+    "rust/src/coordinator/fabric.rs": FABRIC_RS,
+    "rust/src/nic/mod.rs": FABRIC_RS,
+    "rust/src/runtime/affinity.rs": AFFINITY_RS,
+    "rust/src/exp/mod.rs": EXP_MOD_RS,
+    "rust/src/exp/bench_diff.rs": BENCH_DIFF_RS,
+    "rust/src/exp/harness.rs": HARNESS_RS,
+    "rust/benches/fig10_bench.rs": "fn main() {}\n",
+    "rust/benches/fig13_bench.rs": "fn main() {}\n",
+    "rust/tests/hotpath_alloc.rs": "fn main() {}\n",
+    "Cargo.toml": CARGO_TOML,
+    ".github/workflows/ci.yml": CI_YML,
+    "README.md": README_MD,
+    "REPRODUCING.md": REPRODUCING_MD,
+}
+
+
+@pytest.fixture
+def tree(tmp_path):
+    for rel, content in FIXTURE_FILES.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return tmp_path
+
+
+def mutate(tree, rel, old, new):
+    p = tree / rel
+    text = p.read_text()
+    assert old in text, f"fixture drift: {old!r} not in {rel}"
+    p.write_text(text.replace(old, new))
+
+
+def run_lint(root, *flags):
+    proc = subprocess.run(
+        [sys.executable, LINT, "--json", "--root", str(root), *flags],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode in (0, 1), proc.stderr
+    return proc.returncode, json.loads(proc.stdout)
+
+
+def rules_of(data):
+    return {f["rule"] for f in data["findings"]}
+
+
+# --------------------------------------------------------- clean runs
+
+
+def test_clean_fixture_tree_passes(tree):
+    code, data = run_lint(tree, "--all")
+    assert code == 0, data["findings"]
+    assert data["ok"] is True
+    # The decoys prove comment-/string-awareness and the allow
+    # annotations: the clean tree contains Vec::new in a comment and a
+    # string, an annotated .clone(), and an annotated Relaxed load.
+    assert data["findings"] == []
+
+
+def test_real_repo_tree_passes():
+    code, data = run_lint(REPO_ROOT, "--all")
+    assert code == 0, data["findings"]
+    # The inventory carries the frame constants the prover evaluated.
+    consts = data["inventory"]["frame"]["constants"]
+    assert consts["WORDS_PER_FRAME"] * 4 == consts["FRAME_BYTES"]
+
+
+# ------------------------------------------------- known-bad fixtures
+
+
+def test_overlapping_stamp_offset_trips_frame_rules(tree):
+    # Pull the tail stamp down so it collides with the trace word (and
+    # no longer ends at the payload cap).
+    mutate(
+        tree,
+        "rust/src/coordinator/frame.rs",
+        "pub const TAIL_STAMP_OFFSET: usize = 36;",
+        "pub const TAIL_STAMP_OFFSET: usize = 30;",
+    )
+    code, data = run_lint(tree, "--frame")
+    assert code == 1
+    rules = rules_of(data)
+    assert "frame-overlap" in rules or "frame-structural" in rules
+    assert all(r.startswith("frame-") for r in rules)
+
+
+def test_moved_trace_word_trips_frame_rules(tree):
+    mutate(
+        tree,
+        "rust/src/coordinator/frame.rs",
+        "pub const TRACE_WORD: usize = 12;",
+        "pub const TRACE_WORD: usize = 13;",
+    )
+    code, data = run_lint(tree, "--frame")
+    assert code == 1
+    rules = rules_of(data)
+    assert "frame-overlap" in rules or "frame-structural" in rules
+    assert all(r.startswith("frame-") for r in rules)
+
+
+def test_allocation_inside_hot_path_trips_hotpath_alloc(tree):
+    mutate(
+        tree,
+        "rust/src/coordinator/api.rs",
+        "let sink = self.sink.clone();",
+        "let sink = self.sink.clone();\n        let v: Vec<u32> = Vec::new();",
+    )
+    code, data = run_lint(tree, "--hotpath")
+    assert code == 1
+    assert rules_of(data) == {"hotpath-alloc"}
+
+
+def test_lost_hot_path_markers_trip_hotpath_markers(tree):
+    mutate(tree, "rust/src/coordinator/service.rs", "HOT PATH BEGIN", "nothing here")
+    code, data = run_lint(tree, "--hotpath")
+    assert code == 1
+    assert "hotpath-markers" in rules_of(data)
+
+
+def test_registry_bench_mismatch_trips_consistency(tree):
+    mutate(tree, "rust/src/exp/mod.rs", 'bench: "fig13_bench"', 'bench: "fig13_missing"')
+    code, data = run_lint(tree, "--consistency")
+    assert code == 1
+    rules = rules_of(data)
+    assert "consistency-bench-registry" in rules
+    # The rename also orphans the docs line — both findings are
+    # consistency-family, nothing else fires.
+    assert all(r.startswith("consistency-") for r in rules)
+
+
+def test_stale_key_column_trips_consistency(tree):
+    mutate(tree, "rust/src/exp/bench_diff.rs", '"window",', '"window",\n    "bogus_col",')
+    code, data = run_lint(tree, "--consistency")
+    assert code == 1
+    assert rules_of(data) == {"consistency-key-columns"}
+
+
+def test_unsafe_without_safety_trips_audit(tree):
+    mutate(
+        tree,
+        "rust/src/coordinator/rings.rs",
+        "    // --- HOT PATH END ---",
+        "    // --- HOT PATH END ---\n"
+        "    pub fn peek(&self) -> u32 {\n"
+        "        unsafe { core::mem::transmute::<i32, u32>(1) }\n"
+        "    }",
+    )
+    code, data = run_lint(tree, "--unsafe-audit")
+    assert code == 1
+    assert rules_of(data) == {"unsafe-missing-safety"}
+
+
+def test_unannotated_relaxed_trips_audit(tree):
+    mutate(
+        tree,
+        "rust/src/coordinator/rings.rs",
+        "    // --- HOT PATH END ---",
+        "    // --- HOT PATH END ---\n"
+        "    pub fn sniff(&self) -> usize {\n"
+        "        self.head.load(Ordering::Relaxed)\n"
+        "    }",
+    )
+    code, data = run_lint(tree, "--unsafe-audit")
+    assert code == 1
+    assert rules_of(data) == {"atomics-relaxed"}
+
+
+def test_mutations_stay_in_their_family(tree):
+    # A frame mutation must not leak findings into the other families.
+    mutate(
+        tree,
+        "rust/src/coordinator/frame.rs",
+        "pub const TRACE_WORD: usize = 12;",
+        "pub const TRACE_WORD: usize = 13;",
+    )
+    code, data = run_lint(tree, "--hotpath", "--consistency", "--unsafe-audit")
+    assert code == 0, data["findings"]
+
+
+# ------------------------------------------------------ lexer details
+
+
+def test_lexer_strips_comments_and_strings():
+    code, comments, strings = dagger_lint.lex_rust(
+        'let x = "Vec::new()"; // vec! here\n/* Box::new */ let y = 1;\n'
+    )
+    assert "Vec::new" not in code[0]
+    assert "vec!" in comments[0]
+    assert "Box::new" not in code[1]
+    assert strings == [(1, "Vec::new()")]
+
+
+def test_lexer_keep_strings_preserves_literals():
+    code, _, _ = dagger_lint.lex_rust('name: "fig10", // decoy\n', keep_strings=True)
+    assert '"fig10"' in code[0]
+    assert "decoy" not in code[0]
+
+
+def test_lexer_handles_nested_block_comments_and_raw_strings():
+    text = '/* outer /* inner */ still comment */ let r = r#"raw "quoted" Vec::new()"#;\n'
+    code, comments, strings = dagger_lint.lex_rust(text)
+    assert "still comment" not in code[0]
+    assert "let r" in code[0]
+    assert strings == [(1, 'raw "quoted" Vec::new()')]
+
+
+def test_lexer_char_literal_vs_lifetime():
+    code, _, _ = dagger_lint.lex_rust("let c = '\"'; fn f<'a>(x: &'a u32) {}\n")
+    # The char literal must not open a string state that swallows code.
+    assert "fn f" in code[0]

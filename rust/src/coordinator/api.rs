@@ -1233,6 +1233,7 @@ impl FlowLoop {
         // Traced request? (admitted frames only — a reject's lifetime
         // ends above and its stages are attributed at the client).
         let trace = match &self.tracer {
+            // lint: allow(alloc, Arc refcount bump on the shared trace sink — no heap allocation)
             Some(sink) => frame.trace_id().map(|id| (sink.clone(), id)),
             None => None,
         };

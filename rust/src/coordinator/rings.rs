@@ -24,7 +24,14 @@ pub struct Ring {
     head: AtomicUsize,
 }
 
+// SAFETY: the UnsafeCell slots are only touched under the SPSC
+// discipline — each slot is written by the single producer strictly
+// before the Release tail store that publishes it, and read by the
+// single consumer strictly after the Acquire tail load that observes
+// it, so no two threads ever access one slot concurrently.
 unsafe impl Send for Ring {}
+// SAFETY: same SPSC argument as Send — shared &Ring access is
+// serialized per slot by the Acquire/Release index protocol.
 unsafe impl Sync for Ring {}
 
 impl Ring {
@@ -98,11 +105,16 @@ impl Ring {
     /// staged since the last publish — [`BatchProducer`] wraps this
     /// discipline.
     pub fn stage(&self, staged: usize, frame: Frame) -> Result<(), Frame> {
+        // lint: allow(relaxed, tail is producer-owned — only this thread stores it)
         let tail = self.tail.load(Ordering::Relaxed);
         let head = self.head.load(Ordering::Acquire);
         if tail.wrapping_add(staged).wrapping_sub(head) >= self.cap {
             return Err(frame);
         }
+        // SAFETY: the slot at tail+staged is unpublished (tail has not
+        // moved past it) and the occupancy check above proved the
+        // consumer cannot reach it, so this producer thread is the only
+        // accessor of the cell.
         unsafe {
             *self.buf[tail.wrapping_add(staged) & (self.cap - 1)].get() = frame;
         }
@@ -114,6 +126,7 @@ impl Ring {
     /// the whole point: at MMIO (or cross-core cache-line) cost per
     /// doorbell, batching divides that cost by the batch size (§6.2).
     pub fn publish(&self, n: usize) {
+        // lint: allow(relaxed, producer-owned tail read; the Release store below publishes)
         let tail = self.tail.load(Ordering::Relaxed);
         self.tail.store(tail.wrapping_add(n), Ordering::Release);
     }
@@ -124,11 +137,16 @@ impl Ring {
     ///
     /// Safety: at most one consumer thread at a time.
     pub fn pop(&self) -> Option<Frame> {
+        // lint: allow(relaxed, head is consumer-owned — only this thread stores it)
         let head = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Acquire);
         if head == tail {
             return None;
         }
+        // SAFETY: the Acquire tail load proved the producer published
+        // this slot (and ordered its write before the load), and head
+        // has not been advanced past it, so the slot is stable and this
+        // consumer thread is its only accessor.
         let frame = unsafe { *self.buf[head & (self.cap - 1)].get() };
         self.head.store(head.wrapping_add(1), Ordering::Release);
         Some(frame)

@@ -195,13 +195,11 @@ fn as_num(v: &Value) -> Option<f64> {
 const KEY_COLUMNS: &[&str] = &[
     "window",
     "conns",
-    "n_conns",
     "flows",
     "server_flows",
     "client_flows",
     "tiers",
     "threads",
-    "n_threads",
     "sim_threads",
     "payload_b",
     "batch",

@@ -1,0 +1,1163 @@
+#!/usr/bin/env python3
+"""dagger-lint: toolchain-free static analysis for the Dagger RPC hot path.
+
+Four rule families, each provable from source with nothing but the
+Python standard library (no cargo, no rustc — every builder container
+has run without a Rust toolchain since PR 1, so the source-invariant
+gate must not need one):
+
+  frame        The 16-word frame-layout prover. Parses the *actual*
+               constants out of rust/src/coordinator/frame.rs
+               (KEY_WORDS, stamp offsets, TRACE_WORD, the word-3
+               fragment header, the Reject status word) and computes
+               real byte-interval disjointness — moving any offset
+               fails the arithmetic, not a brittle literal grep.
+  hotpath      The HOT PATH allocation lint. Extracts every
+               `HOT PATH BEGIN..END` region (comment- and
+               string-aware) and flags allocating constructs
+               (Vec::new, vec!, Box::, to_vec, to_string, format!,
+               String::, .clone(), collect(), ...). Suppress a
+               deliberate non-allocation (e.g. an Arc refcount bump)
+               with `// lint: allow(alloc, <reason>)`.
+  consistency  Cross-artifact checker: exp::EXPERIMENTS registry ↔
+               Cargo.toml bench targets ↔ REPRODUCING.md ↔ CI smoke
+               steps, documented experiment counts, and bench_diff
+               KEY_COLUMNS ⊆ columns actually emitted by the grid
+               builders.
+  unsafe       Unsafe/atomics audit over the lock-free coordinator
+               files + the affinity syscall: every `unsafe` needs an
+               adjacent `// SAFETY:` comment, and `Ordering::Relaxed`
+               on the ring publish/doorbell paths needs an explicit
+               `// lint: allow(relaxed, <reason>)` annotation.
+
+Usage:
+    python3 tools/dagger_lint.py --all [--json] [--root DIR]
+    python3 tools/dagger_lint.py --frame --hotpath ...
+
+Exit status: 0 = clean, 1 = findings, 2 = internal error.
+JSON output schema: {"version": "dagger-lint/v1", "ok": bool,
+"counts": {family: n}, "findings": [{rule, family, file, line,
+message}], "inventory": {...}}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+LINT_VERSION = "dagger-lint/v1"
+
+# --------------------------------------------------------------- paths
+
+FRAME_RS = "rust/src/coordinator/frame.rs"
+FABRIC_RS = "rust/src/coordinator/fabric.rs"
+NIC_MOD_RS = "rust/src/nic/mod.rs"
+BENCH_DIFF_RS = "rust/src/exp/bench_diff.rs"
+EXP_MOD_RS = "rust/src/exp/mod.rs"
+CARGO_TOML = "Cargo.toml"
+CI_YML = ".github/workflows/ci.yml"
+README_MD = "README.md"
+REPRODUCING_MD = "REPRODUCING.md"
+
+# Files whose HOT PATH regions the allocation lint must find (losing the
+# markers is itself a violation — the region would silently stop being
+# checked).
+HOTPATH_REQUIRED = [
+    "rust/src/coordinator/service.rs",
+    "rust/src/coordinator/api.rs",
+    "rust/src/coordinator/rings.rs",
+    "rust/src/coordinator/reassembly.rs",
+]
+
+# Files the unsafe/atomics audit covers: the lock-free SPSC rings, the
+# client/server loops built on them, the fragment reassembler, and the
+# raw sched_setaffinity extern.
+UNSAFE_AUDIT_FILES = [
+    "rust/src/coordinator/rings.rs",
+    "rust/src/coordinator/api.rs",
+    "rust/src/coordinator/reassembly.rs",
+    "rust/src/runtime/affinity.rs",
+]
+
+# Ordering::Relaxed is scrutinized where a mis-ordered index publish
+# corrupts the ring protocol: the SPSC ring file. Relaxed counters in
+# api.rs etc. are statistics, not synchronization, and are only
+# inventoried.
+RELAXED_AUDIT_FILES = ["rust/src/coordinator/rings.rs"]
+
+# ------------------------------------------------------------ findings
+
+
+class Finding:
+    def __init__(self, rule, family, file, line, message):
+        self.rule = rule
+        self.family = family
+        self.file = file
+        self.line = line
+        self.message = message
+
+    def as_dict(self):
+        return {
+            "rule": self.rule,
+            "family": self.family,
+            "file": self.file,
+            "line": self.line,
+            "message": self.message,
+        }
+
+    def render(self):
+        loc = f"{self.file}:{self.line}" if self.line else self.file
+        return f"[{self.rule}] {loc}: {self.message}"
+
+
+class Lint:
+    def __init__(self, root):
+        self.root = root
+        self.findings = []
+        self.inventory = {}
+
+    def flag(self, rule, family, file, line, message):
+        self.findings.append(Finding(rule, family, file, line, message))
+
+    def path(self, rel):
+        return os.path.join(self.root, rel)
+
+    def read(self, rel, rule, family):
+        """Read a repo file; a missing file is a violation, not a crash."""
+        try:
+            with open(self.path(rel), encoding="utf-8") as f:
+                return f.read()
+        except OSError as e:
+            self.flag(rule, family, rel, 0, f"cannot read file: {e}")
+            return None
+
+
+# ------------------------------------------------- Rust lexing (lite)
+#
+# Enough of a Rust lexer to separate code from comments and string
+# literals line by line: line comments, nested block comments, plain /
+# byte / raw strings, char literals vs lifetimes. This is what makes
+# the HOT PATH scan immune to `Vec::new` appearing in a doc comment or
+# an error-message string.
+
+
+def lex_rust(text, keep_strings=False):
+    """Return (code_lines, comment_lines, strings).
+
+    code_lines[i]  — line i with comments and string *contents* removed
+                     (string literals collapse to "" so the code shape
+                     survives; pass keep_strings=True to keep literal
+                     contents in the code view, for parsers where the
+                     strings ARE the data — registry names, KEY_COLUMNS).
+    comment_lines[i] — the comment text on line i ('' when none).
+    strings        — list of (line_no_1based, literal_content).
+    """
+    n = len(text)
+    i = 0
+    line = 1
+    code = [[]]
+    comments = [[]]
+    strings = []
+    cur_str = None
+
+    def newline():
+        nonlocal line
+        code.append([])
+        comments.append([])
+        line += 1
+
+    state = "code"  # code | line_comment | block_comment | str | raw_str | char
+    block_depth = 0
+    raw_hashes = 0
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            if state == "line_comment":
+                state = "code"
+            if state in ("str", "raw_str") and cur_str is not None:
+                # multi-line string: record per starting line
+                pass
+            newline()
+            i += 1
+            continue
+
+        if state == "code":
+            if c == "/" and nxt == "/":
+                state = "line_comment"
+                i += 2
+                comments[-1].append("//")
+                continue
+            if c == "/" and nxt == "*":
+                state = "block_comment"
+                block_depth = 1
+                i += 2
+                continue
+            # raw strings: r"..." / r#"..."# / br"..."
+            m = re.match(r'(b?r)(#*)"', text[i : i + 10])
+            if m:
+                raw_hashes = len(m.group(2))
+                state = "raw_str"
+                cur_str = (line, [])
+                code[-1].append('"' if keep_strings else '""')
+                i += len(m.group(0))
+                continue
+            if c == '"' or (c == "b" and nxt == '"'):
+                if c == "b":
+                    i += 1
+                state = "str"
+                cur_str = (line, [])
+                code[-1].append('"' if keep_strings else '""')
+                i += 1
+                continue
+            if c == "'":
+                # char literal vs lifetime: a char literal closes with a
+                # quote after one (possibly escaped) character.
+                m = re.match(r"'(\\.[^']*|[^'\\])'", text[i:])
+                if m:
+                    i += len(m.group(0))
+                    code[-1].append("' '")
+                    continue
+                # lifetime — drop the quote, keep the identifier as code
+                i += 1
+                continue
+            code[-1].append(c)
+            i += 1
+        elif state == "line_comment":
+            comments[-1].append(c)
+            i += 1
+        elif state == "block_comment":
+            if c == "/" and nxt == "*":
+                block_depth += 1
+                i += 2
+            elif c == "*" and nxt == "/":
+                block_depth -= 1
+                i += 2
+                if block_depth == 0:
+                    state = "code"
+            else:
+                comments[-1].append(c)
+                i += 1
+        elif state == "str":
+            if c == "\\":
+                cur_str[1].append(text[i : i + 2])
+                if keep_strings:
+                    code[-1].append(text[i : i + 2])
+                i += 2
+            elif c == '"':
+                strings.append((cur_str[0], "".join(cur_str[1])))
+                cur_str = None
+                state = "code"
+                if keep_strings:
+                    code[-1].append('"')
+                i += 1
+            else:
+                cur_str[1].append(c)
+                if keep_strings:
+                    code[-1].append(c)
+                i += 1
+        elif state == "raw_str":
+            closer = '"' + "#" * raw_hashes
+            if text.startswith(closer, i):
+                strings.append((cur_str[0], "".join(cur_str[1])))
+                cur_str = None
+                state = "code"
+                if keep_strings:
+                    code[-1].append(closer)
+                i += len(closer)
+            else:
+                cur_str[1].append(c)
+                if keep_strings:
+                    code[-1].append(c)
+                i += 1
+
+    if cur_str is not None:
+        strings.append((cur_str[0], "".join(cur_str[1])))
+    return (
+        ["".join(l) for l in code],
+        ["".join(l) for l in comments],
+        strings,
+    )
+
+
+def split_off_tests(raw_lines):
+    """Index (0-based) of the `#[cfg(test)]` module, or len(lines)."""
+    for i, l in enumerate(raw_lines):
+        if re.match(r"\s*#\[cfg\(test\)\]", l):
+            return i
+    return len(raw_lines)
+
+
+# ---------------------------------------------------- lint: allow(...)
+
+ALLOW_RE = re.compile(r"lint:\s*allow\(\s*(\w+)\s*,\s*([^)]+?)\s*\)")
+
+
+def allow_annotations(comment_lines):
+    """Map 1-based line -> set of allow categories with non-empty
+    reasons found in that line's comment."""
+    out = {}
+    for i, c in enumerate(comment_lines, start=1):
+        for m in ALLOW_RE.finditer(c):
+            if m.group(2).strip():
+                out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+def allowed(allows, line, category):
+    """An annotation suppresses a finding on its own line or the line
+    directly below it (annotation-above style)."""
+    return category in allows.get(line, set()) or category in allows.get(line - 1, set())
+
+
+# ===================================================== family: frame
+
+CONST_RE = re.compile(
+    r"(?:pub\s+)?const\s+([A-Z][A-Z0-9_]*)\s*:\s*[A-Za-z0-9_:<>&\[\]\s]+?=\s*([^;]+);"
+)
+
+REQUIRED_CONSTS = [
+    "WORDS_PER_FRAME",
+    "FRAME_BYTES",
+    "PAYLOAD_WORDS",
+    "MAX_PAYLOAD_BYTES",
+    "KEY_WORDS",
+    "BENCH_STAMP_BYTES",
+    "TAIL_STAMP_OFFSET",
+    "TRACE_WORD",
+    "TRACE_STAMP_OFFSET",
+    "TRACE_STAMP_BYTES",
+    "TRACE_FLAG",
+    "FRAG_FLAG",
+    "FRAG_INDEX_SHIFT",
+    "FRAG_TOTAL_SHIFT",
+    "FRAG_TOTAL_MASK",
+]
+
+EXPR_OK_RE = re.compile(r"^[0-9A-Za-z_\s+\-*/%()&|^<>]*$")
+
+
+def eval_consts(code_text, lint, rel):
+    """Evaluate `const NAME = EXPR;` declarations, resolving references
+    between them (Self::/Frame:: prefixes stripped, underscores in
+    numeric literals removed). Returns {name: int}."""
+    exprs = {}
+    for m in CONST_RE.finditer(code_text):
+        name, expr = m.group(1), m.group(2)
+        expr = re.sub(r"\b(?:Self|Frame)\s*::\s*", "", expr)
+        # Strip underscores in numeric literals only (0x8000_0000) —
+        # tokens starting with a digit can't be identifiers in Rust.
+        expr = re.sub(r"\b\d[\dxXa-fA-F_]*", lambda m: m.group(0).replace("_", ""), expr)
+        expr = re.sub(r"\b(usize|u64|u32|u16|u8|isize|i64|i32)\b", "", expr)
+        expr = expr.replace(" as ", " ").strip()
+        exprs[name] = expr
+
+    values = {}
+    for _ in range(len(exprs) + 1):
+        progressed = False
+        for name, expr in exprs.items():
+            if name in values:
+                continue
+            if not EXPR_OK_RE.match(expr):
+                continue
+            # Blank numeric literals (incl. hex) before collecting the
+            # identifiers the expression depends on.
+            no_nums = re.sub(r"\b\d[\dxXa-fA-F_]*", " ", expr)
+            idents = set(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", no_nums))
+            if not idents.issubset(values.keys()):
+                continue
+            try:
+                v = eval(expr, {"__builtins__": {}}, dict(values))  # noqa: S307
+            except Exception:
+                continue
+            if isinstance(v, (int, float)):
+                values[name] = int(v)
+                progressed = True
+        if not progressed:
+            break
+    return values
+
+
+def overlap(a, b):
+    """Byte-interval overlap of half-open [start, end) pairs."""
+    lo = max(a[0], b[0])
+    hi = min(a[1], b[1])
+    return (lo, hi) if lo < hi else None
+
+
+def check_frame(lint):
+    fam = "frame"
+    text = lint.read(FRAME_RS, "frame-parse", fam)
+    if text is None:
+        return
+    code_lines, _, _ = lex_rust(text)
+    code = "\n".join(code_lines)
+
+    consts = eval_consts(code, lint, FRAME_RS)
+    missing = [c for c in REQUIRED_CONSTS if c not in consts]
+    if missing:
+        lint.flag(
+            "frame-parse",
+            fam,
+            FRAME_RS,
+            0,
+            f"could not parse/evaluate required constants: {', '.join(missing)}",
+        )
+        return
+    c = consts
+
+    def structural(cond, desc):
+        if not cond:
+            lint.flag("frame-structural", fam, FRAME_RS, 0, f"layout identity violated: {desc}")
+
+    structural(
+        c["WORDS_PER_FRAME"] * 4 == c["FRAME_BYTES"],
+        f"WORDS_PER_FRAME*4 ({c['WORDS_PER_FRAME'] * 4}) != FRAME_BYTES ({c['FRAME_BYTES']})",
+    )
+    structural(
+        c["PAYLOAD_WORDS"] * 4 == c["MAX_PAYLOAD_BYTES"],
+        f"PAYLOAD_WORDS*4 ({c['PAYLOAD_WORDS'] * 4}) != MAX_PAYLOAD_BYTES ({c['MAX_PAYLOAD_BYTES']})",
+    )
+    structural(
+        c["WORDS_PER_FRAME"] - c["PAYLOAD_WORDS"] == 4,
+        "payload must start at word 4 (header words 0-3)",
+    )
+    structural(
+        c["KEY_WORDS"] <= c["PAYLOAD_WORDS"],
+        f"KEY_WORDS ({c['KEY_WORDS']}) exceeds PAYLOAD_WORDS ({c['PAYLOAD_WORDS']})",
+    )
+    structural(
+        c["TAIL_STAMP_OFFSET"] + c["BENCH_STAMP_BYTES"] == c["MAX_PAYLOAD_BYTES"],
+        f"tail stamp ({c['TAIL_STAMP_OFFSET']}..{c['TAIL_STAMP_OFFSET'] + c['BENCH_STAMP_BYTES']}) "
+        f"must end exactly at the payload cap ({c['MAX_PAYLOAD_BYTES']})",
+    )
+    structural(
+        c["TRACE_STAMP_OFFSET"] == c["KEY_WORDS"] * 4,
+        f"TRACE_STAMP_OFFSET ({c['TRACE_STAMP_OFFSET']}) must sit directly after the "
+        f"KEY_WORDS hash region ({c['KEY_WORDS'] * 4})",
+    )
+    structural(
+        c["TRACE_WORD"] == 4 + c["KEY_WORDS"],
+        f"TRACE_WORD ({c['TRACE_WORD']}) must be the word after the hashed region "
+        f"(4 + KEY_WORDS = {4 + c['KEY_WORDS']})",
+    )
+    structural(
+        c["TRACE_STAMP_OFFSET"] + c["TRACE_STAMP_BYTES"] == c["TAIL_STAMP_OFFSET"],
+        f"trace stamp ({c['TRACE_STAMP_OFFSET']}..{c['TRACE_STAMP_OFFSET'] + c['TRACE_STAMP_BYTES']}) "
+        f"must butt against the tail stamp ({c['TAIL_STAMP_OFFSET']})",
+    )
+
+    # Byte intervals within the 64-byte frame.
+    payload_base = (c["WORDS_PER_FRAME"] - c["PAYLOAD_WORDS"]) * 4
+    regions = {
+        "status-word-0 (MAGIC|rpc_type|flags, Reject status)": (0, 4),
+        "frag-header (word 3 spare bits)": (12, 16),
+        "key-hash (KEY_WORDS)": (payload_base, payload_base + c["KEY_WORDS"] * 4),
+        "head-stamp": (payload_base, payload_base + c["BENCH_STAMP_BYTES"]),
+        "trace-word": (
+            c["TRACE_WORD"] * 4,
+            c["TRACE_WORD"] * 4 + c["TRACE_STAMP_BYTES"],
+        ),
+        "tail-stamp": (
+            payload_base + c["TAIL_STAMP_OFFSET"],
+            payload_base + c["TAIL_STAMP_OFFSET"] + c["BENCH_STAMP_BYTES"],
+        ),
+    }
+    payload_region = (payload_base, c["FRAME_BYTES"])
+
+    # The fragment header must live in word 3: read the word index the
+    # code actually uses in set_frag.
+    m = re.search(r"fn\s+set_frag[^{]*\{(.*?)\n    \}", code, re.S)
+    if m:
+        words = re.findall(r"words\s*\[\s*(\d+)\s*\]", m.group(1))
+        if words and any(w != "3" for w in words):
+            lint.flag(
+                "frame-frag-bits",
+                fam,
+                FRAME_RS,
+                0,
+                f"set_frag writes words {sorted(set(words))}; the fragment header must "
+                "stay in header word 3 (byte-disjoint from every payload word)",
+            )
+    else:
+        lint.flag("frame-parse", fam, FRAME_RS, 0, "cannot locate fn set_frag")
+
+    must_be_disjoint = [
+        # The status word owns bytes 0..4; every payload convention and
+        # the frag header must stay clear of it.
+        ("status-word-0 (MAGIC|rpc_type|flags, Reject status)", "head-stamp"),
+        ("status-word-0 (MAGIC|rpc_type|flags, Reject status)", "tail-stamp"),
+        ("status-word-0 (MAGIC|rpc_type|flags, Reject status)", "trace-word"),
+        ("status-word-0 (MAGIC|rpc_type|flags, Reject status)", "key-hash (KEY_WORDS)"),
+        ("status-word-0 (MAGIC|rpc_type|flags, Reject status)", "frag-header (word 3 spare bits)"),
+        # The trace word is THE word outside the hash and both stamps.
+        ("trace-word", "key-hash (KEY_WORDS)"),
+        ("trace-word", "head-stamp"),
+        ("trace-word", "tail-stamp"),
+        # Tail stamps exist so object-level steering never sees them.
+        ("tail-stamp", "key-hash (KEY_WORDS)"),
+        ("tail-stamp", "head-stamp"),
+        # The frag header consumes zero payload bytes.
+        ("frag-header (word 3 spare bits)", "key-hash (KEY_WORDS)"),
+        ("frag-header (word 3 spare bits)", "head-stamp"),
+        ("frag-header (word 3 spare bits)", "trace-word"),
+        ("frag-header (word 3 spare bits)", "tail-stamp"),
+    ]
+    for a, b in must_be_disjoint:
+        o = overlap(regions[a], regions[b])
+        if o:
+            lint.flag(
+                "frame-overlap",
+                fam,
+                FRAME_RS,
+                0,
+                f"{a} bytes {list(regions[a])} overlaps {b} bytes {list(regions[b])} "
+                f"on [{o[0]}, {o[1]})",
+            )
+
+    def contained(inner, outer, desc):
+        ri, ro = regions.get(inner, inner), regions.get(outer, payload_region)
+        if not (ro[0] <= ri[0] and ri[1] <= ro[1]):
+            lint.flag(
+                "frame-overlap",
+                fam,
+                FRAME_RS,
+                0,
+                f"{desc}: bytes {list(ri)} not contained in {list(ro)}",
+            )
+
+    # Head stamp rides inside the hashed words by design (echo bench);
+    # key/trace/tail must all fit the payload, and together they must
+    # tile it exactly — every payload byte has exactly one owner.
+    contained(regions["head-stamp"], regions["key-hash (KEY_WORDS)"], "head-stamp inside key-hash")
+    for r in ("key-hash (KEY_WORDS)", "trace-word", "tail-stamp"):
+        contained(regions[r], payload_region, f"{r} inside the payload")
+    tiled = (
+        c["KEY_WORDS"] * 4 + c["TRACE_STAMP_BYTES"] + c["BENCH_STAMP_BYTES"]
+        == c["MAX_PAYLOAD_BYTES"]
+    )
+    if not tiled:
+        lint.flag(
+            "frame-structural",
+            fam,
+            FRAME_RS,
+            0,
+            "key-hash + trace + tail-stamp no longer tile the payload exactly "
+            f"({c['KEY_WORDS'] * 4} + {c['TRACE_STAMP_BYTES']} + {c['BENCH_STAMP_BYTES']} "
+            f"!= {c['MAX_PAYLOAD_BYTES']}) — an unowned or doubly-owned byte appeared",
+        )
+
+    # Word-3 bitfields: payload length byte, frag index, total length,
+    # flag bit — pairwise disjoint inside the 32-bit word.
+    total_bits = c["FRAG_TOTAL_MASK"].bit_length()
+    bitfields = {
+        "payload-length byte": (0, 8),
+        "frag-index": (c["FRAG_INDEX_SHIFT"], c["FRAG_INDEX_SHIFT"] + 8),
+        "frag-total-len": (c["FRAG_TOTAL_SHIFT"], c["FRAG_TOTAL_SHIFT"] + total_bits),
+        "FRAG_FLAG bit": (31, 32),
+    }
+    names = list(bitfields)
+    for i, a in enumerate(names):
+        for b in names[i + 1 :]:
+            o = overlap(bitfields[a], bitfields[b])
+            if o:
+                lint.flag(
+                    "frame-frag-bits",
+                    fam,
+                    FRAME_RS,
+                    0,
+                    f"word-3 bitfield {a} bits {list(bitfields[a])} overlaps {b} "
+                    f"bits {list(bitfields[b])}",
+                )
+        if bitfields[a][1] > 32:
+            lint.flag(
+                "frame-frag-bits", fam, FRAME_RS, 0, f"word-3 bitfield {a} exceeds 32 bits"
+            )
+    if c["FRAG_FLAG"] != 1 << 31:
+        lint.flag("frame-frag-bits", fam, FRAME_RS, 0, "FRAG_FLAG must be the word-3 top bit")
+    if c["TRACE_FLAG"] != 1 << 31:
+        lint.flag(
+            "frame-frag-bits",
+            fam,
+            FRAME_RS,
+            0,
+            "TRACE_FLAG must be the trace-word top bit (31-bit id space)",
+        )
+
+    # RpcType enum: Reject present, discriminants unique, from_u8 total,
+    # response-direction covers Response and Reject.
+    em = re.search(r"enum\s+RpcType\s*\{(.*?)\}", code, re.S)
+    if not em:
+        lint.flag("frame-enum", fam, FRAME_RS, 0, "cannot locate enum RpcType")
+    else:
+        disc = re.findall(r"([A-Z]\w*)\s*=\s*(\d+)", em.group(1))
+        byname = dict(disc)
+        if "Reject" not in byname:
+            lint.flag(
+                "frame-enum",
+                fam,
+                FRAME_RS,
+                0,
+                "RpcType::Reject (overload-control status) is gone from the enum",
+            )
+        vals = [v for _, v in disc]
+        if len(vals) != len(set(vals)):
+            lint.flag("frame-enum", fam, FRAME_RS, 0, f"duplicate RpcType discriminants: {disc}")
+        arms = dict(re.findall(r"(\d+)\s*=>\s*Some\(RpcType::(\w+)\)", code))
+        for name, v in disc:
+            if arms.get(v) != name:
+                lint.flag(
+                    "frame-enum",
+                    fam,
+                    FRAME_RS,
+                    0,
+                    f"RpcType::from_u8 does not map {v} back to {name} — wire decoding "
+                    "would drop these frames",
+                )
+        rd = re.search(r"fn\s+is_response_direction[^{]*\{(.*?)\}", code, re.S)
+        if not rd or not (
+            "Response" in rd.group(1) and "Reject" in rd.group(1)
+        ):
+            lint.flag(
+                "frame-enum",
+                fam,
+                FRAME_RS,
+                0,
+                "is_response_direction must steer both Response and Reject back to the "
+                "originating flow",
+            )
+
+    # The executable proofs stay: the three frame.rs disjointness tests
+    # must not be silently deleted or renamed (the lint proves the
+    # constants, the tests prove the *accessors* honor them).
+    for test in (
+        "reject_status_never_collides_with_stamp_bytes",
+        "trace_word_is_outside_key_hash_and_stamps",
+        "frag_header_is_outside_payload_words",
+    ):
+        if not re.search(rf"fn\s+{test}\s*\(", code):
+            lint.flag(
+                "frame-proof-test",
+                fam,
+                FRAME_RS,
+                0,
+                f"disjointness proof test `{test}` was deleted or renamed",
+            )
+
+    # Response-direction steering sites must keep handling Reject like
+    # Response (the old CI grep, now comment/string-aware).
+    for rel in (FABRIC_RS, NIC_MOD_RS):
+        t = lint.read(rel, "frame-reject-steering", fam)
+        if t is None:
+            continue
+        cl, _, _ = lex_rust(t)
+        body = "\n".join(cl)
+        if not (
+            "is_response_direction(" in body
+            or re.search(r"Some\(RpcType::Response\)\s*\|\s*Some\(RpcType::Reject\)", body)
+        ):
+            lint.flag(
+                "frame-reject-steering",
+                fam,
+                FRAME_RS if rel is None else rel,
+                0,
+                "response-direction steering no longer routes Reject like Response "
+                "(rejects would hit the server-side load balancer)",
+            )
+
+    lint.inventory["frame"] = {
+        "constants": {k: c[k] for k in REQUIRED_CONSTS},
+        "byte_regions": {k: list(v) for k, v in regions.items()},
+    }
+
+
+# =================================================== family: hotpath
+
+BEGIN_RE = re.compile(r"HOT PATH BEGIN")
+END_RE = re.compile(r"HOT PATH END")
+
+ALLOC_CONSTRUCTS = [
+    (re.compile(r"\bVec\s*::\s*new\b"), "Vec::new"),
+    (re.compile(r"\bVec\s*::\s*with_capacity\b"), "Vec::with_capacity"),
+    (re.compile(r"\bvec!"), "vec! macro"),
+    (re.compile(r"\bBox\s*::\s*\w+"), "Box:: constructor"),
+    (re.compile(r"\.\s*to_vec\s*\("), ".to_vec()"),
+    (re.compile(r"\.\s*to_owned\s*\("), ".to_owned()"),
+    (re.compile(r"\.\s*to_string\s*\("), ".to_string()"),
+    (re.compile(r"\bformat!"), "format! macro"),
+    (re.compile(r"\bString\s*::\s*\w+"), "String:: constructor"),
+    (re.compile(r"\.\s*clone\s*\(\s*\)"), ".clone() (annotate refcount bumps)"),
+    (re.compile(r"\.\s*collect\s*(?:::\s*<[^)]*>\s*)?\("), ".collect()"),
+]
+
+
+def hot_regions(raw_lines):
+    """[(begin_line, end_line)] 1-based inclusive, plus unbalanced flag."""
+    regions = []
+    start = None
+    unbalanced = False
+    for i, l in enumerate(raw_lines, start=1):
+        if BEGIN_RE.search(l):
+            if start is not None:
+                unbalanced = True
+            start = i
+        elif END_RE.search(l):
+            if start is None:
+                unbalanced = True
+            else:
+                regions.append((start, i))
+                start = None
+    if start is not None:
+        unbalanced = True
+    return regions, unbalanced
+
+
+def check_hotpath(lint):
+    fam = "hotpath"
+    inventory = {}
+    for rel in HOTPATH_REQUIRED:
+        text = lint.read(rel, "hotpath-markers", fam)
+        if text is None:
+            continue
+        raw = text.split("\n")
+        code_lines, comment_lines, _ = lex_rust(text)
+        allows = allow_annotations(comment_lines)
+        regions, unbalanced = hot_regions(raw)
+        if unbalanced:
+            lint.flag(
+                "hotpath-markers",
+                fam,
+                rel,
+                0,
+                "HOT PATH BEGIN/END markers are unbalanced — a region boundary was "
+                "deleted and part of the hot path is unguarded",
+            )
+        if not regions:
+            lint.flag(
+                "hotpath-markers",
+                fam,
+                rel,
+                0,
+                "lost its HOT PATH markers — the allocation-free region is no longer "
+                "declared (and no longer checked)",
+            )
+            continue
+        inventory[rel] = [list(r) for r in regions]
+        for begin, end in regions:
+            for ln in range(begin, end + 1):
+                code = code_lines[ln - 1] if ln - 1 < len(code_lines) else ""
+                for rx, label in ALLOC_CONSTRUCTS:
+                    if rx.search(code) and not allowed(allows, ln, "alloc"):
+                        lint.flag(
+                            "hotpath-alloc",
+                            fam,
+                            rel,
+                            ln,
+                            f"allocating construct {label} inside a HOT PATH region "
+                            f"(lines {begin}-{end}); the measured request path must stay "
+                            "steady-state allocation-free — move it out, or annotate a "
+                            "provably non-allocating use with "
+                            "`// lint: allow(alloc, <reason>)`",
+                        )
+    lint.inventory["hotpath_regions"] = inventory
+
+
+# =============================================== family: consistency
+
+
+def parse_cargo_targets(text):
+    """{'bench': {name: path}, 'test': {name: path}} from Cargo.toml."""
+    out = {"bench": {}, "test": {}}
+    section = None
+    name = path = None
+
+    def commit():
+        if section in out and name:
+            out[section][name] = path
+
+    for line in text.split("\n"):
+        stripped = line.split("#", 1)[0].strip()
+        m = re.match(r"\[\[(\w+)\]\]", stripped)
+        if m:
+            commit()
+            section, name, path = m.group(1), None, None
+            continue
+        if re.match(r"\[[^\[]", stripped):
+            commit()
+            section = None
+            continue
+        m = re.match(r'name\s*=\s*"([^"]+)"', stripped)
+        if m and section:
+            name = m.group(1)
+        m = re.match(r'path\s*=\s*"([^"]+)"', stripped)
+        if m and section:
+            path = m.group(1)
+    commit()
+    return out
+
+
+def parse_registry(code_text):
+    """[(name, bench)] from the EXPERIMENTS array in exp/mod.rs."""
+    m = re.search(r"EXPERIMENTS\s*:\s*&\[ExpSpec\]\s*=\s*&\[(.*)\];", code_text, re.S)
+    if not m:
+        return None
+    entries = []
+    for spec in re.finditer(r"ExpSpec\s*\{(.*?)\}", m.group(1), re.S):
+        nm = re.search(r'name\s*:\s*"([^"]+)"', spec.group(1))
+        bm = re.search(r'bench\s*:\s*"([^"]+)"', spec.group(1))
+        if nm and bm:
+            entries.append((nm.group(1), bm.group(1)))
+    return entries
+
+
+def check_consistency(lint):
+    fam = "consistency"
+
+    cargo_text = lint.read(CARGO_TOML, "consistency-parse", fam)
+    exp_text = lint.read(EXP_MOD_RS, "consistency-parse", fam)
+    if cargo_text is None or exp_text is None:
+        return
+    # Strings ARE the data here (experiment names, bench targets), so
+    # lex with string contents kept in the code view — comments still
+    # stripped, so a commented-out ExpSpec does not count.
+    exp_code, _, _ = lex_rust(exp_text, keep_strings=True)
+    registry = parse_registry("\n".join(exp_code))
+    if not registry:
+        lint.flag(
+            "consistency-parse", fam, EXP_MOD_RS, 0, "cannot parse the EXPERIMENTS registry"
+        )
+        return
+    targets = parse_cargo_targets(cargo_text)
+    reg_benches = {b for _, b in registry}
+
+    # Registry ↔ Cargo.toml bench targets, both directions, plus the
+    # declared bench source file existing on disk.
+    for name, bench in registry:
+        if bench not in targets["bench"]:
+            lint.flag(
+                "consistency-bench-registry",
+                fam,
+                CARGO_TOML,
+                0,
+                f"registry experiment '{name}' names bench target '{bench}' but "
+                "Cargo.toml declares no [[bench]] with that name",
+            )
+    for bench, path in targets["bench"].items():
+        if bench not in reg_benches:
+            lint.flag(
+                "consistency-bench-registry",
+                fam,
+                CARGO_TOML,
+                0,
+                f"Cargo.toml bench target '{bench}' is not owned by any EXPERIMENTS "
+                "registry entry",
+            )
+        if path and not os.path.exists(lint.path(path)):
+            lint.flag(
+                "consistency-bench-registry",
+                fam,
+                CARGO_TOML,
+                0,
+                f"bench target '{bench}' declares missing source file {path}",
+            )
+
+    # Documented experiment counts: the registry's own len() assertion,
+    # README phrasing, and the Cargo.toml section comment (checked only
+    # where the pattern exists — deleting the sentence is a doc choice,
+    # drifting its number is a bug).
+    n = len(registry)
+    m = re.search(r"EXPERIMENTS\.len\(\)\s*,\s*(\d+)", "\n".join(exp_code))
+    if m and int(m.group(1)) != n:
+        lint.flag(
+            "consistency-registry-count",
+            fam,
+            EXP_MOD_RS,
+            0,
+            f"registry holds {n} experiments but its unit test asserts {m.group(1)}",
+        )
+    readme = lint.read(README_MD, "consistency-parse", fam)
+    if readme is not None:
+        for pat, where in [
+            (r"the\s+(\d+)\s+reproducible experiments", "README quickstart"),
+            (r"(\d+)\s+reproduction drivers", "README project layout"),
+        ]:
+            m = re.search(pat, readme)
+            if m and int(m.group(1)) != n:
+                lint.flag(
+                    "consistency-registry-count",
+                    fam,
+                    README_MD,
+                    0,
+                    f"{where} says {m.group(1)} experiments; the registry holds {n}",
+                )
+    m = re.search(r"bench targets \((\d+)\)", cargo_text)
+    if m and int(m.group(1)) != n:
+        lint.flag(
+            "consistency-registry-count",
+            fam,
+            CARGO_TOML,
+            0,
+            f"Cargo.toml bench-target section comment says {m.group(1)}; the registry "
+            f"holds {n}",
+        )
+
+    # Every registered bench must be runnable from REPRODUCING.md.
+    repro = lint.read(REPRODUCING_MD, "consistency-parse", fam)
+    if repro is not None:
+        for name, bench in registry:
+            if not re.search(rf"cargo bench --bench {re.escape(bench)}\b", repro):
+                lint.flag(
+                    "consistency-docs",
+                    fam,
+                    REPRODUCING_MD,
+                    0,
+                    f"bench target '{bench}' (experiment '{name}') has no "
+                    "`cargo bench --bench ...` line in REPRODUCING.md",
+                )
+
+    # CI smoke steps must reference real targets — and keep the lint
+    # itself as the source-invariant gate.
+    ci = lint.read(CI_YML, "consistency-parse", fam)
+    if ci is not None:
+        for b in re.findall(r"cargo bench --bench\s+([A-Za-z0-9_]+)", ci):
+            if b not in targets["bench"]:
+                lint.flag(
+                    "consistency-ci",
+                    fam,
+                    CI_YML,
+                    0,
+                    f"CI runs bench target '{b}' which Cargo.toml does not declare",
+                )
+        for t in re.findall(r"cargo test\s+(?:-q\s+)?--test\s+([A-Za-z0-9_]+)", ci):
+            if t not in targets["test"]:
+                lint.flag(
+                    "consistency-ci",
+                    fam,
+                    CI_YML,
+                    0,
+                    f"CI runs test target '{t}' which Cargo.toml does not declare",
+                )
+        if "dagger_lint.py --all" not in ci:
+            lint.flag(
+                "consistency-ci-gate",
+                fam,
+                CI_YML,
+                0,
+                "CI no longer runs `python3 tools/dagger_lint.py --all` — the "
+                "source-invariant gate is gone",
+            )
+
+    # bench_diff KEY_COLUMNS ⊆ columns the grid builders actually emit:
+    # a key column no artifact carries silently stops joining row
+    # identity (stale) or masks a typo (never matches).
+    bd_text = lint.read(BENCH_DIFF_RS, "consistency-parse", fam)
+    if bd_text is not None:
+        bd_code, _, _ = lex_rust(bd_text, keep_strings=True)
+        m = re.search(r"KEY_COLUMNS\s*:\s*&\[&str\]\s*=\s*&\[(.*?)\];", "\n".join(bd_code), re.S)
+        if not m:
+            lint.flag(
+                "consistency-parse", fam, BENCH_DIFF_RS, 0, "cannot parse KEY_COLUMNS"
+            )
+        else:
+            key_cols = re.findall(r'"([^"]+)"', m.group(1))
+            emitted = set()
+            exp_dir = lint.path("rust/src/exp")
+            for fn in sorted(os.listdir(exp_dir)) if os.path.isdir(exp_dir) else []:
+                if not fn.endswith(".rs") or fn == os.path.basename(BENCH_DIFF_RS):
+                    continue
+                with open(os.path.join(exp_dir, fn), encoding="utf-8") as f:
+                    _, _, strings = lex_rust(f.read())
+                emitted.update(s for _, s in strings)
+            for col in key_cols:
+                if col not in emitted:
+                    lint.flag(
+                        "consistency-key-columns",
+                        fam,
+                        BENCH_DIFF_RS,
+                        0,
+                        f"KEY_COLUMNS entry '{col}' is emitted by no grid builder in "
+                        "rust/src/exp/ — stale axis or typo; remove it or fix the "
+                        "builder column name",
+                    )
+            lint.inventory["key_columns"] = key_cols
+
+    lint.inventory["registry"] = {
+        "experiments": len(registry),
+        "benches": sorted(reg_benches),
+    }
+
+
+# ==================================================== family: unsafe
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+ORDERING_RE = re.compile(r"Ordering\s*::\s*(\w+)")
+
+
+def has_adjacent_safety(raw_lines, idx0):
+    """SAFETY: comment trailing the unsafe line or in the contiguous
+    comment/attribute block directly above it (<= 6 lines)."""
+    if "SAFETY:" in raw_lines[idx0]:
+        return True
+    j = idx0 - 1
+    seen = 0
+    while j >= 0 and seen < 6:
+        s = raw_lines[j].strip()
+        if s.startswith("//"):
+            if "SAFETY:" in s:
+                return True
+        elif s.startswith("#[") or s == "":
+            pass
+        else:
+            return False
+        j -= 1
+        seen += 1
+    return False
+
+
+def check_unsafe(lint):
+    fam = "unsafe"
+    inv = {}
+    for rel in UNSAFE_AUDIT_FILES:
+        text = lint.read(rel, "unsafe-missing-safety", fam)
+        if text is None:
+            continue
+        raw = text.split("\n")
+        code_lines, comment_lines, _ = lex_rust(text)
+        allows = allow_annotations(comment_lines)
+        test_start = split_off_tests(raw)
+
+        unsafe_sites = []
+        orderings = {}
+        orderings_nontest = {}
+        for i, code in enumerate(code_lines):
+            ln = i + 1
+            if UNSAFE_RE.search(code):
+                unsafe_sites.append(ln)
+                if not has_adjacent_safety(raw, i):
+                    lint.flag(
+                        "unsafe-missing-safety",
+                        fam,
+                        rel,
+                        ln,
+                        "unsafe without an adjacent `// SAFETY:` comment stating the "
+                        "invariant that makes it sound",
+                    )
+            for m in ORDERING_RE.finditer(code):
+                o = m.group(1)
+                orderings[o] = orderings.get(o, 0) + 1
+                if i < test_start:
+                    orderings_nontest[o] = orderings_nontest.get(o, 0) + 1
+                    if o == "Relaxed" and rel in RELAXED_AUDIT_FILES:
+                        if not allowed(allows, ln, "relaxed"):
+                            lint.flag(
+                                "atomics-relaxed",
+                                fam,
+                                rel,
+                                ln,
+                                "Ordering::Relaxed on the ring publish/doorbell path: a "
+                                "relaxed index publish can expose an unwritten slot to "
+                                "the consumer. If this load/store is provably "
+                                "producer- or consumer-owned, annotate it with "
+                                "`// lint: allow(relaxed, <why this side owns the index>)`",
+                            )
+        inv[rel] = {
+            "unsafe_sites": unsafe_sites,
+            "orderings": orderings,
+            "orderings_nontest": orderings_nontest,
+        }
+    lint.inventory["unsafe_audit"] = inv
+
+
+# ================================================================ CLI
+
+FAMILIES = {
+    "frame": check_frame,
+    "hotpath": check_hotpath,
+    "consistency": check_consistency,
+    "unsafe": check_unsafe,
+}
+
+
+def default_root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(root, families):
+    lint = Lint(root)
+    for fam in families:
+        FAMILIES[fam](lint)
+    return lint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="dagger-lint", description="toolchain-free invariant prover for the Dagger repo"
+    )
+    ap.add_argument("--all", action="store_true", help="run every rule family")
+    ap.add_argument("--frame", action="store_true", help="frame-layout prover")
+    ap.add_argument("--hotpath", action="store_true", help="HOT PATH allocation lint")
+    ap.add_argument("--consistency", action="store_true", help="cross-artifact checker")
+    ap.add_argument(
+        "--unsafe-audit",
+        dest="unsafe_audit",
+        action="store_true",
+        help="unsafe/atomics audit",
+    )
+    ap.add_argument("--json", action="store_true", help="machine-readable findings")
+    ap.add_argument("--root", default=default_root(), help="repo root (default: tools/..)")
+    args = ap.parse_args(argv)
+
+    chosen = [
+        fam
+        for fam, on in [
+            ("frame", args.frame),
+            ("hotpath", args.hotpath),
+            ("consistency", args.consistency),
+            ("unsafe", args.unsafe_audit),
+        ]
+        if on
+    ]
+    if args.all or not chosen:
+        chosen = list(FAMILIES)
+
+    try:
+        lint = run(args.root, chosen)
+    except Exception as e:  # internal error ≠ clean
+        print(f"dagger-lint: internal error: {e}", file=sys.stderr)
+        return 2
+
+    counts = {}
+    for f in lint.findings:
+        counts[f.family] = counts.get(f.family, 0) + 1
+    ok = not lint.findings
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "version": LINT_VERSION,
+                    "ok": ok,
+                    "families": chosen,
+                    "counts": counts,
+                    "findings": [f.as_dict() for f in lint.findings],
+                    "inventory": lint.inventory,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in lint.findings:
+            print(f.render())
+        n = len(lint.findings)
+        fams = ", ".join(chosen)
+        print(f"dagger-lint: {n} finding(s) across [{fams}]" if n else f"dagger-lint: clean [{fams}]")
+
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
